@@ -1,0 +1,29 @@
+"""Paper Table 14 analog: sensitivity to the calibration corpus.
+
+Builds the adaptation set from two different calibration splits and
+compares held-out perplexity (no-overfit check).
+"""
+from __future__ import annotations
+
+from benchmarks.common import built_model, emit, eval_ppl, eval_sequences
+from repro.serving import ServingEngine
+
+
+def main(quick: bool = False) -> dict:
+    results = {}
+    toks = None
+    for split in ("calibration", "train"):
+        cfg, params, model = built_model(
+            targets=(3.5, 4.5), calib_split=split, tag=f"_{split}")
+        if toks is None:
+            toks = eval_sequences(cfg, n=1)
+        engine = ServingEngine(cfg, params, model)
+        for t in (3.5, 4.5):
+            ppl, _, us = eval_ppl(engine, toks, t)
+            emit(f"calib_sensitivity/{split}/t{t}", us, f"ppl={ppl:.3f}")
+            results[(split, t)] = ppl
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Shared benchmark infrastructure.
+
+Everything in-container runs on the real trained ``bench-lm`` (a ~6M-param
+byte-level LM trained on the Python-stdlib corpus — real text, offline) so
+perplexity/accuracy differences between precision-assignment schemes are
+meaningful. Expensive artifacts (trained weights, built multiscale models)
+are cached under experiments/artifacts/.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_multiscale_model
+from repro.data import DataConfig, ShardedBatchIterator, load_corpus
+from repro.models import init_model_params
+from repro.serving import ServingEngine
+
+ART_DIR = "experiments/artifacts"
+TARGETS = (3.25, 3.5, 4.0, 4.5, 4.75)
+QUICK_TARGETS = (3.5, 4.5)
+
+
+def _path(name: str) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    return os.path.join(ART_DIR, name)
+
+
+def trained_bench_lm(steps: int = 300, force: bool = False):
+    """Train (or load) the byte-level bench LM on stdlib source."""
+    from repro.launch.train import train
+    cfg = get_config("bench-lm")
+    cache = _path(f"bench_lm_{steps}.pkl")
+    if os.path.exists(cache) and not force:
+        with open(cache, "rb") as fh:
+            blob = pickle.load(fh)
+        return cfg, {k: jnp.asarray(v) for k, v in blob["params"].items()}, \
+            blob["final_loss"]
+    state, losses = train("bench-lm", steps=steps, seq_len=256,
+                          global_batch=8, lr=2e-3,
+                          log=lambda *a, **k: None)
+    from repro.models.stacked import group_size, num_scan_steps
+    # un-stack back to loop layout for the core pipeline
+    params = dict(state["glob"])
+    g = group_size(cfg)
+    for rel, arr in state["stack"].items():
+        r, rest = rel.split(".", 1)
+        for c in range(arr.shape[0]):
+            params[f"layers.{int(r) + c * g}.{rest}"] = arr[c]
+    with open(cache, "wb") as fh:
+        pickle.dump({"params": {k: np.asarray(v)
+                                for k, v in params.items()},
+                     "final_loss": losses[-1]}, fh)
+    return cfg, params, losses[-1]
+
+
+def calibration_batches(cfg, n: int = 6, seq: int = 192,
+                        split: str = "calibration", seed: int = 0):
+    data = load_corpus(split, 2_000_000)
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        starts = rng.integers(0, len(data) - seq - 1, size=2)
+        seqs = np.stack([data[s:s + seq + 1] for s in starts])
+        out.append((seqs[:, :-1].astype(np.int32),
+                    seqs[:, 1:].astype(np.int32)))
+    return out
+
+
+def built_model(targets: Sequence[float] = TARGETS, *,
+                budget: float = 5.0, calib_split: str = "calibration",
+                steps: int = 300, tag: str = "", force: bool = False):
+    """Trained bench-lm + built MultiScaleModel (cached)."""
+    cfg, params, _ = trained_bench_lm(steps)
+    key = f"msm_{budget}b_{'_'.join(str(t) for t in targets)}" \
+          f"_{calib_split}{tag}.pkl"
+    cache = _path(key)
+    if os.path.exists(cache) and not force:
+        with open(cache, "rb") as fh:
+            model = pickle.load(fh)
+        return cfg, params, model
+    batches = calibration_batches(cfg, split=calib_split)
+    model = build_multiscale_model(
+        cfg, params, batches, targets=list(targets),
+        memory_budget_bits=budget, finetune_epochs=2,
+        baselines=("llm_mq", "hawq_v2"))
+    with open(cache, "wb") as fh:
+        pickle.dump(model, fh)
+    return cfg, params, model
+
+
+def eval_sequences(cfg, n: int = 2, seq: int = 160, seed: int = 1):
+    data = load_corpus("eval", 1_000_000)
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, len(data) - seq - 1, size=n)
+    return np.stack([data[s:s + seq] for s in starts]).astype(np.int32)
+
+
+def eval_ppl(engine: ServingEngine, tokens: np.ndarray, target: float,
+             mode: str = "dynamic") -> Tuple[float, float, float]:
+    """Returns (ppl, mean effective bits, µs per decode step)."""
+    t0 = time.monotonic()
+    nlls, ebits, steps = [], [], 0
+    for row in tokens:
+        nll, eb = engine.teacher_forced_nll(row[None, :], target, mode=mode,
+                                            prime_len=8)
+        nlls.append(nll)
+        ebits.extend(eb)
+        steps += len(eb)
+    wall = time.monotonic() - t0
+    return (float(np.exp(np.mean(nlls))), float(np.mean(ebits)),
+            wall / max(steps, 1) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,110 @@
+"""Paper Tables 4 / 5 / 6 analog: precision-selector overhead.
+
+Two views (no TPU in-container):
+- measured CPU wall-clock per decode step: static baseline vs DP-LLM
+  dynamic, and the Table-6 ablation (RP-only vs hybrid vs hybrid+async);
+- the analytic TPU v5e model: selector FLOPs/bytes vs the decode GEMV
+  traffic at each effective bitwidth (the paper's Table 5 latency scaling).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import hw
+from benchmarks.common import built_model, emit, eval_ppl, eval_sequences
+from repro.models import linear_units
+from repro.serving import ServingEngine
+
+
+def analytic_tpot(cfg, model, target: float, include_selector: bool):
+    """v5e decode latency model: weight traffic + selector traffic."""
+    aset = model.adaptations[target]
+    wbytes = sum(u.size * u.p / 8 for u in aset.units.values())
+    sel_bytes = sel_flops = 0.0
+    if include_selector:
+        for u in aset.units.values():
+            if u.est is None or u.l == u.h:
+                continue
+            if u.est.kind == "jl":
+                k, n = u.est.g.shape
+                sel_bytes += k * n * 4
+                sel_flops += 2 * k * n
+    t = wbytes / hw.HBM_BW + sel_bytes / hw.HBM_BW \
+        + sel_flops / hw.PEAK_FLOPS_BF16
+    return t, wbytes, sel_bytes
+
+
+def main(quick: bool = False) -> dict:
+    cfg, params, model = built_model()
+    toks = eval_sequences(cfg, n=1, seq=96 if quick else 128)
+    results = {}
+
+    # --- measured wall-clock (Table 4 / 6 analog) ---------------------------
+    for t in (3.5, 4.5):
+        engine = ServingEngine(cfg, params, model)
+        _, _, us_static = eval_ppl(engine, toks, t, "static:llm_mq")
+        _, _, us_dyn = eval_ppl(engine, toks, t, "dynamic")
+        eng_sync = ServingEngine(cfg, params, model, use_async=False)
+        _, _, us_sync = eval_ppl(eng_sync, toks, t, "dynamic")
+        ovh = (us_dyn - us_static) / us_static * 100
+        ovh_sync = (us_sync - us_static) / us_static * 100
+        emit(f"overhead/static/t{t}", us_static, "baseline")
+        emit(f"overhead/hybrid_async/t{t}", us_dyn,
+             f"overhead={ovh:+.1f}%")
+        emit(f"overhead/hybrid_sync/t{t}", us_sync,
+             f"overhead={ovh_sync:+.1f}%")
+        results[t] = {"static_us": us_static, "dyn_us": us_dyn}
+
+    # --- RP-only ablation (Table 6): force every linear unit onto the JL
+    # path by refitting with an impossible R² gate --------------------------
+    import copy
+    from repro.core.estimators import EstimatorFit, make_g, sample_projection
+    import jax
+    from repro.core.thresholds import delta_weight_of
+    model_rp = copy.deepcopy(model)
+    key = jax.random.PRNGKey(11)
+    for t_, aset in model_rp.adaptations.items():
+        for u in aset.units.values():
+            if u.est is not None and u.est.kind == "linear":
+                dw = delta_weight_of(model.overlays[u.path], u.l, u.h)
+                key, sub = jax.random.split(key)
+                g = make_g(sample_projection(sub, 64, dw.shape[1]), dw)
+                u.est = EstimatorFit(kind="jl", r2=u.est.r2, gamma=1.0,
+                                     g=np.asarray(g))
+    eng_rp = ServingEngine(cfg, params, model_rp)
+    _, _, us_rp = eval_ppl(eng_rp, toks, 3.5, "dynamic")
+    base = results[3.5]["static_us"]
+    emit("overhead/rp_only/t3.5", us_rp,
+         f"overhead={(us_rp - base) / base * 100:+.1f}%")
+
+    # --- analytic TPU model (Table 5 analog) --------------------------------
+    # NOTE: on the 6M bench-lm the selector G matrices are comparable to the
+    # weights, so overhead % is inflated; the paper's regime appears at full
+    # scale, computed below from the configs alone.
+    for t in sorted(model.adaptations):
+        t_static, wb, _ = analytic_tpot(cfg, model, t, False)
+        t_dyn, _, sb = analytic_tpot(cfg, model, t, True)
+        emit(f"tpot_v5e/static/t{t}", t_static * 1e6,
+             f"weight_bytes={wb:.3e}")
+        emit(f"tpot_v5e/dp_llm/t{t}", t_dyn * 1e6,
+             f"selector_overhead={(t_dyn - t_static) / t_static * 100:.2f}%")
+
+    # --- full-scale analytic overhead (paper's Table 4 regime) --------------
+    from repro.configs import get_config
+    for arch in ("llama3-8b", "phi3-medium"):
+        fcfg = get_config(arch)
+        units = linear_units(fcfg)
+        for t in (3.5, 4.0, 4.5):
+            wbytes = sum(u.k * u.n for u in units) * t / 8
+            # half the units JL (paper Table 8): G (64, K) f32 read/step
+            sel_bytes = sum(64 * u.k * 4 for u in units) / 2
+            sel_flops = 2 * sel_bytes / 4
+            t_s = wbytes / hw.HBM_BW
+            t_d = t_s + sel_bytes / hw.HBM_BW + sel_flops / hw.PEAK_FLOPS_BF16
+            emit(f"tpot_v5e_fullscale/{arch}/t{t}", t_d * 1e6,
+                 f"selector_overhead={(t_d - t_s) / t_s * 100:.2f}%")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table 3 analog: exact relative-error selector vs hybrid estimator.
+
+The exact selector computes ‖ΔW·x‖ with no approximation (impractical at
+runtime — an extra GEMV per unit) and upper-bounds the approximation.
+"""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_TARGETS, built_model, emit, eval_ppl, \
+    eval_sequences
+from repro.serving import ServingEngine
+
+
+def main(quick: bool = False) -> dict:
+    cfg, params, model = built_model()
+    engine = ServingEngine(cfg, params, model)
+    toks = eval_sequences(cfg, n=1)
+    results = {}
+    for t in QUICK_TARGETS:
+        ppl_a, _, us_a = eval_ppl(engine, toks, t, "dynamic")
+        ppl_e, _, us_e = eval_ppl(engine, toks, t, "exact")
+        emit(f"exact_vs_approx/approx/t{t}", us_a, f"ppl={ppl_a:.3f}")
+        emit(f"exact_vs_approx/exact/t{t}", us_e, f"ppl={ppl_e:.3f}")
+        emit(f"exact_vs_approx/gap/t{t}", 0,
+             f"approx-exact={ppl_a - ppl_e:+.3f}")
+        results[t] = (ppl_e, ppl_a)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 13 analog: perplexity under forced (l, h) candidate pairs.
+
+The paper finds neighbouring precisions around the target work best; we
+force all units to fixed pairs at target 4.5 and compare.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (built_model, calibration_batches, emit,
+                               eval_ppl, eval_sequences)
+from repro.core.adaptation import AdaptationSet, UnitAdaptation
+from repro.core.estimators import fit_estimator
+from repro.core.thresholds import collect_calibration
+from repro.models import linear_units
+from repro.serving import ServingEngine
+
+TARGET = 4.5
+PAIRS = [(4, 5), (3, 5), (3, 6), (4, 6)]
+
+
+def forced_pair_adaptation(cfg, params, model, batches, l, h):
+    units = linear_units(cfg)
+    frac_h = (TARGET - l) / (h - l)          # fraction of steps at h-bit
+    p_eff = l + frac_h * (h - l)             # == TARGET
+    pairs = {u.path: (l, h) for u in units}
+    records = collect_calibration(
+        cfg, params, model.overlays, units,
+        {u.path: p_eff for u in units}, batches,
+        b_min=model.b_min, max_bits={u.path: max(h, model.max_bits[u.path])
+                                     for u in units},
+        key=jax.random.PRNGKey(1), pairs=pairs)
+    aset = AdaptationSet(target_precision=TARGET, b_min=model.b_min,
+                         memory_budget_bits=model.memory_budget_bits)
+    for u in units:
+        size = int(np.prod(params[u.path].shape))
+        ua = UnitAdaptation(path=u.path, kind=u.kind, size=size, p=p_eff,
+                            l=l, h=h, max_bits=h,
+                            async_eligible=u.async_eligible)
+        if u.path in records:
+            rec = records[u.path]
+            ua.threshold = float(np.quantile(rec.err, 1.0 - frac_h))
+            ua.est = fit_estimator(rec.err, rec.xnorm, rec.jl_raw, rec.g)
+        else:
+            ua.l = ua.h = int(round(TARGET))
+        aset.units[u.path] = ua
+    return aset
+
+
+def main(quick: bool = False) -> dict:
+    cfg, params, model = built_model()
+    batches = calibration_batches(cfg, n=2 if quick else 4)
+    toks = eval_sequences(cfg, n=1, seq=96 if quick else 128)
+    results = {}
+    pairs = PAIRS[:2] if quick else PAIRS
+    for (l, h) in pairs:
+        aset = forced_pair_adaptation(cfg, params, model, batches, l, h)
+        import copy
+        m2 = copy.copy(model)
+        m2.adaptations = dict(model.adaptations)
+        m2.adaptations[TARGET] = aset
+        engine = ServingEngine(cfg, params, m2)
+        ppl, eb, us = eval_ppl(engine, toks, TARGET)
+        emit(f"hl_ablation/l{l}h{h}", us,
+             f"ppl={ppl:.3f};eff_bits={eb:.2f}")
+        results[(l, h)] = ppl
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""TPU v5e hardware model (assignment-given constants)."""
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+CHIP_HBM_BYTES = 16e9         # v5e HBM capacity

@@ -1,0 +1,50 @@
+"""Paper Tables 1 / 10 / 11 analog: perplexity vs target precision.
+
+DP-LLM (dynamic layer-wise) vs LLM-MQ / HAWQ-V2 (static layer-wise) vs
+uniform, on the trained byte-LM, teacher-forced per-step decoding exactly as
+the paper evaluates perplexity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (QUICK_TARGETS, TARGETS, built_model, emit,
+                               eval_ppl, eval_sequences)
+from repro.models import linear_units
+from repro.serving import ServingEngine
+
+
+def main(quick: bool = False) -> dict:
+    targets = QUICK_TARGETS if quick else TARGETS
+    cfg, params, model = built_model(targets)
+    engine = ServingEngine(cfg, params, model)
+    toks = eval_sequences(cfg, n=1 if quick else 2)
+
+    units = linear_units(cfg)
+    model.static_tables["uniform"] = {}
+    for t in targets:
+        b = int(round(t))
+        model.static_tables["uniform"][t] = {u.path: b for u in units}
+
+    results = {}
+    for t in targets:
+        row = {}
+        ppl, eb, us = eval_ppl(engine, toks, t, "dynamic")
+        emit(f"ppl/dp_llm/t{t}", us, f"ppl={ppl:.3f};eff_bits={eb:.2f}")
+        row["dp_llm"] = ppl
+        for method in ("llm_mq", "hawq_v2", "uniform"):
+            ppl, eb, us = eval_ppl(engine, toks, t, f"static:{method}")
+            emit(f"ppl/{method}/t{t}", us,
+                 f"ppl={ppl:.3f};eff_bits={eb:.2f}")
+            row[method] = ppl
+        results[t] = row
+
+    wins = sum(1 for t in targets
+               if results[t]["dp_llm"] <= min(results[t]["llm_mq"],
+                                              results[t]["hawq_v2"]) + 0.02)
+    emit("ppl/dp_llm_wins", 0, f"{wins}/{len(targets)} targets")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 7 analog: per-query effective-bitwidth distribution.
+
+DP-LLM matches the target precision on a best-effort, per-query basis;
+this measures how far individual queries deviate (90th/99th percentile
+increase over the mean) across a batch of held-out prompts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import built_model, emit
+from repro.data import load_corpus
+from repro.serving import QueryBitTracker, ServingEngine
+
+
+def main(quick: bool = False) -> dict:
+    cfg, params, model = built_model()
+    engine = ServingEngine(cfg, params, model)
+    data = load_corpus("eval", 1_000_000)
+    rng = np.random.default_rng(7)
+    n_queries = 8 if quick else 24
+    results = {}
+    for t in (3.5, 4.0, 4.5):
+        if t not in model.adaptations:
+            continue
+        tracker = QueryBitTracker()
+        for _ in range(n_queries):
+            s = int(rng.integers(0, len(data) - 64))
+            prompt = data[s:s + 16][None, :].astype(np.int32)
+            _, ebits = engine.generate(prompt, 16, t)
+            tracker.record_query(ebits)
+        s = tracker.summary()
+        emit(f"qos/t{t}", 0,
+             f"mean={s['mean']:.3f};p90=+{s['p90_increase']*100:.2f}%;"
+             f"p99=+{s['p99_increase']*100:.2f}%")
+        results[t] = s
+    return results
+
+
+if __name__ == "__main__":
+    main()

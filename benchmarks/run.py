@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table (DESIGN.md §7 index).
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness convention.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only MODULE]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("perplexity_tradeoff", "Tables 1/10/11: ppl vs target precision"),
+    ("downstream_proxy", "Table 2: greedy-decode task accuracy"),
+    ("exact_vs_approx", "Table 3: exact vs estimated relative error"),
+    ("estimator_overhead", "Tables 4/5/6: selector overhead + ablation"),
+    ("qos_percentiles", "Table 7: per-query effective-bit percentiles"),
+    ("hl_ablation", "Table 13: forced (l,h) candidate pairs"),
+    ("calib_sensitivity", "Table 14: calibration-set swap"),
+    ("sensitivity_dynamics", "Figure 3: per-step sensitivity dynamics"),
+    ("roofline", "§Roofline: 3-term analysis from the dry-run"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = 0
+    for name, desc in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name}: {desc} ===", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+        except Exception as e:
+            failures += 1
+            print(f"# FAIL {name}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+        print(f"# === {name} done in {time.monotonic() - t0:.1f}s ===",
+              flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

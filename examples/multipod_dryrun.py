@@ -1,0 +1,30 @@
+"""Programmatic multi-pod dry-run for a single cell (the API the full
+sweep in repro.launch.dryrun drives).
+
+  PYTHONPATH=src python examples/multipod_dryrun.py --arch llama3-8b \
+      --shape decode_32k --mesh multi
+"""
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    # dryrun sets XLA_FLAGS before importing jax — import it first
+    from repro.launch import dryrun
+    rec = dryrun.run_cell(args.arch, args.shape, args.mesh)
+    print("\nrecord:")
+    for k, v in rec.items():
+        if k != "trace":
+            print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

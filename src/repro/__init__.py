@@ -1,0 +1,2 @@
+"""repro: DP-LLM (dynamic layer-wise precision) on a multi-pod JAX stack."""
+__version__ = "1.0.0"

@@ -1,0 +1,43 @@
+"""Checkpoint lifecycle: retention policy + restart-safe resume."""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Dict, Optional
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, save_every: int = 100,
+                 keep: int = 3, async_save: bool = True):
+        self.ckpt = Checkpointer(directory, async_save=async_save)
+        self.save_every = save_every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree,
+                   meta: Optional[Dict[str, Any]] = None,
+                   force: bool = False) -> bool:
+        if not force and (step == 0 or step % self.save_every != 0):
+            return False
+        self.ckpt.save(step, tree, meta)
+        self._gc()
+        return True
+
+    def _gc(self) -> None:
+        self.ckpt.wait()  # the in-flight save must land before retention
+        steps = self.ckpt.available_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.ckpt.directory,
+                                       f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, tree_like, shardings=None):
+        """Returns (tree, step) or (tree_like, 0) when no checkpoint exists."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return tree_like, 0
+        return self.ckpt.restore(tree_like, step, shardings=shardings)
+
+    def wait(self):
+        self.ckpt.wait()

@@ -1,0 +1,65 @@
+"""Architecture config registry.
+
+``get_config("llama3-8b")`` returns the exact assigned config;
+``get_config("tiny-moe")`` etc. return reduced smoke-test configs;
+``get_config("llama3-8b", reduced=True)`` shrinks any full config in-family.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exports)
+    AUDIO, DECODE, DENSE, HYBRID, MOE, PREFILL, SHAPES, SHAPE_ORDER, SSM,
+    TRAIN, VLM, ModelConfig, ShapeConfig, applicable_shapes, reduced,
+    skipped_shapes,
+)
+from repro.configs.tiny import TINY_CONFIGS
+
+# assigned pool (10) + the paper's second model (phi3-medium)
+_ARCH_MODULES = {
+    "yi-6b": "yi_6b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "llama3-8b": "llama3_8b",
+    "granite-8b": "granite_8b",
+    "mamba2-370m": "mamba2_370m",
+    "pixtral-12b": "pixtral_12b",
+    "dbrx-132b": "dbrx_132b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-base": "whisper_base",
+    "phi3-medium": "phi3_medium",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _ARCH_MODULES if k != "phi3-medium")
+
+
+def get_config(name: str, reduced_: bool = False) -> ModelConfig:
+    if name in TINY_CONFIGS:
+        return TINY_CONFIGS[name]
+    if name not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES) + sorted(TINY_CONFIGS)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    if reduced_:
+        cfg = reduced(cfg)
+    return cfg
+
+
+def list_configs() -> List[str]:
+    return sorted(_ARCH_MODULES) + sorted(TINY_CONFIGS)
+
+
+def all_cells() -> List[tuple]:
+    """Every assigned (arch, shape) cell, including spec-mandated skips.
+
+    Returns (arch_name, shape_name, skip_reason_or_None).
+    """
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        skips = dict(skipped_shapes(cfg))
+        for shape in SHAPE_ORDER:
+            cells.append((arch, shape, skips.get(shape)))
+    return cells

@@ -1,0 +1,252 @@
+"""Model / shape configuration dataclasses.
+
+Every assigned architecture is expressed as a single frozen ``ModelConfig``.
+The model zoo (``repro.models``) builds the concrete network purely from this
+description, so adding an architecture is a config file, not code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Families
+# ---------------------------------------------------------------------------
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"
+HYBRID = "hybrid"
+VLM = "vlm"
+AUDIO = "audio"  # encoder-decoder with audio frontend stub
+
+FAMILIES = (DENSE, MOE, SSM, HYBRID, VLM, AUDIO)
+
+# MLP kinds
+SWIGLU = "swiglu"          # gate/up/down (llama-style)
+SQUARED_RELU = "squared_relu"  # up/down with relu(x)^2 (nemotron-style)
+GELU = "gelu"              # up/down with gelu (whisper-style)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (public-literature configs; see configs/*.py)."""
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    rope_theta: float = 10_000.0
+    attn_logit_softcap: float = 0.0
+
+    # mlp
+    mlp_kind: str = SWIGLU
+
+    # MoE (0 experts -> dense FFN)
+    num_experts: int = 0
+    experts_per_token: int = 0
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0                # d_state; 0 -> no ssm layers
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_ngroups: int = 1
+
+    # hybrid interleave (jamba-style): attention on layers where
+    # ``layer_idx % attn_every == attn_offset``; 0 -> all-attention
+    # (or all-ssm when family == SSM).
+    attn_every: int = 0
+    attn_offset: int = 0
+    # MoE on layers where ``layer_idx % moe_every == moe_offset`` (hybrid);
+    # 0 with num_experts>0 -> MoE every layer.
+    moe_every: int = 0
+    moe_offset: int = 1
+
+    # encoder-decoder (whisper-style)
+    encoder_layers: int = 0
+    cross_attention: bool = False
+
+    # modality frontend stub: "none" | "audio_stub" | "vision_stub"
+    frontend: str = "none"
+    frontend_tokens: int = 0          # precomputed embeddings fed as input
+
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    max_seq_len: int = 8192
+    # vocab padded to a multiple of this for clean TP sharding
+    vocab_pad_multiple: int = 256
+
+    source: str = ""                  # provenance citation
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def padded_vocab_size(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def layer_kind(self, layer_idx: int) -> str:
+        """'attn' | 'ssm' for the mixer at ``layer_idx`` (decoder stack)."""
+        if self.family == SSM:
+            return "ssm"
+        if self.family == HYBRID and self.attn_every > 0:
+            return "attn" if layer_idx % self.attn_every == self.attn_offset else "ssm"
+        return "attn"
+
+    def layer_is_moe(self, layer_idx: int) -> bool:
+        if self.num_experts <= 0:
+            return False
+        if self.moe_every <= 0:
+            return True
+        return layer_idx % self.moe_every == self.moe_offset
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def uses_full_attention(self) -> bool:
+        """True when *every* decoder mixer is full attention (no SSM)."""
+        return self.family not in (SSM, HYBRID)
+
+    # rough parameter counts (used for roofline MODEL_FLOPS and allocator)
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab_size
+        hd = self.resolved_head_dim
+        n_q = self.num_heads * hd
+        n_kv = self.num_kv_heads * hd
+        attn = d * n_q + 2 * d * n_kv + n_q * d
+        if self.mlp_kind == SWIGLU:
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        ssm = 0
+        if self.ssm_state:
+            di = self.ssm_d_inner
+            # in_proj (x, z, B, C, dt) + out_proj + conv
+            bc = 2 * self.ssm_ngroups * self.ssm_state
+            in_p = d * (2 * di + bc + self.ssm_nheads)
+            ssm = in_p + di * d + self.ssm_conv_width * (di + bc)
+        total = 0
+        for i in range(self.num_layers):
+            total += attn if self.layer_kind(i) == "attn" else ssm
+            if self.layer_is_moe(i):
+                k = self.experts_per_token if active_only else self.num_experts
+                total += k * mlp + d * self.num_experts  # + router
+            else:
+                total += mlp
+        # encoder stack (attention + mlp + optional cross-attn in decoder)
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + mlp)
+            if self.cross_attention:
+                total += self.num_layers * attn
+        total += v * d * (1 if self.tie_embeddings else 2)
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-architecture shape set)
+# ---------------------------------------------------------------------------
+TRAIN = "train"
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, TRAIN),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, PREFILL),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, DECODE),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, DECODE),
+}
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Shape cells that apply to ``cfg``.
+
+    ``long_500k`` needs sub-quadratic attention: only SSM/hybrid run it
+    (spec + DESIGN.md §4). Encoder-only archs would skip decode shapes, but
+    every assigned arch has a decoder.
+    """
+    out = []
+    for s in SHAPE_ORDER:
+        if s == "long_500k" and cfg.uses_full_attention:
+            continue
+        out.append(s)
+    return tuple(out)
+
+
+def skipped_shapes(cfg: ModelConfig) -> Tuple[Tuple[str, str], ...]:
+    """(shape, reason) pairs for cells skipped per the assignment spec."""
+    out = []
+    for s in SHAPE_ORDER:
+        if s == "long_500k" and cfg.uses_full_attention:
+            out.append((s, "pure full-attention arch: 500k-token decode is "
+                           "quadratic-KV; skipped per assignment spec"))
+    return tuple(out)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant of ``cfg`` for CPU smoke tests.
+
+    Keeps: family, mixer interleave pattern, MLP kind, GQA ratio, MoE top-k
+    structure. Shrinks: widths, depth, vocab, expert count.
+    """
+    q_per_kv = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+    num_kv = 2
+    num_heads = num_kv * q_per_kv
+    n_layers = min(cfg.num_layers, 4)
+    if cfg.family == HYBRID and cfg.attn_every:
+        n_layers = max(n_layers, cfg.attn_every)  # keep >=1 attn layer
+    small = dict(
+        name=f"tiny-{cfg.name}",
+        num_layers=n_layers,
+        d_model=128,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=128 // num_heads if 128 % num_heads == 0 else 16,
+        d_ff=256,
+        vocab_size=512,
+        vocab_pad_multiple=64,
+        num_experts=min(cfg.num_experts, 8) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.num_experts else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=32,
+        ssm_ngroups=1,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        frontend_tokens=16 if cfg.frontend != "none" else 0,
+        max_seq_len=512,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,25 @@
+"""DBRX-132B — fine-grained MoE: 16 experts, top-4 routing, GQA attention.
+
+[hf:databricks/dbrx-base; verified-tier: unverified]
+"""
+from repro.configs.base import MOE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family=MOE,
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab_size=100352,
+    mlp_kind=SWIGLU,
+    num_experts=16,
+    experts_per_token=4,
+    moe_every=1,          # MoE FFN on every layer
+    moe_offset=0,
+    rope_theta=500_000.0,
+    max_seq_len=524_288,
+    source="hf:databricks/dbrx-base",
+)

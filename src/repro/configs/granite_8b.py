@@ -1,0 +1,22 @@
+"""Granite-8B-Code — llama-arch dense GQA transformer for code.
+
+[arXiv:2405.04324; hf:ibm-granite/granite-8b-code-base; verified-tier: hf]
+"""
+from repro.configs.base import DENSE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family=DENSE,
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=49152,
+    mlp_kind=SWIGLU,
+    rope_theta=10_000_000.0,
+    max_seq_len=524_288,
+    tie_embeddings=True,
+    source="arXiv:2405.04324 (hf:ibm-granite/granite-8b-code-base)",
+)

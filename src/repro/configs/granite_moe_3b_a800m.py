@@ -1,0 +1,27 @@
+"""Granite-MoE-3B-A800M — fine-grained MoE, 40 experts top-8, small d_ff.
+
+[hf:ibm-granite/granite-3.0-3b-a800m-base; verified-tier: hf]
+(assigned-spec structured fields: 40 experts, top-8, d_ff=512)
+"""
+from repro.configs.base import MOE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family=MOE,
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    mlp_kind=SWIGLU,
+    num_experts=40,
+    experts_per_token=8,
+    moe_every=1,
+    moe_offset=0,
+    rope_theta=10_000.0,
+    max_seq_len=524_288,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-3b-a800m-base",
+)

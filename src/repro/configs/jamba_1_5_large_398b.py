@@ -1,0 +1,37 @@
+"""Jamba-1.5-Large-398B — hybrid Mamba+attention (1:7 interleave) with MoE.
+
+Attention on 1 of every 8 layers; MoE FFN on every other layer (16 experts,
+top-2). SSM layers use the Mamba2/SSD formulation for uniformity with the
+mamba2 config (documented substitution — Jamba v1 uses Mamba1 cells).
+
+[arXiv:2403.19887; hf:ai21labs/AI21-Jamba-1.5-Large; verified-tier: hf]
+"""
+from repro.configs.base import HYBRID, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family=HYBRID,
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    mlp_kind=SWIGLU,
+    num_experts=16,
+    experts_per_token=2,
+    attn_every=8,          # 1:7 attention:mamba interleave
+    attn_offset=4,
+    moe_every=2,           # MoE on every other layer
+    moe_offset=1,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_ngroups=8,
+    rope_theta=10_000.0,   # jamba attention layers are RoPE-free upstream;
+                           # kept for uniform attention code path
+    max_seq_len=1_048_576,
+    source="arXiv:2403.19887 (hf:ai21labs/AI21-Jamba-1.5-Large)",
+)

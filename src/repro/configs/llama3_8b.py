@@ -1,0 +1,21 @@
+"""Llama-3-8B — dense GQA transformer, 128k vocab. The paper's primary model.
+
+[arXiv:2407.21783; verified-tier: unverified]
+"""
+from repro.configs.base import DENSE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family=DENSE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    mlp_kind=SWIGLU,
+    rope_theta=500_000.0,
+    max_seq_len=524_288,
+    source="arXiv:2407.21783 (DP-LLM paper evaluation model)",
+)

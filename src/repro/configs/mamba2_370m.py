@@ -1,0 +1,26 @@
+"""Mamba2-370M — attention-free SSM using SSD (state-space duality).
+
+[arXiv:2405.21060; hf:state-spaces/mamba2-370m; verified-tier: unverified]
+"""
+from repro.configs.base import SSM, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family=SSM,
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,          # attention-free
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,               # mamba blocks carry their own expansion; no FFN
+    vocab_size=50280,
+    mlp_kind=SWIGLU,      # unused (d_ff == 0)
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,      # d_inner=2048 -> 32 ssm heads
+    ssm_conv_width=4,
+    ssm_ngroups=1,
+    max_seq_len=1_048_576,
+    tie_embeddings=True,
+    source="arXiv:2405.21060 (hf:state-spaces/mamba2-370m)",
+)

@@ -1,0 +1,21 @@
+"""Nemotron-4-340B — dense GQA transformer with squared-ReLU MLP.
+
+[arXiv:2402.16819 / arXiv:2406.11704; verified-tier: unverified]
+"""
+from repro.configs.base import DENSE, SQUARED_RELU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family=DENSE,
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp_kind=SQUARED_RELU,
+    rope_theta=10_000.0,
+    max_seq_len=524_288,
+    source="arXiv:2402.16819",
+)

@@ -1,0 +1,22 @@
+"""Phi-3-Medium (14B) — the DP-LLM paper's second evaluation model.
+
+Not part of the assigned pool; included for paper fidelity.
+[arXiv:2404.14219; verified-tier: hf]
+"""
+from repro.configs.base import DENSE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium",
+    family=DENSE,
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=10,
+    head_dim=128,
+    d_ff=17920,
+    vocab_size=32064,
+    mlp_kind=SWIGLU,
+    rope_theta=10_000.0,
+    max_seq_len=131_072,
+    source="arXiv:2404.14219 (DP-LLM paper evaluation model)",
+)

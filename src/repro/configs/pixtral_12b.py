@@ -1,0 +1,26 @@
+"""Pixtral-12B — pixtral-ViT frontend (STUB) + mistral-nemo style backbone.
+
+The assignment specifies the transformer BACKBONE only; the vision frontend is
+a stub whose precomputed patch embeddings arrive via ``input_specs()``.
+
+[hf:mistralai/Pixtral-12B-2409; verified-tier: unverified]
+"""
+from repro.configs.base import SWIGLU, VLM, ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family=VLM,
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,         # d_model / num_heads per assigned spec
+    d_ff=14336,
+    vocab_size=131072,
+    mlp_kind=SWIGLU,
+    rope_theta=1_000_000_000.0,
+    frontend="vision_stub",
+    frontend_tokens=1024,  # precomputed patch embeddings (stub)
+    max_seq_len=524_288,
+    source="hf:mistralai/Pixtral-12B-2409",
+)

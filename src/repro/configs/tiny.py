@@ -1,0 +1,189 @@
+"""Reduced same-family configs for CPU smoke tests and in-container benchmarks.
+
+``tiny-<family>`` configs are hand-tuned to be fast on one CPU core while
+exercising the same code paths (GQA ratios, MoE routing, SSD scan, hybrid
+interleave, enc-dec cross-attn, frontend stubs) as the full assigned configs.
+"""
+from repro.configs.base import (
+    AUDIO, DENSE, GELU, HYBRID, MOE, SQUARED_RELU, SSM, SWIGLU, VLM,
+    ModelConfig,
+)
+
+TINY_DENSE = ModelConfig(
+    name="tiny-dense",
+    family=DENSE,
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    mlp_kind=SWIGLU,
+    max_seq_len=1024,
+    source="reduced config (this repo)",
+)
+
+TINY_SQRELU = ModelConfig(
+    name="tiny-sqrelu",
+    family=DENSE,
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    mlp_kind=SQUARED_RELU,
+    max_seq_len=1024,
+    source="reduced config (this repo)",
+)
+
+TINY_MOE = ModelConfig(
+    name="tiny-moe",
+    family=MOE,
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=128,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    mlp_kind=SWIGLU,
+    num_experts=8,
+    experts_per_token=2,
+    moe_every=1,
+    moe_offset=0,
+    max_seq_len=1024,
+    source="reduced config (this repo)",
+)
+
+TINY_SSM = ModelConfig(
+    name="tiny-ssm",
+    family=SSM,
+    num_layers=4,
+    d_model=128,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=32,     # d_inner=256 -> 8 ssm heads
+    ssm_conv_width=4,
+    ssm_ngroups=1,
+    tie_embeddings=True,
+    max_seq_len=2048,
+    source="reduced config (this repo)",
+)
+
+TINY_HYBRID = ModelConfig(
+    name="tiny-hybrid",
+    family=HYBRID,
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    mlp_kind=SWIGLU,
+    num_experts=4,
+    experts_per_token=2,
+    attn_every=4,
+    attn_offset=1,
+    moe_every=2,
+    moe_offset=1,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=32,
+    ssm_conv_width=4,
+    ssm_ngroups=2,
+    max_seq_len=2048,
+    source="reduced config (this repo)",
+)
+
+TINY_VLM = ModelConfig(
+    name="tiny-vlm",
+    family=VLM,
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    mlp_kind=SWIGLU,
+    frontend="vision_stub",
+    frontend_tokens=16,
+    max_seq_len=1024,
+    source="reduced config (this repo)",
+)
+
+TINY_ENCDEC = ModelConfig(
+    name="tiny-encdec",
+    family=AUDIO,
+    num_layers=2,
+    encoder_layers=2,
+    cross_attention=True,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    vocab_pad_multiple=64,
+    mlp_kind=GELU,
+    frontend="audio_stub",
+    frontend_tokens=16,
+    max_seq_len=1024,
+    source="reduced config (this repo)",
+)
+
+# ~8M-param LM used by the paper-table benchmarks (trained in-container).
+BENCH_LM = ModelConfig(
+    name="bench-lm",
+    family=DENSE,
+    num_layers=6,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=768,
+    vocab_size=256,        # byte-level
+    vocab_pad_multiple=128,
+    mlp_kind=SWIGLU,
+    max_seq_len=1024,
+    source="reduced config (this repo, byte-level LM)",
+)
+
+# ~100M-param LM for the end-to-end training example.
+TRAIN_100M = ModelConfig(
+    name="train-100m",
+    family=DENSE,
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=256,
+    vocab_pad_multiple=128,
+    mlp_kind=SWIGLU,
+    max_seq_len=2048,
+    source="reduced config (this repo, byte-level LM)",
+)
+
+TINY_CONFIGS = {
+    c.name: c
+    for c in (
+        TINY_DENSE, TINY_SQRELU, TINY_MOE, TINY_SSM, TINY_HYBRID,
+        TINY_VLM, TINY_ENCDEC, BENCH_LM, TRAIN_100M,
+    )
+}

@@ -1,0 +1,27 @@
+"""Whisper-base — encoder-decoder speech transformer; conv frontend is a STUB
+(``input_specs()`` provides precomputed frame embeddings).
+
+[arXiv:2212.04356; verified-tier: unverified]
+"""
+from repro.configs.base import AUDIO, GELU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family=AUDIO,
+    num_layers=6,           # decoder layers
+    encoder_layers=6,
+    cross_attention=True,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,         # MHA (assigned spec: GQA kv=8 == num_heads)
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    mlp_kind=GELU,
+    frontend="audio_stub",
+    frontend_tokens=1500,   # mel frames after conv frontend (stub)
+    rope_theta=10_000.0,    # upstream uses learned/sinusoidal pos; RoPE here
+                            # keeps one attention code path (documented)
+    max_seq_len=65_536,
+    source="arXiv:2212.04356",
+)

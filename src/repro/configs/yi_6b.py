@@ -1,0 +1,21 @@
+"""Yi-6B — llama-arch dense transformer with GQA (kv=4).
+
+[arXiv:2403.04652; hf:01-ai/Yi-6B; verified-tier: hf]
+"""
+from repro.configs.base import DENSE, SWIGLU, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family=DENSE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    mlp_kind=SWIGLU,
+    rope_theta=5_000_000.0,
+    max_seq_len=524_288,
+    source="arXiv:2403.04652 (hf:01-ai/Yi-6B)",
+)

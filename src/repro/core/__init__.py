@@ -1,0 +1,23 @@
+"""DP-LLM core: the paper's contribution as a composable JAX module."""
+from repro.core.adaptation import (AdaptationSet, MultiScaleModel,
+                                   UnitAdaptation)
+from repro.core.allocator import allocate_precisions, uniform_allocation
+from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
+                                 bitserial_matmul_ref, delta_weight,
+                                 materialize, materialize_stacked,
+                                 quantize_linear, quantize_stacked)
+from repro.core.dynamic_linear import DynamicLinearApplier
+from repro.core.estimators import EstimatorFit, estimate, fit_estimator
+from repro.core.pipeline import (build_multiscale_model, quantize_units,
+                                 static_allocation)
+from repro.core.quantizer import dequantize, quantize_channelwise
+
+__all__ = [
+    "AdaptationSet", "DynamicLinearApplier", "EstimatorFit",
+    "MultiScaleModel", "QuantizedLinear", "QuantizedStacked",
+    "UnitAdaptation", "allocate_precisions", "bitserial_matmul_ref",
+    "build_multiscale_model", "delta_weight", "dequantize", "estimate",
+    "fit_estimator", "materialize", "materialize_stacked",
+    "quantize_channelwise", "quantize_linear", "quantize_stacked",
+    "quantize_units", "static_allocation", "uniform_allocation",
+]

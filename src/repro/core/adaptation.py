@@ -1,0 +1,85 @@
+"""Adaptation sets: the runtime-selectable model configurations.
+
+An :class:`AdaptationSet` is the paper's end product for one target
+precision: per unit, the candidate pair (l, h), the threshold T, and the
+fitted estimator. A :class:`MultiScaleModel` holds the shared bit-plane
+overlays plus one AdaptationSet per supported target precision — the
+overlay memory is paid once (Any-Precision property), the per-target
+artifacts are a few scalars + G matrices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.estimators import EstimatorFit
+
+
+@dataclass
+class UnitAdaptation:
+    path: str
+    kind: str
+    size: int                 # parameter count M_i
+    p: float                  # learned average precision
+    l: int
+    h: int
+    max_bits: int             # Phase-1 cap B_i
+    threshold: float = 0.0
+    async_eligible: bool = False
+    est: Optional[EstimatorFit] = None
+
+
+@dataclass
+class AdaptationSet:
+    target_precision: float
+    b_min: int
+    memory_budget_bits: float
+    units: Dict[str, UnitAdaptation] = field(default_factory=dict)
+
+    @property
+    def avg_p(self) -> float:
+        num = sum(u.p * u.size for u in self.units.values())
+        den = sum(u.size for u in self.units.values())
+        return num / max(den, 1)
+
+    def estimator_overhead_bytes(self) -> int:
+        """G-matrix storage (paper §5.1 'GPU memory overhead' analysis)."""
+        total = 0
+        for u in self.units.values():
+            if u.est is not None and u.est.kind == "jl" and u.est.g is not None:
+                total += int(np.prod(u.est.g.shape)) * 4
+        return total
+
+    def estimator_census(self) -> Dict[str, int]:
+        census = {"linear": 0, "jl": 0, "pinned": 0}
+        for u in self.units.values():
+            if u.l == u.h or u.est is None:
+                census["pinned"] += 1
+            else:
+                census[u.est.kind] += 1
+        return census
+
+
+@dataclass
+class MultiScaleModel:
+    """Shared overlays + per-target adaptation sets (+ static baselines)."""
+    arch: str
+    b_min: int
+    memory_budget_bits: float
+    max_bits: Dict[str, int]
+    overlays: Dict[str, object] = field(repr=False, default_factory=dict)
+    adaptations: Dict[float, AdaptationSet] = field(default_factory=dict)
+    static_tables: Dict[str, Dict[float, Dict[str, int]]] = \
+        field(default_factory=dict)   # method -> target -> path -> bits
+
+    def targets(self) -> List[float]:
+        return sorted(self.adaptations)
+
+    def overlay_bytes(self) -> int:
+        total = 0
+        for ov in self.overlays.values():
+            total += int(np.prod(ov.planes.shape)) * 4
+            total += int(np.prod(ov.scale.shape)) * 8
+        return total

@@ -1,0 +1,104 @@
+"""Per-layer precision allocation under a memory budget (integer program).
+
+Solves  argmin_{c_ib} Σ_i Σ_b c_ib · Ω_ib
+        s.t. Σ_i b(i)·M_i ≤ b_budget·Σ_i M_i   (+ optional lower bound,
+                                                 LLM-MQ Eq. 8)
+via Lagrangian relaxation (bisection on λ with per-layer argmin) followed by
+greedy marginal-gain repair — deterministic, no external MILP solver, and
+within one unit-swap of the IP optimum for this separable objective
+(DESIGN.md §2.3). Used for DP-LLM Phase 1 (max precisions) and for the
+LLM-MQ / HAWQ-V2 static baselines.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def _choices(cost: np.ndarray, sizes: np.ndarray, bits: np.ndarray,
+             lam: float) -> np.ndarray:
+    """argmin_b cost[i,b] + lam * bits[b] * sizes[i], per row."""
+    penal = cost + lam * sizes[:, None] * bits[None, :]
+    return np.argmin(penal, axis=1)
+
+
+def _avg_bits(choice: np.ndarray, sizes: np.ndarray,
+              bits: np.ndarray) -> float:
+    return float(np.sum(bits[choice] * sizes) / np.sum(sizes))
+
+
+def allocate_precisions(
+    cost: np.ndarray,          # (n_units, n_bits) predicted loss increase
+    sizes: Sequence[int],      # parameter count per unit (M_i)
+    bits_list: Sequence[int],  # candidate bitwidths, ascending
+    budget_bits: float,        # b_targ (upper bound on avg bits)
+    min_avg_bits: float = 0.0,  # optional lower bound (LLM-MQ Eq. 8)
+) -> List[int]:
+    cost = np.asarray(cost, np.float64)
+    sizes = np.asarray(sizes, np.float64)
+    bits = np.asarray(bits_list, np.float64)
+    n = cost.shape[0]
+    assert cost.shape[1] == len(bits)
+
+    # λ=0 -> everyone takes min-cost (max bits); bisect up until budget holds
+    lo, hi = 0.0, 1.0
+    while _avg_bits(_choices(cost, sizes, bits, hi), sizes, bits) \
+            > budget_bits and hi < 1e18:
+        hi *= 4.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if _avg_bits(_choices(cost, sizes, bits, mid), sizes, bits) \
+                > budget_bits:
+            lo = mid
+        else:
+            hi = mid
+    choice = _choices(cost, sizes, bits, hi)
+
+    # greedy repair: spend remaining slack on the best marginal-gain upgrades
+    total = np.sum(sizes)
+    budget_param_bits = budget_bits * total
+
+    def used():
+        return np.sum(bits[choice] * sizes)
+
+    improved = True
+    while improved:
+        improved = False
+        best_gain, best_i = 0.0, -1
+        for i in range(n):
+            j = choice[i]
+            if j + 1 >= len(bits):
+                continue
+            extra = (bits[j + 1] - bits[j]) * sizes[i]
+            if used() + extra > budget_param_bits + 1e-9:
+                continue
+            gain = (cost[i, j] - cost[i, j + 1]) / max(extra, 1e-12)
+            if gain > best_gain:
+                best_gain, best_i = gain, i
+        if best_i >= 0:
+            choice[best_i] += 1
+            improved = True
+
+    # optional lower bound: bump the cheapest upgrades until satisfied
+    if min_avg_bits > 0:
+        while _avg_bits(choice, sizes, bits) < min_avg_bits:
+            best_cost, best_i = np.inf, -1
+            for i in range(n):
+                j = choice[i]
+                if j + 1 >= len(bits):
+                    continue
+                dcost = (cost[i, j + 1] - cost[i, j]) / \
+                    ((bits[j + 1] - bits[j]) * sizes[i])
+                if dcost < best_cost:
+                    best_cost, best_i = dcost, i
+            if best_i < 0:
+                break
+            choice[best_i] += 1
+
+    return [int(bits_list[j]) for j in choice]
+
+
+def uniform_allocation(n_units: int, bits: int) -> List[int]:
+    """The Any-Precision-LLM naive baseline: same precision everywhere."""
+    return [bits] * n_units

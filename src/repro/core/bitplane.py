@@ -1,0 +1,229 @@
+"""Bit-plane overlay storage: the Any-Precision multi-scale substrate.
+
+A weight matrix quantized once to ``B`` bits is stored as ``B`` bit-planes
+packed into int32 words along the reduction axis K. Every lower precision
+``b <= B`` is the *prefix* (top-b planes) of the same storage — reading fewer
+planes reads fewer bytes, which is the entire memory-traffic mechanism the
+paper's runtime adaptation exploits.
+
+Math (per output channel n; bit 0 = MSB):
+    q        = sum_{j<B} 2^(B-1-j) * plane_j            in [0, 2^B)
+    v_b      = sum_{j<b} 2^(B-1-j) * plane_j            (b-bit truncation)
+    q_hat_b  = v_b + (2^(B-b) - 1) / 2                  (midpoint correction)
+    W_b      = scale * (q_hat_b - zero)
+so  W_B == exact dequant, and the b-bit GEMV has the closed form
+    y_b = scale ⊙ [ sum_{j<b} 2^(B-1-j) * (x @ plane_j)
+                    + ((2^(B-b)-1)/2 - zero) * sum(x) ]
+The dynamic-precision kernel (kernels/bitserial) evaluates exactly this,
+loading only the first ``b`` planes from HBM.
+
+Delta weights for a candidate pair (l, h):
+    ΔW = W_h − W_l = scale ⊙ [ sum_{l<=j<h} 2^(B-1-j) plane_j
+                               − (2^(B-l-1) − 2^(B-h-1)) ]
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import MAX_BITS, quantize_channelwise
+
+PACK = 32  # K positions per int32 word
+
+
+def _pad_k(x: jax.Array) -> jax.Array:
+    k = x.shape[0]
+    pad = (-k) % PACK
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+def pack_bitplanes(q: jax.Array, bits: int) -> jax.Array:
+    """(K, N) uint8 codes -> (bits, K/32, N) int32 planes (bit 0 = MSB).
+
+    Word layout: ``planes[b, kw, n]`` bit ``j`` (LSB-first) is plane ``b`` of
+    K position ``kw*32 + j``.
+    """
+    q = _pad_k(q.astype(jnp.int32))
+    k, n = q.shape
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    out = []
+    for b in range(bits):
+        plane = (q >> (bits - 1 - b)) & 1                      # (K, N)
+        words = plane.reshape(k // PACK, PACK, n)
+        packed = jnp.sum(words << shifts[None, :, None], axis=1)
+        out.append(packed.astype(jnp.int32))
+    return jnp.stack(out)                                       # (bits, K/32, N)
+
+
+def unpack_plane(packed: jax.Array) -> jax.Array:
+    """(K/32, N) int32 -> (K, N) float32 in {0, 1}."""
+    kw, n = packed.shape
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    bits = (packed[:, None, :] >> shifts[None, :, None]) & 1
+    return bits.reshape(kw * PACK, n).astype(jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedLinear:
+    """Bit-plane storage for one linear layer (the overlay adaptation set)."""
+
+    def __init__(self, planes: jax.Array, scale: jax.Array, zero: jax.Array,
+                 bits: int, k: int):
+        self.planes = planes      # (bits, K_pad/32, N) int32
+        self.scale = scale        # (N,) f32
+        self.zero = zero          # (N,) f32
+        self.bits = int(bits)     # static parent precision B
+        self.k = int(k)           # logical (unpadded) K
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.planes, self.scale, self.zero), (self.bits, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        planes, scale, zero = children
+        bits, k = aux
+        return cls(planes, scale, zero, bits, k)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.planes.shape[-1]
+
+    @property
+    def bytes_at(self) -> dict:
+        """HBM bytes read per decode GEMV at each precision b (planes only)."""
+        per_plane = self.planes.shape[1] * self.planes.shape[2] * 4
+        return {b: b * per_plane for b in range(1, self.bits + 1)}
+
+    def __repr__(self):
+        return (f"QuantizedLinear(K={self.k}, N={self.n}, bits={self.bits})")
+
+
+def quantize_linear(w: jax.Array, bits: int = MAX_BITS) -> QuantizedLinear:
+    """Quantize a (K, N) weight to a ``bits``-bit bit-plane overlay."""
+    q, scale, zero = quantize_channelwise(w, bits)
+    planes = pack_bitplanes(q, bits)
+    return QuantizedLinear(planes, scale, zero, bits, w.shape[0])
+
+
+def midpoint(bits: int, b) -> jax.Array:
+    """Midpoint correction ``(2^(B-b) - 1) / 2`` (b may be traced)."""
+    return (jnp.exp2(jnp.asarray(bits - b, jnp.float32)) - 1.0) * 0.5
+
+
+def materialize(ql: QuantizedLinear, b) -> jax.Array:
+    """Reconstruct the effective b-bit weight (K, N) float32.
+
+    ``b`` may be a python int or a traced scalar; planes past ``b`` are
+    masked (the kernel instead skips their DMA entirely). Truncated
+    overlays (see :func:`truncate_overlay`) store fewer than ``bits``
+    planes; ``b`` must then stay <= the stored plane count.
+    """
+    B = ql.bits
+    acc = jnp.zeros((ql.planes.shape[1] * PACK, ql.n), jnp.float32)
+    for j in range(ql.planes.shape[0]):
+        w_j = unpack_plane(ql.planes[j]) * (2.0 ** (B - 1 - j))
+        acc = acc + jnp.where(j < b, 1.0, 0.0) * w_j
+    w = (acc + midpoint(B, b) - ql.zero) * ql.scale
+    return w[: ql.k]
+
+
+def truncate_overlay(ql: QuantizedLinear, h: int) -> QuantizedLinear:
+    """Keep only the top-``h`` planes (serving stores ≤ max_bits planes —
+    the Any-Precision memory budget; arithmetic stays anchored at B)."""
+    return QuantizedLinear(ql.planes[:h], ql.scale, ql.zero, ql.bits, ql.k)
+
+
+def truncate_stacked(qs: "QuantizedStacked", h: int) -> "QuantizedStacked":
+    return QuantizedStacked(qs.planes[:, :h], qs.scale, qs.zero, qs.bits,
+                            qs.k)
+
+
+def delta_weight(ql: QuantizedLinear, l: int, h: int) -> jax.Array:
+    """ΔW = W_h − W_l  (K, N) float32, for the relative-error metric."""
+    if not (0 < l <= h <= ql.bits):
+        raise ValueError(f"need 0 < l <= h <= {ql.bits}, got ({l}, {h})")
+    B = ql.bits
+    acc = jnp.zeros((ql.planes.shape[1] * PACK, ql.n), jnp.float32)
+    for j in range(l, h):
+        acc = acc + unpack_plane(ql.planes[j]) * (2.0 ** (B - 1 - j))
+    corr = (2.0 ** (B - l - 1)) - (2.0 ** (B - h - 1))
+    return ((acc - corr) * ql.scale)[: ql.k]
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedStacked:
+    """Bit-plane overlay for stacked expert weights (E, K, N).
+
+    Experts in one projection share a runtime precision decision
+    (DESIGN.md §4), so materialization is vectorized over E.
+    """
+
+    def __init__(self, planes: jax.Array, scale: jax.Array, zero: jax.Array,
+                 bits: int, k: int):
+        self.planes = planes      # (E, bits, K_pad/32, N) int32
+        self.scale = scale        # (E, N)
+        self.zero = zero          # (E, N)
+        self.bits = int(bits)
+        self.k = int(k)
+
+    def tree_flatten(self):
+        return (self.planes, self.scale, self.zero), (self.bits, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def __repr__(self):
+        e = self.planes.shape[0]
+        return (f"QuantizedStacked(E={e}, K={self.k}, "
+                f"N={self.planes.shape[-1]}, bits={self.bits})")
+
+
+def quantize_stacked(w: jax.Array, bits: int = MAX_BITS) -> QuantizedStacked:
+    """Quantize stacked expert weights (E, K, N) to per-expert overlays."""
+    def one(we):
+        q, scale, zero = quantize_channelwise(we, bits)
+        return pack_bitplanes(q, bits), scale, zero
+    planes, scale, zero = jax.vmap(one)(w)
+    return QuantizedStacked(planes, scale, zero, bits, w.shape[1])
+
+
+def materialize_stacked(qs: QuantizedStacked, b) -> jax.Array:
+    """(E, K, N) effective b-bit weights (b may be traced)."""
+    B = qs.bits
+    e = qs.planes.shape[0]
+    kp = qs.planes.shape[2] * PACK
+    n = qs.planes.shape[-1]
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    acc = jnp.zeros((e, kp, n), jnp.float32)
+    for j in range(qs.planes.shape[1]):
+        words = qs.planes[:, j]                              # (E, Kw, N)
+        bitsj = (words[:, :, None, :] >> shifts[None, None, :, None]) & 1
+        plane = bitsj.reshape(e, kp, n).astype(jnp.float32)
+        acc = acc + jnp.where(j < b, 1.0, 0.0) * plane * (2.0 ** (B - 1 - j))
+    w = (acc + midpoint(B, b) - qs.zero[:, None, :]) * qs.scale[:, None, :]
+    return w[:, : qs.k]
+
+
+def bitserial_matmul_ref(x: jax.Array, ql: QuantizedLinear, b) -> jax.Array:
+    """Reference b-bit matmul via the closed form (oracle for the kernel).
+
+    x: (..., K) float; b: int or traced scalar; returns (..., N) float32.
+    """
+    B = ql.bits
+    xp = _pad_k(jnp.moveaxis(jnp.atleast_2d(x.astype(jnp.float32)), -1, 0))
+    xp = jnp.moveaxis(xp, 0, -1)                    # (..., K_pad)
+    acc = jnp.zeros(xp.shape[:-1] + (ql.n,), jnp.float32)
+    for j in range(ql.planes.shape[0]):
+        plane = unpack_plane(ql.planes[j])          # (K_pad, N)
+        contrib = (xp @ plane) * (2.0 ** (B - 1 - j))
+        acc = acc + jnp.where(j < b, 1.0, 0.0) * contrib
+    sx = jnp.sum(xp, axis=-1, keepdims=True)        # (..., 1)
+    y = (acc + (midpoint(B, b) - ql.zero) * sx) * ql.scale
+    return y.reshape(x.shape[:-1] + (ql.n,))

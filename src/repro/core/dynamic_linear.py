@@ -1,0 +1,108 @@
+"""Runtime dynamic-precision linear applier — the DP-LLM serving path.
+
+Implements the ``lin(path, x, async_input=...)`` protocol of the model zoo:
+for each quantized unit it estimates the relative error (linear / JL /
+exact), compares against the unit's threshold, and runs the bit-serial
+matmul at the selected precision. Non-unit paths fall through to the raw
+parameters.
+
+The applier also exposes ``weights(path, x_est)`` for stacked MoE units
+(the decode path materializes expert weights at the selected precision) and
+records every (bits, size) decision so the engine can account per-step
+**effective bitwidth** (paper §6.3 QoS analysis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptation import AdaptationSet
+from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
+                                 materialize, materialize_stacked)
+from repro.core.estimators import estimate
+from repro.kernels.bitserial import bitserial_matmul
+
+
+class DynamicLinearApplier:
+    """One instance per traced step; collect ``effective_bits()`` after."""
+
+    def __init__(
+        self,
+        raw_params: Dict[str, jax.Array],
+        overlays: Dict[str, object],
+        adaptation: Optional[AdaptationSet] = None,
+        *,
+        static_bits: Optional[Dict[str, int]] = None,   # static baselines
+        mode: str = "dynamic",        # dynamic | static | max | exact
+        use_async: bool = True,
+        backend: Optional[str] = None,
+        exact_deltas: Optional[Dict[str, jax.Array]] = None,
+    ):
+        self.raw = raw_params
+        self.overlays = overlays
+        self.adaptation = adaptation
+        self.static_bits = static_bits or {}
+        self.mode = mode
+        self.use_async = use_async
+        self.backend = backend
+        self.exact_deltas = exact_deltas or {}
+        self.records: List[Tuple[jax.Array, float]] = []
+
+    # -- precision selection ---------------------------------------------------
+    def _select_bits(self, path: str, x: jax.Array,
+                     async_input) -> jax.Array:
+        if self.mode == "static":
+            return jnp.int32(self.static_bits[path])
+        ua = self.adaptation.units[path]
+        if self.mode == "max":
+            return jnp.int32(ua.max_bits)
+        if ua.l == ua.h:
+            return jnp.int32(ua.l)
+        x_est = async_input if (self.use_async and ua.async_eligible and
+                                async_input is not None) else x
+        if self.mode == "exact":
+            xe = x_est.reshape((-1, x_est.shape[-1])).astype(jnp.float32)
+            est = jnp.max(jnp.linalg.norm(xe @ self.exact_deltas[path],
+                                          axis=-1))
+        else:
+            est = estimate(ua.est, x_est)
+        return jnp.where(est > ua.threshold, jnp.int32(ua.h),
+                         jnp.int32(ua.l))
+
+    # -- lin protocol ------------------------------------------------------------
+    def __call__(self, path: str, x: jax.Array, *,
+                 async_input=None) -> jax.Array:
+        ov = self.overlays.get(path)
+        if ov is None or isinstance(ov, QuantizedStacked):
+            if ov is not None:
+                raise ValueError(
+                    f"stacked unit {path} must use .weights(), not lin()")
+            return jnp.einsum("...k,kn->...n", x,
+                              self.raw[path]).astype(x.dtype)
+        bits = self._select_bits(path, x, async_input)
+        self.records.append((bits, float(ov.k * ov.n)))
+        y = bitserial_matmul(x, ov, bits, backend=self.backend)
+        return y.astype(x.dtype)
+
+    def weights(self, path: str, x: jax.Array, *,
+                async_input=None) -> jax.Array:
+        """Materialized weights for stacked (MoE) units at selected bits."""
+        ov = self.overlays.get(path)
+        if ov is None:
+            return self.raw[path]
+        bits = self._select_bits(path, x, async_input)
+        e, _, _, n = ov.planes.shape
+        self.records.append((bits, float(e * ov.k * n)))
+        return materialize_stacked(ov, bits).astype(x.dtype)
+
+    # -- accounting ----------------------------------------------------------------
+    def effective_bits(self) -> jax.Array:
+        """Parameter-weighted mean of this step's precision decisions."""
+        if not self.records:
+            return jnp.float32(0.0)
+        num = sum(b.astype(jnp.float32) * s for b, s in self.records)
+        den = sum(s for _, s in self.records)
+        return num / den

@@ -1,0 +1,90 @@
+"""Relative-error estimators (paper §5): linear-regression / JL hybrid.
+
+Offline, per unit:
+1. compute the exact relative errors ``‖x·ΔW‖`` and the estimator inputs
+   (the *async* residual value for async-eligible units — paper Fig. 6);
+2. fit the linear model ``err ≈ a·‖x‖ + b``; if its R² ≥ R²_th (0.9), the
+   unit uses the near-free linear estimator;
+3. otherwise sample ``A_ij ~ N(0,1)/√k`` (JL lemma, k=64), precompute
+   ``G = A·ΔWᵀ`` and calibrate a scalar gain γ to the input distribution
+   (the paper's "tune G ... offline" step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+JL_K = 64          # projection dim (paper §5.1)
+R2_THRESHOLD = 0.9
+
+
+@dataclass
+class EstimatorFit:
+    kind: str                     # "linear" | "jl"
+    r2: float
+    a: float = 0.0                # linear: err ≈ a·‖x‖ + b
+    b: float = 0.0
+    gamma: float = 1.0            # jl: err ≈ γ·‖G x‖
+    g: Optional[np.ndarray] = field(default=None, repr=False)  # (k, K)
+
+
+def sample_projection(key: jax.Array, k_proj: int, n_out: int) -> jax.Array:
+    """A ~ N(0, 1/k) of shape (k_proj, n_out) — projects the OUTPUT error."""
+    return jax.random.normal(key, (k_proj, n_out)) / np.sqrt(k_proj)
+
+
+def make_g(a_mat: jax.Array, delta_w: jax.Array) -> jax.Array:
+    """G = A·ΔWᵀ (k, K): the runtime estimate is ‖G x‖ ≈ ‖x·ΔW‖."""
+    return jnp.einsum("pn,kn->pk", a_mat, delta_w)
+
+
+def fit_linear(xnorm: np.ndarray, err: np.ndarray):
+    """Least-squares err ≈ a·xnorm + b; returns (a, b, r2)."""
+    x = np.asarray(xnorm, np.float64)
+    y = np.asarray(err, np.float64)
+    xm, ym = x.mean(), y.mean()
+    vx = np.mean((x - xm) ** 2)
+    cov = np.mean((x - xm) * (y - ym))
+    a = cov / max(vx, 1e-30)
+    b = ym - a * xm
+    resid = y - (a * x + b)
+    vy = np.mean((y - ym) ** 2)
+    r2 = 1.0 - np.mean(resid ** 2) / max(vy, 1e-30)
+    return float(a), float(b), float(r2)
+
+
+def fit_gamma(jl_raw: np.ndarray, err: np.ndarray) -> float:
+    """γ minimizing E[(γ·‖Gx‖ − err)²] — the G input-calibration step."""
+    num = float(np.sum(jl_raw * err))
+    den = float(np.sum(jl_raw * jl_raw))
+    return num / max(den, 1e-30)
+
+
+def fit_estimator(
+    err: np.ndarray,            # exact ‖x·ΔW‖ on calibration tokens
+    xnorm: np.ndarray,          # ‖x_est‖ (async input where eligible)
+    jl_raw: np.ndarray,         # ‖G x_est‖ with the sampled (uncalibrated) G
+    g: np.ndarray,              # the sampled G (kept if the unit goes JL)
+    *,
+    r2_threshold: float = R2_THRESHOLD,
+) -> EstimatorFit:
+    a, b, r2 = fit_linear(xnorm, err)
+    if r2 >= r2_threshold:
+        return EstimatorFit(kind="linear", r2=r2, a=a, b=b)
+    gamma = fit_gamma(jl_raw, err)
+    return EstimatorFit(kind="jl", r2=r2, gamma=gamma, g=np.asarray(g))
+
+
+def estimate(fit: EstimatorFit, x: jax.Array) -> jax.Array:
+    """Batched runtime estimate; reduces with max over leading dims
+    (one precision decision per layer per step — DESIGN.md §2.3)."""
+    xf = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    if fit.kind == "linear":
+        xn = jnp.linalg.norm(xf, axis=-1)
+        return jnp.max(fit.a * xn + fit.b)
+    proj = xf @ jnp.asarray(fit.g).T
+    return fit.gamma * jnp.max(jnp.linalg.norm(proj, axis=-1))

@@ -1,0 +1,167 @@
+"""Offline DP-LLM pipeline: quantize → Phase 1 → Phase 2 → Phase 3 → fit
+estimators — Algorithm 1 end to end, plus the LLM-MQ / HAWQ-V2 / uniform
+static baselines the paper compares against.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.adaptation import (AdaptationSet, MultiScaleModel,
+                                   UnitAdaptation)
+from repro.core.allocator import allocate_precisions, uniform_allocation
+from repro.core.bitplane import quantize_linear, quantize_stacked
+from repro.core.estimators import fit_estimator
+from repro.core.precision_finetune import (finetune_avg_precisions,
+                                           interpolated_params,
+                                           _weight_stack)
+from repro.core.sensitivity import accumulate_fisher, sensitivity_tables
+from repro.core.thresholds import (candidate_pair, collect_calibration,
+                                   threshold_from_quantile)
+from repro.models import linear_units
+from repro.models.common import LinearUnit
+
+
+def quantize_units(params, units: Sequence[LinearUnit],
+                   bits: int) -> Dict[str, object]:
+    overlays = {}
+    for u in units:
+        w = params[u.path]
+        if w.ndim == 3:
+            overlays[u.path] = quantize_stacked(w, bits)
+        else:
+            overlays[u.path] = quantize_linear(w, bits)
+    return overlays
+
+
+def unit_sizes(params, units: Sequence[LinearUnit]) -> List[int]:
+    return [int(np.prod(params[u.path].shape)) for u in units]
+
+
+def phase1_max_precisions(
+    cfg: ModelConfig, params, overlays, units, g_mean, fisher,
+    *, bits_list: Sequence[int], memory_budget_bits: float,
+) -> Dict[str, int]:
+    """Fisher-diagonal IP (paper Appendix A) under the memory budget."""
+    cost = sensitivity_tables("fisher", units, params, overlays,
+                              g_mean, fisher, bits_list)
+    alloc = allocate_precisions(cost, unit_sizes(params, units), bits_list,
+                                memory_budget_bits)
+    return {u.path: b for u, b in zip(units, alloc)}
+
+
+def static_allocation(
+    method: str,                      # "llm_mq" | "hawq_v2" | "uniform"
+    cfg: ModelConfig, params, overlays, units, g_mean, fisher,
+    *, bits_list: Sequence[int], target_bits: float,
+    max_bits: Optional[Dict[str, int]] = None,
+) -> Dict[str, int]:
+    """Static mixed-precision baselines (paper §6.1 / Appendix B.2)."""
+    if method == "uniform":
+        b = int(round(target_bits))
+        return {u.path: b for u in units}
+    bl = list(bits_list)
+    cost = sensitivity_tables(method, units, params, overlays,
+                              g_mean, fisher, bl)
+    if max_bits:  # respect the memory-budget caps, like DP-LLM's Phase 1
+        cost = cost.copy()
+        for i, u in enumerate(units):
+            for j, b in enumerate(bl):
+                if b > max_bits[u.path]:
+                    cost[i, j] = 1e30
+    min_avg = target_bits - 0.005 if method == "llm_mq" else 0.0
+    alloc = allocate_precisions(cost, unit_sizes(params, units), bl,
+                                target_bits, min_avg_bits=min_avg)
+    return {u.path: b for u, b in zip(units, alloc)}
+
+
+def build_multiscale_model(
+    cfg: ModelConfig,
+    params,
+    calib_batches: List[Tuple[np.ndarray, np.ndarray]],
+    *,
+    targets: Sequence[float],
+    b_min: int = 3,
+    b_max: int = 6,
+    memory_budget_bits: float = 5.0,
+    alpha: float = 1.0,
+    finetune_epochs: int = 3,
+    finetune_lr: float = 0.01,
+    r2_threshold: float = 0.9,
+    seed: int = 0,
+    baselines: Sequence[str] = ("llm_mq", "hawq_v2"),
+) -> MultiScaleModel:
+    units = linear_units(cfg)
+    bits_list = list(range(b_min, b_max + 1))
+    overlays = quantize_units(params, units, b_max)
+
+    # shared sensitivity pass (Fisher diag + mean grads)
+    g_mean, fisher = accumulate_fisher(
+        cfg, params, calib_batches, [u.path for u in units])
+
+    # Phase 1: memory-budget max precisions
+    max_bits = phase1_max_precisions(
+        cfg, params, overlays, units, g_mean, fisher,
+        bits_list=bits_list, memory_budget_bits=memory_budget_bits)
+
+    model = MultiScaleModel(
+        arch=cfg.name, b_min=b_min,
+        memory_budget_bits=memory_budget_bits,
+        max_bits=max_bits, overlays=overlays)
+
+    sizes = unit_sizes(params, units)
+    for t in targets:
+        # Phase 2: learn average precisions
+        ft = finetune_avg_precisions(
+            cfg, params, overlays, units, max_bits, calib_batches,
+            b_target=t, b_min=b_min,
+            alpha=(10.0 * alpha if abs(t - 3.25) < 1e-6 else alpha),
+            lr=finetune_lr, epochs=finetune_epochs)
+        p_assign = {u.path: float(p) for u, p in zip(units, ft.p)}
+
+        # Phase 3 + estimator calibration, with the adapted model's own
+        # activation distribution (interpolated weights at learned p)
+        stacks = {u.path: _weight_stack(overlays[u.path], b_min,
+                                        max_bits[u.path]) for u in units}
+        run_params = interpolated_params(
+            params, stacks, [u.path for u in units],
+            jnp.asarray(ft.p), b_min)
+        del stacks
+        records = collect_calibration(
+            cfg, run_params, overlays, units, p_assign, calib_batches,
+            b_min=b_min, max_bits=max_bits,
+            key=jax.random.PRNGKey(seed), k_proj=64)
+
+        aset = AdaptationSet(target_precision=t, b_min=b_min,
+                             memory_budget_bits=memory_budget_bits)
+        for u, size in zip(units, sizes):
+            p = p_assign[u.path]
+            l, h = candidate_pair(p, b_min, max_bits[u.path])
+            ua = UnitAdaptation(
+                path=u.path, kind=u.kind, size=size, p=p, l=l, h=h,
+                max_bits=max_bits[u.path],
+                async_eligible=u.async_eligible)
+            if u.path in records and l != h:
+                rec = records[u.path]
+                ua.threshold = threshold_from_quantile(rec.err, p, l)
+                ua.est = fit_estimator(rec.err, rec.xnorm, rec.jl_raw,
+                                       rec.g, r2_threshold=r2_threshold)
+            else:
+                # pinned unit (integer p or expert_down): round to nearest
+                ua.l = ua.h = int(np.clip(round(p), b_min,
+                                          max_bits[u.path]))
+            aset.units[u.path] = ua
+        model.adaptations[t] = aset
+
+    # static baselines at every target
+    for method in baselines:
+        model.static_tables[method] = {}
+        for t in targets:
+            model.static_tables[method][t] = static_allocation(
+                method, cfg, params, overlays, units, g_mean, fisher,
+                bits_list=bits_list, target_bits=t, max_bits=max_bits)
+    return model

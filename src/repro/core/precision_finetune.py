@@ -1,0 +1,115 @@
+"""Phase 2 — layer-wise average precision assignment (paper §4, Eq. 1).
+
+Each unit's linear op is substituted by the interpolation
+``y = r·W_l x + (1−r)·W_h x`` with ``l=⌊p⌋``, ``h=⌈p⌉``, ``r=1−(p−l)``
+(the s/t formulation of Algorithm 1 collapses to this), and ONLY the
+``{p_i}`` are fine-tuned under
+
+    L' = L + α·(Σ p_i·M_i / Σ M_i − b_targ)²
+
+which pins the parameter-weighted average precision to the target while the
+data term pushes sensitive layers up and insensitive layers down.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
+                                 materialize, materialize_stacked)
+from repro.models import loss_fn
+from repro.models.common import LinearUnit
+from repro.optim import adamw
+
+
+@dataclass
+class FinetuneResult:
+    p: np.ndarray              # (n_units,) learned average precisions
+    losses: List[float]        # per-iteration data loss
+    reg_values: List[float]    # per-iteration regularizer values
+
+
+def _weight_stack(overlay, b_lo: int, b_hi: int) -> jax.Array:
+    """Stack of materialized weights for b in [b_lo, b_hi] (leading axis)."""
+    mats = []
+    for b in range(b_lo, b_hi + 1):
+        if isinstance(overlay, QuantizedStacked):
+            mats.append(materialize_stacked(overlay, b))
+        else:
+            mats.append(materialize(overlay, b))
+    return jnp.stack(mats)
+
+
+def interpolated_params(
+    params: Dict[str, jax.Array],
+    stacks: Dict[str, jax.Array],
+    unit_order: Sequence[str],
+    p_vec: jax.Array,                 # (n_units,) traced
+    b_min: int,
+) -> Dict[str, jax.Array]:
+    """Parameter view with unit weights replaced by W(p) interpolation."""
+    out = dict(params)
+    for idx, path in enumerate(unit_order):
+        stack = stacks[path]
+        n_levels = stack.shape[0]
+        p = jnp.clip(p_vec[idx], b_min, b_min + n_levels - 1)
+        l_idx = jnp.clip(jnp.floor(p).astype(jnp.int32) - b_min,
+                         0, n_levels - 2)
+        r = 1.0 - (p - (l_idx + b_min))
+        wl = jnp.take(stack, l_idx, axis=0)
+        wh = jnp.take(stack, l_idx + 1, axis=0)
+        out[path] = (r * wl + (1.0 - r) * wh).astype(stack.dtype)
+    return out
+
+
+def finetune_avg_precisions(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    overlays: Dict[str, object],
+    units: Sequence[LinearUnit],
+    max_bits: Dict[str, int],          # Phase-1 per-unit maximum precision
+    batches: Iterable[Tuple[np.ndarray, np.ndarray]],
+    *,
+    b_target: float,
+    b_min: int = 3,
+    alpha: float = 1.0,
+    lr: float = 0.01,
+    epochs: int = 5,
+) -> FinetuneResult:
+    unit_order = [u.path for u in units]
+    sizes = jnp.asarray([float(u.k * u.n) for u in units])
+    stacks = {u.path: _weight_stack(overlays[u.path], b_min,
+                                    max_bits[u.path]) for u in units}
+    maxb = jnp.asarray([float(max_bits[u.path]) for u in units])
+
+    p0 = jnp.clip(jnp.full((len(units),), float(b_target)), b_min, maxb)
+    opt_state = adamw.init({"p": p0})
+
+    def objective(pv, tokens, labels):
+        eff = interpolated_params(params, stacks, unit_order, pv["p"], b_min)
+        data = loss_fn(cfg, eff, tokens, labels)
+        avg = jnp.sum(pv["p"] * sizes) / jnp.sum(sizes)
+        reg = alpha * (avg - b_target) ** 2
+        return data + reg, (data, reg)
+
+    step = jax.jit(jax.value_and_grad(objective, has_aux=True))
+
+    p_params = {"p": p0}
+    losses, regs = [], []
+    batch_list = list(batches)
+    for _ in range(epochs):
+        for tokens, labels in batch_list:
+            (_, (data, reg)), g = step(p_params, jnp.asarray(tokens),
+                                       jnp.asarray(labels))
+            p_params, opt_state = adamw.update(
+                g, opt_state, p_params, lr=jnp.float32(lr),
+                weight_decay=0.0)
+            p_params = {"p": jnp.clip(p_params["p"], b_min, maxb)}
+            losses.append(float(data))
+            regs.append(float(reg))
+    return FinetuneResult(np.asarray(p_params["p"]), losses, regs)

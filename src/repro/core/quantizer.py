@@ -1,0 +1,48 @@
+"""Per-channel asymmetric uniform quantization.
+
+The multi-scale (Any-Precision) overlay in this framework is built on uniform
+quantization rather than the upstream SqueezeLLM codebooks: uniform codes keep
+the b-bit *prefix property* in closed form (``core/bitplane.py``) and let the
+TPU kernel fuse dequantization into the bit-serial MXU matmul
+(DESIGN.md §2.3 assumption log).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_BITS = 8  # storage parent precision (paper's window is 3..6 within this)
+
+
+def quantize_channelwise(
+    w: jax.Array, bits: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize ``w`` (K, N) to ``bits``-bit codes, per-output-channel (N).
+
+    Returns ``(q, scale, zero)`` with
+    ``w ≈ scale * (q - zero)``, ``q ∈ [0, 2^bits)`` stored as uint8.
+    """
+    if not (1 <= bits <= MAX_BITS):
+        raise ValueError(f"bits must be in [1, {MAX_BITS}], got {bits}")
+    w = w.astype(jnp.float32)
+    lo = jnp.min(w, axis=0)                       # (N,)
+    hi = jnp.max(w, axis=0)                       # (N,)
+    span = jnp.maximum(hi - lo, 1e-8)
+    levels = (1 << bits) - 1
+    scale = span / levels                          # (N,)
+    zero = -lo / scale                             # (N,) real-valued zero point
+    q = jnp.clip(jnp.round(w / scale + zero), 0, levels).astype(jnp.uint8)
+    return q, scale, zero
+
+
+def dequantize(q: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_channelwise` (full-precision codes)."""
+    return (q.astype(jnp.float32) - zero) * scale
+
+
+def quantization_mse(w: jax.Array, bits: int) -> jax.Array:
+    """Mean-squared error of quantizing ``w`` to ``bits`` (sensitivity input)."""
+    q, scale, zero = quantize_channelwise(w, bits)
+    return jnp.mean((w.astype(jnp.float32) - dequantize(q, scale, zero)) ** 2)

@@ -1,0 +1,82 @@
+"""Static quantization sensitivity (paper Appendix A / B.2).
+
+One calibration pass accumulates, per linear unit:
+- ``g_sum``  — mean gradient        (LLM-MQ:    ΔL ≈ |gᵀ ΔW|)
+- ``g2_sum`` — squared gradients    (Fisher diag ≈ Hessian diag;
+               DP-LLM Phase 1:      ΔL ≈ ½ Σ F_kk ΔW_k²
+               HAWQ-V2:             ΔL ≈ mean(F) ‖ΔW‖²)
+
+Sensitivity *tables* (unit × candidate bitwidth) feed the allocator.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
+                                 materialize, materialize_stacked)
+from repro.models import loss_fn
+from repro.models.common import LinearUnit
+
+
+def accumulate_fisher(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    batches: Iterable[Tuple[np.ndarray, np.ndarray]],
+    unit_paths: Sequence[str],
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Returns (g_mean, fisher_diag) per unit path."""
+    grad_fn = jax.jit(jax.grad(
+        lambda p, t, l: loss_fn(cfg, p, t, l)))
+    g_sum = {p: jnp.zeros_like(params[p]) for p in unit_paths}
+    g2_sum = {p: jnp.zeros_like(params[p]) for p in unit_paths}
+    n = 0
+    for tokens, labels in batches:
+        g = grad_fn(params, jnp.asarray(tokens), jnp.asarray(labels))
+        for p in unit_paths:
+            g_sum[p] = g_sum[p] + g[p]
+            g2_sum[p] = g2_sum[p] + jnp.square(g[p])
+        n += 1
+    inv = 1.0 / max(n, 1)
+    return ({p: g_sum[p] * inv for p in unit_paths},
+            {p: g2_sum[p] * inv for p in unit_paths})
+
+
+def _materialized(overlay, b: int) -> jax.Array:
+    if isinstance(overlay, QuantizedStacked):
+        return materialize_stacked(overlay, b)
+    return materialize(overlay, b)
+
+
+def sensitivity_tables(
+    method: str,                       # "fisher" (DP-LLM/HAWQ-style IP input)
+                                       # | "hawq_v2" | "llm_mq"
+    units: Sequence[LinearUnit],
+    weights: Dict[str, jax.Array],     # full-precision unit weights
+    overlays: Dict[str, object],       # path -> Quantized{Linear,Stacked}
+    g_mean: Dict[str, jax.Array],
+    fisher: Dict[str, jax.Array],
+    bits_list: Sequence[int],
+) -> np.ndarray:
+    """(n_units, n_bits) predicted loss increase for each bitwidth choice."""
+    rows: List[List[float]] = []
+    for u in units:
+        w = weights[u.path].astype(jnp.float32)
+        row = []
+        for b in bits_list:
+            dw = w - _materialized(overlays[u.path], b)
+            if method == "llm_mq":
+                val = jnp.abs(jnp.sum(g_mean[u.path].astype(jnp.float32) * dw))
+            elif method == "hawq_v2":
+                tr = jnp.mean(fisher[u.path].astype(jnp.float32))
+                val = tr * jnp.sum(dw * dw)
+            else:  # fisher-diagonal second-order term (Eq. 5)
+                val = 0.5 * jnp.sum(
+                    fisher[u.path].astype(jnp.float32) * dw * dw)
+            row.append(float(val))
+        rows.append(row)
+    return np.asarray(rows)

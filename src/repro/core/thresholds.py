@@ -1,0 +1,138 @@
+"""Phase 3 — average-precision → threshold translation + calibration capture.
+
+One eager forward pass over the calibration set with a *capturing* linear
+applier records, per dynamic unit and per token:
+- the exact relative error ``‖x·ΔW‖`` (threshold source, Algorithm 1),
+- ``‖x_est‖`` and ``‖G·x_est‖`` where ``x_est`` is the **async** residual
+  input for async-eligible units (q/k/v/up/ssm_in — paper Fig. 6) and the
+  immediate input otherwise.
+
+The threshold is the ``r_i``-quantile of the error list, ``r_i = 1−(p_i−l)``:
+a unit with p=3.2 selects h-bit on the ~20% largest-error tokens.
+
+MoE note (DESIGN.md §4): expert up/gate units share the router's input; their
+ΔW concatenates experts along the output dim. Expert down-projections are
+pinned static (l==h) because their inputs are per-expert post-dispatch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bitplane import (QuantizedStacked, materialize,
+                                 materialize_stacked)
+from repro.core.estimators import JL_K, make_g, sample_projection
+from repro.models import forward
+from repro.models.common import LinearUnit
+
+
+@dataclass
+class CalibRecord:
+    err: np.ndarray      # exact ‖x·ΔW‖ per calibration token
+    xnorm: np.ndarray    # ‖x_est‖
+    jl_raw: np.ndarray   # ‖G x_est‖ (uncalibrated)
+    g: np.ndarray        # sampled G = A·ΔWᵀ  (k, K)
+
+
+def candidate_pair(p: float, b_min: int, b_max: int) -> Tuple[int, int]:
+    """l = ⌊p⌋, h = ⌈p⌉ clamped into [b_min, b_max]."""
+    p = float(np.clip(p, b_min, b_max))
+    l = int(np.floor(p))
+    h = int(np.ceil(p))
+    if l == h:
+        return l, h
+    return l, h
+
+
+def delta_weight_of(overlay, l: int, h: int) -> jax.Array:
+    """(K, N_eff) — stacked overlays concatenate experts along N."""
+    if isinstance(overlay, QuantizedStacked):
+        d = materialize_stacked(overlay, h) - materialize_stacked(overlay, l)
+        e, k, n = d.shape
+        return jnp.moveaxis(d, 0, 1).reshape(k, e * n)
+    return materialize(overlay, h) - materialize(overlay, l)
+
+
+def collect_calibration(
+    cfg: ModelConfig,
+    run_params: Dict[str, jax.Array],      # forward-pass weights (quantized
+                                           # interpolation view — faithful)
+    overlays: Dict[str, object],
+    units: Sequence[LinearUnit],
+    p_assign: Dict[str, float],
+    batches: Iterable[Tuple[np.ndarray, np.ndarray]],
+    *,
+    b_min: int,
+    max_bits: Dict[str, int],
+    key: jax.Array,
+    k_proj: int = JL_K,
+    pairs: Dict[str, Tuple[int, int]] = None,   # forced (l,h) override
+) -> Dict[str, CalibRecord]:
+    units_by_path = {u.path: u for u in units}
+    dyn_paths: List[str] = []
+    deltas: Dict[str, jax.Array] = {}
+    gs: Dict[str, jax.Array] = {}
+    for u in units:
+        if pairs and u.path in pairs:
+            l, h = pairs[u.path]
+        else:
+            l, h = candidate_pair(p_assign[u.path], b_min,
+                                  max_bits[u.path])
+        if l == h or u.kind == "expert_down":
+            continue
+        dw = delta_weight_of(overlays[u.path], l, h)
+        key, sub = jax.random.split(key)
+        a_mat = sample_projection(sub, k_proj, dw.shape[1])
+        deltas[u.path] = dw
+        gs[u.path] = make_g(a_mat, dw)
+        dyn_paths.append(u.path)
+
+    acc: Dict[str, Dict[str, List[np.ndarray]]] = {
+        p: {"err": [], "xnorm": [], "jl": []} for p in dyn_paths}
+
+    def record(path: str, x_sync: jax.Array, x_est: jax.Array):
+        dw = deltas[path]
+        xs = x_sync.reshape((-1, x_sync.shape[-1])).astype(jnp.float32)
+        xe = x_est.reshape((-1, x_est.shape[-1])).astype(jnp.float32)
+        acc[path]["err"].append(
+            np.asarray(jnp.linalg.norm(xs @ dw, axis=-1)))
+        acc[path]["xnorm"].append(np.asarray(jnp.linalg.norm(xe, axis=-1)))
+        acc[path]["jl"].append(
+            np.asarray(jnp.linalg.norm(xe @ gs[path].T, axis=-1)))
+
+    def capture_lin(path: str, x: jax.Array, *, async_input=None):
+        w = run_params[path]
+        if path in acc:
+            u = units_by_path[path]
+            x_est = async_input if (u.async_eligible and
+                                    async_input is not None) else x
+            record(path, x, x_est)
+        if path.endswith(".router"):
+            # expert up/gate units see the router's (pre-dispatch) input
+            for sib in (path[:-7] + ".w_gate", path[:-7] + ".w_up"):
+                if sib in acc:
+                    record(sib, x, x)
+        return jnp.einsum("...k,kn->...n", x, w).astype(x.dtype)
+
+    for tokens, _ in batches:
+        forward(cfg, run_params, jnp.asarray(tokens), lin=capture_lin)
+
+    out: Dict[str, CalibRecord] = {}
+    for p in dyn_paths:
+        out[p] = CalibRecord(
+            err=np.concatenate(acc[p]["err"]),
+            xnorm=np.concatenate(acc[p]["xnorm"]),
+            jl_raw=np.concatenate(acc[p]["jl"]),
+            g=np.asarray(gs[p]))
+    return out
+
+
+def threshold_from_quantile(err: np.ndarray, p: float, l: int) -> float:
+    """T = r-quantile of the calibration error list, r = 1 − (p − l)."""
+    r = float(np.clip(1.0 - (p - l), 0.0, 1.0))
+    return float(np.quantile(err, r))

@@ -1,0 +1,6 @@
+from repro.data.corpus import load_corpus, sample_sequences
+from repro.data.pipeline import DataConfig, ShardedBatchIterator
+from repro.data.tokenizer import VOCAB_SIZE, decode, encode
+
+__all__ = ["DataConfig", "ShardedBatchIterator", "VOCAB_SIZE", "decode",
+           "encode", "load_corpus", "sample_sequences"]

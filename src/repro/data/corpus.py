@@ -1,0 +1,92 @@
+"""Offline text corpora.
+
+The container has no internet and no datasets, so the in-container
+experiments use the **Python standard library source tree** as a real,
+deterministic text corpus (byte-level LM), with a synthetic Zipfian-Markov
+fallback when stdlib sources are unavailable. Both are split
+calibration/train/eval by file hash, so splits are stable across runs.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import sysconfig
+from typing import Iterator, List
+
+import numpy as np
+
+from repro.data.tokenizer import encode
+
+_MAX_FILE_BYTES = 200_000
+
+
+def _stdlib_files(limit: int = 400) -> List[str]:
+    root = sysconfig.get_paths()["stdlib"]
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in sorted(dirnames)
+                       if d not in ("test", "tests", "__pycache__",
+                                    "site-packages", "idlelib")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.append(os.path.join(dirpath, fn))
+                if len(out) >= limit:
+                    return out
+    return out
+
+
+def _synthetic_text(n_bytes: int, seed: int = 0) -> str:
+    """Zipfian-Markov word stream — a deterministic offline fallback."""
+    rng = np.random.default_rng(seed)
+    vocab = [f"tok{i}" for i in range(512)]
+    trans = rng.dirichlet(np.full(64, 0.1), size=512)
+    cand = rng.integers(0, 512, size=(512, 64))
+    words, cur = [], 0
+    total = 0
+    while total < n_bytes:
+        nxt = int(cand[cur][rng.choice(64, p=trans[cur])])
+        w = vocab[nxt]
+        words.append(w)
+        total += len(w) + 1
+        cur = nxt
+    return " ".join(words)
+
+
+def _split_of(path: str) -> str:
+    h = int(hashlib.sha1(path.encode()).hexdigest(), 16) % 100
+    if h < 70:
+        return "train"
+    if h < 85:
+        return "calibration"
+    return "eval"
+
+
+def load_corpus(split: str, max_bytes: int = 4_000_000) -> np.ndarray:
+    """Byte ids (int32) for ``split`` in {train, calibration, eval}."""
+    files = _stdlib_files()
+    chunks, total = [], 0
+    for f in files:
+        if _split_of(f) != split:
+            continue
+        try:
+            with open(f, "rb") as fh:
+                raw = fh.read(_MAX_FILE_BYTES)
+        except OSError:
+            continue
+        ids = np.frombuffer(raw, dtype=np.uint8).astype(np.int32)
+        chunks.append(ids)
+        total += len(ids)
+        if total >= max_bytes:
+            break
+    if not chunks:  # fallback: synthetic
+        seed = {"train": 0, "calibration": 1, "eval": 2}[split]
+        return encode(_synthetic_text(max_bytes, seed))
+    return np.concatenate(chunks)[:max_bytes]
+
+
+def sample_sequences(data: np.ndarray, seq_len: int, count: int,
+                     seed: int = 0) -> np.ndarray:
+    """(count, seq_len+1) windows for next-token training/eval."""
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, len(data) - seq_len - 1, size=count)
+    return np.stack([data[s:s + seq_len + 1] for s in starts])

@@ -1,0 +1,15 @@
+"""Byte-level tokenizer (vocab 256) — offline, deterministic, lossless."""
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB_SIZE = 256
+
+
+def encode(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8", errors="replace"),
+                         dtype=np.uint8).astype(np.int32)
+
+
+def decode(ids) -> str:
+    return bytes(int(i) & 0xFF for i in ids).decode("utf-8", errors="replace")

@@ -1,0 +1,19 @@
+from repro.distributed.compression import (compressed_allreduce_shard,
+                                           plain_allreduce_shard,
+                                           residual_shape)
+from repro.distributed.elastic import best_mesh, reshard_tree
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               SimulatedFailure,
+                                               StragglerMitigator,
+                                               run_with_restarts)
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
+                                        kv_cache_spec, param_shardings,
+                                        resolve_spec)
+
+__all__ = [
+    "HeartbeatMonitor", "SERVE_RULES", "SimulatedFailure",
+    "StragglerMitigator", "TRAIN_RULES", "batch_spec", "best_mesh",
+    "compressed_allreduce_shard", "kv_cache_spec", "param_shardings",
+    "plain_allreduce_shard", "reshard_tree", "residual_shape",
+    "resolve_spec", "run_with_restarts",
+]

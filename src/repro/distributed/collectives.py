@@ -1,0 +1,32 @@
+"""Collective helpers used by the shard_map code paths."""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+AxisName = Union[str, Sequence[str]]
+
+
+def psum(x, axis: AxisName):
+    return jax.lax.psum(x, axis_name=axis)
+
+
+def pmean(x, axis: AxisName):
+    return jax.lax.pmean(x, axis_name=axis)
+
+
+def all_gather(x, axis: AxisName, *, tiled: bool = True):
+    return jax.lax.all_gather(x, axis_name=axis, tiled=tiled)
+
+
+def psum_scatter(x, axis: AxisName, *, tiled: bool = True):
+    return jax.lax.psum_scatter(x, axis_name=axis, tiled=tiled)
+
+
+def ring_permute(x, axis: str, shift: int = 1):
+    """Send to the next device along ``axis`` (pipeline hop)."""
+    n = jax.lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis_name=axis, perm=perm)

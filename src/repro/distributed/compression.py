@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Scheme (1-bit-Adam/PowerSGD-family, adapted to ring collectives):
+  1. ``psum_scatter`` the f32 gradient — the reduction itself stays exact
+     and each device ends with its shard of the true mean;
+  2. add the (scatter-shaped) error-feedback residual;
+  3. quantize the reduced shard to int8 + one f32 scale;
+  4. ``all_gather`` the int8 shards — the broadcast half of the all-reduce
+     at 1/4 the bytes — and dequantize;
+  5. the local quantization error becomes the next step's residual
+     (scatter-shaped: no extra traffic).
+
+Traffic vs plain ring all-reduce: (1 + 1/4)/2 = 0.625× — a 37.5% cut on the
+cross-pod DCI hop where bandwidth is scarcest, with error feedback keeping
+convergence (validated in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def residual_shape(n_elements: int, axis_size: int) -> Tuple[int]:
+    padded = n_elements + ((-n_elements) % axis_size)
+    return (padded // axis_size,)
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_allreduce_shard(
+    grad: jax.Array,           # local gradient (any shape), inside shard_map
+    residual: jax.Array,       # (padded_size/axis_n,) error-feedback state
+    *,
+    axis: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean-all-reduce with int8-compressed broadcast + error feedback.
+
+    Returns (mean_grad (grad.shape), new_residual (residual.shape)).
+    """
+    n = jax.lax.axis_size(axis)
+    flat = grad.astype(jnp.float32).reshape((-1,))
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    # 1. exact reduce-scatter (f32), then 2. error feedback on my shard
+    shard = jax.lax.psum_scatter(flat, axis_name=axis, tiled=True) / n
+    shard = shard + residual
+    # 3. compress my shard
+    q, scale = _quantize_int8(shard)
+    deq = q.astype(jnp.float32) * scale
+    new_residual = shard - deq
+    # 4. int8 broadcast
+    gathered_q = jax.lax.all_gather(q, axis_name=axis, tiled=True)
+    gathered_s = jax.lax.all_gather(scale, axis_name=axis)
+    mean = (gathered_q.reshape(n, -1).astype(jnp.float32) *
+            gathered_s.reshape(n, 1)).reshape((-1,))
+    if pad:
+        mean = mean[:-pad]
+    return mean.reshape(grad.shape).astype(grad.dtype), new_residual
+
+
+def plain_allreduce_shard(grad: jax.Array, *, axis: str) -> jax.Array:
+    return jax.lax.pmean(grad, axis_name=axis)

@@ -1,0 +1,72 @@
+"""Mesh context for in-model sharding constraints.
+
+Model code (MoE dispatch, scan carries, logits) sometimes needs explicit
+``with_sharding_constraint`` hints — GSPMD drops shardings through one-hot/
+cumsum/reshape chains and replicated intermediates blow past HBM (measured:
+granite-moe train temp went to 308GB/dev without these). Model code cannot
+depend on a concrete mesh, so constraints go through this context: when no
+mesh is active (unit tests, single-device benches) every hint is a no-op.
+
+Hints are divisibility-filtered per dim, like distributed/sharding.py, so
+the same model code lowers on any mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT: list = [None]
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    _CURRENT.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _CURRENT.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[-1]
+
+
+def dp_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def hint(x: jax.Array, *entries) -> jax.Array:
+    """Best-effort sharding constraint; silently weakens to fit the mesh.
+
+    ``entries`` align with x's dims: None, an axis name, or a tuple of axis
+    names. The special string "dp" expands to the data-parallel axes.
+    """
+    mesh = current_mesh()
+    if mesh is None or os.environ.get("REPRO_NO_HINTS"):
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    spec = []
+    for dim, e in zip(x.shape, entries):
+        if e == "dp":
+            axes = list(dp_axes(mesh))
+        elif e is None:
+            axes = []
+        else:
+            axes = list(e) if isinstance(e, tuple) else [e]
+        axes = [a for a in axes if a in sizes and a not in used]
+        while axes and dim % int(np.prod([sizes[a] for a in axes])) != 0:
+            axes.pop()
+        used.update(axes)
+        spec.append(tuple(axes) if len(axes) > 1
+                    else (axes[0] if axes else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

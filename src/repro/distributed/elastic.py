@@ -1,0 +1,46 @@
+"""Elastic scaling: re-mesh and re-shard state when the device pool changes.
+
+A checkpoint written on one mesh restores onto any other (the checkpointer
+stores full logical arrays; ``jax.device_put`` re-shards under the target
+mesh). ``best_mesh`` picks the largest (data, model) grid for the surviving
+device count, preferring to shrink the data axis first (model-parallel
+groups are harder to rebuild than batch).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def best_mesh(
+    n_devices: int,
+    *,
+    model_parallel: int,
+    devices: Optional[Sequence] = None,
+    multi_pod_threshold: int = 0,
+) -> Mesh:
+    """Largest usable (data, model) mesh for ``n_devices``.
+
+    Shrinks model_parallel (halving) until it divides the pool; the rest
+    becomes the data axis. With ``multi_pod_threshold`` > 0 and enough
+    devices, a leading 'pod' axis is added.
+    """
+    devs = list(devices if devices is not None else jax.devices())[:n_devices]
+    mp = model_parallel
+    while mp > 1 and (len(devs) % mp != 0):
+        mp //= 2
+    dp = len(devs) // mp
+    if multi_pod_threshold and dp % 2 == 0 and \
+            len(devs) >= multi_pod_threshold:
+        arr = np.array(devs).reshape(2, dp // 2, mp)
+        return Mesh(arr, ("pod", "data", "model"))
+    arr = np.array(devs).reshape(dp, mp)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(tree, shardings):
+    """Re-place every leaf under the target shardings (cross-mesh restore)."""
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)

@@ -1,0 +1,76 @@
+"""GPipe-style pipeline parallelism over the 'pod' mesh axis (optional).
+
+The default multi-pod layout treats 'pod' as pure data parallelism; this
+module offers the alternative: pipeline stages across pods, microbatches
+streamed through ``shard_map`` + ``ppermute``. The schedule is the classic
+GPipe loop with ``num_microbatches + num_stages − 1`` ticks; bubble fraction
+``(S−1)/(M+S−1)``.
+
+Stage functions receive (stage_params, activations) and every device holds
+only its stage's parameters — combined with TP over 'model' inside each
+stage this gives DP×PP×TP 3D parallelism.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe_forward(
+    stage_fn: Callable,          # (stage_params, x, stage_idx) -> x
+    stage_params,                # pytree; leaves stacked on leading pod dim
+    x: jax.Array,                # (num_microbatches, mb, seq, d)
+    mesh: Mesh,
+    *,
+    axis: str = "pod",
+) -> jax.Array:
+    """Runs every microbatch through all S stages; returns final outputs."""
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    n_micro = x.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    def per_pod(params_local, x_local):
+        # params_local: this stage's params (leading dim 1) ; squeeze
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        buf = jnp.zeros_like(x_local[0])          # current activation slot
+        outs = jnp.zeros_like(x_local)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if in range)
+            inject = jnp.where(t < n_micro, t, n_micro - 1)
+            fresh = x_local[inject]
+            buf = jnp.where(stage == 0, fresh, buf)
+            # every stage applies its layer block
+            y = stage_fn(params_local, buf, stage)
+            # last stage banks its output for microbatch (t - S + 1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            bank = (stage == n_stages - 1) & (t >= n_stages - 1)
+            outs = jax.lax.cond(
+                bank,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, out_idx, 0),
+                lambda o: o, outs)
+            # shift activations to the next stage
+            nxt = jax.lax.ppermute(
+                y, axis_name=axis,
+                perm=[(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf, outs),
+                                    jnp.arange(ticks))
+        # only the last stage banked real outputs (others hold zeros);
+        # psum broadcasts them so the replicated out_spec is truthful
+        return jax.lax.psum(outs, axis_name=axis)
+
+    in_specs = (P(axis), P())        # params stacked over pods; x replicated
+    out_specs = P()                  # outputs valid on the last stage
+    fn = shard_map(per_pod, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(stage_params, x)

@@ -1,0 +1,152 @@
+"""Divisibility-aware logical-axis sharding rules.
+
+Every parameter/state tensor carries logical axis names (models/common.py);
+one rules table maps them to mesh axes. The resolver enforces:
+- only mesh axes that exist on the current mesh are used (the same rules
+  serve the 16×16 single-pod and 2×16×16 multi-pod meshes);
+- a mesh axis is used at most once per tensor (first logical dim wins —
+  e.g. MoE (experts, embed, ffn) gets EP on 'model', ffn replicated);
+- a dim must divide by the product of its mesh axes; otherwise axes are
+  dropped right-to-left until it does (e.g. kv_heads=8 on model=16 →
+  replicated) — so every assigned arch lowers cleanly.
+
+Two profiles:
+- TRAIN: TP on 'model', FSDP/ZeRO-3 on ('pod','data') over the weights'
+  embed/reduction dims (mandatory to fit 340B+ training), batch on
+  ('pod','data').
+- SERVE: TP on 'model'; weights replicated over 'data' (each data-parallel
+  group serves its own requests); KV caches shard batch→data,
+  heads→model with sequence fallback for long-context cells.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, KV_HEADS,
+                                 SSM_HEADS, SSM_INNER, VOCAB)
+
+Rules = Dict[Optional[str], Tuple[str, ...]]
+
+TRAIN_RULES: Rules = {
+    VOCAB: ("model",),
+    HEADS: ("model",),
+    KV_HEADS: ("model",),
+    FFN: ("model",),
+    EXPERTS: ("model",),
+    SSM_INNER: ("model",),
+    SSM_HEADS: ("model",),
+    EMBED: ("pod", "data"),     # FSDP / ZeRO-3 weight sharding
+    CONV: (),
+    None: (),
+}
+
+SERVE_RULES: Rules = {
+    VOCAB: ("model",),
+    HEADS: ("model",),
+    KV_HEADS: ("model",),
+    FFN: ("model",),
+    EXPERTS: ("model",),
+    SSM_INNER: ("model",),
+    SSM_HEADS: ("model",),
+    EMBED: ("pod",),            # multi-pod: 2-way weight-K sharding halves
+                                # per-chip overlay bytes (340B+ decode fit);
+                                # single-pod mesh has no 'pod' axis -> noop
+    CONV: (),
+    None: (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    sizes = _mesh_axis_sizes(mesh)
+    used = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        want = [m for m in rules.get(ax, ()) if m in sizes and m not in used]
+        # drop axes right-to-left until the dim divides
+        while want and dim % int(np.prod([sizes[m] for m in want])) != 0:
+            want.pop()
+        if want:
+            used.update(want)
+            entries.append(tuple(want) if len(want) > 1 else want[0])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def param_shardings(
+    mesh: Mesh,
+    logical_axes: Dict[str, Tuple[Optional[str], ...]],
+    shapes: Dict[str, Tuple[int, ...]],
+    rules: Optional[Rules] = None,
+) -> Dict[str, NamedSharding]:
+    rules = rules or TRAIN_RULES
+    return {
+        path: NamedSharding(mesh, resolve_spec(shapes[path], axes, mesh,
+                                               rules))
+        for path, axes in logical_axes.items()
+    }
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over ('pod','data') where divisible."""
+    sizes = _mesh_axis_sizes(mesh)
+    want = [m for m in ("pod", "data") if m in sizes]
+    while want and batch % int(np.prod([sizes[m] for m in want])) != 0:
+        want.pop()
+    lead = tuple(want) if len(want) > 1 else (want[0] if want else None)
+    return P(lead, *([None] * extra_dims))
+
+
+def kv_cache_spec(mesh: Mesh, batch: int, seq: int, kv_heads: int) -> P:
+    """(batch, seq, kv_heads, head_dim) decode-cache sharding.
+
+    batch→(pod,data) when divisible; kv_heads→model when divisible, else
+    seq→model (sequence-parallel decode — GSPMD inserts the partial-softmax
+    collectives); leftover batch capacity spills onto seq too
+    (long_500k batch=1 shards seq over every axis).
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    b_axes = [m for m in ("pod", "data") if m in sizes]
+    while b_axes and batch % int(np.prod([sizes[m] for m in b_axes])) != 0:
+        b_axes.pop()
+    seq_axes = []
+    if kv_heads % sizes.get("model", 1) == 0:
+        head_entry = "model"
+    else:
+        head_entry = None
+        if seq % sizes.get("model", 1) == 0:
+            seq_axes.append("model")
+    # unused batch axes spill to seq
+    spill = [m for m in ("pod", "data")
+             if m in sizes and m not in b_axes]
+    for m in spill:
+        if seq % int(np.prod([sizes[a] for a in seq_axes + [m]])) == 0:
+            seq_axes.append(m)
+    b_entry = tuple(b_axes) if len(b_axes) > 1 else \
+        (b_axes[0] if b_axes else None)
+    s_entry = tuple(seq_axes) if len(seq_axes) > 1 else \
+        (seq_axes[0] if seq_axes else None)
+    return P(b_entry, s_entry, head_entry, None)
+
+
+def tree_shardings(mesh: Mesh, tree, spec_fn) -> object:
+    """Map ``spec_fn(path_str, leaf) -> PartitionSpec`` over a pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out.append(NamedSharding(mesh, spec_fn(key, leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the DP-LLM hot paths.
+
+- ``bitserial``     : dynamic-precision decode matmul (scalar-prefetch
+                      predicated bit-plane DMA) — the paper's core mechanism.
+- ``jl_estimator``  : fused relative-error estimation + threshold compare for
+                      an async layer group.
+- ``dequant_matmul``: static-precision prefill matmul with in-VMEM dequant.
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper with backend dispatch) and ``ref.py`` (pure-jnp oracle).
+"""
+from repro.kernels.bitserial import bitserial_matmul
+from repro.kernels.dequant_matmul import dequant_matmul
+from repro.kernels.jl_estimator import jl_estimate
+
+__all__ = ["bitserial_matmul", "dequant_matmul", "jl_estimate"]

@@ -1,0 +1,5 @@
+from repro.kernels.bitserial.kernel import bitserial_matmul_pallas
+from repro.kernels.bitserial.ops import bitserial_matmul
+from repro.kernels.bitserial.ref import bitserial_matmul_ref
+
+__all__ = ["bitserial_matmul", "bitserial_matmul_pallas", "bitserial_matmul_ref"]

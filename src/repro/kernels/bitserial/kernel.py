@@ -1,0 +1,120 @@
+"""Dynamic-precision bit-serial matmul — the DP-LLM decode kernel (Pallas TPU).
+
+Computes ``y = x @ W_b`` where ``W_b`` is the b-bit prefix of a bit-plane
+overlay (core/bitplane.py) and ``b`` is a **runtime scalar** chosen by the
+precision selector. TPU-native mechanism (DESIGN.md §2.1):
+
+* grid = (N_tiles, B) with the plane index minor → planes stream through VMEM
+  one at a time per output tile;
+* the plane operand's ``index_map`` clamps the plane index to
+  ``min(plane, b_sel-1)``: Pallas elides the HBM→VMEM copy when consecutive
+  grid steps name the same block, so planes ≥ b_sel cost **zero HBM traffic**
+  — the paper's "read fewer weight bits" on TPU;
+* ``pl.when(plane < b_sel)`` skips the MXU work of masked planes;
+* each plane step unpacks int32 words → {0,1} via VPU shift/mask and issues
+  one MXU matmul, accumulating 2^(B-1-j)-weighted partials in VMEM scratch;
+* the final plane step applies the closed-form midpoint/zero correction and
+  per-channel scale.
+
+Validated against ``ref.py`` in interpret mode (tests/test_kernels.py); on a
+real TPU the same code lowers through Mosaic (no interpret flag).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PACK = 32
+DEFAULT_TILE_N = 256
+
+
+def _unpack(words: jax.Array) -> jax.Array:
+    """(KW, TN) int32 -> (KW*32, TN) f32 in {0,1} (VPU shift/mask)."""
+    kw, tn = words.shape
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    bits = (words[:, None, :] >> shifts[None, :, None]) & 1
+    return bits.reshape(kw * PACK, tn).astype(jnp.float32)
+
+
+def _kernel(b_sel_ref, x_ref, plane_ref, scale_ref, zero_ref, out_ref,
+            acc_ref, *, bits: int):
+    plane = pl.program_id(1)             # minor grid dim: plane index
+    b_sel = b_sel_ref[0]
+
+    @pl.when(plane == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(plane < b_sel)
+    def _accumulate():
+        w = _unpack(plane_ref[0])        # (K, TILE_N) in {0,1}
+        contrib = jax.lax.dot(
+            x_ref[...], w, preferred_element_type=jnp.float32)
+        acc_ref[...] += contrib * (2.0 ** (bits - 1 - plane))
+
+    @pl.when(plane == bits - 1)
+    def _finalize():
+        sx = jnp.sum(x_ref[...], axis=-1, keepdims=True)      # (M, 1)
+        mid = (jnp.exp2((bits - b_sel).astype(jnp.float32)) - 1.0) * 0.5
+        corr = (mid - zero_ref[...]) * sx                      # (M, TILE_N)
+        out_ref[...] = (acc_ref[...] + corr) * scale_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "tile_n", "interpret"))
+def bitserial_matmul_pallas(
+    x: jax.Array,            # (M, K) float32
+    planes: jax.Array,       # (bits, K/32, N) int32
+    scale: jax.Array,        # (1, N) float32
+    zero: jax.Array,         # (1, N) float32
+    b_sel: jax.Array,        # (1,) int32 — runtime-selected precision
+    *,
+    bits: int,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[M, N] = x @ W_{b_sel}; HBM plane traffic ∝ b_sel."""
+    m, k = x.shape
+    _, kw, n = planes.shape
+    assert kw * PACK == k, (kw, k)
+    assert n % tile_n == 0, (n, tile_n)
+
+    grid = (n // tile_n, bits)
+
+    def x_map(i, j, sref):
+        del i, j, sref
+        return (0, 0)
+
+    def plane_map(i, j, sref):
+        # Clamp: steps past b_sel re-name the previous block -> no new DMA.
+        return (jnp.minimum(j, sref[0] - 1), 0, i)
+
+    def nvec_map(i, j, sref):
+        del j, sref
+        return (0, i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), x_map),
+            pl.BlockSpec((1, kw, tile_n), plane_map),
+            pl.BlockSpec((1, tile_n), nvec_map),
+            pl.BlockSpec((1, tile_n), nvec_map),
+        ],
+        out_specs=pl.BlockSpec((m, tile_n), nvec_map),
+        scratch_shapes=[pltpu.VMEM((m, tile_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(b_sel, x, planes, scale, zero)

@@ -1,0 +1,66 @@
+"""jit'd public wrapper for the bit-serial dynamic-precision matmul.
+
+Handles padding to kernel tile requirements, dtype normalization, and backend
+dispatch: on TPU the Pallas kernel runs natively; elsewhere (this CPU
+container) the default is the jnp oracle (identical math), with
+``interpret=True`` available to execute the actual kernel body for tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import QuantizedLinear
+from repro.kernels.bitserial.kernel import bitserial_matmul_pallas
+from repro.kernels.bitserial.ref import bitserial_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_tile_n(n: int) -> int:
+    for t in (256, 128):
+        if n % t == 0:
+            return t
+    return 0
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+def _dispatch(x, planes, scale, zero, b_sel, *, bits: int, backend: str):
+    if backend == "ref":
+        return bitserial_matmul_ref(x, planes, scale, zero, b_sel, bits=bits)
+    tile_n = _pick_tile_n(planes.shape[-1])
+    if tile_n == 0:
+        return bitserial_matmul_ref(x, planes, scale, zero, b_sel, bits=bits)
+    return bitserial_matmul_pallas(
+        x, planes, scale, zero, b_sel, bits=bits, tile_n=tile_n,
+        interpret=(backend == "interpret"))
+
+
+def bitserial_matmul(
+    x: jax.Array,
+    ql: QuantizedLinear,
+    b_sel: jax.Array,
+    *,
+    backend: Optional[str] = None,   # None -> auto; "pallas"|"interpret"|"ref"
+) -> jax.Array:
+    """``x @ W_{b_sel}`` for a bit-plane overlay; returns float32.
+
+    x: (..., K); b_sel: scalar int32 (runtime precision, 1..ql.bits).
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "ref"
+    lead = x.shape[:-1]
+    xm = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    kp = ql.planes.shape[1] * 32
+    if kp != xm.shape[-1]:
+        xm = jnp.pad(xm, ((0, 0), (0, kp - xm.shape[-1])))
+    y = _dispatch(
+        xm, ql.planes, ql.scale[None, :], ql.zero[None, :],
+        jnp.asarray(b_sel, jnp.int32).reshape((1,)),
+        bits=ql.bits, backend=backend)
+    return y.reshape(lead + (y.shape[-1],))

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the bit-serial dynamic-precision matmul.
+
+This is the closed form from ``core/bitplane.py`` — every plane is unpacked
+and the precision enters as a mask, so the math is bit-exact with the kernel
+while making no tiling/DMA assumptions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import PACK, unpack_plane
+
+
+def bitserial_matmul_ref(
+    x: jax.Array,        # (M, K) float32
+    planes: jax.Array,   # (bits, K/32, N) int32
+    scale: jax.Array,    # (1, N) float32
+    zero: jax.Array,     # (1, N) float32
+    b_sel: jax.Array,    # (1,) int32
+    *,
+    bits: int,
+) -> jax.Array:
+    b = b_sel[0]
+    acc = jnp.zeros((x.shape[0], planes.shape[-1]), jnp.float32)
+    for j in range(planes.shape[0]):
+        w = unpack_plane(planes[j])
+        acc = acc + jnp.where(j < b, 1.0, 0.0) * (
+            jax.lax.dot(x.astype(jnp.float32), w,
+                        preferred_element_type=jnp.float32)
+            * (2.0 ** (bits - 1 - j)))
+    sx = jnp.sum(x.astype(jnp.float32), axis=-1, keepdims=True)
+    mid = (jnp.exp2((bits - b).astype(jnp.float32)) - 1.0) * 0.5
+    return (acc + (mid - zero) * sx) * scale

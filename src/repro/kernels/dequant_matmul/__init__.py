@@ -1,0 +1,5 @@
+from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
+from repro.kernels.dequant_matmul.ops import dequant_matmul
+from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+
+__all__ = ["dequant_matmul", "dequant_matmul_pallas", "dequant_matmul_ref"]

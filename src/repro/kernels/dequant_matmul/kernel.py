@@ -1,0 +1,99 @@
+"""Static-precision dequant-fused matmul — the prefill kernel (Pallas TPU).
+
+Prefill uses the highest available precision per layer (paper §6.1: "for the
+prefill phase ... we use the highest available precision"), so the bit count
+is *static* here. The kernel is a standard 3-level tiled matmul
+(grid = (M_tiles, N_tiles, K_tiles)) that dequantizes ``b`` bit-planes
+tile-by-tile in VMEM and feeds the MXU — the b-bit weights never exist in HBM.
+
+The midpoint/zero correction is distributive over K tiles:
+``y += (mid - zero) * sum_k(x_tile)`` accumulates to the same closed form as
+core/bitplane.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PACK = 32
+
+
+def _unpack(words: jax.Array) -> jax.Array:
+    """(KW, TN) int32 -> (KW*32, TN) f32 in {0,1}."""
+    kw, tn = words.shape
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    bits = (words[:, None, :] >> shifts[None, :, None]) & 1
+    return bits.reshape(kw * PACK, tn).astype(jnp.float32)
+
+
+def _kernel(x_ref, plane_ref, scale_ref, zero_ref, out_ref, acc_ref,
+            *, bits_active: int, bits_parent: int, k_tiles: int):
+    kt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dequantize this (K_tile, N_tile) weight tile from its bit-planes
+    w = jnp.zeros((plane_ref.shape[1] * PACK, plane_ref.shape[2]),
+                  jnp.float32)
+    for j in range(bits_active):
+        w = w + _unpack(plane_ref[j]) * (2.0 ** (bits_parent - 1 - j))
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+    # distributive midpoint/zero correction for this K tile
+    mid = (2.0 ** (bits_parent - bits_active) - 1.0) * 0.5
+    sx = jnp.sum(x, axis=-1, keepdims=True)
+    acc_ref[...] += (mid - zero_ref[...]) * sx
+
+    @pl.when(kt == k_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...] * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits_active", "bits_parent", "tile_m", "tile_n", "tile_k", "interpret"))
+def dequant_matmul_pallas(
+    x: jax.Array,           # (M, K) float32
+    planes: jax.Array,      # (bits_parent, K/32, N) int32 (only first
+                            #  bits_active planes are read)
+    scale: jax.Array,       # (1, N)
+    zero: jax.Array,        # (1, N)
+    *,
+    bits_active: int,
+    bits_parent: int,
+    tile_m: int = 256,
+    tile_n: int = 256,
+    tile_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    _, kw, n = planes.shape
+    assert kw * PACK == k
+    assert m % tile_m == 0 and n % tile_n == 0 and k % tile_k == 0
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bits_active=bits_active, bits_parent=bits_parent,
+            k_tiles=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kt: (i, kt)),
+            pl.BlockSpec((bits_active, tile_k // PACK, tile_n),
+                         lambda i, j, kt: (0, kt, j)),
+            pl.BlockSpec((1, tile_n), lambda i, j, kt: (0, j)),
+            pl.BlockSpec((1, tile_n), lambda i, j, kt: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, planes, scale, zero)

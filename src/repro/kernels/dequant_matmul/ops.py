@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the static-precision dequant matmul (prefill)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import QuantizedLinear
+from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
+from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+
+
+def _tiles_ok(m, n, k, tm, tn, tk):
+    return m % tm == 0 and n % tn == 0 and k % tk == 0
+
+
+@functools.partial(jax.jit, static_argnames=("bits_active", "bits_parent",
+                                              "backend"))
+def _dispatch(x, planes, scale, zero, *, bits_active, bits_parent, backend):
+    m, k = x.shape
+    n = planes.shape[-1]
+    if backend == "ref" or not _tiles_ok(m, n, k, 256, 256, 512):
+        return dequant_matmul_ref(
+            x, planes, scale, zero,
+            bits_active=bits_active, bits_parent=bits_parent)
+    return dequant_matmul_pallas(
+        x, planes, scale, zero, bits_active=bits_active,
+        bits_parent=bits_parent, interpret=(backend == "interpret"))
+
+
+def dequant_matmul(
+    x: jax.Array,
+    ql: QuantizedLinear,
+    bits_active: int,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Prefill matmul at static precision ``bits_active``; returns float32."""
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    lead = x.shape[:-1]
+    xm = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    kp = ql.planes.shape[1] * 32
+    if kp != xm.shape[-1]:
+        xm = jnp.pad(xm, ((0, 0), (0, kp - xm.shape[-1])))
+    y = _dispatch(xm, ql.planes, ql.scale[None, :], ql.zero[None, :],
+                  bits_active=bits_active, bits_parent=ql.bits,
+                  backend=backend)
+    return y.reshape(lead + (y.shape[-1],))

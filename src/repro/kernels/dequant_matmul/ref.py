@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the static-precision dequant matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import unpack_plane
+
+
+def dequant_matmul_ref(x, planes, scale, zero, *, bits_active: int,
+                       bits_parent: int):
+    """x (M,K) @ W_b (K,N) for static b = bits_active."""
+    k = x.shape[-1]
+    w = jnp.zeros((k, planes.shape[-1]), jnp.float32)
+    for j in range(bits_active):
+        w = w + unpack_plane(planes[j]) * (2.0 ** (bits_parent - 1 - j))
+    mid = (2.0 ** (bits_parent - bits_active) - 1.0) * 0.5
+    w = (w + mid - zero) * scale
+    return jax.lax.dot(x.astype(jnp.float32), w,
+                       preferred_element_type=jnp.float32)

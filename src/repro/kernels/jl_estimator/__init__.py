@@ -1,0 +1,5 @@
+from repro.kernels.jl_estimator.kernel import jl_estimate_pallas
+from repro.kernels.jl_estimator.ops import jl_estimate
+from repro.kernels.jl_estimator.ref import jl_estimate_ref
+
+__all__ = ["jl_estimate", "jl_estimate_pallas", "jl_estimate_ref"]

@@ -1,0 +1,81 @@
+"""Fused JL relative-error estimator (Pallas TPU).
+
+Estimates ``err_l = ||G_l x||`` for a *stack* of layers that share the same
+input — exactly the async-eligible q/k/v/up group of one transformer block
+(DESIGN.md §2.2) — and compares against per-layer thresholds in-kernel,
+emitting both the estimate and the high/low precision decision.
+
+For batched decode the per-layer decision must stay uniform across the batch
+(one GEMM per layer), so the kernel reduces with ``max`` over batch rows —
+the conservative aggregate (any row that needs h-bit upgrades the layer).
+
+Grid = (L,): one step per stacked layer; ``x`` is named by a constant
+index_map so it is copied into VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, g_ref, t_ref, err_ref, sel_ref):
+    g = g_ref[0]                                   # (kproj, K)
+    x = x_ref[...]                                 # (M, K)
+    y = jax.lax.dot_general(
+        g, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (kproj, M)
+    sq = jnp.sum(y * y, axis=0)                    # (M,)
+    err = jnp.sqrt(jnp.max(sq))                    # batch-max ||G x||
+    err_ref[0, 0] = err
+    sel_ref[0, 0] = (err > t_ref[0, 0]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def jl_estimate_pallas(
+    x: jax.Array,          # (M, K) float32 — shared input (prev residual)
+    g_stack: jax.Array,    # (L, kproj, K) float32 — calibrated G = A ΔW
+    thresholds: jax.Array,  # (L, 1) float32
+    *,
+    interpret: bool = False,
+):
+    """Returns (err[L,1] f32, select_high[L,1] i32)."""
+    m, k = x.shape
+    l, kproj, k2 = g_stack.shape
+    assert k == k2, (k, k2)
+
+    def x_map(i):
+        del i
+        return (0, 0)
+
+    def g_map(i):
+        return (i, 0, 0)
+
+    def row_map(i):
+        return (i, 0)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((l, 1), jnp.float32),
+        jax.ShapeDtypeStruct((l, 1), jnp.int32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((m, k), x_map),
+            pl.BlockSpec((1, kproj, k), g_map),
+            pl.BlockSpec((1, 1), row_map),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), row_map),
+            pl.BlockSpec((1, 1), row_map),
+        ),
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(x, g_stack, thresholds)

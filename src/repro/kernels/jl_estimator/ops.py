@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the fused JL estimator."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jl_estimator.kernel import jl_estimate_pallas
+from repro.kernels.jl_estimator.ref import jl_estimate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _dispatch(x, g_stack, thresholds, *, backend: str):
+    if backend == "ref":
+        return jl_estimate_ref(x, g_stack, thresholds)
+    return jl_estimate_pallas(
+        x, g_stack, thresholds, interpret=(backend == "interpret"))
+
+
+def jl_estimate(
+    x: jax.Array,            # (..., K) shared input for the layer group
+    g_stack: jax.Array,      # (L, kproj, K)
+    thresholds: jax.Array,   # (L,)
+    *,
+    backend: Optional[str] = None,
+):
+    """Returns (err (L,), select_high (L,) int32)."""
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    xm = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    err, sel = _dispatch(
+        xm, g_stack.astype(jnp.float32),
+        thresholds.reshape((-1, 1)).astype(jnp.float32), backend=backend)
+    return err[:, 0], sel[:, 0]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused JL estimator."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jl_estimate_ref(x, g_stack, thresholds):
+    """x (M,K); g_stack (L,kproj,K); thresholds (L,1) ->
+    (err (L,1) f32, select_high (L,1) i32)."""
+    y = jnp.einsum("lpk,mk->lpm", g_stack.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    sq = jnp.sum(y * y, axis=1)                    # (L, M)
+    err = jnp.sqrt(jnp.max(sq, axis=-1, keepdims=True))  # (L, 1)
+    sel = (err > thresholds).astype(jnp.int32)
+    return err, sel

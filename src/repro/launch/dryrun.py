@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# 512 placeholder host devices back both the 16x16 single-pod mesh and the
+# 2x16x16 multi-pod mesh. Never set this globally — smoke tests and benches
+# must see the single real CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds allocation-free ShapeDtypeStruct inputs with production
+     shardings (launch/input_specs.py),
+  2. ``jit(step).lower(...).compile()`` — sharding mismatches, OOMs and
+     unsupported collectives surface here as hard failures,
+  3. prints ``compiled.memory_analysis()`` (fits-in-HBM proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. parses the partitioned HLO for collective ops and their shapes,
+  5. writes a JSON record under experiments/dryrun/ for the roofline
+     tooling (benchmarks/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both        # every cell
+(no ``from __future__`` import here: the XLA_FLAGS lines must stay first.)
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPE_ORDER, ASSIGNED_ARCHS, get_config, SHAPES
+from repro.configs.base import skipped_shapes
+
+OUT_DIR = "experiments/dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Per-device bytes moved per collective type, from partitioned HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for coll in _COLLECTIVES:
+            if re.search(rf"\b{coll}(-start|-done)?\(", rhs):
+                if coll + "-done" in rhs:   # avoid double counting start/done
+                    continue
+                head = rhs.split("(", 1)[0]
+                nbytes = 0
+                for dt, dims in _SHAPE_RE.findall(head):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dt]
+                out[coll] += nbytes
+                counts[coll] += 1
+                break
+    return out, counts
+
+
+def build_cell(arch: str, shape_name: str, mesh, kv_dtype="bf16"):
+    """Returns (fn, args, donate) for one cell."""
+    import jax.numpy as _jnp
+    kvd = {"bf16": _jnp.bfloat16, "int8": _jnp.int8}[kv_dtype]
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    use_stacked = not cfg.is_encoder_decoder
+
+    if shp.kind == "train":
+        if use_stacked:
+            from repro.launch.input_specs import stacked_train_specs
+            from repro.launch.steps import (build_train_step,
+                                            pick_microbatches,
+                                            pick_optimizer)
+            optname = pick_optimizer(cfg)
+            glob, stack, opt, batch = stacked_train_specs(
+                cfg, shape_name, mesh, optimizer=optname)
+            step = build_train_step(
+                cfg, optimizer=optname,
+                num_microbatches=pick_microbatches(
+                    cfg, shp.global_batch, shp.seq_len))
+            return step, (glob, stack, opt, batch), (0, 1, 2)
+        # loop path (whisper enc-dec)
+        from repro.launch.input_specs import train_specs
+        from repro.launch.steps import pick_microbatches
+        from repro.models import loss_fn
+        from repro.optim import adamw
+        from repro.optim.clip import clip_by_global_norm
+        params, opt, batch = train_specs(cfg, shape_name, mesh)
+
+        n_micro = pick_microbatches(cfg, shp.global_batch, shp.seq_len)
+
+        def step(params, opt_state, batch):
+            def lf(p, tok, lab, frames):
+                return loss_fn(cfg, p, tok, lab, remat=True, q_chunk=512,
+                               kv_chunk=1024, frames=frames,
+                               prefix_embeds=batch.get("prefix_embeds"))
+            mb = batch["tokens"].shape[0] // n_micro
+
+            def micro(carry, idx):
+                gsum, lsum = carry
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, idx * mb, mb, axis=0)
+                fr = sl(batch["frames"]) if "frames" in batch else None
+                l, g = jax.value_and_grad(
+                    lambda p: lf(p, sl(batch["tokens"]),
+                                 sl(batch["labels"]), fr))(params)
+                return (jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g),
+                    lsum + l), None
+
+            g0 = jax.tree.map(lambda q: jnp.zeros(q.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (g0, jnp.float32(0.0)), jnp.arange(n_micro))
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            new_p, new_o = adamw.update(grads, opt_state, params,
+                                        lr=jnp.float32(3e-4))
+            return new_p, new_o, {"loss": lsum / n_micro, "grad_norm": gn}
+
+        return step, (params, opt, batch), (0, 1)
+
+    if shp.kind == "prefill":
+        if use_stacked:
+            from repro.launch.input_specs import (make_unit_table_rel,
+                                                  stacked_prefill_specs)
+            from repro.launch.steps import build_prefill_step
+            table = make_unit_table_rel(cfg)
+            serve_params, tokens, extras = stacked_prefill_specs(
+                cfg, shape_name, mesh, table)
+            step = build_prefill_step(cfg, table, backend="ref")
+            return step, (serve_params, tokens, extras), ()
+        from repro.launch.input_specs import make_unit_table, prefill_specs
+        from repro.serving.step import build_prefill_step as loop_prefill
+        table = make_unit_table(cfg)
+        serve_params, tokens, extras = prefill_specs(cfg, shape_name, mesh,
+                                                     table)
+        step = loop_prefill(cfg, table, backend="ref")
+
+        def fn(sp, tok, ex):
+            return step(sp, tok, frames=ex.get("frames"),
+                        prefix_embeds=ex.get("prefix_embeds"))
+        return fn, (serve_params, tokens, extras), ()
+
+    # decode
+    if use_stacked:
+        from repro.launch.input_specs import (make_unit_table_rel,
+                                              stacked_decode_specs)
+        from repro.launch.steps import build_serve_step
+        table = make_unit_table_rel(cfg)
+        serve_params, cache, pos, tokens = stacked_decode_specs(
+            cfg, shape_name, mesh, table, kv_dtype=kvd)
+        step = build_serve_step(cfg, table, backend="ref")
+        return step, (serve_params, cache, pos, tokens), (1,)
+    from repro.launch.input_specs import decode_specs, make_unit_table
+    from repro.serving.step import build_serve_step as loop_serve
+    table = make_unit_table(cfg)
+    serve_params, state, tokens = decode_specs(cfg, shape_name, mesh, table)
+    step = loop_serve(cfg, table, backend="ref")
+    return step, (serve_params, state, tokens), (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = OUT_DIR, kv_dtype: str = "bf16") -> dict:
+    from repro.launch.mesh import make_production_mesh
+    cfg = get_config(arch)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "time": time.time()}
+    skips = dict(skipped_shapes(cfg))
+    if shape_name in skips:
+        record.update(status="SKIP", reason=skips[shape_name])
+        return record
+
+    from repro.distributed.context import use_mesh
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    with use_mesh(mesh):
+        fn, args, donate = build_cell(arch, shape_name, mesh,
+                                      kv_dtype=kv_dtype)
+        t0 = time.time()
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+    }
+    ca = compiled.cost_analysis() or {}
+    coll, coll_counts = parse_collective_bytes(compiled.as_text())
+
+    shp = SHAPES[shape_name]
+    record.update(
+        status="OK",
+        devices=n_dev,
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        utilization_keys=sorted(k for k in ca if "util" in k.lower())[:8],
+        memory=mem,
+        collective_bytes=coll,
+        collective_counts=coll_counts,
+        params_total=cfg.param_count(),
+        params_active=cfg.param_count(active_only=True),
+        tokens=shp.global_batch * (shp.seq_len if shp.kind != "decode"
+                                   else 1),
+        kind=shp.kind,
+    )
+    print(f"[{arch} × {shape_name} × {mesh_kind}] "
+          f"lower {record['lower_s']}s compile {record['compile_s']}s")
+    print("  memory_analysis:", json.dumps(mem))
+    print(f"  cost_analysis: flops/dev={record['flops']:.3e} "
+          f"bytes/dev={record['bytes_accessed']:.3e}")
+    print("  collectives:", json.dumps(coll))
+    return record
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--serve-bits", default=None,
+                    help="override 'L,H' candidate pair (e.g. 3,4)")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh process (isolation)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s, m) for a in ASSIGNED_ARCHS for s in SHAPE_ORDER
+                 for m in meshes]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, mesh_kind in cells:
+        path = cell_path(args.out, arch, shape, mesh_kind)
+        if os.path.exists(path) and not args.force:
+            with open(path) as fh:
+                rec = json.load(fh)
+            if rec.get("status") in ("OK", "SKIP"):
+                print(f"[cached] {arch} × {shape} × {mesh_kind}: "
+                      f"{rec['status']}")
+                continue
+        if args.subprocess and args.all:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--out", args.out] + (["--force"] if args.force else [])
+            r = subprocess.run(cmd, env={**os.environ})
+            if r.returncode != 0:
+                failures += 1
+            continue
+        if args.serve_bits:
+            from repro.launch import input_specs as _specs
+            lo, hi = (int(v) for v in args.serve_bits.split(","))
+            _specs.SERVE_L, _specs.SERVE_H = lo, hi
+        try:
+            rec = run_cell(arch, shape, mesh_kind, args.out,
+                           kv_dtype=args.kv_dtype)
+        except Exception as e:  # record the failure for triage
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-4000:]}
+            failures += 1
+            print(f"[FAIL] {arch} × {shape} × {mesh_kind}: {e}")
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

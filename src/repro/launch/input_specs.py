@@ -1,0 +1,430 @@
+"""ShapeDtypeStruct input builders for every (arch × shape × mesh) cell.
+
+Everything here is allocation-free: weak-type-correct ``ShapeDtypeStruct``
+stand-ins with production shardings attached, for ``jit(...).lower()``.
+
+Cell kinds:
+- ``train``   → (params bf16, AdamW state, batch)        for ``train_step``
+- ``prefill`` → (serve_params [quantized overlays], batch) for ``prefill_step``
+- ``decode``  → (serve_params, decode state, tokens)       for ``serve_step``
+
+The serve-side unit table is synthesized per arch at the paper's standard
+operating point: 5-bit memory budget, target 4.5 → (l,h)=(4,5) everywhere
+dynamic, estimator kinds split 50/50 linear/JL (the paper's Llama-3-8B
+census, Table 8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DECODE, PREFILL, TRAIN, ModelConfig, SHAPES
+from repro.core.bitplane import PACK, QuantizedLinear, QuantizedStacked
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
+                                        kv_cache_spec, resolve_spec)
+from repro.models import (linear_units, model_logical_axes,
+                          model_param_specs)
+from repro.models.common import EXPERTS
+from repro.models.ssm import ssm_dims
+from repro.serving.step import UnitStatic
+
+JL_K = 64
+SERVE_BUDGET_BITS = 5       # Phase-1 cap: overlays store 5 planes
+SERVE_L, SERVE_H = 4, 5     # target 4.5 candidate pair
+PARENT_BITS = 6
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Train cells
+# ---------------------------------------------------------------------------
+def train_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh):
+    from repro.optim.adamw import AdamWState
+    shp = SHAPES[shape_name]
+    specs = model_param_specs(cfg)
+    axes = model_logical_axes(cfg)
+    params, m, v = {}, {}, {}
+    for path, s in specs.items():
+        pspec = resolve_spec(s.shape, axes[path], mesh, TRAIN_RULES)
+        params[path] = _sds(s.shape, jnp.bfloat16, mesh, pspec)
+        m[path] = _sds(s.shape, jnp.float32, mesh, pspec)
+        v[path] = _sds(s.shape, jnp.float32, mesh, pspec)
+    opt = AdamWState(
+        step=_sds((), jnp.int32, mesh, P()), m=m, v=v)
+    bspec = batch_spec(mesh, shp.global_batch)
+    batch = {
+        "tokens": _sds((shp.global_batch, shp.seq_len), jnp.int32, mesh,
+                       bspec),
+        "labels": _sds((shp.global_batch, shp.seq_len), jnp.int32, mesh,
+                       bspec),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["prefix_embeds"] = _sds(
+            (shp.global_batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, batch_spec(mesh, shp.global_batch, 2))
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = _sds(
+            (shp.global_batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, batch_spec(mesh, shp.global_batch, 2))
+    return params, opt, batch
+
+
+# ---------------------------------------------------------------------------
+# Serve cells (prefill / decode)
+# ---------------------------------------------------------------------------
+def make_unit_table(cfg: ModelConfig) -> Dict[str, UnitStatic]:
+    table = {}
+    for i, u in enumerate(linear_units(cfg)):
+        stacked = u.kind.startswith("expert_")
+        if u.kind == "expert_down":
+            table[u.path] = UnitStatic(u.path, SERVE_H, SERVE_H, "pinned",
+                                       False, stacked)
+            continue
+        kind = "linear" if i % 2 == 0 else "jl"
+        table[u.path] = UnitStatic(u.path, SERVE_L, SERVE_H, kind,
+                                   u.async_eligible, stacked)
+    return table
+
+
+def serve_param_specs(cfg: ModelConfig, mesh: Mesh,
+                      table: Dict[str, UnitStatic]):
+    """SDS tree {raw, overlays, est} under SERVE_RULES shardings."""
+    specs = model_param_specs(cfg)
+    axes = model_logical_axes(cfg)
+    raw = {}
+    for path, s in specs.items():
+        if path in table:
+            continue
+        pspec = resolve_spec(s.shape, axes[path], mesh, SERVE_RULES)
+        raw[path] = _sds(s.shape, jnp.bfloat16, mesh, pspec)
+
+    overlays, est = {}, {}
+    for u in linear_units(cfg):
+        st = table[u.path]
+        w_axes = axes[u.path]
+        kpad = u.k + ((-u.k) % PACK)
+        if st.stacked:
+            e_dim = cfg.num_experts
+            k_ax, n_ax = w_axes[1], w_axes[2]
+            pl_spec = resolve_spec(
+                (e_dim, st.h, kpad // PACK, u.n),
+                (EXPERTS, None, k_ax, n_ax), mesh, SERVE_RULES)
+            sc_spec = resolve_spec((e_dim, u.n), (EXPERTS, n_ax), mesh,
+                                   SERVE_RULES)
+            overlays[u.path] = QuantizedStacked(
+                _sds((e_dim, st.h, kpad // PACK, u.n), jnp.int32, mesh,
+                     pl_spec),
+                _sds((e_dim, u.n), jnp.float32, mesh, sc_spec),
+                _sds((e_dim, u.n), jnp.float32, mesh, sc_spec),
+                PARENT_BITS, u.k)
+        else:
+            k_ax, n_ax = w_axes[0], w_axes[1]
+            pl_spec = resolve_spec((st.h, kpad // PACK, u.n),
+                                   (None, k_ax, n_ax), mesh, SERVE_RULES)
+            sc_spec = resolve_spec((u.n,), (n_ax,), mesh, SERVE_RULES)
+            overlays[u.path] = QuantizedLinear(
+                _sds((st.h, kpad // PACK, u.n), jnp.int32, mesh, pl_spec),
+                _sds((u.n,), jnp.float32, mesh, sc_spec),
+                _sds((u.n,), jnp.float32, mesh, sc_spec),
+                PARENT_BITS, u.k)
+        if st.est_kind == "pinned":
+            continue
+        entry = {"threshold": _sds((), jnp.float32, mesh, P())}
+        if st.est_kind == "linear":
+            entry["a"] = _sds((), jnp.float32, mesh, P())
+            entry["b"] = _sds((), jnp.float32, mesh, P())
+        else:
+            g_spec = resolve_spec((JL_K, kpad), (None, k_ax), mesh,
+                                  SERVE_RULES)
+            entry["gamma"] = _sds((), jnp.float32, mesh, P())
+            entry["g"] = _sds((JL_K, kpad), jnp.float32, mesh, g_spec)
+        est[u.path] = entry
+    return {"raw": raw, "overlays": overlays, "est": est}
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                       max_len: int):
+    state = {"pos": _sds((), jnp.int32, mesh, P())}
+    hd = cfg.resolved_head_dim
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) == "attn":
+            spec = kv_cache_spec(mesh, batch, max_len, cfg.num_kv_heads)
+            shape = (batch, max_len, cfg.num_kv_heads, hd)
+            state[f"kv.{i}.k"] = _sds(shape, jnp.bfloat16, mesh, spec)
+            state[f"kv.{i}.v"] = _sds(shape, jnp.bfloat16, mesh, spec)
+        else:
+            dd = ssm_dims(cfg)
+            bspec = batch_spec(mesh, batch, 2)
+            state[f"ssm.{i}.conv"] = _sds(
+                (batch, cfg.ssm_conv_width - 1, dd["d_xbc"]), jnp.bfloat16,
+                mesh, bspec)
+            state[f"ssm.{i}.state"] = _sds(
+                (batch, dd["nheads"], dd["d_state"],
+                 dd["d_inner"] // dd["nheads"]), jnp.float32, mesh,
+                batch_spec(mesh, batch, 3))
+        if cfg.cross_attention:
+            ft = cfg.frontend_tokens or 1
+            spec = kv_cache_spec(mesh, batch, ft, cfg.num_kv_heads)
+            shape = (batch, ft, cfg.num_kv_heads, hd)
+            state[f"xkv.{i}.k"] = _sds(shape, jnp.bfloat16, mesh, spec)
+            state[f"xkv.{i}.v"] = _sds(shape, jnp.bfloat16, mesh, spec)
+    return state
+
+
+def decode_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                 table: Dict[str, UnitStatic]):
+    shp = SHAPES[shape_name]
+    serve_params = serve_param_specs(cfg, mesh, table)
+    state = decode_state_specs(cfg, mesh, shp.global_batch, shp.seq_len)
+    tokens = _sds((shp.global_batch, 1), jnp.int32, mesh,
+                  batch_spec(mesh, shp.global_batch))
+    return serve_params, state, tokens
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer (scan) cells — the production lowering path
+# ---------------------------------------------------------------------------
+EST_KIND_BY_UNIT = {
+    # ~50/50 linear/JL split per layer, mirroring the paper's census
+    "q": "linear", "k": "jl", "v": "linear", "o": "jl",
+    "gate": "linear", "up": "jl", "down": "linear",
+    "ssm_in": "jl", "ssm_out": "linear",
+    "expert_gate": "jl", "expert_up": "jl", "expert_down": "pinned",
+}
+
+
+def make_unit_table_rel(cfg: ModelConfig) -> Dict[str, UnitStatic]:
+    """Unit table for the first period's layers (relative paths)."""
+    from repro.models.stacked import group_size
+    g = group_size(cfg)
+    table = {}
+    for u in linear_units(cfg):
+        layer_idx = int(u.path.split(".")[1])
+        if layer_idx >= g:
+            continue
+        stacked = u.kind.startswith("expert_")
+        kind = EST_KIND_BY_UNIT.get(u.kind, "jl")
+        if kind == "pinned":
+            table[u.path] = UnitStatic(u.path, SERVE_H, SERVE_H, "pinned",
+                                       False, stacked)
+        else:
+            table[u.path] = UnitStatic(u.path, SERVE_L, SERVE_H, kind,
+                                       u.async_eligible, stacked)
+    return table
+
+
+def _add_steps_dim(shape, axes, steps):
+    return (steps,) + tuple(shape), (None,) + tuple(axes)
+
+
+def stacked_train_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                        optimizer: str = "adamw"):
+    """(glob, stacked, opt_state, batch) SDS trees for the scan path."""
+    from repro.models.stacked import num_scan_steps, split_layer_paths
+    from repro.optim.adafactor import AdafactorState
+    from repro.optim.adamw import AdamWState
+    shp = SHAPES[shape_name]
+    steps = num_scan_steps(cfg)
+    glob_specs, rel_specs = split_layer_paths(cfg)
+    axes = model_logical_axes(cfg)
+
+    def sds_of(shape, ax, dtype):
+        return _sds(shape, dtype, mesh,
+                    resolve_spec(shape, ax, mesh, TRAIN_RULES))
+
+    glob = {p: sds_of(s.shape, axes[p], jnp.bfloat16)
+            for p, s in glob_specs.items()}
+    stacked = {}
+    for rel, s in rel_specs.items():
+        shape, ax = _add_steps_dim(s.shape, s.axes, steps)
+        stacked[rel] = sds_of(shape, ax, jnp.bfloat16)
+    params = {"glob": glob, "stack": stacked}
+
+    def like(tree, dtype):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dtype,
+                                           sharding=x.sharding), tree)
+
+    if optimizer == "adamw":
+        opt = AdamWState(step=_sds((), jnp.int32, mesh, P()),
+                         m=like(params, jnp.float32),
+                         v=like(params, jnp.float32))
+    else:
+        def fac_row(x):
+            shape = x.shape[:-1] if len(x.shape) >= 2 else x.shape
+            return _sds(shape, jnp.float32, mesh,
+                        P(*x.sharding.spec[:len(shape)]))
+
+        def fac_col(x):
+            if len(x.shape) >= 2:
+                shape = x.shape[:-2] + x.shape[-1:]
+                spec = tuple(x.sharding.spec[:len(x.shape) - 2]) + \
+                    (x.sharding.spec[len(x.shape) - 1]
+                     if len(x.sharding.spec) == len(x.shape) else None,)
+                return _sds(shape, jnp.float32, mesh, P(*spec))
+            return _sds((1,), jnp.float32, mesh, P())
+        opt = AdafactorState(step=_sds((), jnp.int32, mesh, P()),
+                             v_row=jax.tree.map(fac_row, params),
+                             v_col=jax.tree.map(fac_col, params))
+
+    bspec = batch_spec(mesh, shp.global_batch)
+    batch = {
+        "tokens": _sds((shp.global_batch, shp.seq_len), jnp.int32, mesh,
+                       bspec),
+        "labels": _sds((shp.global_batch, shp.seq_len), jnp.int32, mesh,
+                       bspec),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["prefix_embeds"] = _sds(
+            (shp.global_batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, batch_spec(mesh, shp.global_batch, 2))
+    return params["glob"], params["stack"], opt, batch
+
+
+def stacked_serve_param_specs(cfg: ModelConfig, mesh: Mesh,
+                              table_rel: Dict[str, UnitStatic]):
+    """{glob, stack, overlays, est} SDS trees for the scan serve path."""
+    from repro.models.stacked import num_scan_steps, split_layer_paths
+    steps = num_scan_steps(cfg)
+    glob_specs, rel_specs = split_layer_paths(cfg)
+    axes = model_logical_axes(cfg)
+
+    def sds_of(shape, ax, dtype):
+        return _sds(shape, dtype, mesh,
+                    resolve_spec(shape, ax, mesh, SERVE_RULES))
+
+    glob = {p: sds_of(s.shape, axes[p], jnp.bfloat16)
+            for p, s in glob_specs.items()}
+    stack, overlays, est = {}, {}, {}
+    units = {u.path: u for u in linear_units(cfg)}
+    for rel, s in rel_specs.items():
+        full = f"layers.{rel}"
+        if full in table_rel:
+            st = table_rel[full]
+            u = units[full]
+            kpad = u.k + ((-u.k) % PACK)
+            w_axes = axes[full]
+            if st.stacked:
+                e_dim = cfg.num_experts
+                k_ax, n_ax = w_axes[1], w_axes[2]
+                pshape, pax = _add_steps_dim(
+                    (e_dim, st.h, kpad // PACK, u.n),
+                    (EXPERTS, None, k_ax, n_ax), steps)
+                sshape, sax = _add_steps_dim((e_dim, u.n),
+                                             (EXPERTS, n_ax), steps)
+                overlays[full] = QuantizedStacked(
+                    sds_of(pshape, pax, jnp.int32),
+                    sds_of(sshape, sax, jnp.float32),
+                    sds_of(sshape, sax, jnp.float32),
+                    PARENT_BITS, u.k)
+            else:
+                k_ax, n_ax = w_axes[0], w_axes[1]
+                pshape, pax = _add_steps_dim((st.h, kpad // PACK, u.n),
+                                             (None, k_ax, n_ax), steps)
+                sshape, sax = _add_steps_dim((u.n,), (n_ax,), steps)
+                overlays[full] = QuantizedLinear(
+                    sds_of(pshape, pax, jnp.int32),
+                    sds_of(sshape, sax, jnp.float32),
+                    sds_of(sshape, sax, jnp.float32),
+                    PARENT_BITS, u.k)
+            if st.est_kind != "pinned":
+                entry = {"threshold": sds_of((steps,), (None,),
+                                             jnp.float32)}
+                if st.est_kind == "linear":
+                    entry["a"] = sds_of((steps,), (None,), jnp.float32)
+                    entry["b"] = sds_of((steps,), (None,), jnp.float32)
+                else:
+                    gshape, gax = _add_steps_dim((JL_K, kpad),
+                                                 (None, k_ax), steps)
+                    entry["gamma"] = sds_of((steps,), (None,), jnp.float32)
+                    entry["g"] = sds_of(gshape, gax, jnp.float32)
+                est[full] = entry
+        else:
+            shape, ax = _add_steps_dim(s.shape, s.axes, steps)
+            stack[rel] = sds_of(shape, ax, jnp.bfloat16)
+    return {"glob": glob, "stack": stack, "overlays": overlays, "est": est}
+
+
+def stacked_cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                        max_len: int, kv_dtype=jnp.bfloat16):
+    from repro.models.stacked import group_size, num_scan_steps
+    g, steps = group_size(cfg), num_scan_steps(cfg)
+    cache = {}
+    hd = cfg.resolved_head_dim
+    for r in range(g):
+        if cfg.layer_kind(r) == "attn":
+            spec = kv_cache_spec(mesh, batch, max_len, cfg.num_kv_heads)
+            spec = P(None, *spec)
+            shape = (steps, batch, max_len, cfg.num_kv_heads, hd)
+            cache[f"kv.{r}.k"] = _sds(shape, kv_dtype, mesh, spec)
+            cache[f"kv.{r}.v"] = _sds(shape, kv_dtype, mesh, spec)
+            if kv_dtype == jnp.int8:
+                sshape = (steps, batch, max_len, cfg.num_kv_heads, 1)
+                cache[f"kv.{r}.k_scale"] = _sds(sshape, jnp.float32, mesh,
+                                                spec)
+                cache[f"kv.{r}.v_scale"] = _sds(sshape, jnp.float32, mesh,
+                                                spec)
+        else:
+            dd = ssm_dims(cfg)
+            bspec = P(None, *batch_spec(mesh, batch, 2))
+            cache[f"ssm.{r}.conv"] = _sds(
+                (steps, batch, cfg.ssm_conv_width - 1, dd["d_xbc"]),
+                jnp.bfloat16, mesh, bspec)
+            cache[f"ssm.{r}.state"] = _sds(
+                (steps, batch, dd["nheads"], dd["d_state"],
+                 dd["d_inner"] // dd["nheads"]), jnp.float32, mesh,
+                P(None, *batch_spec(mesh, batch, 3)))
+    return cache
+
+
+def stacked_decode_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                         table_rel: Dict[str, UnitStatic],
+                         kv_dtype=jnp.bfloat16):
+    shp = SHAPES[shape_name]
+    serve_params = stacked_serve_param_specs(cfg, mesh, table_rel)
+    cache = stacked_cache_specs(cfg, mesh, shp.global_batch, shp.seq_len,
+                                kv_dtype=kv_dtype)
+    pos = _sds((), jnp.int32, mesh, P())
+    tokens = _sds((shp.global_batch, 1), jnp.int32, mesh,
+                  batch_spec(mesh, shp.global_batch))
+    return serve_params, cache, pos, tokens
+
+
+def stacked_prefill_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                          table_rel: Dict[str, UnitStatic]):
+    shp = SHAPES[shape_name]
+    serve_params = stacked_serve_param_specs(cfg, mesh, table_rel)
+    bspec = batch_spec(mesh, shp.global_batch)
+    tokens = _sds((shp.global_batch, shp.seq_len), jnp.int32, mesh, bspec)
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["prefix_embeds"] = _sds(
+            (shp.global_batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, batch_spec(mesh, shp.global_batch, 2))
+    return serve_params, tokens, extras
+
+
+def prefill_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                  table: Dict[str, UnitStatic]):
+    shp = SHAPES[shape_name]
+    serve_params = serve_param_specs(cfg, mesh, table)
+    bspec = batch_spec(mesh, shp.global_batch)
+    tokens = _sds((shp.global_batch, shp.seq_len), jnp.int32, mesh, bspec)
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["prefix_embeds"] = _sds(
+            (shp.global_batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, batch_spec(mesh, shp.global_batch, 2))
+    if cfg.frontend == "audio_stub":
+        extras["frames"] = _sds(
+            (shp.global_batch, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16, mesh, batch_spec(mesh, shp.global_batch, 2))
+    return serve_params, tokens, extras

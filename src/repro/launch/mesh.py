@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+IMPORTANT: never build a mesh at import time — jax locks the device count on
+first initialization, and smoke tests / benches must see the real (single)
+CPU device while the dry-run sees 512 placeholder devices via XLA_FLAGS set
+in ``dryrun.py``'s first two lines.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests, CPU examples)."""
+    n = len(jax.devices())
+    mp = model_parallel
+    while mp > 1 and n % mp:
+        mp //= 2
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

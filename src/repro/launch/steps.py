@@ -1,0 +1,168 @@
+"""Production step functions (stacked-layer path) for train/prefill/decode.
+
+These are the functions the multi-pod dry-run lowers and the launchers run:
+- ``build_train_step``  — remat + scan-over-layers + microbatch gradient
+  accumulation + AdamW/Adafactor, one jit-able pure function;
+- ``build_serve_step``  — dynamic-precision decode over stacked overlays;
+- ``build_prefill_step``— max-precision quantized prefill.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.stacked import (decode_step_stacked, forward_stacked,
+                                  group_size, loss_fn_stacked)
+from repro.optim import adafactor, adamw
+from repro.optim.clip import clip_by_global_norm
+from repro.serving.step import ArrayAdaptationApplier, UnitStatic
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+def build_train_step(
+    cfg: ModelConfig,
+    *,
+    optimizer: str = "adamw",          # adamw | adafactor
+    num_microbatches: int = 1,
+    lr: float = 3e-4,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    remat: bool = True,
+    carry_sharding=None,
+) -> Callable:
+    opt = adamw if optimizer == "adamw" else adafactor
+
+    def train_step(glob, stacked, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = {k: batch[k] for k in ("prefix_embeds", "frames")
+                 if k in batch}
+
+        def loss_of(g_, s_, tok, lab, ex):
+            return loss_fn_stacked(
+                cfg, g_, s_, tok, lab, remat=remat, q_chunk=q_chunk,
+                kv_chunk=kv_chunk, carry_sharding=carry_sharding, **ex)
+
+        params = {"glob": glob, "stack": stacked}
+        if num_microbatches > 1:
+            mb = tokens.shape[0] // num_microbatches
+
+            def micro(carry, idx):
+                gsum, lsum = carry
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, idx * mb, mb, axis=0)
+                ex = {k: sl(v) for k, v in extra.items()}
+                l, g = jax.value_and_grad(
+                    lambda p: loss_of(p["glob"], p["stack"], sl(tokens),
+                                      sl(labels), ex))(params)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (g0, jnp.float32(0.0)),
+                jnp.arange(num_microbatches))
+            grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+            loss = lsum / num_microbatches
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_of(p["glob"], p["stack"], tokens, labels,
+                                  extra))(params)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt.update(
+            grads, opt_state, params, lr=jnp.float32(lr),
+            weight_decay=weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params["glob"], new_params["stack"], new_opt, metrics
+
+    return train_step
+
+
+def init_opt_state(glob, stacked, optimizer: str = "adamw"):
+    params = {"glob": glob, "stack": stacked}
+    return (adamw if optimizer == "adamw" else adafactor).init(params)
+
+
+def pick_optimizer(cfg: ModelConfig) -> str:
+    """Adafactor for ≥50B total params (AdamW f32 moments overflow HBM)."""
+    return "adafactor" if cfg.param_count() > 50e9 else "adamw"
+
+
+def pick_microbatches(cfg: ModelConfig, global_batch: int,
+                      seq_len: int = 4096) -> int:
+    """Keep live microbatch activations near 128k tokens (and more pieces
+    for >100B models where the f32 grad-accum buffer dominates)."""
+    n = cfg.param_count()
+    target = 65_536 if cfg.num_experts else 131_072   # MoE dispatch
+    # one-hots scale with live tokens -> smaller microbatches
+    m = max(1, (global_batch * seq_len) // target)
+    if n > 100e9:
+        m = max(m, 16)
+    while global_batch % m:
+        m -= 1
+    return max(m, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving (stacked)
+# ---------------------------------------------------------------------------
+def build_serve_step(cfg: ModelConfig,
+                     table_rel: Dict[str, UnitStatic],
+                     *, backend: Optional[str] = None,
+                     use_async: bool = True) -> Callable:
+    """Dynamic-precision decode: step(serve_params, cache, pos, tokens)."""
+
+    def lin_factory(view, extra):
+        return ArrayAdaptationApplier(
+            table_rel,
+            {"raw": view, "overlays": extra["overlays"],
+             "est": extra["est"]},
+            backend=backend, use_async=use_async)
+
+    def serve_step(serve_params, cache, pos, tokens):
+        logits, new_cache, new_pos, eff = decode_step_stacked(
+            cfg, serve_params["glob"], serve_params["stack"], cache, pos,
+            tokens, lin_factory=lin_factory,
+            xs_extra={"overlays": serve_params["overlays"],
+                      "est": serve_params["est"]})
+        return logits, new_cache, new_pos, eff
+
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig,
+                       table_rel: Dict[str, UnitStatic],
+                       *, backend: Optional[str] = None) -> Callable:
+    """Max-precision quantized prefill: step(serve_params, tokens, ...)."""
+    max_table = {p: UnitStatic(p, u.h, u.h, "pinned", False, u.stacked)
+                 for p, u in table_rel.items()}
+
+    def lin_factory(view, extra):
+        return ArrayAdaptationApplier(
+            max_table,
+            {"raw": view, "overlays": extra["overlays"], "est": {}},
+            backend=backend)
+
+    def prefill_step(serve_params, tokens, extras):
+        logits, _ = forward_stacked(
+            cfg, serve_params["glob"], serve_params["stack"], tokens,
+            lin_factory=lin_factory,
+            xs_extra={"overlays": serve_params["overlays"],
+                      "est": serve_params["est"]},
+            remat=False,      # forward-only: no backward saves; the carry
+                              # SP hint is remat-gated (§Perf iter 7)
+            q_chunk=1024, kv_chunk=1024,
+            prefix_embeds=extras.get("prefix_embeds"))
+        return logits
+
+    return prefill_step

@@ -1,0 +1,161 @@
+"""GQA attention: flash-style chunked training/prefill path + KV-cache decode.
+
+The chunked path keeps the working set at
+``(batch, q_chunk, heads, kv_chunk)`` — never materializing the full
+(seq × seq) score matrix — so 32k-token prefill lowers and fits. The online
+softmax is the standard flash recurrence (running max + rescaled partials)
+written in pure ``lax.scan`` so GSPMD can shard heads/batch/sequence freely.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _largest_divisor(n: int, at_most: int) -> int:
+    """Largest divisor of ``n`` that is <= ``at_most`` (chunk fallback)."""
+    c = min(at_most, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _soft_cap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def flash_attention(
+    q: jax.Array,            # (b, sq, hq, dh)
+    k: jax.Array,            # (b, sk, hkv, dh)
+    v: jax.Array,            # (b, sk, hkv, dh)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,       # absolute position of q[0] (for causal masking)
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv                                   # GQA group size
+    scale = dh ** -0.5
+
+    q_chunk = _largest_divisor(sq, q_chunk)
+    kv_chunk = _largest_divisor(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    qg = q.reshape(b, nq, q_chunk, hkv, g, dh).astype(jnp.float32) * scale
+    kc = k.reshape(b, nk, kv_chunk, hkv, dh).astype(jnp.float32)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dh).astype(jnp.float32)
+
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, q_chunk)
+    k_pos = jnp.arange(sk).reshape(nk, kv_chunk)
+
+    def per_q_chunk(qi, q_blk):
+        # q_blk: (b, q_chunk, hkv, g, dh)
+        def kv_step(carry, inputs):
+            m, l, acc = carry                      # running max / denom / out
+            k_blk, v_blk, kpos = inputs
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk, k_blk)
+            s = _soft_cap(s, logit_softcap)
+            if causal:
+                mask = q_pos[qi][None, :, None, None, None] >= \
+                    kpos[None, None, None, None, :]
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_blk)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, q_chunk, hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, hkv, g, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), k_pos))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(
+        lambda args: per_q_chunk(args[0], args[1]),
+        (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (b, 1, hq, dh)
+    k_cache: jax.Array,      # (b, S, hkv, dh)  bf16/f32 or int8 (quantized)
+    v_cache: jax.Array,      # (b, S, hkv, dh)
+    cache_len: jax.Array,    # scalar int32 — valid prefix length (incl. new)
+    *,
+    logit_softcap: float = 0.0,
+    k_scale: jax.Array = None,   # (b, S, hkv, 1) f32 — int8 cache scales
+    v_scale: jax.Array = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    int8 KV (beyond-paper §Perf optimization): cache stored as int8 with
+    per-(batch, position, head) scales — halves the decode memory term at
+    <0.5% score perturbation (tests/test_models.py).
+    """
+    b, _, hq, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale = dh ** -0.5
+    qf = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    scores = _soft_cap(scores, logit_softcap)
+    mask = jnp.arange(s)[None, None, None, :] < cache_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    vf = v_cache.astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, vf)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def quantize_kv_entry(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(b, 1, h, dh) -> (int8 values, (b, 1, h, 1) f32 scale)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                keepdims=True) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def update_kv_cache(
+    k_cache: jax.Array, v_cache: jax.Array,
+    k_new: jax.Array, v_new: jax.Array,
+    pos: jax.Array,
+    k_scale: jax.Array = None, v_scale: jax.Array = None,
+):
+    """Write one decode step's K/V at position ``pos`` (dynamic index).
+
+    With int8 caches (k_scale/v_scale given) the new entries are quantized
+    per head; returns updated scale arrays too.
+    """
+    if k_scale is not None:
+        k_q, k_s = quantize_kv_entry(k_new)
+        v_q, v_s = quantize_kv_entry(v_new)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_q, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_q, (0, pos, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(k_scale, k_s, (0, pos, 0, 0))
+        v_scale = jax.lax.dynamic_update_slice(v_scale, v_s, (0, pos, 0, 0))
+        return k_cache, v_cache, k_scale, v_scale
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache, None, None

@@ -1,0 +1,124 @@
+"""Model-zoo foundations: parameter specs, norms, RoPE, losses.
+
+Parameters are a FLAT dict ``{path: jax.Array}`` (paths like
+``"layers.3.attn.wq"``) — a pytree that keeps sharding rules, quantization
+targets, and checkpoint manifests trivially addressable.
+
+Every parameter is declared once as a :class:`ParamSpec` carrying its shape,
+**logical sharding axes** (resolved to mesh axes by
+``repro.distributed.sharding``) and init; ``init_params`` /
+``logical_axes`` / ``linear_units`` all derive from the same spec table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Logical axis names (see distributed/sharding.py for the mesh mapping)
+# ---------------------------------------------------------------------------
+EMBED = "embed"        # d_model
+FFN = "ffn"            # d_ff (incl. per-expert)
+HEADS = "heads"        # fused q head dim (num_heads * head_dim)
+KV_HEADS = "kv_heads"  # fused kv head dim
+VOCAB = "vocab"
+EXPERTS = "experts"
+SSM_INNER = "ssm_inner"   # d_inner (and fused xBC/proj dims)
+SSM_HEADS = "ssm_heads"
+SSM_STATE = "ssm_state"
+CONV = "conv"          # conv taps (replicated)
+NOSHARD = None         # replicated scalar-ish dims
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    path: str
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis per dim
+    init: str = "normal"              # normal | zeros | ones | small_normal
+    fan_in: int = 0                   # 0 -> shape[0]
+
+    def initialize(self, key: jax.Array, dtype=jnp.float32) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan = self.fan_in or (self.shape[0] if self.shape else 1)
+        std = 0.02 if self.init == "small_normal" else fan ** -0.5
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+@dataclass(frozen=True)
+class LinearUnit:
+    """One DP-LLM precision unit — a quantizable linear projection."""
+    path: str
+    kind: str            # q|k|v|o|gate|up|down|router|expert_w1|... |ssm_in|ssm_out
+    k: int               # reduction dim
+    n: int               # output dim
+    async_eligible: bool  # residual-adjacent input (paper §5.2)
+
+
+Params = Dict[str, jax.Array]
+SpecTable = Dict[str, ParamSpec]
+
+
+def init_params(specs: SpecTable, key: jax.Array, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, max(len(specs), 1))
+    return {
+        s.path: s.initialize(k, dtype)
+        for s, k in zip(specs.values(), keys)
+    }
+
+
+def logical_axes(specs: SpecTable) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {s.path: s.axes for s in specs.values()}
+
+
+# ---------------------------------------------------------------------------
+# Numeric building blocks
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean token NLL; positions with label < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0) & (labels < vocab_size)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def default_linear(params: Params) -> Callable:
+    """The bf16/f32 training-path linear applier: plain ``x @ W``."""
+    def apply(path: str, x: jax.Array, *, async_input=None) -> jax.Array:
+        del async_input
+        w = params[path]
+        return jnp.einsum("...k,kn->...n", x, w).astype(x.dtype)
+    return apply

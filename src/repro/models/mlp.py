@@ -1,0 +1,39 @@
+"""Feed-forward variants: SwiGLU (llama), squared-ReLU (nemotron), GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GELU, SQUARED_RELU, SWIGLU
+
+
+def mlp_forward(kind: str, lin, prefix: str, x: jax.Array,
+                *, async_input=None) -> jax.Array:
+    """Apply the FFN at ``prefix`` through the linear applier ``lin``.
+
+    ``async_input`` is the residual-stream value usable for asynchronous
+    relative-error estimation on the up/gate projections (paper Fig. 6);
+    the down projection is always synchronous.
+    """
+    if kind == SWIGLU:
+        gate = lin(f"{prefix}.w_gate", x, async_input=async_input)
+        up = lin(f"{prefix}.w_up", x, async_input=async_input)
+        h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+        return lin(f"{prefix}.w_down", h.astype(x.dtype))
+    if kind == SQUARED_RELU:
+        up = lin(f"{prefix}.w_up", x, async_input=async_input)
+        h = jnp.square(jax.nn.relu(up.astype(jnp.float32)))
+        return lin(f"{prefix}.w_down", h.astype(x.dtype))
+    if kind == GELU:
+        up = lin(f"{prefix}.w_up", x, async_input=async_input)
+        h = jax.nn.gelu(up.astype(jnp.float32))
+        return lin(f"{prefix}.w_down", h.astype(x.dtype))
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_param_dims(kind: str, d_model: int, d_ff: int):
+    """(name, (K, N)) pairs for the FFN's linear units."""
+    if kind == SWIGLU:
+        return [("w_gate", (d_model, d_ff)), ("w_up", (d_model, d_ff)),
+                ("w_down", (d_ff, d_model))]
+    return [("w_up", (d_model, d_ff)), ("w_down", (d_ff, d_model))]

@@ -1,0 +1,206 @@
+"""Mamba2 / SSD layers: chunked training scan + O(1)-state decode.
+
+Implements the minimal SSD (state-space duality) formulation of
+arXiv:2405.21060: intra-chunk quadratic (attention-like) term + inter-chunk
+linear recurrence, in pure JAX (``lax.scan`` over chunks) so GSPMD shards
+(batch → data, heads → model) without custom collectives.
+
+Decode keeps a constant-size recurrent state (b, H, P, N) + conv tail — this
+is what makes ``long_500k`` a constant-memory cell for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_in = cfg.ssm_d_inner
+    nh = cfg.ssm_nheads
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    d_xbc = d_in + 2 * g * n
+    return dict(
+        d_inner=d_in, nheads=nh, ngroups=g, d_state=n,
+        d_xbc=d_xbc,
+        # in_proj packs [z | x | B | C | dt]
+        d_in_proj=2 * d_in + 2 * g * n + nh,
+    )
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d = ssm_dims(cfg)
+    z, x, bc, dt = jnp.split(
+        zxbcdt,
+        [d["d_inner"], 2 * d["d_inner"],
+         2 * d["d_inner"] + 2 * d["ngroups"] * d["d_state"]],
+        axis=-1)
+    return z, x, bc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc (b, s, C), w (width, C), b (C,)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) * w[i]
+    return jax.nn.silu(out + b).astype(xbc.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (b, s, H, P)  — x * dt already applied by caller? no: raw
+    dt: jax.Array,       # (b, s, H)     — softplus'd step sizes
+    a_log: jax.Array,    # (H,)          — A = -exp(a_log)
+    b_mat: jax.Array,    # (b, s, G, N)
+    c_mat: jax.Array,    # (b, s, G, N)
+    *,
+    chunk: int = 128,
+) -> jax.Array:
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[-2:]
+    rep = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    da = dt.astype(jnp.float32) * a                          # (b,s,H)
+    xbar = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunked views
+    da_c = da.reshape(bsz, nc, chunk, h)
+    x_c = xbar.reshape(bsz, nc, chunk, h, p)
+    b_c = b_mat.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    c_c = c_mat.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    bh_c = jnp.repeat(b_c, rep, axis=3)                      # (b,c,q,H,N)
+    ch_c = jnp.repeat(c_c, rep, axis=3)
+
+    cum = jnp.cumsum(da_c, axis=2)                           # (b,c,q,H)
+
+    # intra-chunk (quadratic) term
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,c,q,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    att = jnp.einsum("bcqhn,bcjhn->bcqjh", ch_c, bh_c) * l_mat
+    y_diag = jnp.einsum("bcqjh,bcjhp->bcqhp", att, x_c)
+
+    # per-chunk boundary states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,c,q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp",
+                        bh_c, decay_states, x_c)             # (b,c,H,N,P)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,c,H)
+
+    def step(s_prev, inp):
+        st, dec = inp                                        # (b,H,N,P), (b,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                    # (b,c,H,N,P)
+
+    # off-chunk contribution
+    out_decay = jnp.exp(cum)                                 # (b,c,q,H)
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                       ch_c, s_prevs, out_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y
+
+
+def ssm_forward(
+    cfg: ModelConfig,
+    lin,
+    params,
+    prefix: str,
+    x_in: jax.Array,     # (b, s, d_model)
+    *,
+    async_input=None,
+    chunk: int = 128,
+) -> jax.Array:
+    d = ssm_dims(cfg)
+    zxbcdt = lin(f"{prefix}.in_proj", x_in, async_input=async_input)
+    z, x, bc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, bc], axis=-1)
+    xbc = _causal_conv(xbc, params[f"{prefix}.conv_w"],
+                       params[f"{prefix}.conv_b"])
+    x, bc = xbc[..., :d["d_inner"]], xbc[..., d["d_inner"]:]
+    gn = d["ngroups"] * d["d_state"]
+    b_mat = bc[..., :gn].reshape(*bc.shape[:-1], d["ngroups"], d["d_state"])
+    c_mat = bc[..., gn:].reshape(*bc.shape[:-1], d["ngroups"], d["d_state"])
+
+    bsz, s, _ = x.shape
+    xh = x.reshape(bsz, s, d["nheads"], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params[f"{prefix}.dt_bias"])
+    y = ssd_chunked(xh, dt, params[f"{prefix}.a_log"], b_mat, c_mat,
+                    chunk=chunk)
+    y = y + params[f"{prefix}.d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d["d_inner"]).astype(x_in.dtype)
+
+    # gated RMSNorm (mamba2)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params[f"{prefix}.norm_g"], cfg.norm_eps)
+    return lin(f"{prefix}.out_proj", y)
+
+
+def ssm_decode_step(
+    cfg: ModelConfig,
+    lin,
+    params,
+    prefix: str,
+    x_in: jax.Array,       # (b, 1, d_model)
+    conv_state: jax.Array,  # (b, width-1, d_xbc)
+    ssm_state: jax.Array,   # (b, H, N, P) float32
+    *,
+    async_input=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One recurrent step; returns (y, new_conv_state, new_ssm_state)."""
+    d = ssm_dims(cfg)
+    zxbcdt = lin(f"{prefix}.in_proj", x_in, async_input=async_input)
+    z, x, bc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([x, bc], axis=-1)[:, 0]        # (b, d_xbc)
+
+    # conv over [state ; new]
+    w = params[f"{prefix}.conv_w"]
+    width = w.shape[0]
+    window = jnp.concatenate(
+        [conv_state, xbc_new[:, None, :]], axis=1)           # (b, width, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
+    xbc = jax.nn.silu(out + params[f"{prefix}.conv_b"])      # (b, C) f32
+    new_conv = window[:, 1:width, :]
+
+    x = xbc[:, :d["d_inner"]]
+    gn = d["ngroups"] * d["d_state"]
+    b_mat = xbc[:, d["d_inner"]:d["d_inner"] + gn].reshape(
+        -1, d["ngroups"], d["d_state"])
+    c_mat = xbc[:, d["d_inner"] + gn:].reshape(
+        -1, d["ngroups"], d["d_state"])
+    rep = d["nheads"] // d["ngroups"]
+    bh = jnp.repeat(b_mat, rep, axis=1)                      # (b,H,N)
+    ch = jnp.repeat(c_mat, rep, axis=1)
+
+    xh = x.reshape(-1, d["nheads"], d["d_inner"] // d["nheads"])  # (b,H,P)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                         params[f"{prefix}.dt_bias"])        # (b,H)
+    a = -jnp.exp(params[f"{prefix}.a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                  # (b,H)
+    # state: (b,H,N,P) <- decay*state + dt * B ⊗ x
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, xh)
+    new_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state)
+    y = y + params[f"{prefix}.d_skip"][:, None] * xh
+    y = y.reshape(-1, 1, d["d_inner"]).astype(x_in.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params[f"{prefix}.norm_g"], cfg.norm_eps)
+    return lin(f"{prefix}.out_proj", y), new_conv, new_state

@@ -1,0 +1,291 @@
+"""Scan-over-layers (stacked-parameter) model path.
+
+Production-scale lowering: a 96-layer graph compiled as 96 inlined blocks is
+~100× the HLO of one scanned block. Layer patterns in every assigned arch
+are *periodic* (jamba: period 8 = 1 attn + 7 mamba, MoE on odd layers;
+everything else: period 1), so ``lax.scan`` over ``num_layers/period``
+steps with one period per body covers the whole pool. Parameters, decode
+caches, bit-plane overlays, and estimator artifacts all stack on a leading
+steps axis; ``cfg.layer_kind(r)`` / ``cfg.layer_is_moe(r)`` evaluated at the
+*relative* index r are correct for every step by periodicity.
+
+Equivalence with the per-layer loop path is asserted in
+tests/test_stacked.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import hint
+from repro.models.common import ParamSpec, default_linear, rms_norm
+from repro.models.transformer import (_block, decode_step as _loop_decode,
+                                      model_param_specs)
+
+_LAYER_RE = re.compile(r"^layers\.(\d+)\.(.+)$")
+
+
+def group_size(cfg: ModelConfig) -> int:
+    g = 1
+    if cfg.attn_every:
+        g = math.lcm(g, cfg.attn_every)
+    if cfg.num_experts and cfg.moe_every:
+        g = math.lcm(g, cfg.moe_every)
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    return g
+
+
+def num_scan_steps(cfg: ModelConfig) -> int:
+    return cfg.num_layers // group_size(cfg)
+
+
+def split_layer_paths(cfg: ModelConfig):
+    """Partition model_param_specs into (global, per-relative-layer)."""
+    g = group_size(cfg)
+    specs = model_param_specs(cfg)
+    global_specs: Dict[str, ParamSpec] = {}
+    rel_specs: Dict[str, ParamSpec] = {}
+    for path, s in specs.items():
+        m = _LAYER_RE.match(path)
+        if not m:
+            global_specs[path] = s
+            continue
+        i, rest = int(m.group(1)), m.group(2)
+        if i < g:
+            rel_specs[f"{i}.{rest}"] = s
+    return global_specs, rel_specs
+
+
+def stack_params(cfg: ModelConfig, params: Dict[str, jax.Array]):
+    """Loop-layout params -> (global, stacked xs) trees."""
+    g = group_size(cfg)
+    steps = num_scan_steps(cfg)
+    glob = {p: v for p, v in params.items() if not _LAYER_RE.match(p)}
+    stacked: Dict[str, jax.Array] = {}
+    _, rel = split_layer_paths(cfg)
+    for rel_path in rel:
+        r, rest = rel_path.split(".", 1)
+        leaves = [params[f"layers.{int(r) + c * g}.{rest}"]
+                  for c in range(steps)]
+        stacked[rel_path] = jnp.stack(leaves)
+    return glob, stacked
+
+
+def _view(xs_slice: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Relative-path slice dict -> 'layers.{r}.*' view for _block."""
+    return {f"layers.{p}": v for p, v in xs_slice.items()}
+
+
+def forward_stacked(
+    cfg: ModelConfig,
+    glob: Dict[str, jax.Array],
+    stacked: Dict[str, jax.Array],
+    tokens: jax.Array,
+    *,
+    lin_factory: Optional[Callable] = None,   # (params_view, xs_extra) -> lin
+    xs_extra: Optional[Dict] = None,          # extra stacked trees (overlays…)
+    prefix_embeds=None,
+    frames=None,
+    remat: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    moe_capacity_factor: float = 1.25,
+    moe_group_size: int = 512,
+    carry_sharding=None,   # NamedSharding for the scan carry (seq-parallel
+                           # layer-boundary activations: §Perf memory term)
+) -> Tuple[jax.Array, jax.Array]:
+    del frames  # enc-dec archs use the loop path (period structure differs)
+    g = group_size(cfg)
+    h = glob["embed.tok"][tokens]
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    if carry_sharding is not None:
+        h = jax.lax.with_sharding_constraint(h, carry_sharding)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def body(h, xs):
+        params_slice, extra = xs
+        view = _view(params_slice)
+        lin = lin_factory(view, extra) if lin_factory else \
+            default_linear(view)
+        aux_total = jnp.float32(0.0)
+        for r in range(g):
+            h, aux = _block(cfg, view, lin, r, h, positions,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            moe_capacity_factor=moe_capacity_factor,
+                            moe_group_size=moe_group_size)
+            aux_total = aux_total + aux
+        if carry_sharding is not None:
+            h = jax.lax.with_sharding_constraint(h, carry_sharding)
+        elif remat:
+            # seq-parallel layer-boundary activations (SP): the scan saves
+            # one carry per step for backward; sharding seq over 'model'
+            # cut mamba2 train collectives 28x and temp 12x (§Perf iter 7).
+            # Forward-only paths skip it: measured +0.7GB all-gather on
+            # prefill with no backward saves to shrink.
+            h = hint(h, "dp", "model", None)
+        return h, aux_total
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, auxs = jax.lax.scan(body_fn, h, (stacked, xs_extra or {}))
+    h = rms_norm(h, glob["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, glob["embed.tok"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, glob["lm_head"])
+    # vocab-sharded logits: the (tokens, vocab) tensor is the largest single
+    # activation in every train/prefill cell — keep it on the model axis
+    logits = hint(logits, "dp", None, "model")
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn_stacked(cfg, glob, stacked, tokens, labels, *, aux_weight=0.01,
+                    **kw):
+    from repro.models.common import cross_entropy
+    logits, aux = forward_stacked(cfg, glob, stacked, tokens, **kw)
+    if kw.get("prefix_embeds") is not None:
+        logits = logits[:, kw["prefix_embeds"].shape[1]:]
+    return cross_entropy(logits, labels, cfg.vocab_size) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked decode (serving)
+# ---------------------------------------------------------------------------
+def stack_decode_state(cfg: ModelConfig, state: Dict[str, jax.Array]):
+    """Loop-layout decode state -> (pos, stacked-cache dict)."""
+    g = group_size(cfg)
+    steps = num_scan_steps(cfg)
+    out: Dict[str, jax.Array] = {}
+    seen = set()
+    for key in state:
+        if key == "pos":
+            continue
+        kind, i, rest = key.split(".", 2)       # e.g. kv.3.k
+        r = int(i) % g
+        rel = f"{kind}.{r}.{rest}"
+        if rel in seen:
+            continue
+        seen.add(rel)
+        leaves = [state[f"{kind}.{int(i) % g + c * g}.{rest}"]
+                  for c in range(steps)]
+        out[rel] = jnp.stack(leaves)
+    return out
+
+
+def decode_step_stacked(
+    cfg: ModelConfig,
+    glob: Dict[str, jax.Array],
+    stacked: Dict[str, jax.Array],
+    cache: Dict[str, jax.Array],               # stacked caches (steps, ...)
+    pos: jax.Array,
+    tokens: jax.Array,                         # (b, 1)
+    *,
+    lin_factory: Optional[Callable] = None,
+    xs_extra: Optional[Dict] = None,
+):
+    """One decode step; returns (logits, new_cache, new_pos, eff_bits)."""
+    g = group_size(cfg)
+    h = glob["embed.tok"][tokens]
+    eff_parts = []
+
+    def body(h, xs):
+        params_slice, cache_slice, extra = xs
+        view = _view(params_slice)
+        lin = lin_factory(view, extra) if lin_factory else \
+            default_linear(view)
+        # present the cache slice under loop-path names for _loop_decode
+        state_view = {"pos": pos}
+        for key, v in cache_slice.items():
+            kind, r, rest = key.split(".", 2)
+            state_view[f"{kind}.{r}.{rest}"] = v
+        # run the g layers of this period (mirrors transformer.decode_step)
+        _, new_state = _period_decode(cfg, g, view, lin, dict(state_view), h)
+        hh = new_state.pop("__h__")
+        new_cache_slice = {}
+        for key in cache_slice:
+            kind, r, rest = key.split(".", 2)
+            new_cache_slice[key] = new_state[f"{kind}.{r}.{rest}"]
+        if hasattr(lin, "effective_bits") and lin.records:
+            num = sum(b.astype(jnp.float32) * s for b, s in lin.records)
+            den = sum(s for _, s in lin.records)
+            eff = jnp.stack([num, jnp.float32(den)])
+        else:
+            eff = jnp.zeros((2,), jnp.float32)
+        return hh, (new_cache_slice, eff)
+
+    h, (new_cache, effs) = jax.lax.scan(
+        body, h, (stacked, cache, xs_extra or {}))
+    h = rms_norm(h, glob["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, glob["embed.tok"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, glob["lm_head"])
+    eff_bits = jnp.sum(effs[:, 0]) / jnp.maximum(jnp.sum(effs[:, 1]), 1.0)
+    return logits, new_cache, pos + 1, eff_bits
+
+
+def _period_decode(cfg, g, view, lin, state, h):
+    """g layers of the decode body (mirrors transformer.decode_step)."""
+    from repro.models import ssm as ssm_mod
+    from repro.models.attention import decode_attention, update_kv_cache
+    from repro.models.common import apply_rope
+    from repro.models.mlp import mlp_forward
+    from repro.models.moe import moe_decode_forward
+    pos = state["pos"]
+    hd = cfg.resolved_head_dim
+    new_state = dict(state)
+    for r in range(g):
+        p = f"layers.{r}"
+        resid = h
+        x = rms_norm(h, view[f"{p}.ln1"], cfg.norm_eps)
+        if cfg.layer_kind(r) == "attn":
+            b = x.shape[0]
+            q = lin(f"{p}.attn.wq", x, async_input=resid)
+            k = lin(f"{p}.attn.wk", x, async_input=resid)
+            v = lin(f"{p}.attn.wv", x, async_input=resid)
+            q = q.reshape(b, 1, cfg.num_heads, hd)
+            k = k.reshape(b, 1, cfg.num_kv_heads, hd)
+            v = v.reshape(b, 1, cfg.num_kv_heads, hd)
+            ppos = pos[None, None].astype(jnp.float32) * jnp.ones((b, 1))
+            q = apply_rope(q, ppos, cfg.rope_theta)
+            k = apply_rope(k, ppos, cfg.rope_theta)
+            ks = state.get(f"kv.{r}.k_scale")
+            vs = state.get(f"kv.{r}.v_scale")
+            kc, vc, ks2, vs2 = update_kv_cache(
+                state[f"kv.{r}.k"], state[f"kv.{r}.v"], k, v, pos,
+                k_scale=ks, v_scale=vs)
+            new_state[f"kv.{r}.k"], new_state[f"kv.{r}.v"] = kc, vc
+            if ks2 is not None:
+                new_state[f"kv.{r}.k_scale"] = ks2
+                new_state[f"kv.{r}.v_scale"] = vs2
+            o = decode_attention(q, kc, vc, pos + 1,
+                                 logit_softcap=cfg.attn_logit_softcap,
+                                 k_scale=ks2, v_scale=vs2)
+            h = resid + lin(f"{p}.attn.wo", o.reshape(b, 1, -1))
+        else:
+            y, conv, st = ssm_mod.ssm_decode_step(
+                cfg, lin, view, f"{p}.ssm", x,
+                state[f"ssm.{r}.conv"], state[f"ssm.{r}.state"],
+                async_input=resid)
+            new_state[f"ssm.{r}.conv"] = conv
+            new_state[f"ssm.{r}.state"] = st
+            h = resid + y
+        if cfg.d_ff > 0:
+            resid = h
+            x = rms_norm(h, view[f"{p}.ln2"], cfg.norm_eps)
+            if cfg.layer_is_moe(r):
+                y, _ = moe_decode_forward(
+                    cfg.mlp_kind, lin, view, f"{p}.moe", x,
+                    num_experts=cfg.num_experts,
+                    top_k=cfg.experts_per_token)
+            else:
+                y = mlp_forward(cfg.mlp_kind, lin, f"{p}.mlp", x,
+                                async_input=resid)
+            h = resid + y
+    new_state["__h__"] = h
+    return None, new_state

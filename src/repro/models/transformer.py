@@ -1,0 +1,465 @@
+"""Config-driven transformer assembly.
+
+One code path builds every assigned architecture: dense GQA decoders,
+squared-ReLU variants, MoE layers, Mamba2/SSD mixers, jamba-style hybrid
+interleaves, enc-dec (whisper) with cross-attention, and VLM prefix
+embeddings. The *linear applier* ``lin(path, x, async_input=...)`` is
+pluggable: plain matmul for training, DP-LLM dynamic-precision for serving.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import hint
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (decode_attention, flash_attention,
+                                    update_kv_cache)
+from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, KV_HEADS,
+                                 NOSHARD, SSM_HEADS, SSM_INNER, VOCAB,
+                                 LinearUnit, ParamSpec, Params, SpecTable,
+                                 apply_rope, cross_entropy, default_linear,
+                                 init_params, logical_axes, rms_norm)
+from repro.models.mlp import mlp_forward, mlp_param_dims
+from repro.models.moe import moe_decode_forward, moe_forward
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(prefix: str, cfg: ModelConfig) -> List[ParamSpec]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    return [
+        ParamSpec(f"{prefix}.wq", (d, nq), (EMBED, HEADS)),
+        ParamSpec(f"{prefix}.wk", (d, nkv), (EMBED, KV_HEADS)),
+        ParamSpec(f"{prefix}.wv", (d, nkv), (EMBED, KV_HEADS)),
+        ParamSpec(f"{prefix}.wo", (nq, d), (HEADS, EMBED)),
+    ]
+
+
+def _mlp_specs(prefix: str, cfg: ModelConfig) -> List[ParamSpec]:
+    specs = []
+    for name, (k, n) in mlp_param_dims(cfg.mlp_kind, cfg.d_model, cfg.d_ff):
+        ax = (EMBED, FFN) if k == cfg.d_model else (FFN, EMBED)
+        specs.append(ParamSpec(f"{prefix}.{name}", (k, n), ax))
+    return specs
+
+
+def _moe_specs(prefix: str, cfg: ModelConfig) -> List[ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = [ParamSpec(f"{prefix}.router", (d, e), (EMBED, NOSHARD),
+                       init="small_normal")]
+    for name, (k, n) in mlp_param_dims(cfg.mlp_kind, d, f):
+        ax = (EXPERTS, EMBED, FFN) if k == d else (EXPERTS, FFN, EMBED)
+        specs.append(ParamSpec(f"{prefix}.{name}", (e, k, n), ax, fan_in=k))
+    return specs
+
+
+def _ssm_specs(prefix: str, cfg: ModelConfig) -> List[ParamSpec]:
+    dd = ssm_mod.ssm_dims(cfg)
+    d = cfg.d_model
+    return [
+        ParamSpec(f"{prefix}.in_proj", (d, dd["d_in_proj"]),
+                  (EMBED, SSM_INNER)),
+        ParamSpec(f"{prefix}.out_proj", (dd["d_inner"], d),
+                  (SSM_INNER, EMBED)),
+        ParamSpec(f"{prefix}.conv_w", (cfg.ssm_conv_width, dd["d_xbc"]),
+                  (CONV, SSM_INNER), init="small_normal"),
+        ParamSpec(f"{prefix}.conv_b", (dd["d_xbc"],), (SSM_INNER,),
+                  init="zeros"),
+        ParamSpec(f"{prefix}.a_log", (dd["nheads"],), (SSM_HEADS,),
+                  init="zeros"),
+        ParamSpec(f"{prefix}.dt_bias", (dd["nheads"],), (SSM_HEADS,),
+                  init="zeros"),
+        ParamSpec(f"{prefix}.d_skip", (dd["nheads"],), (SSM_HEADS,),
+                  init="ones"),
+        ParamSpec(f"{prefix}.norm_g", (dd["d_inner"],), (SSM_INNER,),
+                  init="ones"),
+    ]
+
+
+def model_param_specs(cfg: ModelConfig) -> SpecTable:
+    specs: List[ParamSpec] = [
+        ParamSpec("embed.tok", (cfg.padded_vocab_size, cfg.d_model),
+                  (VOCAB, EMBED), init="small_normal"),
+        ParamSpec("final_norm", (cfg.d_model,), (NOSHARD,), init="ones"),
+    ]
+    if not cfg.tie_embeddings:
+        specs.append(ParamSpec("lm_head",
+                               (cfg.d_model, cfg.padded_vocab_size),
+                               (EMBED, VOCAB)))
+    for i in range(cfg.num_layers):
+        p = f"layers.{i}"
+        kind = cfg.layer_kind(i)
+        specs.append(ParamSpec(f"{p}.ln1", (cfg.d_model,), (NOSHARD,),
+                               init="ones"))
+        if kind == "attn":
+            specs += _attn_specs(f"{p}.attn", cfg)
+        else:
+            specs += _ssm_specs(f"{p}.ssm", cfg)
+        if cfg.cross_attention:
+            specs.append(ParamSpec(f"{p}.ln_x", (cfg.d_model,), (NOSHARD,),
+                                   init="ones"))
+            specs += _attn_specs(f"{p}.xattn", cfg)
+        if cfg.d_ff > 0:
+            specs.append(ParamSpec(f"{p}.ln2", (cfg.d_model,), (NOSHARD,),
+                                   init="ones"))
+            if cfg.layer_is_moe(i):
+                specs += _moe_specs(f"{p}.moe", cfg)
+            else:
+                specs += _mlp_specs(f"{p}.mlp", cfg)
+    if cfg.encoder_layers:
+        for i in range(cfg.encoder_layers):
+            p = f"enc.layers.{i}"
+            specs.append(ParamSpec(f"{p}.ln1", (cfg.d_model,), (NOSHARD,),
+                                   init="ones"))
+            specs += _attn_specs(f"{p}.attn", cfg)
+            specs.append(ParamSpec(f"{p}.ln2", (cfg.d_model,), (NOSHARD,),
+                                   init="ones"))
+            specs += _mlp_specs(f"{p}.mlp", cfg)
+        specs.append(ParamSpec("enc.final_norm", (cfg.d_model,), (NOSHARD,),
+                               init="ones"))
+    return {s.path: s for s in specs}
+
+
+# ---------------------------------------------------------------------------
+# DP-LLM precision units
+# ---------------------------------------------------------------------------
+def linear_units(cfg: ModelConfig) -> List[LinearUnit]:
+    """Quantizable linear projections = the paper's per-'layer' units."""
+    units: List[LinearUnit] = []
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+
+    def attn_units(p: str, dynamic_qkv: bool = True):
+        return [
+            LinearUnit(f"{p}.wq", "q", d, nq, dynamic_qkv),
+            LinearUnit(f"{p}.wk", "k", d, nkv, dynamic_qkv),
+            LinearUnit(f"{p}.wv", "v", d, nkv, dynamic_qkv),
+            LinearUnit(f"{p}.wo", "o", nq, d, False),
+        ]
+
+    def mlp_units(p: str):
+        out = []
+        for name, (k, n) in mlp_param_dims(cfg.mlp_kind, d, cfg.d_ff):
+            kind = name.split("_")[1]
+            out.append(LinearUnit(f"{p}.{name}", kind, k, n,
+                                  kind in ("gate", "up")))
+        return out
+
+    for i in range(cfg.num_layers):
+        p = f"layers.{i}"
+        if cfg.layer_kind(i) == "attn":
+            units += attn_units(f"{p}.attn")
+        else:
+            dd = ssm_mod.ssm_dims(cfg)
+            units += [
+                LinearUnit(f"{p}.ssm.in_proj", "ssm_in", d,
+                           dd["d_in_proj"], True),
+                LinearUnit(f"{p}.ssm.out_proj", "ssm_out", dd["d_inner"],
+                           d, False),
+            ]
+        if cfg.cross_attention:
+            units += attn_units(f"{p}.xattn")
+        if cfg.d_ff > 0:
+            if cfg.layer_is_moe(i):
+                # experts share one precision decision per projection
+                for name, (k, n) in mlp_param_dims(cfg.mlp_kind, d, cfg.d_ff):
+                    kind = "expert_" + name.split("_")[1]
+                    units.append(LinearUnit(f"{p}.moe.{name}", kind, k, n,
+                                            False))
+            else:
+                units += mlp_units(f"{p}.mlp")
+    # encoder units are prefill-only (highest precision, paper §6.1) — they
+    # are quantizable but never dynamic; exclude from the runtime unit list.
+    return units
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _block(cfg: ModelConfig, params: Params, lin, i: int, h: jax.Array,
+           positions: jax.Array, *, q_chunk: int, kv_chunk: int,
+           enc_out: Optional[jax.Array] = None,
+           moe_capacity_factor: float = 1.25,
+           moe_group_size: int = 512) -> Tuple[jax.Array, jax.Array]:
+    p = f"layers.{i}"
+    resid = h
+    x = rms_norm(h, params[f"{p}.ln1"], cfg.norm_eps)
+    if cfg.layer_kind(i) == "attn":
+        hd = cfg.resolved_head_dim
+        q = lin(f"{p}.attn.wq", x, async_input=resid)
+        k = lin(f"{p}.attn.wk", x, async_input=resid)
+        v = lin(f"{p}.attn.wv", x, async_input=resid)
+        b, s, _ = x.shape
+        q = q.reshape(b, s, cfg.num_heads, hd)
+        k = k.reshape(b, s, cfg.num_kv_heads, hd)
+        v = v.reshape(b, s, cfg.num_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = flash_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk,
+                            logit_softcap=cfg.attn_logit_softcap)
+        h = resid + lin(f"{p}.attn.wo", o.reshape(b, s, -1))
+    else:
+        h = resid + ssm_mod.ssm_forward(cfg, lin, params, f"{p}.ssm", x,
+                                        async_input=resid)
+    if cfg.cross_attention and enc_out is not None:
+        resid = h
+        x = rms_norm(h, params[f"{p}.ln_x"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        q = lin(f"{p}.xattn.wq", x, async_input=resid)
+        k = lin(f"{p}.xattn.wk", enc_out)
+        v = lin(f"{p}.xattn.wv", enc_out)
+        q = q.reshape(b, s, cfg.num_heads, hd)
+        k = k.reshape(b, enc_out.shape[1], cfg.num_kv_heads, hd)
+        v = v.reshape(b, enc_out.shape[1], cfg.num_kv_heads, hd)
+        o = flash_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+        h = resid + lin(f"{p}.xattn.wo", o.reshape(b, s, -1))
+    aux = jnp.float32(0.0)
+    if cfg.d_ff > 0:
+        resid = h
+        x = rms_norm(h, params[f"{p}.ln2"], cfg.norm_eps)
+        if cfg.layer_is_moe(i):
+            y, aux = moe_forward(cfg.mlp_kind, lin, params, f"{p}.moe", x,
+                                 num_experts=cfg.num_experts,
+                                 top_k=cfg.experts_per_token,
+                                 capacity_factor=moe_capacity_factor,
+                                 group_size=moe_group_size)
+        else:
+            y = mlp_forward(cfg.mlp_kind, lin, f"{p}.mlp", x,
+                            async_input=resid)
+        h = resid + y
+    return h, aux
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           *, lin=None, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Encoder stack over precomputed frontend embeddings (b, f, d)."""
+    lin = lin or default_linear(params)
+    h = frames
+    positions = jnp.arange(frames.shape[1])[None, :]
+    for i in range(cfg.encoder_layers):
+        p = f"enc.layers.{i}"
+        resid = h
+        x = rms_norm(h, params[f"{p}.ln1"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        q = lin(f"{p}.attn.wq", x).reshape(b, s, cfg.num_heads, hd)
+        k = lin(f"{p}.attn.wk", x).reshape(b, s, cfg.num_kv_heads, hd)
+        v = lin(f"{p}.attn.wv", x).reshape(b, s, cfg.num_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = flash_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+        h = resid + lin(f"{p}.attn.wo", o.reshape(b, s, -1))
+        resid = h
+        x = rms_norm(h, params[f"{p}.ln2"], cfg.norm_eps)
+        h = resid + mlp_forward(cfg.mlp_kind, lin, f"{p}.mlp", x)
+    return rms_norm(h, params["enc.final_norm"], cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                       # (b, s) int32
+    *,
+    lin: Optional[Callable] = None,
+    prefix_embeds: Optional[jax.Array] = None,   # (b, n, d) VLM stub
+    frames: Optional[jax.Array] = None,          # (b, f, d) audio stub
+    remat: bool = False,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    moe_capacity_factor: float = 1.25,
+    moe_group_size: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (b, s_total, vocab_padded), aux_loss scalar)."""
+    lin = lin or default_linear(params)
+    h = params["embed.tok"][tokens]
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    positions = jnp.arange(h.shape[1])[None, :]
+    enc_out = None
+    if cfg.encoder_layers and frames is not None:
+        enc_out = encode(cfg, params, frames, lin=lin, q_chunk=q_chunk,
+                         kv_chunk=kv_chunk)
+
+    aux_total = jnp.float32(0.0)
+
+    def run_block(i, h):
+        fn = lambda hh: _block(cfg, params, lin, i, hh, positions,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               enc_out=enc_out,
+                               moe_capacity_factor=moe_capacity_factor,
+                               moe_group_size=moe_group_size)
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(h)
+
+    for i in range(cfg.num_layers):
+        h, aux = run_block(i, h)
+        aux_total = aux_total + aux
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed.tok"])
+    else:
+        logits = lin("lm_head", h)
+    logits = hint(logits, "dp", None, "model")
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token, batched)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16,
+                      kv_dtype=None) -> Dict[str, jax.Array]:
+    kv_dtype = kv_dtype or dtype
+    int8_kv = kv_dtype == jnp.int8
+    state: Dict[str, jax.Array] = {"pos": jnp.zeros((), jnp.int32)}
+    hd = cfg.resolved_head_dim
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) == "attn":
+            state[f"kv.{i}.k"] = jnp.zeros(
+                (batch, max_len, cfg.num_kv_heads, hd), kv_dtype)
+            state[f"kv.{i}.v"] = jnp.zeros(
+                (batch, max_len, cfg.num_kv_heads, hd), kv_dtype)
+            if int8_kv:
+                state[f"kv.{i}.k_scale"] = jnp.zeros(
+                    (batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
+                state[f"kv.{i}.v_scale"] = jnp.zeros(
+                    (batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
+        else:
+            dd = ssm_mod.ssm_dims(cfg)
+            state[f"ssm.{i}.conv"] = jnp.zeros(
+                (batch, cfg.ssm_conv_width - 1, dd["d_xbc"]), dtype)
+            state[f"ssm.{i}.state"] = jnp.zeros(
+                (batch, dd["nheads"], dd["d_state"],
+                 dd["d_inner"] // dd["nheads"]), jnp.float32)
+        if cfg.cross_attention:
+            # cross K/V computed once from encoder output at session start
+            ft = cfg.frontend_tokens or 1
+            state[f"xkv.{i}.k"] = jnp.zeros(
+                (batch, ft, cfg.num_kv_heads, hd), dtype)
+            state[f"xkv.{i}.v"] = jnp.zeros(
+                (batch, ft, cfg.num_kv_heads, hd), dtype)
+    return state
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    state: Dict[str, jax.Array],
+    tokens: jax.Array,                       # (b, 1) int32
+    *,
+    lin: Optional[Callable] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. Returns (logits (b, 1, vocab_padded), new_state)."""
+    lin = lin or default_linear(params)
+    pos = state["pos"]
+    h = params["embed.tok"][tokens]
+    new_state = dict(state)
+    hd = cfg.resolved_head_dim
+
+    for i in range(cfg.num_layers):
+        p = f"layers.{i}"
+        resid = h
+        x = rms_norm(h, params[f"{p}.ln1"], cfg.norm_eps)
+        if cfg.layer_kind(i) == "attn":
+            b = x.shape[0]
+            q = lin(f"{p}.attn.wq", x, async_input=resid)
+            k = lin(f"{p}.attn.wk", x, async_input=resid)
+            v = lin(f"{p}.attn.wv", x, async_input=resid)
+            q = q.reshape(b, 1, cfg.num_heads, hd)
+            k = k.reshape(b, 1, cfg.num_kv_heads, hd)
+            v = v.reshape(b, 1, cfg.num_kv_heads, hd)
+            ppos = pos[None, None].astype(jnp.float32) * jnp.ones((b, 1))
+            q = apply_rope(q, ppos, cfg.rope_theta)
+            k = apply_rope(k, ppos, cfg.rope_theta)
+            ks = state.get(f"kv.{i}.k_scale")
+            vs = state.get(f"kv.{i}.v_scale")
+            kc, vc, ks2, vs2 = update_kv_cache(
+                state[f"kv.{i}.k"], state[f"kv.{i}.v"], k, v, pos,
+                k_scale=ks, v_scale=vs)
+            new_state[f"kv.{i}.k"], new_state[f"kv.{i}.v"] = kc, vc
+            if ks2 is not None:
+                new_state[f"kv.{i}.k_scale"] = ks2
+                new_state[f"kv.{i}.v_scale"] = vs2
+            o = decode_attention(q, kc, vc, pos + 1,
+                                 logit_softcap=cfg.attn_logit_softcap,
+                                 k_scale=ks2, v_scale=vs2)
+            h = resid + lin(f"{p}.attn.wo", o.reshape(b, 1, -1))
+        else:
+            y, conv, st = ssm_mod.ssm_decode_step(
+                cfg, lin, params, f"{p}.ssm", x,
+                state[f"ssm.{i}.conv"], state[f"ssm.{i}.state"],
+                async_input=resid)
+            new_state[f"ssm.{i}.conv"] = conv
+            new_state[f"ssm.{i}.state"] = st
+            h = resid + y
+        if cfg.cross_attention:
+            resid = h
+            x = rms_norm(h, params[f"{p}.ln_x"], cfg.norm_eps)
+            b = x.shape[0]
+            q = lin(f"{p}.xattn.wq", x, async_input=resid)
+            q = q.reshape(b, 1, cfg.num_heads, hd)
+            kc = state[f"xkv.{i}.k"]
+            vc = state[f"xkv.{i}.v"]
+            o = decode_attention(q, kc, vc, jnp.int32(kc.shape[1]))
+            h = resid + lin(f"{p}.xattn.wo", o.reshape(b, 1, -1))
+        if cfg.d_ff > 0:
+            resid = h
+            x = rms_norm(h, params[f"{p}.ln2"], cfg.norm_eps)
+            if cfg.layer_is_moe(i):
+                y, _ = moe_decode_forward(
+                    cfg.mlp_kind, lin, params, f"{p}.moe", x,
+                    num_experts=cfg.num_experts,
+                    top_k=cfg.experts_per_token)
+            else:
+                y = mlp_forward(cfg.mlp_kind, lin, f"{p}.mlp", x,
+                                async_input=resid)
+            h = resid + y
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed.tok"])
+    else:
+        logits = lin("lm_head", h)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Convenience
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            labels: jax.Array, *, remat: bool = False,
+            q_chunk: int = 1024, kv_chunk: int = 1024,
+            prefix_embeds=None, frames=None,
+            aux_weight: float = 0.01) -> jax.Array:
+    logits, aux = forward(cfg, params, tokens, remat=remat, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, prefix_embeds=prefix_embeds,
+                          frames=frames)
+    if prefix_embeds is not None:
+        # loss only on the text positions
+        logits = logits[:, prefix_embeds.shape[1]:]
+    return cross_entropy(logits, labels, cfg.vocab_size) + aux_weight * aux
+
+
+def init_model_params(cfg: ModelConfig, key: jax.Array,
+                      dtype=jnp.float32) -> Params:
+    return init_params(model_param_specs(cfg), key, dtype)
+
+
+def model_logical_axes(cfg: ModelConfig):
+    return logical_axes(model_param_specs(cfg))

@@ -1,0 +1,7 @@
+from repro.optim import adafactor, adamw
+from repro.optim.adamw import AdamWState
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = ["AdamWState", "adamw", "clip_by_global_norm", "constant",
+           "global_norm", "warmup_cosine"]

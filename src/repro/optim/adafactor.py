@@ -1,0 +1,75 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+For ≥100B-parameter training the AdamW f32 moments alone exceed a v5e pod's
+HBM (341B × 8B = 2.7TB); Adafactor's row/col-factored v and optional zero
+momentum cut optimizer state to ~O(rows+cols), which is what makes the
+nemotron-4-340b / jamba-398b train cells fit (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    v_row: Any      # per-leaf: (..., K) or full v for <2D leaves
+    v_col: Any      # per-leaf: (..., N) or (1,) placeholder
+
+
+def _is_factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    v_row = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-1], jnp.float32) if _is_factored(p)
+        else jnp.zeros(p.shape, jnp.float32), params)
+    v_col = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        if _is_factored(p) else jnp.zeros((1,), jnp.float32), params)
+    return AdafactorState(jnp.zeros((), jnp.int32), v_row, v_col)
+
+
+def update(
+    grads, state: AdafactorState, params, *,
+    lr: jax.Array,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)          # increasing decay schedule
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _is_factored(p):   # static: shapes known at trace time
+            vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            # v_hat = (vr ⊗ vc) / mean(vr)   (Shazeer & Stern Eq. 4)
+            vr_mean = jnp.maximum(jnp.mean(vr_new, axis=-1, keepdims=True),
+                                  eps)
+            v_hat = (vr_new / vr_mean)[..., None] * vc_new[..., None, :]
+            u = g * jax.lax.rsqrt(v_hat + eps)
+        else:
+            vr_new = beta * vr + (1 - beta) * g2
+            vc_new = vc
+            u = g / (jnp.sqrt(vr_new) + 1e-12)
+        # update clipping (RMS(u) <= threshold)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        p_new = (p.astype(jnp.float32) - lr * (
+            u + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+        return p_new, vr_new, vc_new
+
+    flat = jax.tree.map(upd, grads, state.v_row, state.v_col, params)
+    is_t = lambda x: isinstance(x, tuple)
+    params_new = jax.tree.map(lambda x: x[0], flat, is_leaf=is_t)
+    vr_new = jax.tree.map(lambda x: x[1], flat, is_leaf=is_t)
+    vc_new = jax.tree.map(lambda x: x[2], flat, is_leaf=is_t)
+    return params_new, AdafactorState(step, vr_new, vc_new)

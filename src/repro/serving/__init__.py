@@ -1,0 +1,6 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import make_decode_state, reset_state, state_bytes
+from repro.serving.qos import LatencyModel, QoSPlanner, QueryBitTracker
+
+__all__ = ["LatencyModel", "QoSPlanner", "QueryBitTracker", "ServingEngine",
+           "make_decode_state", "reset_state", "state_bytes"]

@@ -1,0 +1,165 @@
+"""DP-LLM serving engine: dynamic-precision batched decode.
+
+``ServingEngine`` wraps a built :class:`MultiScaleModel`:
+- overlays are truncated to each unit's Phase-1 max precision — device
+  memory equals the Any-Precision budget, not the parent B;
+- one jit'd decode step per (target precision, mode): the
+  DynamicLinearApplier selects l/h per unit per step and the step returns
+  the realized effective bitwidth alongside the logits;
+- greedy generation, teacher-forced evaluation (the paper evaluates
+  perplexity as a teacher-forced decoding process — precision decisions
+  happen per decoding step), and per-query effective-bit tracking for the
+  QoS analysis (paper §6.3).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.adaptation import MultiScaleModel
+from repro.core.bitplane import (QuantizedStacked, truncate_overlay,
+                                 truncate_stacked)
+from repro.core.dynamic_linear import DynamicLinearApplier
+from repro.core.thresholds import delta_weight_of
+from repro.models import decode_step
+from repro.serving.kv_cache import make_decode_state
+
+
+@dataclass
+class StepStats:
+    effective_bits: float
+    logits: np.ndarray
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Dict[str, jax.Array],
+        model: MultiScaleModel,
+        *,
+        backend: Optional[str] = None,
+        use_async: bool = True,
+    ):
+        self.cfg = cfg
+        self.model = model
+        self.backend = backend
+        self.use_async = use_async
+        # raw params for non-unit paths (norms, router, embeds, conv, head)
+        self.raw = {k: v for k, v in params.items()
+                    if k not in model.overlays}
+        # memory-budget overlays: truncated to Phase-1 max precision
+        self.overlays = {}
+        for path, ov in model.overlays.items():
+            h = model.max_bits[path]
+            self.overlays[path] = (
+                truncate_stacked(ov, h) if isinstance(ov, QuantizedStacked)
+                else truncate_overlay(ov, h))
+        self._steps: Dict[Tuple[float, str], callable] = {}
+        self._exact_deltas: Dict[float, Dict[str, jax.Array]] = {}
+
+    # -- step compilation -------------------------------------------------------
+    def _make_step(self, target: float, mode: str):
+        aset = self.model.adaptations[target]
+        exact = self._exact_deltas.get(target) if mode == "exact" else None
+
+        def step(state, tokens):
+            lin = DynamicLinearApplier(
+                self.raw, self.overlays, aset, mode=mode,
+                use_async=self.use_async, backend=self.backend,
+                exact_deltas=exact)
+            logits, new_state = decode_step(self.cfg, self.raw, state,
+                                            tokens, lin=lin)
+            return logits, new_state, lin.effective_bits()
+
+        return jax.jit(step, donate_argnums=(0,))
+
+    def _make_static_step(self, method: str, target: float):
+        bits_table = self.model.static_tables[method][target]
+
+        def step(state, tokens):
+            lin = DynamicLinearApplier(
+                self.raw, self.overlays, None, static_bits=bits_table,
+                mode="static", backend=self.backend)
+            logits, new_state = decode_step(self.cfg, self.raw, state,
+                                            tokens, lin=lin)
+            return logits, new_state, lin.effective_bits()
+
+        return jax.jit(step, donate_argnums=(0,))
+
+    def get_step(self, target: float, mode: str = "dynamic"):
+        key = (target, mode)
+        if key not in self._steps:
+            if mode == "exact" and target not in self._exact_deltas:
+                aset = self.model.adaptations[target]
+                self._exact_deltas[target] = {
+                    ua.path: delta_weight_of(self.overlays[ua.path],
+                                             ua.l, ua.h)
+                    for ua in aset.units.values()
+                    if ua.l != ua.h and ua.est is not None}
+            if mode.startswith("static:"):
+                self._steps[key] = self._make_static_step(
+                    mode.split(":", 1)[1], target)
+            else:
+                self._steps[key] = self._make_step(target, mode)
+        return self._steps[key]
+
+    # -- evaluation / generation -----------------------------------------------
+    def teacher_forced_nll(
+        self, tokens: np.ndarray, target: float, mode: str = "dynamic",
+        prime_len: int = 1,
+    ) -> Tuple[float, List[float]]:
+        """Per-token NLL over ``tokens`` (batch, seq) with per-step dynamic
+        precision; returns (mean_nll, per-step effective bits)."""
+        step = self.get_step(target, mode)
+        b, s = tokens.shape
+        state = make_decode_state(self.cfg, b, s + 1, dtype=jnp.float32)
+        nlls, ebits = [], []
+        toks = jnp.asarray(tokens)
+        for t in range(s - 1):
+            logits, state, eb = step(state, toks[:, t:t + 1])
+            logp = jax.nn.log_softmax(
+                logits[:, 0, : self.cfg.vocab_size].astype(jnp.float32))
+            gold = jnp.take_along_axis(logp, toks[:, t + 1][:, None],
+                                       axis=-1)
+            if t + 1 >= prime_len:
+                nlls.append(float(-jnp.mean(gold)))
+            ebits.append(float(eb))
+        return float(np.mean(nlls)), ebits
+
+    def generate(
+        self, prompt: np.ndarray, max_new: int, target: float,
+        mode: str = "dynamic",
+    ) -> Tuple[np.ndarray, List[float]]:
+        """Greedy decode; returns (tokens (b, prompt+max_new), eff bits)."""
+        step = self.get_step(target, mode)
+        b, p = prompt.shape
+        state = make_decode_state(self.cfg, b, p + max_new + 1,
+                                  dtype=jnp.float32)
+        ebits: List[float] = []
+        toks = jnp.asarray(prompt)
+        out = [toks]
+        cur = None
+        for t in range(p):  # prefill via teacher forcing (exact priming)
+            logits, state, eb = step(state, toks[:, t:t + 1])
+        cur = jnp.argmax(logits[:, :, : self.cfg.vocab_size], axis=-1)
+        for _ in range(max_new):
+            out.append(cur)
+            logits, state, eb = step(state, cur)
+            ebits.append(float(eb))
+            cur = jnp.argmax(logits[:, :, : self.cfg.vocab_size], axis=-1)
+        return np.asarray(jnp.concatenate(out, axis=1)), ebits
+
+    # -- accounting ---------------------------------------------------------------
+    def overlay_bytes(self) -> int:
+        total = 0
+        for ov in self.overlays.values():
+            total += int(np.prod(ov.planes.shape)) * 4
+            total += int(np.prod(ov.scale.shape)) * 8
+        return total

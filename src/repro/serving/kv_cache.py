@@ -1,0 +1,30 @@
+"""Decode-state management for the serving engine.
+
+Preallocated ring-style KV caches (and SSM recurrent states) built from the
+model config; byte accounting feeds the QoS latency model and the roofline.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_decode_state
+
+
+def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return init_decode_state(cfg, batch, max_len, dtype=dtype)
+
+
+def state_bytes(state: Dict[str, jax.Array]) -> int:
+    return int(sum(np.prod(v.shape) * v.dtype.itemsize
+                   for v in state.values()))
+
+
+def reset_state(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    out = {k: jnp.zeros_like(v) for k, v in state.items()}
+    return out

@@ -1,0 +1,64 @@
+"""QoS control: map per-query latency budgets to target precisions.
+
+The runtime-adaptation story of the paper (Fig. 1): queries arrive with a
+TPOT budget; the planner picks the highest target precision whose predicted
+decode latency fits the current slack. The latency model is the v5e
+weight-traffic roofline (decode is memory-bound): t(b) ≈ bytes(b)/HBM_bw +
+overhead, calibrated against measured step times when available.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+HBM_BW = 819e9      # bytes/s per chip (v5e)
+
+
+@dataclass
+class LatencyModel:
+    bytes_per_bit: float          # overlay bytes per effective bit
+    overhead_s: float = 2e-4      # selector + cache + dispatch
+
+    def tpot(self, bits: float, chips: int = 1) -> float:
+        return self.bytes_per_bit * bits / (HBM_BW * chips) + self.overhead_s
+
+
+@dataclass
+class QoSPlanner:
+    targets: Sequence[float]          # supported target precisions
+    latency: LatencyModel
+    chips: int = 1
+
+    def plan(self, tpot_budget_s: float,
+             utilization: float = 0.0) -> float:
+        """Highest precision fitting the budget at current utilization."""
+        slack = tpot_budget_s * max(0.0, 1.0 - utilization)
+        feasible = [t for t in sorted(self.targets)
+                    if self.latency.tpot(t, self.chips) <= slack]
+        return feasible[-1] if feasible else min(self.targets)
+
+
+@dataclass
+class QueryBitTracker:
+    """Per-query effective-bitwidth distribution (paper Table 7)."""
+    per_query_bits: List[float] = field(default_factory=list)
+
+    def record_query(self, step_bits: Sequence[float]) -> None:
+        if len(step_bits):
+            self.per_query_bits.append(float(np.mean(step_bits)))
+
+    def percentile_increase(self, q: float) -> float:
+        """(q-th percentile − mean) / mean of per-query effective bits."""
+        arr = np.asarray(self.per_query_bits)
+        mean = arr.mean()
+        return float((np.percentile(arr, q) - mean) / mean)
+
+    def summary(self) -> Dict[str, float]:
+        arr = np.asarray(self.per_query_bits)
+        return {
+            "mean": float(arr.mean()),
+            "p90_increase": self.percentile_increase(90),
+            "p99_increase": self.percentile_increase(99),
+        }

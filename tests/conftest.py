@@ -1,0 +1,31 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def tiny_bundle():
+    """One shared DP-LLM build on tiny-dense (expensive: ~1 min)."""
+    from repro.configs import get_config
+    from repro.core import build_multiscale_model
+    from repro.models import init_model_params
+
+    cfg = get_config("tiny-dense")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [
+        (rng.integers(0, cfg.vocab_size, (2, 48)).astype(np.int32),
+         rng.integers(0, cfg.vocab_size, (2, 48)).astype(np.int32))
+        for _ in range(2)
+    ]
+    model = build_multiscale_model(
+        cfg, params, batches, targets=[3.5, 4.5], finetune_epochs=1,
+        baselines=("llm_mq", "hawq_v2"))
+    return cfg, params, model, batches

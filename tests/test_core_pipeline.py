@@ -1,0 +1,158 @@
+"""DP-LLM offline pipeline: allocator, Phase 2, thresholds, estimators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import allocate_precisions, uniform_allocation
+from repro.core.estimators import (estimate, fit_estimator, fit_gamma,
+                                   fit_linear, make_g, sample_projection)
+from repro.core.thresholds import candidate_pair, threshold_from_quantile
+
+
+# ---------------------------------------------------------------------------
+# Allocator (Phase 1 / static baselines)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.floats(3.2, 5.8))
+def test_allocator_respects_budget(seed, budget):
+    rng = np.random.default_rng(seed)
+    n = 12
+    bits = [3, 4, 5, 6]
+    # monotone-decreasing costs in bits
+    base = rng.uniform(0.1, 10.0, size=(n, 1))
+    cost = base * np.array([[8.0, 4.0, 2.0, 1.0]])
+    sizes = rng.integers(1_000, 100_000, size=n)
+    alloc = allocate_precisions(cost, sizes, bits, budget)
+    avg = float(np.sum(np.array(alloc) * sizes) / np.sum(sizes))
+    assert avg <= budget + 1e-9
+    assert all(b in bits for b in alloc)
+
+
+def test_allocator_prefers_sensitive_layers():
+    # layer 0 is 100x more sensitive -> gets more bits at equal size
+    cost = np.array([[100.0, 50.0, 25.0, 12.0],
+                     [1.0, 0.5, 0.25, 0.12]])
+    alloc = allocate_precisions(cost, [10, 10], [3, 4, 5, 6], 4.5)
+    assert alloc[0] > alloc[1]
+
+
+def test_allocator_lower_bound():
+    cost = np.ones((4, 4)) * np.array([[4, 3, 2, 1.0]])
+    alloc = allocate_precisions(cost, [1, 1, 1, 1], [3, 4, 5, 6], 6.0,
+                                min_avg_bits=4.5)
+    avg = np.mean(alloc)
+    assert avg >= 4.5 - 1e-9
+
+
+def test_uniform_allocation():
+    assert uniform_allocation(5, 4) == [4] * 5
+
+
+# ---------------------------------------------------------------------------
+# Estimators (paper §5)
+# ---------------------------------------------------------------------------
+def test_linear_fit_recovers_slope():
+    rng = np.random.default_rng(0)
+    xn = rng.uniform(1, 10, 500)
+    err = 2.5 * xn + 0.3 + rng.normal(0, 0.01, 500)
+    a, b, r2 = fit_linear(xn, err)
+    assert abs(a - 2.5) < 0.02 and abs(b - 0.3) < 0.1 and r2 > 0.99
+
+
+def test_hybrid_choice_by_r2():
+    rng = np.random.default_rng(1)
+    xn = rng.uniform(1, 10, 200)
+    err_lin = 3 * xn + rng.normal(0, 0.01, 200)
+    err_rand = rng.uniform(0, 10, 200)
+    g = np.zeros((4, 8))
+    f1 = fit_estimator(err_lin, xn, err_lin, g)
+    f2 = fit_estimator(err_rand, xn, np.abs(err_rand), g)
+    assert f1.kind == "linear" and f2.kind == "jl"
+
+
+def test_jl_estimate_tracks_true_error():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dw = jax.random.normal(k1, (128, 96)) * 0.05
+    a = sample_projection(k2, 64, 96)
+    g = make_g(a, dw)
+    xs = jax.random.normal(k3, (200, 128))
+    true = np.asarray(jnp.linalg.norm(xs @ dw, axis=-1))
+    raw = np.asarray(jnp.linalg.norm(xs @ g.T, axis=-1))
+    gamma = fit_gamma(raw, true)
+    rel = np.abs(gamma * raw - true) / true
+    # paper: k=64 keeps estimation error within ~15% w.h.p.
+    assert np.quantile(rel, 0.91) < 0.25
+
+
+def test_estimate_batch_max_semantics():
+    from repro.core.estimators import EstimatorFit
+    fit = EstimatorFit(kind="linear", r2=1.0, a=1.0, b=0.0)
+    x = jnp.stack([jnp.ones(16), 2 * jnp.ones(16)])
+    # max over batch -> norm of the larger row
+    assert float(estimate(fit, x)) == pytest.approx(
+        float(jnp.linalg.norm(2 * jnp.ones(16))), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Thresholds (Phase 3)
+# ---------------------------------------------------------------------------
+def test_candidate_pair():
+    assert candidate_pair(3.2, 3, 6) == (3, 4)
+    assert candidate_pair(5.0, 3, 6) == (5, 5)
+    assert candidate_pair(7.2, 3, 6) == (6, 6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(3.05, 3.95), st.integers(0, 1000))
+def test_threshold_quantile_selects_expected_fraction(p, seed):
+    """r-quantile threshold -> ~(p-l) of calibration tokens pick h-bit."""
+    rng = np.random.default_rng(seed)
+    errs = rng.uniform(0, 1, 5000)
+    t = threshold_from_quantile(errs, p, 3)
+    frac_high = float(np.mean(errs > t))
+    assert abs(frac_high - (p - 3)) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# End-to-end pipeline artifacts (shared tiny build)
+# ---------------------------------------------------------------------------
+def test_phase2_hits_target_precision(tiny_bundle):
+    _, _, model, _ = tiny_bundle
+    for t, aset in model.adaptations.items():
+        assert abs(aset.avg_p - t) < 0.35, (t, aset.avg_p)
+
+
+def test_phase1_respects_memory_budget(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    from repro.models import linear_units
+    units = linear_units(cfg)
+    sizes = np.array([np.prod(params[u.path].shape) for u in units])
+    bits = np.array([model.max_bits[u.path] for u in units])
+    avg = float(np.sum(bits * sizes) / np.sum(sizes))
+    assert avg <= model.memory_budget_bits + 1e-6
+
+
+def test_static_baselines_match_targets(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    from repro.models import linear_units
+    units = linear_units(cfg)
+    sizes = np.array([np.prod(params[u.path].shape) for u in units])
+    for method in ("llm_mq", "hawq_v2"):
+        for t, table in model.static_tables[method].items():
+            bits = np.array([table[u.path] for u in units])
+            avg = float(np.sum(bits * sizes) / np.sum(sizes))
+            if method == "llm_mq":
+                # Eq. 8's lower bound can overshoot by one unit upgrade
+                # (the paper's b_targmin sweep is approximate too)
+                assert t - 0.75 <= avg <= t + 0.5, (t, avg)
+            else:
+                assert avg <= t + 1e-6, (t, avg)
+
+
+def test_estimator_census_is_hybrid(tiny_bundle):
+    _, _, model, _ = tiny_bundle
+    cen = model.adaptations[3.5].estimator_census()
+    assert cen["linear"] + cen["jl"] > 0

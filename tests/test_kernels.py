@@ -1,0 +1,98 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes, dtypes, and precisions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitplane import materialize, quantize_linear
+from repro.kernels.bitserial import bitserial_matmul
+from repro.kernels.dequant_matmul import dequant_matmul
+from repro.kernels.jl_estimator import jl_estimate
+
+
+@pytest.mark.parametrize("k,n,m", [(64, 128, 1), (128, 256, 8),
+                                   (96, 128, 3), (256, 512, 16)])
+@pytest.mark.parametrize("bits,b_sel", [(6, 3), (6, 6), (8, 4), (4, 2)])
+def test_bitserial_interpret_vs_ref(k, n, m, bits, b_sel):
+    w = jax.random.normal(jax.random.PRNGKey(k + n), (k, n)) * 0.2
+    ql = quantize_linear(w, bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    y_ref = bitserial_matmul(x, ql, b_sel, backend="ref")
+    y_int = bitserial_matmul(x, ql, b_sel, backend="interpret")
+    np.testing.assert_allclose(y_int, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_ref, x @ materialize(ql, b_sel),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitserial_dtypes(dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128)) * 0.2
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128)).astype(dtype)
+    y_ref = bitserial_matmul(x, ql, 4, backend="ref")
+    y_int = bitserial_matmul(x, ql, 4, backend="interpret")
+    np.testing.assert_allclose(y_int, y_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_bitserial_traffic_skips_planes():
+    """The clamped index_map means planes >= b_sel are never re-fetched:
+    consecutive grid steps past b_sel name the same block index."""
+    from repro.kernels.bitserial.kernel import bitserial_matmul_pallas
+    # behavioural proxy testable on CPU: results identical whether the
+    # overlay physically stores 6 planes or is truncated to b_sel planes
+    from repro.core.bitplane import truncate_overlay
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 128)) * 0.2
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 64))
+    full = bitserial_matmul(x, ql, 3, backend="interpret")
+    trunc = bitserial_matmul(x, truncate_overlay(ql, 3), 3, backend="ref")
+    np.testing.assert_allclose(full, trunc, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("l,kproj,k,m", [(4, 16, 96, 1), (2, 64, 128, 8)])
+def test_jl_estimator_interpret_vs_ref(l, kproj, k, m):
+    g = jax.random.normal(jax.random.PRNGKey(0), (l, kproj, k))
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    t = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (l,))) * 5
+    e1, s1 = jl_estimate(x, g, t, backend="ref")
+    e2, s2 = jl_estimate(x, g, t, backend="interpret")
+    np.testing.assert_allclose(e1, e2, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_jl_concentration(seed):
+    """JL lemma: ||Ax|| concentrates around ||x|| for k=64 (property)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (1, 512))
+    a = jax.random.normal(k2, (1, 64, 512)) / np.sqrt(64)
+    est, _ = jl_estimate(x, a, jnp.zeros((1,)), backend="ref")
+    true = float(jnp.linalg.norm(x))
+    assert abs(float(est[0]) - true) / true < 0.5   # loose 1-sample bound
+
+
+@pytest.mark.parametrize("bits_active", [3, 6])
+def test_dequant_matmul_interpret_vs_ref(bits_active):
+    k, n, m = 512, 256, 256
+    w = jax.random.normal(jax.random.PRNGKey(7), (k, n)) * 0.1
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(8), (m, k))
+    y_ref = dequant_matmul(x, ql, bits_active, backend="ref")
+    y_int = dequant_matmul(x, ql, bits_active, backend="interpret")
+    np.testing.assert_allclose(y_int, y_ref, rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(y_ref, x @ materialize(ql, bits_active),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_dequant_matmul_small_shapes_fall_back():
+    # non-tileable shapes silently use the oracle (dispatch correctness)
+    w = jax.random.normal(jax.random.PRNGKey(9), (96, 40)) * 0.1
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(10), (3, 96))
+    y = dequant_matmul(x, ql, 4, backend="interpret")
+    np.testing.assert_allclose(y, x @ materialize(ql, 4), rtol=2e-4,
+                               atol=2e-3)

@@ -1,0 +1,85 @@
+"""Bit-plane overlay substrate: exactness, prefix property, deltas."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitplane import (delta_weight, materialize,
+                                 materialize_stacked, quantize_linear,
+                                 quantize_stacked, truncate_overlay,
+                                 truncate_stacked)
+from repro.core.quantizer import (dequantize, quantization_mse,
+                                  quantize_channelwise)
+
+
+def _w(key, k=64, n=48, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(key), (k, n)) * scale
+
+
+def test_full_precision_materialize_exact():
+    w = _w(0)
+    ql = quantize_linear(w, bits=8)
+    q, s, z = quantize_channelwise(w, 8)
+    np.testing.assert_allclose(materialize(ql, 8), dequantize(q, s, z),
+                               atol=1e-5)
+
+
+def test_monotone_error_in_bits():
+    w = _w(1)
+    ql = quantize_linear(w, bits=8)
+    errs = [float(jnp.mean(jnp.abs(materialize(ql, b) - w)))
+            for b in range(2, 9)]
+    assert all(errs[i + 1] < errs[i] for i in range(len(errs) - 1)), errs
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 7))
+def test_prefix_property(seed, l):
+    """Any b-bit prefix equals independently truncated codes (hypothesis)."""
+    w = _w(seed % 97, k=32, n=16)
+    ql = quantize_linear(w, bits=8)
+    h = l + 1
+    d1 = materialize(ql, h) - materialize(ql, l)
+    d2 = delta_weight(ql, l, h)
+    np.testing.assert_allclose(d1, d2, atol=1e-4)
+
+
+def test_truncate_overlay_preserves_prefix():
+    w = _w(2)
+    ql = quantize_linear(w, 6)
+    qt = truncate_overlay(ql, 4)
+    assert qt.planes.shape[0] == 4
+    for b in (2, 3, 4):
+        np.testing.assert_allclose(materialize(qt, b), materialize(ql, b),
+                                   atol=1e-6)
+
+
+def test_stacked_matches_per_expert():
+    e, k, n = 3, 32, 16
+    w = jax.random.normal(jax.random.PRNGKey(5), (e, k, n)) * 0.2
+    qs = quantize_stacked(w, 6)
+    full = materialize_stacked(qs, 4)
+    for i in range(e):
+        ref = materialize(quantize_linear(w[i], 6), 4)
+        np.testing.assert_allclose(full[i], ref, atol=1e-5)
+    qt = truncate_stacked(qs, 4)
+    np.testing.assert_allclose(materialize_stacked(qt, 4), full, atol=1e-6)
+
+
+def test_quantization_mse_decreases_with_bits():
+    w = _w(3)
+    mses = [float(quantization_mse(w, b)) for b in (3, 4, 5, 6, 8)]
+    assert all(mses[i + 1] < mses[i] for i in range(len(mses) - 1))
+
+
+def test_memory_overlay_cost():
+    """The Any-Precision property: adaptation set costs ONE parent model."""
+    w = _w(4, k=128, n=64)
+    ql = quantize_linear(w, bits=6)
+    plane_bytes = int(np.prod(ql.planes.shape)) * 4
+    # 6 bit-planes of 128x64 -> packed int32 words
+    assert plane_bytes == 6 * (128 // 32) * 64 * 4
+    # per-precision traffic is proportional to b
+    ba = ql.bytes_at
+    assert ba[6] == 2 * ba[3]

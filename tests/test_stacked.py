@@ -1,0 +1,61 @@
+"""Scan-over-layers path ≡ per-layer loop path (forward + decode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_model_params)
+from repro.models.stacked import (decode_step_stacked, forward_stacked,
+                                  group_size, stack_decode_state,
+                                  stack_params)
+
+FAMS = ["tiny-dense", "tiny-sqrelu", "tiny-moe", "tiny-ssm", "tiny-hybrid"]
+
+
+@pytest.mark.parametrize("name", FAMS)
+def test_forward_equivalence(name):
+    cfg = get_config(name)
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    glob, stacked = stack_params(cfg, params)
+    l1, _ = forward(cfg, params, toks, moe_capacity_factor=8.0)
+    l2, _ = forward_stacked(cfg, glob, stacked, toks, remat=False,
+                            moe_capacity_factor=8.0)
+    np.testing.assert_allclose(l1, l2, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("name", FAMS)
+def test_decode_equivalence(name):
+    cfg = get_config(name)
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 4), 0,
+                              cfg.vocab_size)
+    glob, stacked = stack_params(cfg, params)
+    st = init_decode_state(cfg, 2, 8, dtype=jnp.float32)
+    cache = stack_decode_state(cfg, st)
+    pos = jnp.int32(0)
+    for t in range(3):
+        lg1, st = decode_step(cfg, params, st, toks[:, t:t + 1])
+        lg2, cache, pos, _ = decode_step_stacked(
+            cfg, glob, stacked, cache, pos, toks[:, t:t + 1])
+        np.testing.assert_allclose(lg1, lg2, rtol=3e-4, atol=3e-4)
+
+
+def test_group_sizes():
+    assert group_size(get_config("llama3-8b")) == 1
+    assert group_size(get_config("jamba-1.5-large-398b")) == 8
+    assert group_size(get_config("tiny-hybrid")) == 4
+
+
+def test_remat_matches_no_remat():
+    cfg = get_config("tiny-dense")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0,
+                              cfg.vocab_size)
+    glob, stacked = stack_params(cfg, params)
+    l1, _ = forward_stacked(cfg, glob, stacked, toks, remat=False)
+    l2, _ = forward_stacked(cfg, glob, stacked, toks, remat=True)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
