@@ -1,10 +1,11 @@
-"""END-TO-END DRIVER: serve a small trained LM with batched requests and
-dynamic layer-wise precision (the paper's deployment scenario).
+"""END-TO-END DRIVER: serve a small trained LM with continuous batching
+and dynamic layer-wise precision (the paper's deployment scenario).
 
 Loads the artifacts from examples/train_lm.py (or trains a fresh model),
 then serves a stream of queries with per-query TPOT budgets through the
-QoS planner -> DP-LLM engine, printing realized effective bits and
-completions.
+QoS planner -> slot scheduler -> DP-LLM engine: every admitted request
+decodes in one shared compiled step with its own target index, and the
+per-request effective bits feed the QoS tracker.
 
   PYTHONPATH=src python examples/serve_dynamic_precision.py
 """
@@ -25,12 +26,13 @@ def main():
                     default="experiments/artifacts/example_lm.pkl")
     ap.add_argument("--queries", type=int, default=5)
     ap.add_argument("--gen-len", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.data import load_corpus, decode as bdecode
     from repro.serving import (LatencyModel, QoSPlanner, QueryBitTracker,
-                               ServingEngine)
+                               Request, ServingEngine, SlotScheduler)
 
     if os.path.exists(args.artifacts):
         with open(args.artifacts, "rb") as fh:
@@ -49,23 +51,28 @@ def main():
         list(model.adaptations),
         LatencyModel(bytes_per_bit=engine.overlay_bytes() / 5), chips=1)
     tracker = QueryBitTracker()
+    scheduler = SlotScheduler(engine, planner, slots=args.slots,
+                              max_prompt=32, max_new=args.gen_len,
+                              tracker=tracker)
 
     corpus = load_corpus("eval", 500_000)
     rng = np.random.default_rng(0)
-    print(f"serving {args.queries} queries "
+    print(f"serving {args.queries} queries on {args.slots} slots "
           f"(targets available: {sorted(model.adaptations)})\n")
+    requests = []
     for qi in range(args.queries):
-        budget = float(rng.uniform(0.4e-3, 4e-3))
-        util = float(rng.uniform(0, 0.5))
-        target = planner.plan(budget, util)
         s = int(rng.integers(0, len(corpus) - 64))
-        prompt = corpus[s:s + 32][None, :].astype(np.int32)
-        out, ebits = engine.generate(prompt, args.gen_len, target)
-        tracker.record_query(ebits)
-        completion = bdecode(out[0, 32:])
-        print(f"query {qi}: TPOT budget {budget*1e3:.2f}ms, util {util:.2f}"
-              f" -> target {target}b, realized {np.mean(ebits):.2f}b")
-        print(f"  prompt: {bdecode(prompt[0])!r}")
+        requests.append(Request(
+            rid=qi, prompt=corpus[s:s + 32].astype(np.int32),
+            max_new=args.gen_len,
+            tpot_budget_s=float(rng.uniform(0.4e-3, 4e-3))))
+    completed = scheduler.run(requests)
+    for r in completed:
+        completion = bdecode(r.tokens[32:])
+        print(f"query {r.rid}: TPOT budget {r.tpot_budget_s*1e3:.2f}ms "
+              f"-> target {r.target}b, realized "
+              f"{np.mean(r.effective_bits):.2f}b")
+        print(f"  prompt: {bdecode(r.tokens[:32])!r}")
         print(f"  completion: {completion!r}\n")
     print("QoS summary:", {k: round(v, 4)
                            for k, v in tracker.summary().items()})

@@ -1,6 +1,8 @@
 """DP-LLM core: the paper's contribution as a composable JAX module."""
 from repro.core.adaptation import (AdaptationSet, MultiScaleModel,
-                                   UnitAdaptation)
+                                   ServeArtifacts, UnitAdaptation,
+                                   UnitStatic, export_serve_arrays,
+                                   export_static_arrays)
 from repro.core.allocator import allocate_precisions, uniform_allocation
 from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
                                  bitserial_matmul_ref, delta_weight,
@@ -15,9 +17,11 @@ from repro.core.quantizer import dequantize, quantize_channelwise
 __all__ = [
     "AdaptationSet", "DynamicLinearApplier", "EstimatorFit",
     "MultiScaleModel", "QuantizedLinear", "QuantizedStacked",
-    "UnitAdaptation", "allocate_precisions", "bitserial_matmul_ref",
+    "ServeArtifacts", "UnitAdaptation", "UnitStatic",
+    "allocate_precisions", "bitserial_matmul_ref",
     "build_multiscale_model", "delta_weight", "dequantize", "estimate",
-    "fit_estimator", "materialize", "materialize_stacked",
-    "quantize_channelwise", "quantize_linear", "quantize_stacked",
-    "quantize_units", "static_allocation", "uniform_allocation",
+    "export_serve_arrays", "export_static_arrays", "fit_estimator",
+    "materialize", "materialize_stacked", "quantize_channelwise",
+    "quantize_linear", "quantize_stacked", "quantize_units",
+    "static_allocation", "uniform_allocation",
 ]

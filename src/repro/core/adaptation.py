@@ -6,15 +6,34 @@ fitted estimator. A :class:`MultiScaleModel` holds the shared bit-plane
 overlays plus one AdaptationSet per supported target precision — the
 overlay memory is paid once (Any-Precision property), the per-target
 artifacts are a few scalars + G matrices.
+
+:func:`export_serve_arrays` flattens a MultiScaleModel into the serving
+representation: per unit, every per-target artifact (l/h pair, threshold,
+estimator a/b/γ, G matrix) stacked along a leading target axis, so the
+runtime applier selects the target with a *traced index* and one compiled
+decode step serves every target.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.estimators import EstimatorFit
+
+# estimator-kind codes in the exported ``kind`` arrays
+KIND_PINNED, KIND_LINEAR, KIND_JL = 0, 1, 2
+
+
+def overlay_nbytes(overlays: Dict[str, object]) -> int:
+    """Device bytes of a bit-plane overlay dict, from actual itemsizes."""
+    total = 0
+    for ov in overlays.values():
+        for arr in (ov.planes, ov.scale, ov.zero):
+            total += int(np.prod(arr.shape)) * np.dtype(arr.dtype).itemsize
+    return total
 
 
 @dataclass
@@ -78,8 +97,143 @@ class MultiScaleModel:
         return sorted(self.adaptations)
 
     def overlay_bytes(self) -> int:
-        total = 0
-        for ov in self.overlays.values():
-            total += int(np.prod(ov.planes.shape)) * 4
-            total += int(np.prod(ov.scale.shape)) * 8
-        return total
+        return overlay_nbytes(self.overlays)
+
+
+# ---------------------------------------------------------------------------
+# Serving export: per-target artifacts -> target-stacked traced arrays
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class UnitStatic:
+    """Trace-time constants for one precision unit (shapes/structure only —
+    every runtime-variable quantity lives in the exported arrays)."""
+    path: str
+    l: int                   # lowest candidate across targets
+    h: int                   # Phase-1 cap (max/prefill precision)
+    est_kind: str            # "linear" | "jl" | "pinned" | "mixed"
+    async_eligible: bool
+    stacked: bool = False
+
+
+@dataclass
+class ServeArtifacts:
+    """Array-form adaptation artifacts for the unified serving applier.
+
+    ``est[path]`` holds, per unit, arrays stacked over targets:
+      l, h, kind, threshold : (T,)
+      a, b                  : (T,)   — present iff any target is linear
+      gamma                 : (T,)   — present iff any target is JL
+      g                     : (T, k_proj, K) — ditto
+    """
+    targets: Tuple[float, ...]
+    table: Dict[str, UnitStatic]
+    est: Dict[str, Dict[str, np.ndarray]]
+
+    def target_index(self, target: float) -> int:
+        for i, t in enumerate(self.targets):
+            if abs(t - target) < 1e-9:
+                return i
+        raise KeyError(f"target {target} not in {self.targets}")
+
+
+def export_serve_arrays(model: MultiScaleModel) -> ServeArtifacts:
+    """Stack every per-target adaptation artifact along a target axis."""
+    targets = tuple(model.targets())
+    if not targets:
+        raise ValueError("model has no adaptation sets")
+    asets = [model.adaptations[t] for t in targets]
+    table: Dict[str, UnitStatic] = {}
+    est: Dict[str, Dict[str, np.ndarray]] = {}
+    for path, ua0 in asets[0].units.items():
+        uas = [a.units[path] for a in asets]
+        kinds, gs = [], []
+        any_lin = any_jl = False
+        for ua in uas:
+            if ua.l == ua.h or ua.est is None:
+                kinds.append(KIND_PINNED)
+                gs.append(None)
+            elif ua.est.kind == "linear":
+                kinds.append(KIND_LINEAR)
+                any_lin = True
+                gs.append(None)
+            else:
+                kinds.append(KIND_JL)
+                any_jl = True
+                gs.append(np.asarray(ua.est.g, np.float32))
+        entry = {
+            "l": np.asarray([ua.l for ua in uas], np.int32),
+            "h": np.asarray([ua.h for ua in uas], np.int32),
+            "kind": np.asarray(kinds, np.int32),
+            "threshold": np.asarray([ua.threshold for ua in uas],
+                                    np.float32),
+        }
+        if any_lin:
+            entry["a"] = np.asarray(
+                [ua.est.a if ua.est and ua.est.kind == "linear" else 0.0
+                 for ua in uas], np.float32)
+            entry["b"] = np.asarray(
+                [ua.est.b if ua.est and ua.est.kind == "linear" else 0.0
+                 for ua in uas], np.float32)
+        if any_jl:
+            g_shape = next(g.shape for g in gs if g is not None)
+            entry["gamma"] = np.asarray(
+                [ua.est.gamma if ua.est and ua.est.kind == "jl" else 0.0
+                 for ua in uas], np.float32)
+            entry["g"] = np.stack(
+                [g if g is not None else np.zeros(g_shape, np.float32)
+                 for g in gs])
+        est[path] = entry
+        if all(k == KIND_PINNED for k in kinds):
+            ek = "pinned"
+        elif not any_jl:
+            ek = "linear"
+        elif not any_lin:
+            ek = "jl"
+        else:
+            ek = "mixed"
+        table[path] = UnitStatic(
+            path=path,
+            l=min(ua.l for ua in uas),
+            h=model.max_bits.get(path, max(ua.h for ua in uas)),
+            est_kind=ek,
+            async_eligible=ua0.async_eligible,
+            stacked=(ua0.kind or "").startswith("expert_"),
+        )
+    return ServeArtifacts(targets=targets, table=table, est=est)
+
+
+def export_static_arrays(model: MultiScaleModel,
+                         method: str) -> Dict[str, np.ndarray]:
+    """``path -> (T,) int32`` bits for one static baseline method.
+
+    Targets missing from the method's tables reuse the nearest available
+    target's allocation, so the exported arrays always cover the full
+    target axis of the compiled step.
+    """
+    tabs = model.static_tables[method]
+    if not tabs:
+        raise KeyError(f"static method {method!r} has no tables")
+    targets = model.targets()
+    avail = sorted(tabs)
+    per_target = []
+    for t in targets:
+        if t in tabs:
+            per_target.append(tabs[t])
+            continue
+        sub = min(avail, key=lambda a: abs(a - t))
+        warnings.warn(f"static method {method!r} has no table for target "
+                      f"{t}; substituting the {sub} allocation")
+        per_target.append(tabs[sub])
+    paths = set().union(*[set(tab) for tab in per_target])
+
+    def bits_of(tab, p):
+        if p in tab:
+            return tab[p]
+        for other in per_target:           # tables may disagree on units
+            if p in other:
+                return other[p]
+        raise KeyError(p)
+
+    return {p: np.asarray([bits_of(tab, p) for tab in per_target],
+                          np.int32)
+            for p in paths}

@@ -1,76 +1,124 @@
 """Runtime dynamic-precision linear applier — the DP-LLM serving path.
 
+THE single precision-selection implementation: the serving engine, the
+launch/dry-run lowering path, and the continuous-batching scheduler all
+build on this class. Every adaptation artifact (candidate l/h pairs,
+thresholds, estimator a/b/γ and G matrices) is a *traced array* stacked
+over target precisions (see :func:`repro.core.adaptation.export_serve_arrays`),
+and the active target is a traced index — so one compiled step serves all
+targets without retracing, and the production mesh can shard the artifacts
+like any other weight.
+
 Implements the ``lin(path, x, async_input=...)`` protocol of the model zoo:
 for each quantized unit it estimates the relative error (linear / JL /
-exact), compares against the unit's threshold, and runs the bit-serial
-matmul at the selected precision. Non-unit paths fall through to the raw
-parameters.
-
-The applier also exposes ``weights(path, x_est)`` for stacked MoE units
-(the decode path materializes expert weights at the selected precision) and
-records every (bits, size) decision so the engine can account per-step
-**effective bitwidth** (paper §6.3 QoS analysis).
+exact), compares against the unit's threshold at the selected target, and
+runs the bit-serial matmul at the selected precision. Non-unit paths fall
+through to the raw parameters. ``weights(path, x)`` materializes stacked
+MoE expert weights at the selected precision. Every (bits, size) decision
+is recorded so callers can account per-step **effective bitwidth** (paper
+§6.3 QoS analysis).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.adaptation import AdaptationSet
-from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
-                                 materialize, materialize_stacked)
-from repro.core.estimators import estimate
+from repro.core.adaptation import KIND_LINEAR, KIND_PINNED, UnitStatic
+from repro.core.bitplane import QuantizedStacked, materialize_stacked
 from repro.kernels.bitserial import bitserial_matmul
 
 
+def _row_view(x: jax.Array) -> jax.Array:
+    """(..., K) -> (R, K) float32 rows for estimation."""
+    return x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+
+
+def _match_width(xf: jax.Array, k: int) -> jax.Array:
+    """Zero-pad estimation rows up to an artifact's (padded) K width."""
+    if xf.shape[-1] < k:
+        xf = jnp.pad(xf, ((0, 0), (0, k - xf.shape[-1])))
+    return xf
+
+
 class DynamicLinearApplier:
-    """One instance per traced step; collect ``effective_bits()`` after."""
+    """One instance per traced step; collect ``effective_bits()`` after.
+
+    Parameters
+    ----------
+    table: trace-time :class:`UnitStatic` constants per unit path.
+    serve_params: ``{"raw", "overlays", "est"}`` — raw params for non-unit
+        paths, bit-plane overlays, and the target-stacked estimator arrays.
+        ``est`` entries may additionally carry ``delta`` — (T, K, N) exact
+        ΔW stacks — to enable ``mode="exact"``.
+    target_idx: traced int32 scalar selecting the target precision. Under
+        ``jax.vmap`` (the scheduler's slot axis) this becomes per-slot.
+    mode: ``dynamic | static | max | exact``. ``static`` requires
+        ``static_bits``: per-path (T,) int32 arrays (traced).
+    """
 
     def __init__(
         self,
-        raw_params: Dict[str, jax.Array],
-        overlays: Dict[str, object],
-        adaptation: Optional[AdaptationSet] = None,
+        table: Dict[str, UnitStatic],
+        serve_params: Dict[str, Dict],
         *,
-        static_bits: Optional[Dict[str, int]] = None,   # static baselines
-        mode: str = "dynamic",        # dynamic | static | max | exact
+        target_idx=0,
+        mode: str = "dynamic",
+        static_bits: Optional[Dict[str, jax.Array]] = None,
         use_async: bool = True,
         backend: Optional[str] = None,
-        exact_deltas: Optional[Dict[str, jax.Array]] = None,
     ):
-        self.raw = raw_params
-        self.overlays = overlays
-        self.adaptation = adaptation
-        self.static_bits = static_bits or {}
+        self.table = table
+        self.raw = serve_params["raw"]
+        self.overlays = serve_params["overlays"]
+        self.est = serve_params.get("est") or {}
+        self.target_idx = jnp.asarray(target_idx, jnp.int32)
         self.mode = mode
+        self.static_bits = static_bits or {}
         self.use_async = use_async
         self.backend = backend
-        self.exact_deltas = exact_deltas or {}
         self.records: List[Tuple[jax.Array, float]] = []
 
     # -- precision selection ---------------------------------------------------
-    def _select_bits(self, path: str, x: jax.Array,
+    def _select_bits(self, u: UnitStatic, x: jax.Array,
                      async_input) -> jax.Array:
-        if self.mode == "static":
-            return jnp.int32(self.static_bits[path])
-        ua = self.adaptation.units[path]
+        t = self.target_idx
         if self.mode == "max":
-            return jnp.int32(ua.max_bits)
-        if ua.l == ua.h:
-            return jnp.int32(ua.l)
-        x_est = async_input if (self.use_async and ua.async_eligible and
+            return jnp.int32(u.h)
+        if self.mode == "static":
+            return self.static_bits[u.path][t]
+        e = self.est.get(u.path)
+        if e is None or u.est_kind == "pinned":
+            if e is not None:
+                return e["l"][t]
+            return jnp.int32(u.l)
+        l, h = e["l"][t], e["h"][t]
+        x_est = async_input if (self.use_async and u.async_eligible and
                                 async_input is not None) else x
-        if self.mode == "exact":
-            xe = x_est.reshape((-1, x_est.shape[-1])).astype(jnp.float32)
-            est = jnp.max(jnp.linalg.norm(xe @ self.exact_deltas[path],
-                                          axis=-1))
+        xf = _row_view(x_est)
+        if self.mode == "exact" and "delta" in e:
+            est = jnp.max(jnp.linalg.norm(xf @ e["delta"][t], axis=-1))
         else:
-            est = estimate(ua.est, x_est)
-        return jnp.where(est > ua.threshold, jnp.int32(ua.h),
-                         jnp.int32(ua.l))
+            est = self._approx_estimate(e, xf, t)
+        dynamic = e["kind"][t] != KIND_PINNED
+        return jnp.where(dynamic & (est > e["threshold"][t]), h, l)
+
+    def _approx_estimate(self, e: Dict, xf: jax.Array, t) -> jax.Array:
+        est_lin = est_jl = None
+        if "a" in e:
+            xn = jnp.linalg.norm(xf, axis=-1)
+            est_lin = jnp.max(e["a"][t] * xn + e["b"][t])
+        if "g" in e:
+            g = e["g"][t]                       # (k_proj, K)
+            proj = _match_width(xf, g.shape[-1]) @ g.T
+            est_jl = e["gamma"][t] * jnp.max(
+                jnp.linalg.norm(proj, axis=-1))
+        if est_lin is None:
+            return est_jl
+        if est_jl is None:
+            return est_lin
+        return jnp.where(e["kind"][t] == KIND_LINEAR, est_lin, est_jl)
 
     # -- lin protocol ------------------------------------------------------------
     def __call__(self, path: str, x: jax.Array, *,
@@ -82,8 +130,9 @@ class DynamicLinearApplier:
                     f"stacked unit {path} must use .weights(), not lin()")
             return jnp.einsum("...k,kn->...n", x,
                               self.raw[path]).astype(x.dtype)
-        bits = self._select_bits(path, x, async_input)
-        self.records.append((bits, float(ov.k * ov.n)))
+        u = self.table[path]
+        bits = self._select_bits(u, x, async_input)
+        self.records.append((bits, float(ov.k * ov.planes.shape[-1])))
         y = bitserial_matmul(x, ov, bits, backend=self.backend)
         return y.astype(x.dtype)
 
@@ -93,7 +142,8 @@ class DynamicLinearApplier:
         ov = self.overlays.get(path)
         if ov is None:
             return self.raw[path]
-        bits = self._select_bits(path, x, async_input)
+        u = self.table[path]
+        bits = self._select_bits(u, x, async_input)
         e, _, _, n = ov.planes.shape
         self.records.append((bits, float(e * ov.k * n)))
         return materialize_stacked(ov, bits).astype(x.dtype)

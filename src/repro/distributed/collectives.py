@@ -25,8 +25,14 @@ def psum_scatter(x, axis: AxisName, *, tiled: bool = True):
     return jax.lax.psum_scatter(x, axis_name=axis, tiled=tiled)
 
 
+def axis_size(axis: AxisName) -> int:
+    """Mapped-axis size, version-portable: ``psum(1, axis)`` constant-folds
+    to a concrete int (``jax.lax.axis_size`` is absent in older releases)."""
+    return int(jax.lax.psum(1, axis_name=axis))
+
+
 def ring_permute(x, axis: str, shift: int = 1):
     """Send to the next device along ``axis`` (pipeline hop)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis_name=axis, perm=perm)

@@ -21,6 +21,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.collectives import axis_size
+
 
 def residual_shape(n_elements: int, axis_size: int) -> Tuple[int]:
     padded = n_elements + ((-n_elements) % axis_size)
@@ -43,7 +45,7 @@ def compressed_allreduce_shard(
 
     Returns (mean_grad (grad.shape), new_residual (residual.shape)).
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     flat = grad.astype(jnp.float32).reshape((-1,))
     pad = (-flat.shape[0]) % n
     if pad:

@@ -28,6 +28,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed upstream (TPUCompilerParams -> CompilerParams); support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 PACK = 32
 DEFAULT_TILE_N = 256
 
@@ -113,7 +117,7 @@ def bitserial_matmul_pallas(
         functools.partial(_kernel, bits=bits),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

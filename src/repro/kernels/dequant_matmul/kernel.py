@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed upstream (TPUCompilerParams -> CompilerParams); support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 PACK = 32
 
 
@@ -92,7 +96,7 @@ def dequant_matmul_pallas(
         out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kt: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed upstream (TPUCompilerParams -> CompilerParams); support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, g_ref, t_ref, err_ref, sel_ref):
     g = g_ref[0]                                   # (kproj, K)
@@ -74,7 +78,7 @@ def jl_estimate_pallas(
             pl.BlockSpec((1, 1), row_map),
         ),
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

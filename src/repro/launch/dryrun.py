@@ -164,22 +164,24 @@ def build_cell(arch: str, shape_name: str, mesh, kv_dtype="bf16"):
                         prefix_embeds=ex.get("prefix_embeds"))
         return fn, (serve_params, tokens, extras), ()
 
-    # decode
+    # decode — the target index is a traced input: one compiled step
+    # serves every target precision without retracing.
     if use_stacked:
         from repro.launch.input_specs import (make_unit_table_rel,
                                               stacked_decode_specs)
         from repro.launch.steps import build_serve_step
         table = make_unit_table_rel(cfg)
-        serve_params, cache, pos, tokens = stacked_decode_specs(
+        serve_params, cache, pos, tokens, target_idx = stacked_decode_specs(
             cfg, shape_name, mesh, table, kv_dtype=kvd)
         step = build_serve_step(cfg, table, backend="ref")
-        return step, (serve_params, cache, pos, tokens), (1,)
+        return step, (serve_params, cache, pos, tokens, target_idx), (1,)
     from repro.launch.input_specs import decode_specs, make_unit_table
     from repro.serving.step import build_serve_step as loop_serve
     table = make_unit_table(cfg)
-    serve_params, state, tokens = decode_specs(cfg, shape_name, mesh, table)
+    serve_params, state, tokens, target_idx = decode_specs(
+        cfg, shape_name, mesh, table)
     step = loop_serve(cfg, table, backend="ref")
-    return step, (serve_params, state, tokens), (1,)
+    return step, (serve_params, state, tokens, target_idx), (1,)
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
@@ -214,6 +216,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # older jax: one dict per device
+        ca = ca[0] if ca else {}
     coll, coll_counts = parse_collective_bytes(compiled.as_text())
 
     shp = SHAPES[shape_name]

@@ -28,14 +28,45 @@ from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
                                         kv_cache_spec, resolve_spec)
 from repro.models import (linear_units, model_logical_axes,
                           model_param_specs)
+from repro.core.adaptation import UnitStatic
 from repro.models.common import EXPERTS
 from repro.models.ssm import ssm_dims
-from repro.serving.step import UnitStatic
 
 JL_K = 64
 SERVE_BUDGET_BITS = 5       # Phase-1 cap: overlays store 5 planes
 SERVE_L, SERVE_H = 4, 5     # target 4.5 candidate pair
 PARENT_BITS = 6
+
+
+# length of the traced target axis in the lowering specs: the compiled
+# step serves this many target precisions via a traced index. Specs here
+# are shapes only — the actual per-target l/h/threshold values are filled
+# by export_serve_arrays at launch time.
+N_SERVE_TARGETS = 3
+
+
+def _est_entry_specs(st: UnitStatic, kpad: int, k_ax, mesh,
+                     steps: Optional[int] = None):
+    """Canonical target-stacked estimator-array SDS for one dynamic unit."""
+    n_t = N_SERVE_TARGETS
+    lead = (steps,) if steps is not None else ()
+    lax_ = (None,) if steps is not None else ()
+
+    def small(dtype):
+        return _sds(lead + (n_t,), dtype, mesh, P(*(lax_ + (None,))))
+
+    entry = {"l": small(jnp.int32), "h": small(jnp.int32),
+             "kind": small(jnp.int32), "threshold": small(jnp.float32)}
+    if st.est_kind == "linear":
+        entry["a"] = small(jnp.float32)
+        entry["b"] = small(jnp.float32)
+    else:
+        g_shape = lead + (n_t, JL_K, kpad)
+        g_axes = lax_ + (None, None, k_ax)
+        entry["gamma"] = small(jnp.float32)
+        entry["g"] = _sds(g_shape, jnp.float32, mesh,
+                          resolve_spec(g_shape, g_axes, mesh, SERVE_RULES))
+    return entry
 
 
 def _sds(shape, dtype, mesh, spec):
@@ -137,16 +168,7 @@ def serve_param_specs(cfg: ModelConfig, mesh: Mesh,
                 PARENT_BITS, u.k)
         if st.est_kind == "pinned":
             continue
-        entry = {"threshold": _sds((), jnp.float32, mesh, P())}
-        if st.est_kind == "linear":
-            entry["a"] = _sds((), jnp.float32, mesh, P())
-            entry["b"] = _sds((), jnp.float32, mesh, P())
-        else:
-            g_spec = resolve_spec((JL_K, kpad), (None, k_ax), mesh,
-                                  SERVE_RULES)
-            entry["gamma"] = _sds((), jnp.float32, mesh, P())
-            entry["g"] = _sds((JL_K, kpad), jnp.float32, mesh, g_spec)
-        est[u.path] = entry
+        est[u.path] = _est_entry_specs(st, kpad, k_ax, mesh)
     return {"raw": raw, "overlays": overlays, "est": est}
 
 
@@ -186,7 +208,8 @@ def decode_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
     state = decode_state_specs(cfg, mesh, shp.global_batch, shp.seq_len)
     tokens = _sds((shp.global_batch, 1), jnp.int32, mesh,
                   batch_spec(mesh, shp.global_batch))
-    return serve_params, state, tokens
+    target_idx = _sds((), jnp.int32, mesh, P())
+    return serve_params, state, tokens, target_idx
 
 
 # ---------------------------------------------------------------------------
@@ -336,17 +359,8 @@ def stacked_serve_param_specs(cfg: ModelConfig, mesh: Mesh,
                     sds_of(sshape, sax, jnp.float32),
                     PARENT_BITS, u.k)
             if st.est_kind != "pinned":
-                entry = {"threshold": sds_of((steps,), (None,),
-                                             jnp.float32)}
-                if st.est_kind == "linear":
-                    entry["a"] = sds_of((steps,), (None,), jnp.float32)
-                    entry["b"] = sds_of((steps,), (None,), jnp.float32)
-                else:
-                    gshape, gax = _add_steps_dim((JL_K, kpad),
-                                                 (None, k_ax), steps)
-                    entry["gamma"] = sds_of((steps,), (None,), jnp.float32)
-                    entry["g"] = sds_of(gshape, gax, jnp.float32)
-                est[full] = entry
+                est[full] = _est_entry_specs(st, kpad, k_ax, mesh,
+                                             steps=steps)
         else:
             shape, ax = _add_steps_dim(s.shape, s.axes, steps)
             stack[rel] = sds_of(shape, ax, jnp.bfloat16)
@@ -395,7 +409,8 @@ def stacked_decode_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
     pos = _sds((), jnp.int32, mesh, P())
     tokens = _sds((shp.global_batch, 1), jnp.int32, mesh,
                   batch_spec(mesh, shp.global_batch))
-    return serve_params, cache, pos, tokens
+    target_idx = _sds((), jnp.int32, mesh, P())
+    return serve_params, cache, pos, tokens, target_idx
 
 
 def stacked_prefill_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,

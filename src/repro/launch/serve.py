@@ -1,9 +1,10 @@
-"""Serving launcher: batched requests with QoS-driven precision planning.
+"""Serving launcher: continuous-batching requests with QoS precision plans.
 
 Demonstrates the paper's Figure-1 scenario end to end on a small model:
 queries arrive with TPOT budgets, the planner picks a target precision per
-query batch, the DP-LLM engine decodes with per-step dynamic layer-wise
-precision, and the tracker reports per-query effective-bit percentiles.
+request at admission, the slot scheduler decodes all admitted requests in
+one shared compiled step (per-slot target indices — no retracing), and the
+tracker reports per-query effective-bit percentiles.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch bench-lm
@@ -21,12 +22,13 @@ from repro.configs import get_config
 from repro.core import build_multiscale_model
 from repro.models import init_model_params
 from repro.serving import (LatencyModel, QoSPlanner, QueryBitTracker,
-                           ServingEngine)
+                           Request, ServingEngine, SlotScheduler)
 
 
 def serve_demo(arch: str = "bench-lm", params=None, model=None,
                targets=(3.5, 4.0, 4.5), n_queries: int = 6,
-               tokens_per_query: int = 12, seed: int = 0, log=print):
+               tokens_per_query: int = 12, slots: int = 4,
+               seed: int = 0, log=print):
     cfg = get_config(arch)
     rng = np.random.default_rng(seed)
     if params is None:
@@ -42,19 +44,25 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
         list(model.adaptations), LatencyModel(
             bytes_per_bit=engine.overlay_bytes() / 5), chips=1)
     tracker = QueryBitTracker()
+    scheduler = SlotScheduler(engine, planner, slots=slots, max_prompt=8,
+                              max_new=tokens_per_query, tracker=tracker)
 
-    budgets = rng.uniform(0.5e-3, 5e-3, size=n_queries)
-    for qi, budget in enumerate(budgets):
-        util = float(rng.uniform(0.0, 0.5))
-        target = planner.plan(budget, util)
-        prompt = rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)
-        t0 = time.monotonic()
-        out, ebits = engine.generate(prompt, tokens_per_query, target)
-        dt = (time.monotonic() - t0) / max(tokens_per_query, 1)
-        tracker.record_query(ebits)
-        log(f"query {qi}: budget {budget*1e3:.2f}ms util {util:.2f} -> "
-            f"target {target}b; realized eff bits "
-            f"{np.mean(ebits):.2f}; wall/token {dt*1e3:.1f}ms")
+    requests = [
+        Request(rid=qi,
+                prompt=rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32),
+                max_new=tokens_per_query,
+                tpot_budget_s=float(rng.uniform(0.5e-3, 5e-3)))
+        for qi in range(n_queries)]
+    t0 = time.monotonic()
+    completed = scheduler.run(requests)
+    wall = time.monotonic() - t0
+    for r in completed:
+        log(f"query {r.rid}: budget {r.tpot_budget_s*1e3:.2f}ms -> "
+            f"target {r.target}b; realized eff bits "
+            f"{np.mean(r.effective_bits):.2f}")
+    log(f"{len(completed)} queries on {slots} slots in {wall*1e3:.0f}ms "
+        f"({wall / max(1, n_queries * tokens_per_query) * 1e3:.1f}ms/token "
+        f"amortized)")
     log("per-query QoS summary: "
         f"{ {k: round(v, 4) for k, v in tracker.summary().items()} }")
     return tracker
@@ -64,6 +72,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="bench-lm")
     ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--artifacts", default=None,
                     help="pickle produced by examples/train_lm.py")
     args = ap.parse_args()
@@ -73,7 +82,7 @@ def main():
             blob = pickle.load(fh)
         params, model = blob["params"], blob["model"]
     serve_demo(args.arch, params=params, model=model,
-               n_queries=args.queries)
+               n_queries=args.queries, slots=args.slots)
 
 
 if __name__ == "__main__":

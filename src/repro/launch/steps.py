@@ -19,7 +19,8 @@ from repro.models.stacked import (decode_step_stacked, forward_stacked,
                                   group_size, loss_fn_stacked)
 from repro.optim import adafactor, adamw
 from repro.optim.clip import clip_by_global_norm
-from repro.serving.step import ArrayAdaptationApplier, UnitStatic
+from repro.core.adaptation import UnitStatic
+from repro.core.dynamic_linear import DynamicLinearApplier
 
 
 # ---------------------------------------------------------------------------
@@ -120,16 +121,18 @@ def build_serve_step(cfg: ModelConfig,
                      table_rel: Dict[str, UnitStatic],
                      *, backend: Optional[str] = None,
                      use_async: bool = True) -> Callable:
-    """Dynamic-precision decode: step(serve_params, cache, pos, tokens)."""
+    """Dynamic-precision decode:
+    step(serve_params, cache, pos, tokens, target_idx)."""
 
-    def lin_factory(view, extra):
-        return ArrayAdaptationApplier(
-            table_rel,
-            {"raw": view, "overlays": extra["overlays"],
-             "est": extra["est"]},
-            backend=backend, use_async=use_async)
+    def serve_step(serve_params, cache, pos, tokens, target_idx=0):
+        def lin_factory(view, extra):
+            return DynamicLinearApplier(
+                table_rel,
+                {"raw": view, "overlays": extra["overlays"],
+                 "est": extra["est"]},
+                target_idx=target_idx, backend=backend,
+                use_async=use_async)
 
-    def serve_step(serve_params, cache, pos, tokens):
         logits, new_cache, new_pos, eff = decode_step_stacked(
             cfg, serve_params["glob"], serve_params["stack"], cache, pos,
             tokens, lin_factory=lin_factory,
@@ -144,14 +147,12 @@ def build_prefill_step(cfg: ModelConfig,
                        table_rel: Dict[str, UnitStatic],
                        *, backend: Optional[str] = None) -> Callable:
     """Max-precision quantized prefill: step(serve_params, tokens, ...)."""
-    max_table = {p: UnitStatic(p, u.h, u.h, "pinned", False, u.stacked)
-                 for p, u in table_rel.items()}
 
     def lin_factory(view, extra):
-        return ArrayAdaptationApplier(
-            max_table,
+        return DynamicLinearApplier(
+            table_rel,
             {"raw": view, "overlays": extra["overlays"], "est": {}},
-            backend=backend)
+            mode="max", backend=backend)
 
     def prefill_step(serve_params, tokens, extras):
         logits, _ = forward_stacked(

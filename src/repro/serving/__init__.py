@@ -1,6 +1,8 @@
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import make_decode_state, reset_state, state_bytes
 from repro.serving.qos import LatencyModel, QoSPlanner, QueryBitTracker
+from repro.serving.scheduler import Request, SlotScheduler
 
-__all__ = ["LatencyModel", "QoSPlanner", "QueryBitTracker", "ServingEngine",
-           "make_decode_state", "reset_state", "state_bytes"]
+__all__ = ["LatencyModel", "QoSPlanner", "QueryBitTracker", "Request",
+           "ServingEngine", "SlotScheduler", "make_decode_state",
+           "reset_state", "state_bytes"]

@@ -1,40 +1,40 @@
-"""DP-LLM serving engine: dynamic-precision batched decode.
+"""DP-LLM serving engine: dynamic-precision fused-scan batched decode.
 
 ``ServingEngine`` wraps a built :class:`MultiScaleModel`:
+
 - overlays are truncated to each unit's Phase-1 max precision — device
   memory equals the Any-Precision budget, not the parent B;
-- one jit'd decode step per (target precision, mode): the
-  DynamicLinearApplier selects l/h per unit per step and the step returns
-  the realized effective bitwidth alongside the logits;
-- greedy generation, teacher-forced evaluation (the paper evaluates
-  perplexity as a teacher-forced decoding process — precision decisions
-  happen per decoding step), and per-query effective-bit tracking for the
-  QoS analysis (paper §6.3).
+- ONE jit'd decode step per *mode* (not per target): every adaptation
+  artifact is exported as a target-stacked traced array
+  (:func:`repro.core.adaptation.export_serve_arrays`) and the active
+  target is a traced index, so switching targets never retraces;
+- ``generate`` / ``teacher_forced_nll`` run as ``lax.scan``-fused
+  multi-token decode in fixed-size chunks (bounded compile time, chunk
+  graphs reused across query lengths). Per-step effective bits accumulate
+  on device and sync to the host O(1) times per query — never per token;
+- per-query effective-bit tracking feeds the QoS analysis (paper §6.3).
+
+Instrumentation: ``trace_counts`` counts Python traces of each compiled
+entry point (the no-retrace guarantee is testable), ``host_syncs`` counts
+device→host transfer points (the O(1)-syncs guarantee is testable).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.adaptation import MultiScaleModel
-from repro.core.bitplane import (QuantizedStacked, truncate_overlay,
-                                 truncate_stacked)
+from repro.core.adaptation import (MultiScaleModel, export_serve_arrays,
+                                   export_static_arrays, overlay_nbytes)
+from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
+                                 truncate_overlay, truncate_stacked)
 from repro.core.dynamic_linear import DynamicLinearApplier
 from repro.core.thresholds import delta_weight_of
 from repro.models import decode_step
 from repro.serving.kv_cache import make_decode_state
-
-
-@dataclass
-class StepStats:
-    effective_bits: float
-    logits: np.ndarray
 
 
 class ServingEngine:
@@ -46,11 +46,15 @@ class ServingEngine:
         *,
         backend: Optional[str] = None,
         use_async: bool = True,
+        decode_chunk: int = 16,
+        kv_bucket: int = 128,
     ):
         self.cfg = cfg
         self.model = model
         self.backend = backend
         self.use_async = use_async
+        self.decode_chunk = int(decode_chunk)
+        self.kv_bucket = int(kv_bucket)
         # raw params for non-unit paths (norms, router, embeds, conv, head)
         self.raw = {k: v for k, v in params.items()
                     if k not in model.overlays}
@@ -61,54 +65,181 @@ class ServingEngine:
             self.overlays[path] = (
                 truncate_stacked(ov, h) if isinstance(ov, QuantizedStacked)
                 else truncate_overlay(ov, h))
-        self._steps: Dict[Tuple[float, str], callable] = {}
-        self._exact_deltas: Dict[float, Dict[str, jax.Array]] = {}
+        # target-stacked adaptation arrays: the ONE precision-selection
+        # representation, shared by every mode and target
+        self.artifacts = export_serve_arrays(model)
+        self.est = {p: {k: jnp.asarray(v) for k, v in e.items()}
+                    for p, e in self.artifacts.est.items()}
+        self._exact_est: Optional[Dict] = None
+        self._static_arrays: Dict[str, Dict[str, jax.Array]] = {}
+        self._ticks: Dict[str, Callable] = {}
+        self._chunks: Dict[str, Callable] = {}
+        self.trace_counts: Dict[Tuple[str, str], int] = {}
+        self.host_syncs = 0
 
-    # -- step compilation -------------------------------------------------------
-    def _make_step(self, target: float, mode: str):
-        aset = self.model.adaptations[target]
-        exact = self._exact_deltas.get(target) if mode == "exact" else None
+    # -- mode-specific artifact views -------------------------------------------
+    def _est_for(self, mode: str) -> Dict:
+        if mode != "exact":
+            return self.est
+        if self._exact_est is None:
+            exact = {}
+            for path, e in self.est.items():
+                u = self.artifacts.table[path]
+                ov = self.overlays[path]
+                if (u.est_kind == "pinned"
+                        or not isinstance(ov, QuantizedLinear)):
+                    # stacked (MoE) units keep their fitted estimator —
+                    # the exact ΔW stack is only built for plain linears
+                    exact[path] = e
+                    continue
+                ls, hs = self.artifacts.est[path]["l"], \
+                    self.artifacts.est[path]["h"]
+                delta = jnp.stack([delta_weight_of(ov, int(l), int(h))
+                                   for l, h in zip(ls, hs)])
+                exact[path] = dict(e, delta=delta)
+            self._exact_est = exact
+        return self._exact_est
 
-        def step(state, tokens):
+    def _static_for(self, method: str) -> Dict[str, jax.Array]:
+        if method not in self._static_arrays:
+            self._static_arrays[method] = {
+                p: jnp.asarray(v)
+                for p, v in export_static_arrays(self.model, method).items()}
+        return self._static_arrays[method]
+
+    # -- the single decode tick --------------------------------------------------
+    def build_tick(self, mode: str = "dynamic") -> Callable:
+        """Untraced ``tick(state, tokens, target_idx)`` for ``mode``.
+
+        The scheduler vmaps this over a slot axis (per-slot positions,
+        targets, and effective bits); the engine scans it over tokens.
+        """
+        base_mode, static_bits = mode, None
+        if mode.startswith("static:"):
+            base_mode = "static"
+            static_bits = self._static_for(mode.split(":", 1)[1])
+        est = self._est_for(base_mode)
+        serve_params = {"raw": self.raw, "overlays": self.overlays,
+                        "est": est}
+
+        def tick(state, tokens, target_idx):
             lin = DynamicLinearApplier(
-                self.raw, self.overlays, aset, mode=mode,
-                use_async=self.use_async, backend=self.backend,
-                exact_deltas=exact)
+                self.artifacts.table, serve_params,
+                target_idx=target_idx, mode=base_mode,
+                static_bits=static_bits, use_async=self.use_async,
+                backend=self.backend)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin)
             return logits, new_state, lin.effective_bits()
 
-        return jax.jit(step, donate_argnums=(0,))
+        return tick
 
-    def _make_static_step(self, method: str, target: float):
-        bits_table = self.model.static_tables[method][target]
+    def _get_tick(self, mode: str) -> Callable:
+        """Jitted single step, shared by all targets of ``mode``."""
+        if mode not in self._ticks:
+            tick = self.build_tick(mode)
 
-        def step(state, tokens):
-            lin = DynamicLinearApplier(
-                self.raw, self.overlays, None, static_bits=bits_table,
-                mode="static", backend=self.backend)
-            logits, new_state = decode_step(self.cfg, self.raw, state,
-                                            tokens, lin=lin)
-            return logits, new_state, lin.effective_bits()
+            def counted(state, tokens, target_idx):
+                key = ("tick", mode)
+                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                return tick(state, tokens, target_idx)
 
-        return jax.jit(step, donate_argnums=(0,))
+            self._ticks[mode] = jax.jit(counted, donate_argnums=(0,))
+        return self._ticks[mode]
 
     def get_step(self, target: float, mode: str = "dynamic"):
-        key = (target, mode)
-        if key not in self._steps:
-            if mode == "exact" and target not in self._exact_deltas:
-                aset = self.model.adaptations[target]
-                self._exact_deltas[target] = {
-                    ua.path: delta_weight_of(self.overlays[ua.path],
-                                             ua.l, ua.h)
-                    for ua in aset.units.values()
-                    if ua.l != ua.h and ua.est is not None}
-            if mode.startswith("static:"):
-                self._steps[key] = self._make_static_step(
-                    mode.split(":", 1)[1], target)
-            else:
-                self._steps[key] = self._make_step(target, mode)
-        return self._steps[key]
+        """Compat shim: ``step(state, tokens)`` at a fixed target.
+
+        All targets of a mode share one compiled function — the target
+        enters as a traced index, so calling this for a new target does
+        not recompile.
+        """
+        fn = self._get_tick(mode)
+        t_idx = jnp.int32(self.artifacts.target_index(target))
+        return lambda state, tokens: fn(state, tokens, t_idx)
+
+    # -- fused chunked decode ----------------------------------------------------
+    def _get_chunk(self, mode: str, want_nll: bool) -> Callable:
+        """Jitted scan over ``decode_chunk`` ticks.
+
+        ``chunk(state, cur, toks, use_prompt, gold, target_idx)`` where
+        ``toks``/``gold`` are (b, C) teacher/gold tokens and ``use_prompt``
+        (C,) selects teacher forcing vs. feeding the generated token.
+        Returns (state, cur, tokens_out (C, b), eff_bits (C,),
+        gold_logp (C, b)) — everything stays on device. With
+        ``want_nll=False`` the per-tick full-vocab log-softmax is skipped
+        (generation discards it) and gold_logp is zeros.
+        """
+        key = (mode, want_nll)
+        if key in self._chunks:
+            return self._chunks[key]
+        tick = self.build_tick(mode)
+        vocab = self.cfg.vocab_size
+
+        def chunk(state, cur, toks, use_prompt, gold, target_idx):
+            tkey = ("chunk", mode)
+            self.trace_counts[tkey] = self.trace_counts.get(tkey, 0) + 1
+
+            def body(carry, xs):
+                state, cur = carry
+                tok_col, use_p, gold_col = xs
+                tok = jnp.where(use_p, tok_col, cur)[:, None]
+                logits, state, eb = tick(state, tok, target_idx)
+                if want_nll:
+                    logp = jax.nn.log_softmax(
+                        logits[:, 0, :vocab].astype(jnp.float32), axis=-1)
+                    gold_lp = jnp.take_along_axis(
+                        logp, gold_col[:, None], axis=-1)[:, 0]
+                else:
+                    gold_lp = jnp.zeros(tok_col.shape, jnp.float32)
+                nxt = jnp.argmax(logits[:, 0, :vocab],
+                                 axis=-1).astype(jnp.int32)
+                return (state, nxt), (nxt, eb, gold_lp)
+
+            (state, cur), (toks_out, ebs, gold_lps) = jax.lax.scan(
+                body, (state, cur), (toks.T, use_prompt, gold.T))
+            return state, cur, toks_out, ebs, gold_lps
+
+        self._chunks[key] = jax.jit(chunk, donate_argnums=(0,))
+        return self._chunks[key]
+
+    def _run_chunks(self, mode: str, toks: np.ndarray,
+                    use_prompt: np.ndarray, gold: np.ndarray,
+                    target_idx: jax.Array, *, want_nll: bool):
+        """Drive the fused chunks over ``total`` ticks; device outputs."""
+        b, total = toks.shape
+        c = self.decode_chunk
+        n_chunks = -(-total // c)
+        padded = n_chunks * c
+        pad = padded - total
+        toks = np.pad(toks, ((0, 0), (0, pad)))
+        gold = np.pad(gold, ((0, 0), (0, pad)))
+        use_prompt = np.pad(use_prompt, (0, pad), constant_values=True)
+        chunk_fn = self._get_chunk(mode, want_nll)
+        # bucketed KV length: queries of different lengths share the same
+        # compiled chunk (shape reuse), at a bounded memory overshoot
+        kv = self.kv_bucket
+        max_len = -(-(padded + 1) // kv) * kv
+        state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        cur = jnp.zeros((b,), jnp.int32)
+        out_t, out_e, out_g = [], [], []
+        # any device->host pull inside the decode loop is a per-token sync
+        # regression; on accelerator backends the guard turns it into a
+        # hard error (on CPU, arrays are host-resident and it cannot fire,
+        # so the ``host_syncs`` counter remains the tested invariant there)
+        with jax.transfer_guard_device_to_host("disallow"):
+            for ci in range(n_chunks):
+                sl = slice(ci * c, (ci + 1) * c)
+                state, cur, tc, ec, gc = chunk_fn(
+                    state, cur, jnp.asarray(toks[:, sl]),
+                    jnp.asarray(use_prompt[sl]), jnp.asarray(gold[:, sl]),
+                    target_idx)
+                out_t.append(tc)
+                out_e.append(ec)
+                out_g.append(gc)
+            return (jnp.concatenate(out_t, axis=0),
+                    jnp.concatenate(out_e, axis=0),
+                    jnp.concatenate(out_g, axis=0))
 
     # -- evaluation / generation -----------------------------------------------
     def teacher_forced_nll(
@@ -116,50 +247,63 @@ class ServingEngine:
         prime_len: int = 1,
     ) -> Tuple[float, List[float]]:
         """Per-token NLL over ``tokens`` (batch, seq) with per-step dynamic
-        precision; returns (mean_nll, per-step effective bits)."""
-        step = self.get_step(target, mode)
+        precision; returns (mean_nll, per-step effective bits).
+
+        The whole sequence runs as fused on-device scans — ONE host sync
+        at the end, regardless of sequence length.
+        """
+        tokens = np.asarray(tokens)
         b, s = tokens.shape
-        state = make_decode_state(self.cfg, b, s + 1, dtype=jnp.float32)
-        nlls, ebits = [], []
-        toks = jnp.asarray(tokens)
-        for t in range(s - 1):
-            logits, state, eb = step(state, toks[:, t:t + 1])
-            logp = jax.nn.log_softmax(
-                logits[:, 0, : self.cfg.vocab_size].astype(jnp.float32))
-            gold = jnp.take_along_axis(logp, toks[:, t + 1][:, None],
-                                       axis=-1)
-            if t + 1 >= prime_len:
-                nlls.append(float(-jnp.mean(gold)))
-            ebits.append(float(eb))
-        return float(np.mean(nlls)), ebits
+        total = s - 1
+        if total <= 0:          # nothing to predict on a 1-token sequence
+            return float("nan"), []
+        t_idx = jnp.int32(self.artifacts.target_index(target))
+        _, ebs, gold_lps = self._run_chunks(
+            mode, tokens[:, :total].astype(np.int32),
+            np.ones((total,), bool),
+            tokens[:, 1:].astype(np.int32), t_idx, want_nll=True)
+        self.host_syncs += 1
+        host = np.asarray(jnp.concatenate(
+            [ebs[:total], jnp.mean(gold_lps[:total], axis=-1)]))
+        ebits, gold_mean = host[:total], host[total:]
+        nll = float(np.mean(-gold_mean[max(prime_len - 1, 0):]))
+        return nll, [float(e) for e in ebits]
 
     def generate(
         self, prompt: np.ndarray, max_new: int, target: float,
         mode: str = "dynamic",
     ) -> Tuple[np.ndarray, List[float]]:
-        """Greedy decode; returns (tokens (b, prompt+max_new), eff bits)."""
-        step = self.get_step(target, mode)
+        """Greedy decode; returns (tokens (b, prompt+max_new), eff bits).
+
+        Prefill (teacher-forced over the prompt) and generation run as one
+        fused chunked scan; the generated tokens and per-step effective
+        bits accumulate on device and sync to the host a constant number
+        of times per query (two pulls), independent of token count.
+        """
+        prompt = np.asarray(prompt)
         b, p = prompt.shape
-        state = make_decode_state(self.cfg, b, p + max_new + 1,
-                                  dtype=jnp.float32)
-        ebits: List[float] = []
-        toks = jnp.asarray(prompt)
-        out = [toks]
-        cur = None
-        for t in range(p):  # prefill via teacher forcing (exact priming)
-            logits, state, eb = step(state, toks[:, t:t + 1])
-        cur = jnp.argmax(logits[:, :, : self.cfg.vocab_size], axis=-1)
-        for _ in range(max_new):
-            out.append(cur)
-            logits, state, eb = step(state, cur)
-            ebits.append(float(eb))
-            cur = jnp.argmax(logits[:, :, : self.cfg.vocab_size], axis=-1)
-        return np.asarray(jnp.concatenate(out, axis=1)), ebits
+        if p == 0:
+            raise ValueError("generate() needs a non-empty prompt")
+        total = p + max_new
+        t_idx = jnp.int32(self.artifacts.target_index(target))
+        toks = np.zeros((b, total), np.int32)
+        toks[:, :p] = prompt
+        toks_out, ebs, _ = self._run_chunks(
+            mode, toks, np.arange(total) < p, np.zeros((b, total), np.int32),
+            t_idx, want_nll=False)
+        gen = toks_out[p - 1:p - 1 + max_new].T          # (b, max_new)
+        out = jnp.concatenate([jnp.asarray(prompt), gen], axis=1)
+        self.host_syncs += 2
+        tokens_np = np.asarray(out)
+        ebits = [float(e) for e in np.asarray(ebs[p:p + max_new])]
+        return tokens_np, ebits
 
     # -- accounting ---------------------------------------------------------------
     def overlay_bytes(self) -> int:
-        total = 0
-        for ov in self.overlays.values():
-            total += int(np.prod(ov.planes.shape)) * 4
-            total += int(np.prod(ov.scale.shape)) * 8
-        return total
+        """Resident (Phase-1 truncated) overlay bytes, actual itemsizes."""
+        return self.overlay_bytes_report()["truncated"]
+
+    def overlay_bytes_report(self) -> Dict[str, int]:
+        """Truncated (serving-resident) vs. full-parent overlay bytes."""
+        return {"truncated": overlay_nbytes(self.overlays),
+                "full_parent": overlay_nbytes(self.model.overlays)}

@@ -1,0 +1,243 @@
+"""Slot-based continuous batching with per-request QoS precision targets.
+
+The paper's Figure-1 deployment story at serving scale: requests stream in
+with individual TPOT budgets, the :class:`QoSPlanner` maps each budget to
+a target precision at admission time, and every admitted request occupies
+one *slot* of a shared compiled decode step. The per-slot target enters
+the step as a traced index into the target-stacked adaptation arrays, so
+heterogeneous targets coexist in one batch without retracing.
+
+Mechanics:
+
+- the engine's single-request decode tick is ``jax.vmap``-ed over the slot
+  axis — each slot carries its own KV cache, its own position, its own
+  target index, and makes its own per-step precision decisions (the
+  estimator reduction never mixes slots);
+- prefill and generation are unified on device: a slot still consuming its
+  prompt is teacher-forced from its prompt buffer, a generating slot feeds
+  back its last token — all under one ``lax.scan`` chunk;
+- the host syncs once per *chunk* (not per token) to harvest finished
+  slots, record per-request effective bits into the
+  :class:`QueryBitTracker`, and admit queued requests into freed slots.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import make_decode_state
+from repro.serving.qos import QoSPlanner, QueryBitTracker
+
+
+@dataclass
+class Request:
+    """One serving request; completion fields are filled by the scheduler."""
+    rid: int
+    prompt: np.ndarray                 # (p,) int32
+    max_new: int
+    tpot_budget_s: float
+    # filled on completion:
+    target: Optional[float] = None
+    tokens: Optional[np.ndarray] = None            # (p + max_new,)
+    effective_bits: Optional[np.ndarray] = None    # (max_new,)
+
+
+@dataclass
+class _Slot:
+    request: Optional[Request] = None
+    gen_tokens: List[int] = field(default_factory=list)
+    gen_bits: List[float] = field(default_factory=list)
+
+
+class SlotScheduler:
+    """Continuous batching over a fixed pool of decode slots."""
+
+    def __init__(
+        self,
+        engine: ServingEngine,
+        planner: QoSPlanner,
+        *,
+        slots: int = 4,
+        max_prompt: int = 32,
+        max_new: int = 32,
+        chunk: int = 8,
+        mode: str = "dynamic",
+        tracker: Optional[QueryBitTracker] = None,
+    ):
+        self.engine = engine
+        self.planner = planner
+        self.n_slots = int(slots)
+        self.max_prompt = int(max_prompt)
+        self.max_new = int(max_new)
+        self.chunk = int(chunk)
+        self.tracker = tracker
+        self.completed: List[Request] = []
+        self._queue: deque = deque()
+        self._slots = [_Slot() for _ in range(self.n_slots)]
+
+        cfg = engine.cfg
+        if cfg.vocab_size >= 2 ** 24:   # chunk harvest packs ids via f32
+            raise ValueError("vocab too large for f32-exact token packing")
+        s = self.n_slots
+        max_len = self.max_prompt + self.max_new + 1
+        # per-slot state: each slot is an independent batch-1 decode state
+        proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32)
+        self._state = jax.tree.map(
+            lambda x: jnp.zeros((s,) + x.shape, x.dtype), proto)
+        self._cur = jnp.zeros((s,), jnp.int32)
+        self._step_count = jnp.zeros((s,), jnp.int32)
+        self._prompt_buf = jnp.zeros((s, self.max_prompt), jnp.int32)
+        self._prompt_len = jnp.zeros((s,), jnp.int32)
+        self._total_len = jnp.zeros((s,), jnp.int32)   # 0 => slot idle
+        self._target_ix = jnp.zeros((s,), jnp.int32)
+
+        self._chunk_fn = self._make_chunk(engine.build_tick(mode),
+                                          cfg.vocab_size, self.chunk, mode)
+        self._admit_fn = self._make_admit()
+
+    # -- compiled pieces ---------------------------------------------------------
+    def _make_chunk(self, tick: Callable, vocab: int, length: int,
+                    mode: str):
+        def chunk(state, cur, step_count, prompt_buf, prompt_len,
+                  total_len, target_ix):
+            key = ("slot_chunk", mode)
+            self.engine.trace_counts[key] = \
+                self.engine.trace_counts.get(key, 0) + 1
+
+            def body(carry, _):
+                state, cur, count = carry
+                filling = count < prompt_len
+                idx = jnp.clip(count, 0, prompt_buf.shape[1] - 1)
+                ptok = jnp.take_along_axis(prompt_buf, idx[:, None],
+                                           axis=1)[:, 0]
+                tok = jnp.where(filling, ptok, cur)
+                logits, state, eb = jax.vmap(tick)(
+                    state, tok[:, None, None], target_ix)
+                nxt = jnp.argmax(logits[:, 0, 0, :vocab],
+                                 axis=-1).astype(jnp.int32)
+                running = count < total_len
+                emit_tok = running & (count >= prompt_len - 1) & \
+                    (count < total_len - 1)
+                emit_bits = running & ~filling
+                cur = jnp.where(running, nxt, cur)
+                count = count + running.astype(jnp.int32)
+                return (state, cur, count), (nxt, eb, emit_tok, emit_bits)
+
+            (state, cur, step_count), ys = jax.lax.scan(
+                body, (state, cur, step_count), None, length=length)
+            return (state, cur, step_count) + ys
+
+        return jax.jit(chunk, donate_argnums=(0, 1, 2))
+
+    def _make_admit(self):
+        def admit(state, cur, step_count, prompt_buf, prompt_len,
+                  total_len, target_ix, slot, prow, plen, tot, tix):
+            state = jax.tree.map(
+                lambda a: a.at[slot].set(jnp.zeros(a.shape[1:], a.dtype)),
+                state)
+            return (state,
+                    cur.at[slot].set(0),
+                    step_count.at[slot].set(0),
+                    prompt_buf.at[slot].set(prow),
+                    prompt_len.at[slot].set(plen),
+                    total_len.at[slot].set(tot),
+                    target_ix.at[slot].set(tix))
+
+        return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+
+    # -- host control loop -------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        p = len(np.asarray(request.prompt).reshape(-1))
+        if p == 0 or p > self.max_prompt:
+            raise ValueError(f"prompt length {p} not in [1, "
+                             f"{self.max_prompt}]")
+        if not 1 <= request.max_new <= self.max_new:
+            raise ValueError(f"max_new {request.max_new} not in [1, "
+                             f"{self.max_new}]")
+        self._queue.append(request)
+
+    @property
+    def utilization(self) -> float:
+        busy = sum(1 for s in self._slots if s.request is not None)
+        return busy / self.n_slots
+
+    def _admit_ready(self) -> None:
+        for si, slot in enumerate(self._slots):
+            if slot.request is not None or not self._queue:
+                continue
+            r: Request = self._queue.popleft()
+            r.target = self.planner.plan(r.tpot_budget_s, self.utilization)
+            tix = self.engine.artifacts.target_index(r.target)
+            prompt = np.asarray(r.prompt, np.int32).reshape(-1)
+            prow = np.zeros((self.max_prompt,), np.int32)
+            prow[:len(prompt)] = prompt
+            (self._state, self._cur, self._step_count, self._prompt_buf,
+             self._prompt_len, self._total_len, self._target_ix) = \
+                self._admit_fn(
+                    self._state, self._cur, self._step_count,
+                    self._prompt_buf, self._prompt_len, self._total_len,
+                    self._target_ix, jnp.int32(si), jnp.asarray(prow),
+                    jnp.int32(len(prompt)),
+                    jnp.int32(len(prompt) + r.max_new), jnp.int32(tix))
+            self._slots[si] = _Slot(request=r)
+
+    def _run_chunk(self) -> None:
+        (self._state, self._cur, self._step_count,
+         toks, ebs, emit_tok, emit_bits) = self._chunk_fn(
+            self._state, self._cur, self._step_count, self._prompt_buf,
+            self._prompt_len, self._total_len, self._target_ix)
+        # ONE host sync per chunk: pack emissions + slot progress into a
+        # single device array and pull it once (token ids are exact in
+        # f32 — vocab sizes sit far below 2**24)
+        c = self.chunk
+        host = np.asarray(jnp.concatenate([
+            toks.astype(jnp.float32), ebs.astype(jnp.float32),
+            emit_tok.astype(jnp.float32), emit_bits.astype(jnp.float32),
+            self._step_count[None, :].astype(jnp.float32),
+            self._total_len[None, :].astype(jnp.float32)], axis=0))
+        toks = host[:c].astype(np.int32)
+        ebs = host[c:2 * c]
+        emit_tok = host[2 * c:3 * c] > 0.5
+        emit_bits = host[3 * c:4 * c] > 0.5
+        counts, totals = host[4 * c], host[4 * c + 1]
+        for si, slot in enumerate(self._slots):
+            if slot.request is None:
+                continue
+            slot.gen_tokens.extend(toks[emit_tok[:, si], si].tolist())
+            slot.gen_bits.extend(ebs[emit_bits[:, si], si].tolist())
+            if counts[si] >= totals[si]:
+                self._retire(si)
+
+    def _retire(self, si: int) -> None:
+        slot = self._slots[si]
+        r = slot.request
+        prompt = np.asarray(r.prompt, np.int32).reshape(-1)
+        r.tokens = np.concatenate(
+            [prompt, np.asarray(slot.gen_tokens[:r.max_new], np.int32)])
+        r.effective_bits = np.asarray(slot.gen_bits[:r.max_new])
+        if self.tracker is not None:
+            self.tracker.record_query(r.effective_bits)
+        self.completed.append(r)
+        self._slots[si] = _Slot()
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> List[Request]:
+        """Drive admission + fused chunks until all requests complete.
+
+        Returns the requests completed by THIS call; ``self.completed``
+        keeps the cumulative history across waves.
+        """
+        start = len(self.completed)
+        for r in (requests or ()):
+            self.submit(r)
+        while self._queue or any(s.request is not None
+                                 for s in self._slots):
+            self._admit_ready()
+            self._run_chunk()
+        return self.completed[start:]

@@ -1,11 +1,11 @@
 """Lowering-friendly serve/prefill step builders.
 
-The benchmark engine (``serving/engine.py``) closes over python-side
-adaptation artifacts; the *launch/dry-run* path instead needs every array —
-bit-plane overlays, estimator G stacks, thresholds — to be a traced INPUT so
-the production mesh can shard them. ``build_serve_step`` returns a pure
-``step(serve_params, state, tokens)`` driven by a static
-:class:`UnitStatic` table.
+These builders wrap the ONE precision-selection implementation —
+:class:`repro.core.dynamic_linear.DynamicLinearApplier` — into pure step
+functions whose every input (bit-plane overlays, estimator G stacks,
+thresholds, l/h tables, and the active target index) is a traced array, so
+the production mesh can shard them and one compiled step serves every
+target and every request's precision without retracing.
 
 HBM-traffic honesty (DESIGN.md §2.1/§2.3): overlays arrive pre-truncated to
 each unit's h planes, so the lowered HLO reads at most h planes per unit —
@@ -16,95 +16,30 @@ bound (the analytic effective-bits traffic is reported alongside).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
+from typing import Callable, Dict, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.bitplane import QuantizedStacked, materialize_stacked
-from repro.kernels.bitserial import bitserial_matmul
+from repro.core.adaptation import UnitStatic
+from repro.core.dynamic_linear import DynamicLinearApplier
 from repro.models import decode_step, forward
 
-
-@dataclass(frozen=True)
-class UnitStatic:
-    """Trace-time constants for one precision unit."""
-    path: str
-    l: int
-    h: int
-    est_kind: str            # "linear" | "jl" | "pinned"
-    async_eligible: bool
-    stacked: bool = False
-
-
-class ArrayAdaptationApplier:
-    """lin() applier whose adaptation artifacts are traced arrays."""
-
-    def __init__(self, table: Dict[str, UnitStatic],
-                 serve_params: Dict[str, object], *,
-                 backend: Optional[str] = None, use_async: bool = True):
-        self.table = table
-        self.raw = serve_params["raw"]
-        self.overlays = serve_params["overlays"]
-        self.est = serve_params["est"]
-        self.backend = backend
-        self.use_async = use_async
-        self.records = []
-
-    def _select(self, u: UnitStatic, x, async_input):
-        if u.l == u.h or u.est_kind == "pinned":
-            return jnp.int32(u.l)
-        e = self.est[u.path]
-        x_est = async_input if (self.use_async and u.async_eligible and
-                                async_input is not None) else x
-        xf = x_est.reshape((-1, x_est.shape[-1])).astype(jnp.float32)
-        if u.est_kind == "linear":
-            est = jnp.max(e["a"] * jnp.linalg.norm(xf, axis=-1) + e["b"])
-        else:
-            est = e["gamma"] * jnp.max(
-                jnp.linalg.norm(xf @ e["g"].T, axis=-1))
-        return jnp.where(est > e["threshold"], jnp.int32(u.h),
-                         jnp.int32(u.l))
-
-    def __call__(self, path: str, x, *, async_input=None):
-        u = self.table.get(path)
-        if u is None:
-            return jnp.einsum("...k,kn->...n", x,
-                              self.raw[path]).astype(x.dtype)
-        bits = self._select(u, x, async_input)
-        ov = self.overlays[path]
-        self.records.append((bits, float(ov.k * ov.planes.shape[-1])))
-        return bitserial_matmul(x, ov, bits,
-                                backend=self.backend).astype(x.dtype)
-
-    def weights(self, path: str, x, *, async_input=None):
-        u = self.table.get(path)
-        if u is None:
-            return self.raw[path]
-        ov: QuantizedStacked = self.overlays[path]
-        bits = self._select(u, x, async_input)
-        e, _, _, n = ov.planes.shape
-        self.records.append((bits, float(e * ov.k * n)))
-        return materialize_stacked(ov, bits).astype(x.dtype)
-
-    def effective_bits(self):
-        if not self.records:
-            return jnp.float32(0.0)
-        num = sum(b.astype(jnp.float32) * s for b, s in self.records)
-        return num / sum(s for _, s in self.records)
+__all__ = ["UnitStatic", "build_prefill_step", "build_serve_step"]
 
 
 def build_serve_step(cfg: ModelConfig,
                      table: Dict[str, UnitStatic],
                      *, backend: Optional[str] = None,
                      use_async: bool = True) -> Callable:
-    """One dynamic-precision decode step (the paper's runtime path)."""
+    """One dynamic-precision decode step (the paper's runtime path).
 
-    def step(serve_params, state, tokens):
-        lin = ArrayAdaptationApplier(table, serve_params, backend=backend,
-                                     use_async=use_async)
+    ``step(serve_params, state, tokens, target_idx)`` — ``target_idx`` is a
+    traced int32 index into the target-stacked adaptation arrays.
+    """
+
+    def step(serve_params, state, tokens, target_idx=0):
+        lin = DynamicLinearApplier(table, serve_params,
+                                   target_idx=target_idx, backend=backend,
+                                   use_async=use_async)
         logits, new_state = decode_step(cfg, serve_params["raw"], state,
                                         tokens, lin=lin)
         return logits, new_state, lin.effective_bits()
@@ -116,12 +51,10 @@ def build_prefill_step(cfg: ModelConfig,
                        table: Dict[str, UnitStatic],
                        *, backend: Optional[str] = None) -> Callable:
     """Prefill at each unit's highest available precision (paper §6.1)."""
-    max_table = {p: UnitStatic(p, u.h, u.h, "pinned", False, u.stacked)
-                 for p, u in table.items()}
 
     def step(serve_params, tokens, frames=None, prefix_embeds=None):
-        lin = ArrayAdaptationApplier(max_table, serve_params,
-                                     backend=backend)
+        lin = DynamicLinearApplier(table, serve_params, mode="max",
+                                   backend=backend)
         logits, _ = forward(cfg, serve_params["raw"], tokens, lin=lin,
                             frames=frames, prefix_embeds=prefix_embeds,
                             q_chunk=1024, kv_chunk=1024)

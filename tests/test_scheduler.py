@@ -1,0 +1,98 @@
+"""Slot-based continuous batching: QoS admission, retirement, parity."""
+import numpy as np
+import pytest
+
+from repro.serving import (LatencyModel, QoSPlanner, QueryBitTracker,
+                           Request, ServingEngine, SlotScheduler)
+
+
+@pytest.fixture(scope="module")
+def engine(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    return ServingEngine(cfg, params, model)
+
+
+def _planner(model):
+    # bytes_per_bit chosen so the target axis actually splits budgets:
+    # tpot(3.5)≈4.5ms, tpot(4.0)≈5.1ms, tpot(4.5)≈5.7ms
+    return QoSPlanner(sorted(model.adaptations),
+                      LatencyModel(bytes_per_bit=1e9), chips=1)
+
+
+def test_scheduler_mixed_budgets(engine, tiny_bundle):
+    cfg, _, model, batches = tiny_bundle
+    tracker = QueryBitTracker()
+    sched = SlotScheduler(engine, _planner(model), slots=2, max_prompt=8,
+                          max_new=6, chunk=4, tracker=tracker)
+    rng = np.random.default_rng(1)
+    budgets = [6e-3, 5.2e-3, 4.6e-3, 1e-3, 6e-3]
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (3 + i % 4,)).astype(np.int32),
+                    max_new=4 + i % 3, tpot_budget_s=b)
+            for i, b in enumerate(budgets)]
+    done = sched.run(reqs)
+
+    # every request completes and every slot retires
+    assert len(done) == len(reqs)
+    assert all(s.request is None for s in sched._slots)
+
+    by_rid = {r.rid: r for r in done}
+    # per-request target assignment follows the budget (tight -> lower)
+    assert by_rid[0].target == 4.5        # loose budget, empty slots
+    assert by_rid[2].target == 3.5
+    assert by_rid[3].target == 3.5        # infeasible -> min precision
+    # mid budget: 4.0 on empty slots, 3.5 under load — never the max
+    assert by_rid[1].target in (3.5, 4.0)
+    # completions carry prompt + max_new tokens and per-step eff bits
+    for r in done:
+        p = len(np.asarray(r.prompt).reshape(-1))
+        assert r.tokens.shape == (p + r.max_new,)
+        assert np.array_equal(r.tokens[:p], np.asarray(r.prompt))
+        assert r.effective_bits.shape == (r.max_new,)
+        assert np.all((2.0 <= r.effective_bits)
+                      & (r.effective_bits <= 6.0))
+    # the tracker saw one entry per request
+    assert len(tracker.per_query_bits) == len(reqs)
+
+
+def test_scheduler_matches_engine_generate(engine, tiny_bundle):
+    """A slot decoding next to others with different targets produces the
+    same tokens and effective bits as a solo engine.generate run."""
+    cfg, _, model, _ = tiny_bundle
+    sched = SlotScheduler(engine, _planner(model), slots=3, max_prompt=8,
+                          max_new=5, chunk=4)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (4,)).astype(np.int32),
+                    max_new=5, tpot_budget_s=b)
+            for i, b in enumerate([6e-3, 4.6e-3, 1e-3])]
+    done = {r.rid: r for r in sched.run(reqs)}
+    targets = {r.target for r in done.values()}
+    assert len(targets) >= 2               # genuinely heterogeneous batch
+    for r in done.values():
+        out, ebits = engine.generate(r.prompt[None, :], r.max_new, r.target)
+        assert np.array_equal(out[0], r.tokens)
+        np.testing.assert_allclose(ebits, r.effective_bits, atol=1e-5)
+
+
+def test_scheduler_no_retrace_after_warmup(engine, tiny_bundle):
+    """Admission/retirement churn reuses the one compiled chunk."""
+    cfg, _, model, _ = tiny_bundle
+    sched = SlotScheduler(engine, _planner(model), slots=2, max_prompt=8,
+                          max_new=4, chunk=4)
+    rng = np.random.default_rng(3)
+
+    def batch(n, seed_off):
+        return [Request(rid=seed_off * 10 + i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            (3 + i % 3,)).astype(np.int32),
+                        max_new=3 + i % 2,
+                        tpot_budget_s=float(rng.uniform(1e-3, 6e-3)))
+                for i in range(n)]
+
+    sched.run(batch(2, 1))                 # warm the compile
+    baseline = dict(engine.trace_counts)
+    sched.run(batch(3, 2))                 # new shapes of work, same chunk
+    assert engine.trace_counts == baseline

@@ -20,7 +20,7 @@ from repro.serving import ServingEngine
 
 def test_end_to_end_adaptation_set(tiny_bundle):
     cfg, params, model, batches = tiny_bundle
-    assert set(model.adaptations) == {3.5, 4.5}
+    assert set(model.adaptations) == {3.5, 4.0, 4.5}
     # one overlay per linear unit, shared across all targets (memory story)
     from repro.models import linear_units
     assert set(model.overlays) == {u.path for u in linear_units(cfg)}
