@@ -8,6 +8,9 @@ decodes in one shared compiled step with its own target index, and the
 per-request effective bits feed the QoS tracker.
 
   PYTHONPATH=src python examples/serve_dynamic_precision.py
+  PYTHONPATH=src python examples/serve_dynamic_precision.py --mesh local
+(``--mesh local`` runs the same serve path mesh-native: slots shard over
+the 'data' axis, weights/overlays over 'model' — one compiled tick.)
 """
 import sys
 sys.path.insert(0, "src")
@@ -27,6 +30,10 @@ def main():
     ap.add_argument("--queries", type=int, default=5)
     ap.add_argument("--gen-len", type=int, default=48)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--mesh", default="none", choices=["none", "local"])
+    ap.add_argument("--model-parallel", type=int, default=None,
+                    help="default: devices/slots so slots shard over "
+                         "'data'")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -46,10 +53,18 @@ def main():
         from benchmarks.common import built_model
         cfg, params, model = built_model(targets=(3.5, 4.0, 4.5))
 
-    engine = ServingEngine(cfg, params, model)
+    mesh, chips = None, 1
+    if args.mesh == "local":
+        from repro.launch.mesh import make_serve_mesh, serve_chips
+        mesh = make_serve_mesh(args.slots, args.model_parallel)
+        chips = serve_chips(mesh)
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"({chips} chip(s)/request)")
+    engine = ServingEngine(cfg, params, model, mesh=mesh)
     planner = QoSPlanner(
         list(model.adaptations),
-        LatencyModel(bytes_per_bit=engine.overlay_bytes() / 5), chips=1)
+        LatencyModel(bytes_per_bit=engine.overlay_bytes() / 5),
+        chips=chips)
     tracker = QueryBitTracker()
     scheduler = SlotScheduler(engine, planner, slots=args.slots,
                               max_prompt=32, max_new=args.gen_len,

@@ -12,6 +12,31 @@ representation: per unit, every per-target artifact (l/h pair, threshold,
 estimator a/b/γ, G matrix) stacked along a leading target axis, so the
 runtime applier selects the target with a *traced index* and one compiled
 decode step serves every target.
+
+Target-stacked array layout — THE serving contract
+--------------------------------------------------
+Every consumer of :class:`ServeArtifacts` (the applier, the engine, the
+launch lowering specs, and the mesh sharding rules) relies on this exact
+layout. With ``T = len(targets)``, ``K`` the unit's (zero-padded) reduction
+dim, ``N`` its output dim, and ``k_proj`` the JL sketch size, each
+``est[path]`` entry holds::
+
+    l, h       : (T,) int32    candidate pair per target (bits)
+    kind       : (T,) int32    KIND_PINNED / KIND_LINEAR / KIND_JL
+    threshold  : (T,) float32  relative-error threshold per target
+    a, b       : (T,) float32  linear-estimator fit   (iff any target linear)
+    gamma      : (T,) float32  JL scale               (iff any target JL)
+    g          : (T, k_proj, K) float32 JL sketch     (ditto)
+    delta      : (T, K, N) float32 exact ΔW stack     (exact mode only,
+                                                       built lazily)
+
+Axis meanings for the production mesh (``serve_array_axes`` names them,
+``distributed/sharding.SERVE_RULES`` maps them): the leading T axis is
+indexed by a *traced* target index and must stay replicated; ``k_proj``
+is replicated; the trailing K (and N) axes carry the same logical axis as
+the weight the artifact gates, so the estimator operands shard exactly
+like the matmul operands beside them. Reordering or re-stacking any of
+these arrays is a cross-layer breaking change.
 """
 from __future__ import annotations
 
@@ -200,6 +225,34 @@ def export_serve_arrays(model: MultiScaleModel) -> ServeArtifacts:
             stacked=(ua0.kind or "").startswith("expert_"),
         )
     return ServeArtifacts(targets=targets, table=table, est=est)
+
+
+def serve_array_axes(
+    table: Dict[str, UnitStatic],
+    weight_axes: Dict[str, Tuple[Optional[str], ...]],
+) -> Dict[str, Dict[str, Tuple[Optional[str], ...]]]:
+    """Logical sharding axes for every exported serve array.
+
+    ``weight_axes`` maps each unit path to its *weight's* logical axes —
+    (K, N) for plain linears, (experts, K, N) for stacked MoE units (see
+    ``repro.models.model_logical_axes``). The returned per-path dicts
+    cover every array ``export_serve_arrays`` may emit (plus the lazy
+    ``delta`` stack): the target axis and JL sketch rows are replicated,
+    the K/N axes inherit the gated weight's axes so
+    ``distributed/sharding.SERVE_RULES`` shards artifacts alongside the
+    weights they gate.
+    """
+    from repro.models.common import JL_PROJ, TARGETS  # lazy: avoid cycle
+    out: Dict[str, Dict[str, Tuple[Optional[str], ...]]] = {}
+    for path in table:
+        k_ax, n_ax = weight_axes[path][-2], weight_axes[path][-1]
+        entry = {name: (TARGETS,)
+                 for name in ("l", "h", "kind", "threshold", "a", "b",
+                              "gamma")}
+        entry["g"] = (TARGETS, JL_PROJ, k_ax)
+        entry["delta"] = (TARGETS, k_ax, n_ax)
+        out[path] = entry
+    return out
 
 
 def export_static_arrays(model: MultiScaleModel,

@@ -17,6 +17,26 @@ through to the raw parameters. ``weights(path, x)`` materializes stacked
 MoE expert weights at the selected precision. Every (bits, size) decision
 is recorded so callers can account per-step **effective bitwidth** (paper
 §6.3 QoS analysis).
+
+Array-layout contract (shared with the mesh sharding rules)
+-----------------------------------------------------------
+``serve_params`` carries exactly three trees, whose shapes this class and
+``distributed/sharding.SERVE_RULES`` jointly rely on (T targets, K the
+padded reduction dim, N the output dim, B the plane budget):
+
+    raw[path]            weight-shaped arrays for non-unit paths
+    overlays[path]       QuantizedLinear   planes (B, K/32, N) int32,
+                                           scale/zero (N,) f32
+                         QuantizedStacked  planes (E, B, K/32, N), scale/
+                                           zero (E, N) — MoE expert stacks
+    est[path]            l/h/kind/threshold (T,), a/b (T,), gamma (T,),
+                         g (T, k_proj, K), delta (T, K, N) (exact mode)
+
+``target_idx`` indexes the leading T axis of every ``est`` array — it is
+traced (and per-slot under ``vmap``), so the T axis must stay replicated
+on the mesh, while K/N axes shard like the weight they gate and the
+plane axis is never split (a precision is a *prefix* of planes). See
+``core/adaptation.serve_array_axes`` for the canonical axis names.
 """
 from __future__ import annotations
 

@@ -7,13 +7,17 @@ from repro.distributed.fault_tolerance import (HeartbeatMonitor,
                                                StragglerMitigator,
                                                run_with_restarts)
 from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
-                                        kv_cache_spec, param_shardings,
-                                        resolve_spec)
+                                        decode_state_spec, kv_cache_spec,
+                                        overlay_axes, overlay_shardings,
+                                        param_shardings, resolve_spec,
+                                        slot_state_spec, slot_vec_spec)
 
 __all__ = [
     "HeartbeatMonitor", "SERVE_RULES", "SimulatedFailure",
     "StragglerMitigator", "TRAIN_RULES", "batch_spec", "best_mesh",
-    "compressed_allreduce_shard", "kv_cache_spec", "param_shardings",
+    "compressed_allreduce_shard", "decode_state_spec", "kv_cache_spec",
+    "overlay_axes", "overlay_shardings", "param_shardings",
     "plain_allreduce_shard", "reshard_tree", "residual_shape",
-    "resolve_spec", "run_with_restarts",
+    "resolve_spec", "run_with_restarts", "slot_state_spec",
+    "slot_vec_spec",
 ]

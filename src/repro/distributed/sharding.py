@@ -17,6 +17,18 @@ Two profiles:
 - SERVE: TP on 'model'; weights replicated over 'data' (each data-parallel
   group serves its own requests); KV caches shard batch→data,
   heads→model with sequence fallback for long-context cells.
+
+Serve-artifact axes (the mesh-native decode path): every adaptation
+artifact exported by ``core/adaptation.export_serve_arrays`` is a
+target-stacked array whose leading 'targets' axis is replicated (a traced
+index selects into it — slicing a sharded axis would all-gather), the JL
+sketch-row axis 'jl_proj' is replicated (k_proj ≈ 64, not worth a
+collective), and the G matrix's trailing K axis carries the *same logical
+axis as the weight it gates* — so under SERVE_RULES the estimator inputs
+are sharded exactly like the matmul operands next to them (weight-K over
+'pod', replicated over 'model'). The scheduler's 'slots' axis maps onto
+'data': each data-parallel group serves its own admitted requests while
+sharing one compiled tick.
 """
 from __future__ import annotations
 
@@ -26,8 +38,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, KV_HEADS,
-                                 SSM_HEADS, SSM_INNER, VOCAB)
+from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, JL_PROJ,
+                                 KV_HEADS, PLANES, SLOTS, SSM_HEADS,
+                                 SSM_INNER, TARGETS, VOCAB)
 
 Rules = Dict[Optional[str], Tuple[str, ...]]
 
@@ -56,6 +69,13 @@ SERVE_RULES: Rules = {
                                 # per-chip overlay bytes (340B+ decode fit);
                                 # single-pod mesh has no 'pod' axis -> noop
     CONV: (),
+    # serve artifacts (target-stacked adaptation arrays + overlays)
+    TARGETS: (),                # traced-index axis: must stay replicated
+    JL_PROJ: (),                # k_proj sketch rows: tiny, replicated
+    PLANES: (),                 # bit-plane axis: the precision mechanism
+                                # reads a *prefix* of it — never shard
+    SLOTS: ("data",),           # continuous-batching slots: each DP group
+                                # decodes its own admitted requests
     None: (),
 }
 
@@ -140,6 +160,77 @@ def kv_cache_spec(mesh: Mesh, batch: int, seq: int, kv_heads: int) -> P:
     s_entry = tuple(seq_axes) if len(seq_axes) > 1 else \
         (seq_axes[0] if seq_axes else None)
     return P(b_entry, s_entry, head_entry, None)
+
+
+# ---------------------------------------------------------------------------
+# Serve-path shardings (mesh-native decode: overlays, artifacts, slot state)
+# ---------------------------------------------------------------------------
+def overlay_axes(weight_axes: Sequence[Optional[str]],
+                 stacked: bool) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical axes of a bit-plane overlay's components.
+
+    ``weight_axes`` are the parent weight's axes — (K, N) for plain
+    linears, (experts, K, N) for stacked MoE units. The packed-K and N
+    dims of the planes inherit the weight's axes (the overlay IS the
+    weight, stored bit-serially); the plane axis itself is never sharded
+    (a precision is a *prefix* of planes — splitting it would turn every
+    precision switch into a collective).
+    """
+    if stacked:
+        e_ax, k_ax, n_ax = weight_axes
+        return {"planes": (e_ax, PLANES, k_ax, n_ax),
+                "scale": (e_ax, n_ax), "zero": (e_ax, n_ax)}
+    k_ax, n_ax = weight_axes
+    return {"planes": (PLANES, k_ax, n_ax),
+            "scale": (n_ax,), "zero": (n_ax,)}
+
+
+def overlay_shardings(mesh: Mesh, ov, weight_axes: Sequence[Optional[str]],
+                      stacked: bool, rules: Optional[Rules] = None):
+    """``{planes, scale, zero} -> NamedSharding`` for one overlay."""
+    rules = rules or SERVE_RULES
+    axes = overlay_axes(weight_axes, stacked)
+    return {name: NamedSharding(mesh, resolve_spec(
+                getattr(ov, name).shape, ax, mesh, rules))
+            for name, ax in axes.items()}
+
+
+def slot_state_spec(mesh: Mesh, key: str, shape: Sequence[int],
+                    rules: Optional[Rules] = None) -> P:
+    """Scheduler per-slot decode-state sharding.
+
+    The leading dim is the slot axis (→ 'data': each data-parallel group
+    decodes its own admitted requests); KV caches additionally shard
+    heads → 'model' like the attention weights that fill them. Everything
+    else inside a slot is replicated — slots are batch-1 decodes.
+    """
+    rules = rules or SERVE_RULES
+    axes = [SLOTS] + [None] * (len(shape) - 1)
+    if (key.startswith("kv.") or key.startswith("xkv.")) and len(shape) == 5:
+        axes[3] = KV_HEADS
+    return resolve_spec(shape, axes, mesh, rules)
+
+
+def slot_vec_spec(mesh: Mesh, shape: Sequence[int],
+                  rules: Optional[Rules] = None) -> P:
+    """Per-slot host-control vectors (cur, counts, prompt buffer rows):
+    leading slot dim → 'data' when divisible, trailing dims replicated."""
+    rules = rules or SERVE_RULES
+    axes = (SLOTS,) + (None,) * (len(shape) - 1)
+    return resolve_spec(shape, axes, mesh, rules)
+
+
+def decode_state_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:
+    """Engine (batched, slot-free) decode-state sharding.
+
+    KV caches go through :func:`kv_cache_spec`; SSM recurrent states shard
+    batch → ('pod','data'); the scalar position is replicated.
+    """
+    if (key.startswith("kv.") or key.startswith("xkv.")) and len(shape) == 4:
+        return kv_cache_spec(mesh, shape[0], shape[1], shape[2])
+    if key.startswith("ssm.") and len(shape) >= 2:
+        return batch_spec(mesh, shape[0], len(shape) - 1)
+    return P()
 
 
 def tree_shardings(mesh: Mesh, tree, spec_fn) -> object:

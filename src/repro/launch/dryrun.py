@@ -164,8 +164,12 @@ def build_cell(arch: str, shape_name: str, mesh, kv_dtype="bf16"):
                         prefix_embeds=ex.get("prefix_embeds"))
         return fn, (serve_params, tokens, extras), ()
 
-    # decode — the target index is a traced input: one compiled step
-    # serves every target precision without retracing.
+    # decode — the *sharded tick*: the target index is a traced input (one
+    # compiled step serves every target precision without retracing) and
+    # every serve artifact lowers with its SERVE_RULES sharding — the
+    # target-stacked tables and JL sketch rows replicated, G matrices and
+    # overlays K-sharded over 'pod' alongside the weights they gate
+    # (core/adaptation.serve_array_axes names the axes).
     if use_stacked:
         from repro.launch.input_specs import (make_unit_table_rel,
                                               stacked_decode_specs)
@@ -238,6 +242,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                                    else 1),
         kind=shp.kind,
     )
+    if shp.kind == "decode":
+        from repro.launch.input_specs import N_SERVE_TARGETS
+        record["serve_targets"] = N_SERVE_TARGETS
     print(f"[{arch} × {shape_name} × {mesh_kind}] "
           f"lower {record['lower_s']}s compile {record['compile_s']}s")
     print("  memory_analysis:", json.dumps(mem))

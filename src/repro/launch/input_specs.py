@@ -29,7 +29,7 @@ from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
 from repro.models import (linear_units, model_logical_axes,
                           model_param_specs)
 from repro.core.adaptation import UnitStatic
-from repro.models.common import EXPERTS
+from repro.models.common import EXPERTS, JL_PROJ, PLANES, TARGETS
 from repro.models.ssm import ssm_dims
 
 JL_K = 64
@@ -47,13 +47,22 @@ N_SERVE_TARGETS = 3
 
 def _est_entry_specs(st: UnitStatic, kpad: int, k_ax, mesh,
                      steps: Optional[int] = None):
-    """Canonical target-stacked estimator-array SDS for one dynamic unit."""
+    """Canonical target-stacked estimator-array SDS for one dynamic unit.
+
+    Axis annotations follow ``core/adaptation.serve_array_axes``: the
+    target axis (TARGETS) and JL sketch rows (JL_PROJ) resolve to
+    replicated under SERVE_RULES, the G matrix's trailing K axis carries
+    the gated weight's logical axis (weight-K over 'pod' on the multi-pod
+    mesh). An optional leading scan-steps dim is replicated.
+    """
     n_t = N_SERVE_TARGETS
     lead = (steps,) if steps is not None else ()
     lax_ = (None,) if steps is not None else ()
 
     def small(dtype):
-        return _sds(lead + (n_t,), dtype, mesh, P(*(lax_ + (None,))))
+        shape, axes = lead + (n_t,), lax_ + (TARGETS,)
+        return _sds(shape, dtype, mesh,
+                    resolve_spec(shape, axes, mesh, SERVE_RULES))
 
     entry = {"l": small(jnp.int32), "h": small(jnp.int32),
              "kind": small(jnp.int32), "threshold": small(jnp.float32)}
@@ -62,7 +71,7 @@ def _est_entry_specs(st: UnitStatic, kpad: int, k_ax, mesh,
         entry["b"] = small(jnp.float32)
     else:
         g_shape = lead + (n_t, JL_K, kpad)
-        g_axes = lax_ + (None, None, k_ax)
+        g_axes = lax_ + (TARGETS, JL_PROJ, k_ax)
         entry["gamma"] = small(jnp.float32)
         entry["g"] = _sds(g_shape, jnp.float32, mesh,
                           resolve_spec(g_shape, g_axes, mesh, SERVE_RULES))
@@ -147,7 +156,7 @@ def serve_param_specs(cfg: ModelConfig, mesh: Mesh,
             k_ax, n_ax = w_axes[1], w_axes[2]
             pl_spec = resolve_spec(
                 (e_dim, st.h, kpad // PACK, u.n),
-                (EXPERTS, None, k_ax, n_ax), mesh, SERVE_RULES)
+                (EXPERTS, PLANES, k_ax, n_ax), mesh, SERVE_RULES)
             sc_spec = resolve_spec((e_dim, u.n), (EXPERTS, n_ax), mesh,
                                    SERVE_RULES)
             overlays[u.path] = QuantizedStacked(
@@ -159,7 +168,7 @@ def serve_param_specs(cfg: ModelConfig, mesh: Mesh,
         else:
             k_ax, n_ax = w_axes[0], w_axes[1]
             pl_spec = resolve_spec((st.h, kpad // PACK, u.n),
-                                   (None, k_ax, n_ax), mesh, SERVE_RULES)
+                                   (PLANES, k_ax, n_ax), mesh, SERVE_RULES)
             sc_spec = resolve_spec((u.n,), (n_ax,), mesh, SERVE_RULES)
             overlays[u.path] = QuantizedLinear(
                 _sds((st.h, kpad // PACK, u.n), jnp.int32, mesh, pl_spec),
@@ -340,7 +349,7 @@ def stacked_serve_param_specs(cfg: ModelConfig, mesh: Mesh,
                 k_ax, n_ax = w_axes[1], w_axes[2]
                 pshape, pax = _add_steps_dim(
                     (e_dim, st.h, kpad // PACK, u.n),
-                    (EXPERTS, None, k_ax, n_ax), steps)
+                    (EXPERTS, PLANES, k_ax, n_ax), steps)
                 sshape, sax = _add_steps_dim((e_dim, u.n),
                                              (EXPERTS, n_ax), steps)
                 overlays[full] = QuantizedStacked(
@@ -351,7 +360,7 @@ def stacked_serve_param_specs(cfg: ModelConfig, mesh: Mesh,
             else:
                 k_ax, n_ax = w_axes[0], w_axes[1]
                 pshape, pax = _add_steps_dim((st.h, kpad // PACK, u.n),
-                                             (None, k_ax, n_ax), steps)
+                                             (PLANES, k_ax, n_ax), steps)
                 sshape, sax = _add_steps_dim((u.n,), (n_ax,), steps)
                 overlays[full] = QuantizedLinear(
                     sds_of(pshape, pax, jnp.int32),

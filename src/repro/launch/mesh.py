@@ -18,9 +18,37 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(model_parallel: int = 1):
-    """Mesh over whatever devices exist (tests, CPU examples)."""
+    """Mesh over whatever devices exist (tests, CPU examples).
+
+    Axes are ("data", "model") — the same names SERVE_RULES maps, so the
+    sharded serve path (engine + slot scheduler) runs unchanged on a
+    local mesh: slots shard over 'data', weight N dims over 'model'.
+    """
     n = len(jax.devices())
     mp = model_parallel
     while mp > 1 and n % mp:
         mp //= 2
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_serve_mesh(slots: int, model_parallel=None):
+    """Local serve mesh sized for the slot scheduler.
+
+    Defaults the 'model' axis to devices/slots so the 'data' axis equals
+    the slot count and the slot axis shards fully (a larger data axis
+    would leave slots replicated — resolve_spec drops non-dividing axes).
+    """
+    mp = model_parallel or max(1, len(jax.devices()) // max(slots, 1))
+    return make_local_mesh(model_parallel=mp)
+
+
+def serve_chips(mesh) -> int:
+    """Chips that serve ONE request's decode bandwidth on ``mesh``.
+
+    Under SERVE_RULES weights are replicated over 'data' (each
+    data-parallel group decodes its own requests), so per-request HBM
+    bandwidth scales only with the 'model' (× 'pod' weight-K) axes —
+    never with the total device count.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1) * sizes.get("pod", 1)

@@ -8,6 +8,9 @@ tracker reports per-query effective-bit percentiles.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch bench-lm
+  PYTHONPATH=src python -m repro.launch.serve --arch bench-lm --mesh local
+(``--mesh local`` shards the serve path over every visible device: slots
+over the 'data' axis, weights over 'model' — the mesh-native decode tick.)
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ from repro.serving import (LatencyModel, QoSPlanner, QueryBitTracker,
 def serve_demo(arch: str = "bench-lm", params=None, model=None,
                targets=(3.5, 4.0, 4.5), n_queries: int = 6,
                tokens_per_query: int = 12, slots: int = 4,
-               seed: int = 0, log=print):
+               seed: int = 0, mesh=None, log=print):
     cfg = get_config(arch)
     rng = np.random.default_rng(seed)
     if params is None:
@@ -39,10 +42,18 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
                  for _ in range(2)]
         model = build_multiscale_model(cfg, params, calib, targets=targets,
                                        finetune_epochs=1, baselines=())
-    engine = ServingEngine(cfg, params, model)
+    engine = ServingEngine(cfg, params, model, mesh=mesh)
+    chips = 1
+    if mesh is not None:
+        from repro.distributed.sharding import slot_vec_spec
+        from repro.launch.mesh import serve_chips
+        chips = serve_chips(mesh)
+        log(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+            f"({mesh.devices.size} devices; slot sharding "
+            f"{slot_vec_spec(mesh, (slots,))}; {chips} chip(s)/request)")
     planner = QoSPlanner(
         list(model.adaptations), LatencyModel(
-            bytes_per_bit=engine.overlay_bytes() / 5), chips=1)
+            bytes_per_bit=engine.overlay_bytes() / 5), chips=chips)
     tracker = QueryBitTracker()
     scheduler = SlotScheduler(engine, planner, slots=slots, max_prompt=8,
                               max_new=tokens_per_query, tracker=tracker)
@@ -73,6 +84,13 @@ def main():
     ap.add_argument("--arch", default="bench-lm")
     ap.add_argument("--queries", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--mesh", default="none", choices=["none", "local"],
+                    help="'local' serves on a data×model mesh over all "
+                         "visible devices (sharded slots + weights)")
+    ap.add_argument("--model-parallel", type=int, default=None,
+                    help="'model' axis size of the local mesh (default: "
+                         "devices/slots, so the slot axis shards fully "
+                         "over 'data')")
     ap.add_argument("--artifacts", default=None,
                     help="pickle produced by examples/train_lm.py")
     args = ap.parse_args()
@@ -81,8 +99,12 @@ def main():
         with open(args.artifacts, "rb") as fh:
             blob = pickle.load(fh)
         params, model = blob["params"], blob["model"]
+    mesh = None
+    if args.mesh == "local":
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.slots, args.model_parallel)
     serve_demo(args.arch, params=params, model=model,
-               n_queries=args.queries, slots=args.slots)
+               n_queries=args.queries, slots=args.slots, mesh=mesh)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,9 @@
 These are the functions the multi-pod dry-run lowers and the launchers run:
 - ``build_train_step``  — remat + scan-over-layers + microbatch gradient
   accumulation + AdamW/Adafactor, one jit-able pure function;
-- ``build_serve_step``  — dynamic-precision decode over stacked overlays;
+- ``build_serve_step``  — dynamic-precision decode over stacked overlays
+  (the *sharded tick*: every serve artifact lowers with its SERVE_RULES
+  sharding; ``launch/input_specs.py`` builds the annotated inputs);
 - ``build_prefill_step``— max-precision quantized prefill.
 """
 from __future__ import annotations

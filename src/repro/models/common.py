@@ -33,6 +33,13 @@ SSM_STATE = "ssm_state"
 CONV = "conv"          # conv taps (replicated)
 NOSHARD = None         # replicated scalar-ish dims
 
+# Serve-side logical axes (adaptation artifacts + scheduler state; see
+# core/adaptation.serve_array_axes and distributed/sharding.SERVE_RULES).
+TARGETS = "targets"    # leading target-stacked axis of every serve artifact
+JL_PROJ = "jl_proj"    # JL sketch rows (k_proj) of estimator G matrices
+PLANES = "planes"      # bit-plane axis of Any-Precision overlays
+SLOTS = "slots"        # continuous-batching slot axis (scheduler state)
+
 
 @dataclass(frozen=True)
 class ParamSpec:

@@ -17,23 +17,38 @@
 Instrumentation: ``trace_counts`` counts Python traces of each compiled
 entry point (the no-retrace guarantee is testable), ``host_syncs`` counts
 device→host transfer points (the O(1)-syncs guarantee is testable).
+
+Mesh-native serving: constructed with ``mesh=``, the engine device_puts
+every serve-side array — raw params, truncated overlays, and the
+target-stacked adaptation artifacts — with ``SERVE_RULES`` shardings
+(weights/overlays K-sharded over 'pod', N over 'model'; target axis and
+JL sketch rows replicated), and the fused decode chunk is jit-compiled
+with explicit ``in_shardings``/``out_shardings`` so GSPMD partitions the
+scan body instead of replicating it. ``mesh=None`` (the default) is the
+unchanged single-device path.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.adaptation import (MultiScaleModel, export_serve_arrays,
-                                   export_static_arrays, overlay_nbytes)
+                                   export_static_arrays, overlay_nbytes,
+                                   serve_array_axes)
 from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
                                  truncate_overlay, truncate_stacked)
 from repro.core.dynamic_linear import DynamicLinearApplier
 from repro.core.thresholds import delta_weight_of
-from repro.models import decode_step
+from repro.distributed.context import use_mesh
+from repro.distributed.sharding import (SERVE_RULES, decode_state_spec,
+                                        overlay_shardings, resolve_spec)
+from repro.models import decode_step, model_logical_axes
 from repro.serving.kv_cache import make_decode_state
 
 
@@ -48,6 +63,7 @@ class ServingEngine:
         use_async: bool = True,
         decode_chunk: int = 16,
         kv_bucket: int = 128,
+        mesh: Optional[Mesh] = None,
     ):
         self.cfg = cfg
         self.model = model
@@ -55,6 +71,7 @@ class ServingEngine:
         self.use_async = use_async
         self.decode_chunk = int(decode_chunk)
         self.kv_bucket = int(kv_bucket)
+        self.mesh = mesh
         # raw params for non-unit paths (norms, router, embeds, conv, head)
         self.raw = {k: v for k, v in params.items()
                     if k not in model.overlays}
@@ -73,9 +90,47 @@ class ServingEngine:
         self._exact_est: Optional[Dict] = None
         self._static_arrays: Dict[str, Dict[str, jax.Array]] = {}
         self._ticks: Dict[str, Callable] = {}
-        self._chunks: Dict[str, Callable] = {}
+        self._chunks: Dict[Tuple, Callable] = {}
         self.trace_counts: Dict[Tuple[str, str], int] = {}
         self.host_syncs = 0
+        if mesh is not None:
+            self._shard_serve_state()
+
+    # -- mesh placement ----------------------------------------------------------
+    def _put(self, arr, spec) -> jax.Array:
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh, spec))
+
+    def _shard_serve_state(self) -> None:
+        """device_put every serve-side array with SERVE_RULES shardings.
+
+        Raw params and overlays shard like weights (K→'pod', N→'model');
+        the target-stacked artifacts follow ``serve_array_axes`` (target
+        axis and JL rows replicated, K axis alongside the gated weight).
+        """
+        mesh, axes = self.mesh, model_logical_axes(self.cfg)
+        for path, v in self.raw.items():
+            self.raw[path] = self._put(
+                v, resolve_spec(v.shape, axes[path], mesh, SERVE_RULES))
+        for path, ov in self.overlays.items():
+            sh = overlay_shardings(mesh, ov, axes[path],
+                                   isinstance(ov, QuantizedStacked))
+            self.overlays[path] = type(ov)(
+                jax.device_put(jnp.asarray(ov.planes), sh["planes"]),
+                jax.device_put(jnp.asarray(ov.scale), sh["scale"]),
+                jax.device_put(jnp.asarray(ov.zero), sh["zero"]),
+                ov.bits, ov.k)
+        self._art_axes = serve_array_axes(self.artifacts.table, axes)
+        for path, entry in self.est.items():
+            for name, arr in entry.items():
+                entry[name] = self._put(
+                    arr, resolve_spec(arr.shape, self._art_axes[path][name],
+                                      mesh, SERVE_RULES))
+
+    def _mesh_ctx(self):
+        """Active-mesh context for in-model sharding hints (no-op w/o mesh)."""
+        return use_mesh(self.mesh) if self.mesh is not None else \
+            contextlib.nullcontext()
 
     # -- mode-specific artifact views -------------------------------------------
     def _est_for(self, mode: str) -> Dict:
@@ -96,14 +151,20 @@ class ServingEngine:
                     self.artifacts.est[path]["h"]
                 delta = jnp.stack([delta_weight_of(ov, int(l), int(h))
                                    for l, h in zip(ls, hs)])
+                if self.mesh is not None:
+                    delta = self._put(delta, resolve_spec(
+                        delta.shape, self._art_axes[path]["delta"],
+                        self.mesh, SERVE_RULES))
                 exact[path] = dict(e, delta=delta)
             self._exact_est = exact
         return self._exact_est
 
     def _static_for(self, method: str) -> Dict[str, jax.Array]:
         if method not in self._static_arrays:
+            conv = (jnp.asarray if self.mesh is None
+                    else lambda v: self._put(v, P(None)))
             self._static_arrays[method] = {
-                p: jnp.asarray(v)
+                p: conv(v)
                 for p, v in export_static_arrays(self.model, method).items()}
         return self._static_arrays[method]
 
@@ -159,7 +220,8 @@ class ServingEngine:
         return lambda state, tokens: fn(state, tokens, t_idx)
 
     # -- fused chunked decode ----------------------------------------------------
-    def _get_chunk(self, mode: str, want_nll: bool) -> Callable:
+    def _get_chunk(self, mode: str, want_nll: bool,
+                   state_sh=None, cache_key: Tuple = ()) -> Callable:
         """Jitted scan over ``decode_chunk`` ticks.
 
         ``chunk(state, cur, toks, use_prompt, gold, target_idx)`` where
@@ -169,8 +231,14 @@ class ServingEngine:
         gold_logp (C, b)) — everything stays on device. With
         ``want_nll=False`` the per-tick full-vocab log-softmax is skipped
         (generation discards it) and gold_logp is zeros.
+
+        On a mesh the chunk is compiled with explicit in/out shardings:
+        the donated decode state keeps its KV sharding across chunks,
+        control vectors and emissions stay replicated (``state_sh`` is the
+        state's sharding tree; ``cache_key`` disambiguates state shapes,
+        whose divisibility decides the resolved specs).
         """
-        key = (mode, want_nll)
+        key = (mode, want_nll) + tuple(cache_key)
         if key in self._chunks:
             return self._chunks[key]
         tick = self.build_tick(mode)
@@ -200,7 +268,14 @@ class ServingEngine:
                 body, (state, cur), (toks.T, use_prompt, gold.T))
             return state, cur, toks_out, ebs, gold_lps
 
-        self._chunks[key] = jax.jit(chunk, donate_argnums=(0,))
+        if self.mesh is None:
+            self._chunks[key] = jax.jit(chunk, donate_argnums=(0,))
+        else:
+            rep = NamedSharding(self.mesh, P())
+            self._chunks[key] = jax.jit(
+                chunk, donate_argnums=(0,),
+                in_shardings=(state_sh, rep, rep, rep, rep, rep),
+                out_shardings=(state_sh, rep, rep, rep, rep))
         return self._chunks[key]
 
     def _run_chunks(self, mode: str, toks: np.ndarray,
@@ -215,19 +290,26 @@ class ServingEngine:
         toks = np.pad(toks, ((0, 0), (0, pad)))
         gold = np.pad(gold, ((0, 0), (0, pad)))
         use_prompt = np.pad(use_prompt, (0, pad), constant_values=True)
-        chunk_fn = self._get_chunk(mode, want_nll)
         # bucketed KV length: queries of different lengths share the same
         # compiled chunk (shape reuse), at a bounded memory overshoot
         kv = self.kv_bucket
         max_len = -(-(padded + 1) // kv) * kv
         state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        state_sh = None
+        if self.mesh is not None:
+            state_sh = {k: NamedSharding(self.mesh, decode_state_spec(
+                self.mesh, k, v.shape)) for k, v in state.items()}
+            state = {k: jax.device_put(v, state_sh[k])
+                     for k, v in state.items()}
+        chunk_fn = self._get_chunk(mode, want_nll, state_sh=state_sh,
+                                   cache_key=(b, max_len))
         cur = jnp.zeros((b,), jnp.int32)
         out_t, out_e, out_g = [], [], []
         # any device->host pull inside the decode loop is a per-token sync
         # regression; on accelerator backends the guard turns it into a
         # hard error (on CPU, arrays are host-resident and it cannot fire,
         # so the ``host_syncs`` counter remains the tested invariant there)
-        with jax.transfer_guard_device_to_host("disallow"):
+        with self._mesh_ctx(), jax.transfer_guard_device_to_host("disallow"):
             for ci in range(n_chunks):
                 sl = slice(ci * c, (ci + 1) * c)
                 state, cur, tc, ec, gc = chunk_fn(

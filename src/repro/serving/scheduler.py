@@ -19,6 +19,30 @@ Mechanics:
 - the host syncs once per *chunk* (not per token) to harvest finished
   slots, record per-request effective bits into the
   :class:`QueryBitTracker`, and admit queued requests into freed slots.
+
+Slot-axis array layout — the contract the mesh sharding relies on
+-----------------------------------------------------------------
+With ``S = slots``, ``P = max_prompt`` and ``L = max_prompt + max_new + 1``,
+the compiled chunk carries exactly these per-slot arrays (leading axis is
+ALWAYS the slot axis)::
+
+    state        pytree; each leaf (S, 1, ...) — a stacked batch-1 decode
+                 state per slot; KV leaves are (S, 1, L, kv_heads, head_dim)
+    cur          (S,) int32   last generated token per slot
+    step_count   (S,) int32   ticks consumed (prompt + generated)
+    prompt_buf   (S, P) int32 admitted prompt, zero-padded
+    prompt_len   (S,) int32   actual prompt length
+    total_len    (S,) int32   prompt_len + max_new; 0 marks an idle slot
+    target_ix    (S,) int32   per-slot index into the target-stacked arrays
+
+On the production mesh (``distributed/sharding.SERVE_RULES``) the slot
+axis maps onto the 'data' mesh axis — each data-parallel group decodes
+its own admitted requests — KV heads shard over 'model' like the
+attention weights, and the shared compiled tick is identical across
+groups (the engine's no-retrace and host-sync invariants hold unchanged).
+Construct the engine with ``mesh=`` to activate this; the scheduler picks
+the mesh up from the engine and compiles its chunk and admission steps
+with explicit in/out shardings.
 """
 from __future__ import annotations
 
@@ -29,7 +53,9 @@ from typing import Callable, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.sharding import slot_state_spec, slot_vec_spec
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import make_decode_state
 from repro.serving.qos import QoSPlanner, QueryBitTracker
@@ -86,6 +112,7 @@ class SlotScheduler:
             raise ValueError("vocab too large for f32-exact token packing")
         s = self.n_slots
         max_len = self.max_prompt + self.max_new + 1
+        self.mesh = engine.mesh
         # per-slot state: each slot is an independent batch-1 decode state
         proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32)
         self._state = jax.tree.map(
@@ -96,10 +123,40 @@ class SlotScheduler:
         self._prompt_len = jnp.zeros((s,), jnp.int32)
         self._total_len = jnp.zeros((s,), jnp.int32)   # 0 => slot idle
         self._target_ix = jnp.zeros((s,), jnp.int32)
+        self._shardings = None
+        if self.mesh is not None:
+            self._shard_slot_state()
 
         self._chunk_fn = self._make_chunk(engine.build_tick(mode),
                                           cfg.vocab_size, self.chunk, mode)
         self._admit_fn = self._make_admit()
+
+    def _shard_slot_state(self) -> None:
+        """Map the slot axis onto the 'data' mesh axis.
+
+        Every per-slot array (the stacked decode state and the host
+        control vectors) is device_put with its SERVE_RULES sharding, and
+        the compiled chunk/admit steps are built with those shardings as
+        explicit in/out shardings — so the donated slot state never
+        leaves the mesh between chunks.
+        """
+        mesh = self.mesh
+        state_sh = {k: NamedSharding(mesh, slot_state_spec(mesh, k, v.shape))
+                    for k, v in self._state.items()}
+        vec_sh = NamedSharding(mesh, slot_vec_spec(
+            mesh, (self.n_slots,)))
+        buf_sh = NamedSharding(mesh, slot_vec_spec(
+            mesh, (self.n_slots, self.max_prompt)))
+        self._shardings = (state_sh, vec_sh, vec_sh, buf_sh, vec_sh,
+                           vec_sh, vec_sh)
+        self._state = {k: jax.device_put(v, state_sh[k])
+                       for k, v in self._state.items()}
+        self._cur = jax.device_put(self._cur, vec_sh)
+        self._step_count = jax.device_put(self._step_count, vec_sh)
+        self._prompt_buf = jax.device_put(self._prompt_buf, buf_sh)
+        self._prompt_len = jax.device_put(self._prompt_len, vec_sh)
+        self._total_len = jax.device_put(self._total_len, vec_sh)
+        self._target_ix = jax.device_put(self._target_ix, vec_sh)
 
     # -- compiled pieces ---------------------------------------------------------
     def _make_chunk(self, tick: Callable, vocab: int, length: int,
@@ -133,7 +190,16 @@ class SlotScheduler:
                 body, (state, cur, step_count), None, length=length)
             return (state, cur, step_count) + ys
 
-        return jax.jit(chunk, donate_argnums=(0, 1, 2))
+        if self._shardings is None:
+            return jax.jit(chunk, donate_argnums=(0, 1, 2))
+        state_sh, vec_sh = self._shardings[0], self._shardings[1]
+        # emissions are (chunk, slots): slot axis sharded like the state
+        slot_entry = vec_sh.spec[0] if len(vec_sh.spec) else None
+        ys_sh = NamedSharding(self.mesh, P(None, slot_entry))
+        return jax.jit(chunk, donate_argnums=(0, 1, 2),
+                       in_shardings=self._shardings,
+                       out_shardings=(state_sh, vec_sh, vec_sh) +
+                                     (ys_sh,) * 4)
 
     def _make_admit(self):
         def admit(state, cur, step_count, prompt_buf, prompt_len,
@@ -149,7 +215,14 @@ class SlotScheduler:
                     total_len.at[slot].set(tot),
                     target_ix.at[slot].set(tix))
 
-        return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+        if self._shardings is None:
+            return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+        rep = NamedSharding(self.mesh, P())
+        buf_rep = NamedSharding(self.mesh, P(None))
+        return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6),
+                       in_shardings=self._shardings +
+                                    (rep, buf_rep, rep, rep, rep),
+                       out_shardings=self._shardings)
 
     # -- host control loop -------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -177,21 +250,23 @@ class SlotScheduler:
             prompt = np.asarray(r.prompt, np.int32).reshape(-1)
             prow = np.zeros((self.max_prompt,), np.int32)
             prow[:len(prompt)] = prompt
-            (self._state, self._cur, self._step_count, self._prompt_buf,
-             self._prompt_len, self._total_len, self._target_ix) = \
-                self._admit_fn(
-                    self._state, self._cur, self._step_count,
-                    self._prompt_buf, self._prompt_len, self._total_len,
-                    self._target_ix, jnp.int32(si), jnp.asarray(prow),
-                    jnp.int32(len(prompt)),
-                    jnp.int32(len(prompt) + r.max_new), jnp.int32(tix))
+            with self.engine._mesh_ctx():
+                (self._state, self._cur, self._step_count, self._prompt_buf,
+                 self._prompt_len, self._total_len, self._target_ix) = \
+                    self._admit_fn(
+                        self._state, self._cur, self._step_count,
+                        self._prompt_buf, self._prompt_len, self._total_len,
+                        self._target_ix, jnp.int32(si), jnp.asarray(prow),
+                        jnp.int32(len(prompt)),
+                        jnp.int32(len(prompt) + r.max_new), jnp.int32(tix))
             self._slots[si] = _Slot(request=r)
 
     def _run_chunk(self) -> None:
-        (self._state, self._cur, self._step_count,
-         toks, ebs, emit_tok, emit_bits) = self._chunk_fn(
-            self._state, self._cur, self._step_count, self._prompt_buf,
-            self._prompt_len, self._total_len, self._target_ix)
+        with self.engine._mesh_ctx():
+            (self._state, self._cur, self._step_count,
+             toks, ebs, emit_tok, emit_bits) = self._chunk_fn(
+                self._state, self._cur, self._step_count, self._prompt_buf,
+                self._prompt_len, self._total_len, self._target_ix)
         # ONE host sync per chunk: pack emissions + slot progress into a
         # single device array and pull it once (token ids are exact in
         # f32 — vocab sizes sit far below 2**24)

@@ -5,7 +5,10 @@ These builders wrap the ONE precision-selection implementation —
 functions whose every input (bit-plane overlays, estimator G stacks,
 thresholds, l/h tables, and the active target index) is a traced array, so
 the production mesh can shard them and one compiled step serves every
-target and every request's precision without retracing.
+target and every request's precision without retracing. The input arrays
+follow the target-stacked layout contract of ``core/adaptation`` and
+shard under ``distributed/sharding.SERVE_RULES`` (the dry-run lowers
+these steps with those shardings on the 512-device meshes).
 
 HBM-traffic honesty (DESIGN.md §2.1/§2.3): overlays arrive pre-truncated to
 each unit's h planes, so the lowered HLO reads at most h planes per unit —

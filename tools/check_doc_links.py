@@ -1,0 +1,46 @@
+"""Check that relative markdown links in README/docs resolve to real files.
+
+Scans every tracked ``*.md`` at the repo root and under ``docs/`` for
+``[text](target)`` links; external targets (http/https/mailto) are
+skipped, ``#anchors`` are stripped, and the remaining path must exist
+relative to the file that references it. Exit 1 on any dangling link.
+
+  python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def check(root: str = ".") -> int:
+    files = sorted(glob.glob(os.path.join(root, "*.md")) +
+                   glob.glob(os.path.join(root, "docs", "*.md")))
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    bad = 0
+    for path in files:
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                print(f"DANGLING {path}: ({target}) -> {resolved}")
+                bad += 1
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not bad else f'{bad} dangling link(s)'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())
