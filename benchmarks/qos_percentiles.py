@@ -30,6 +30,9 @@ def main(quick: bool = False) -> dict:
             _, ebits = engine.generate(prompt, 16, t)
             tracker.record_query(ebits)
         s = tracker.summary()
+        if not s:            # empty tracker (no queries recorded)
+            emit(f"qos/t{t}", 0, "no-queries")
+            continue
         emit(f"qos/t{t}", 0,
              f"mean={s['mean']:.3f};p90=+{s['p90_increase']*100:.2f}%;"
              f"p99=+{s['p99_increase']*100:.2f}%")

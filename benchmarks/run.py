@@ -20,6 +20,7 @@ MODULES = [
     ("hl_ablation", "Table 13: forced (l,h) candidate pairs"),
     ("calib_sensitivity", "Table 14: calibration-set swap"),
     ("sensitivity_dynamics", "Figure 3: per-step sensitivity dynamics"),
+    ("slot_kernel", "Batched-slot kernel: per-slot DMA elision"),
     ("roofline", "§Roofline: 3-term analysis from the dry-run"),
 ]
 

@@ -76,6 +76,15 @@ class DynamicLinearApplier:
         ``jax.vmap`` (the scheduler's slot axis) this becomes per-slot.
     mode: ``dynamic | static | max | exact``. ``static`` requires
         ``static_bits``: per-path (T,) int32 arrays (traced).
+    active: optional traced bool — ``False`` gates every precision decision
+        to 0 bits. Under the scheduler's slot vmap this is the per-slot
+        running mask: idle/retired slots select ``b_sel = 0``, which the
+        batched bit-serial kernel treats as "fetch no planes, output
+        zeros" — empty slots stop burning HBM bandwidth and MXU cycles on
+        every bit-serial linear unit. Stacked (MoE) units zero their
+        materialized weights for consistency, but their dense vmapped
+        build has no per-slot elision (a batched stacked kernel is future
+        work). ``None`` (the engine's dense path) means always active.
     """
 
     def __init__(
@@ -88,6 +97,7 @@ class DynamicLinearApplier:
         static_bits: Optional[Dict[str, jax.Array]] = None,
         use_async: bool = True,
         backend: Optional[str] = None,
+        active=None,
     ):
         self.table = table
         self.raw = serve_params["raw"]
@@ -98,11 +108,20 @@ class DynamicLinearApplier:
         self.static_bits = static_bits or {}
         self.use_async = use_async
         self.backend = backend
+        self.active = active
         self.records: List[Tuple[jax.Array, float]] = []
 
     # -- precision selection ---------------------------------------------------
     def _select_bits(self, u: UnitStatic, x: jax.Array,
                      async_input) -> jax.Array:
+        bits = self._select_bits_active(u, x, async_input)
+        if self.active is not None:
+            # idle slot: 0 bits — the batched kernel elides every plane DMA
+            bits = jnp.where(self.active, bits, jnp.int32(0))
+        return bits
+
+    def _select_bits_active(self, u: UnitStatic, x: jax.Array,
+                            async_input) -> jax.Array:
         t = self.target_idx
         if self.mode == "max":
             return jnp.int32(u.h)
@@ -166,7 +185,14 @@ class DynamicLinearApplier:
         bits = self._select_bits(u, x, async_input)
         e, _, _, n = ov.planes.shape
         self.records.append((bits, float(e * ov.k * n)))
-        return materialize_stacked(ov, bits).astype(x.dtype)
+        w = materialize_stacked(ov, bits).astype(x.dtype)
+        if self.active is not None:
+            # idle contract for stacked units: zero weights (bits = 0
+            # alone leaves the non-zero midpoint residue). The dense
+            # vmapped materialization has no per-slot elision — only the
+            # bit-serial linear path skips the idle slot's HBM/MXU work.
+            w = jnp.where(self.active, w, jnp.zeros_like(w))
+        return w
 
     # -- accounting ----------------------------------------------------------------
     def effective_bits(self) -> jax.Array:

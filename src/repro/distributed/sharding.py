@@ -220,6 +220,26 @@ def slot_vec_spec(mesh: Mesh, shape: Sequence[int],
     return resolve_spec(shape, axes, mesh, rules)
 
 
+def slot_prefetch_spec(mesh: Mesh, slots: int,
+                       rules: Optional[Rules] = None) -> P:
+    """EXPECTED sharding of the batched bit-serial kernel's scalar-prefetch
+    vector — a named, test-asserted contract, not active wiring.
+
+    The slot-batched kernel (kernels/bitserial) takes a per-slot ``(S,)``
+    int32 ``b_sel`` vector as its scalar-prefetch operand. That vector is
+    derived *inside* the compiled tick (from the per-slot running mask and
+    precision decisions), so its layout comes from SPMD propagation off
+    the slot-sharded operands — nothing device_puts it explicitly. This
+    function names the layout propagation must (and does — see
+    tests/test_sharded_serve.py) arrive at: the SAME slot axis as every
+    per-slot control vector (slots → 'data', each data-parallel group
+    prefetches only its own slots' precisions; replicated when S doesn't
+    divide 'data'). A future dispatch that compiles the kernel with
+    explicit shardings must use this spec for b_sel.
+    """
+    return slot_vec_spec(mesh, (slots,), rules)
+
+
 def decode_state_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:
     """Engine (batched, slot-free) decode-state sharding.
 

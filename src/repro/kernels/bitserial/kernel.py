@@ -18,6 +18,25 @@ precision selector. TPU-native mechanism (DESIGN.md §2.1):
 
 Validated against ``ref.py`` in interpret mode (tests/test_kernels.py); on a
 real TPU the same code lowers through Mosaic (no interpret flag).
+
+Batched-slot variant (continuous batching): the scheduler vmaps the decode
+tick over S slots, each with its OWN runtime precision. Generic Pallas
+batching would lift the single-request kernel into grid (N_tiles, B) with a
+batched operand — every slot then pays for the most expensive slot's planes.
+``bitserial_matmul_slots_pallas`` instead runs grid = (S, N_tiles, B) with a
+scalar-prefetched (S,) ``b_sel`` vector:
+
+* the plane ``index_map`` clamps the plane index **per slot** to
+  ``min(plane, b_sel[s]-1)`` — slot s's plane steps ≥ b_sel[s] re-name the
+  previous block, so per-slot HBM plane traffic is ∝ b_sel[s];
+* ``b_sel[s] == 0`` marks an **idle** slot: its index_map pins to block
+  (0, 0, 0) (at most one fetch per idle run) and the kernel body skips
+  init, MXU work, and writeback entirely — the dispatch layer defines idle
+  output as zeros;
+* :func:`plane_block_fetches` is the host-side model of this contract: it
+  walks the grid in iteration order through the *actual* index_map and
+  counts consecutive-distinct block names (exactly the copies Pallas
+  cannot elide), making "blocks fetched ∝ Σ b_sel" a testable invariant.
 """
 from __future__ import annotations
 
@@ -25,6 +44,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -95,7 +115,9 @@ def bitserial_matmul_pallas(
 
     def plane_map(i, j, sref):
         # Clamp: steps past b_sel re-name the previous block -> no new DMA.
-        return (jnp.minimum(j, sref[0] - 1), 0, i)
+        # The lower clamp keeps b_sel = 0 (idle, zeros contract enforced by
+        # the ops.py dispatch) from naming an out-of-range block.
+        return (jnp.maximum(jnp.minimum(j, sref[0] - 1), 0), 0, i)
 
     def nvec_map(i, j, sref):
         del j, sref
@@ -122,3 +144,135 @@ def bitserial_matmul_pallas(
         ),
         interpret=interpret,
     )(b_sel, x, planes, scale, zero)
+
+
+# ---------------------------------------------------------------------------
+# Batched-slot kernel: grid (slots, n_tiles, bits), per-slot DMA elision
+# ---------------------------------------------------------------------------
+def _slot_plane_block(b, i, j):
+    """Plane-block index named by a slot with precision ``b`` at (tile i,
+    plane j) — THE elision contract, shared by the kernel's index_map and
+    the host-side traffic model :func:`plane_block_fetches`.
+
+    Busy slot (b > 0): ``(min(j, b-1), 0, i)`` — planes ≥ b re-name the
+    previous block (zero HBM traffic). Idle slot (b == 0): pinned to
+    ``(0, 0, 0)`` so an idle run costs at most one plane-block fetch.
+    """
+    active = b > 0
+    jc = jnp.maximum(jnp.minimum(j, b - 1), 0)
+    return (jnp.where(active, jc, 0), 0, jnp.where(active, i, 0))
+
+
+def _slot_kernel(b_sel_ref, x_ref, plane_ref, scale_ref, zero_ref, out_ref,
+                 acc_ref, *, bits: int):
+    s = pl.program_id(0)
+    plane = pl.program_id(2)             # minor grid dim: plane index
+    b_sel = b_sel_ref[s]
+    active = b_sel > 0
+
+    @pl.when(active & (plane == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(plane < b_sel)              # implies active (b_sel > plane >= 0)
+    def _accumulate():
+        w = _unpack(plane_ref[0])        # (K, TILE_N) in {0,1}
+        contrib = jax.lax.dot(
+            x_ref[0], w, preferred_element_type=jnp.float32)
+        acc_ref[...] += contrib * (2.0 ** (bits - 1 - plane))
+
+    @pl.when(active & (plane == bits - 1))
+    def _finalize():
+        sx = jnp.sum(x_ref[0], axis=-1, keepdims=True)         # (M, 1)
+        mid = (jnp.exp2((bits - b_sel).astype(jnp.float32)) - 1.0) * 0.5
+        corr = (mid - zero_ref[...]) * sx                      # (M, TILE_N)
+        out_ref[0] = (acc_ref[...] + corr) * scale_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "tile_n", "interpret"))
+def bitserial_matmul_slots_pallas(
+    x: jax.Array,            # (S, M, K) float32 — per-slot activations
+    planes: jax.Array,       # (bits, K/32, N) int32 — shared overlay
+    scale: jax.Array,        # (1, N) float32
+    zero: jax.Array,         # (1, N) float32
+    b_sel: jax.Array,        # (S,) int32 — per-slot precision; 0 = idle
+    *,
+    bits: int,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[S, M, N] = x[s] @ W_{b_sel[s]}; plane traffic ∝ Σ_s b_sel[s].
+
+    Idle slots (``b_sel[s] == 0``) skip init/MXU/writeback — their output
+    blocks are UNDEFINED; callers must mask them (ops.py defines them as
+    zeros). The plane operand is shared across slots; its index_map
+    (:func:`_slot_plane_block`) gives per-slot DMA elision.
+    """
+    s, m, k = x.shape
+    _, kw, n = planes.shape
+    assert kw * PACK == k, (kw, k)
+    assert n % tile_n == 0, (n, tile_n)
+    assert b_sel.shape == (s,), (b_sel.shape, s)
+
+    grid = (s, n // tile_n, bits)
+
+    def x_map(si, i, j, bref):
+        del i, j, bref
+        return (si, 0, 0)
+
+    def plane_map(si, i, j, bref):
+        return _slot_plane_block(bref[si], i, j)
+
+    def nvec_map(si, i, j, bref):
+        del si, j, bref
+        return (0, i)
+
+    def out_map(si, i, j, bref):
+        del j, bref
+        return (si, 0, i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, k), x_map),
+            pl.BlockSpec((1, kw, tile_n), plane_map),
+            pl.BlockSpec((1, tile_n), nvec_map),
+            pl.BlockSpec((1, tile_n), nvec_map),
+        ],
+        out_specs=pl.BlockSpec((1, m, tile_n), out_map),
+        scratch_shapes=[pltpu.VMEM((m, tile_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_slot_kernel, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(b_sel, x, planes, scale, zero)
+
+
+def plane_block_fetches(b_sel, n_tiles: int, bits: int) -> int:
+    """Host-side model of the slot kernel's plane HBM traffic.
+
+    Walks grid (S, n_tiles, bits) in iteration order (plane minor) through
+    the kernel's actual ``index_map`` (:func:`_slot_plane_block`) and counts
+    the steps whose named block differs from the previous step's — exactly
+    the HBM→VMEM copies Pallas cannot elide. For ``n_tiles >= 2`` and busy
+    precisions >= 1 this equals ``n_tiles * sum(b_sel)`` plus one fetch when
+    the batch ends in an idle run (tests/test_kernels.py asserts the closed
+    form) — i.e. blocks fetched ∝ Σ b_sel, not S * bits.
+    """
+    fetches, prev = 0, None
+    for b in np.asarray(b_sel, dtype=np.int64):
+        for i in range(n_tiles):
+            for j in range(bits):
+                blk = tuple(int(v) for v in
+                            _slot_plane_block(jnp.int32(b), i, j))
+                if blk != prev:
+                    fetches += 1
+                    prev = blk
+    return fetches

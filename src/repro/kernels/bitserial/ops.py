@@ -4,18 +4,48 @@ Handles padding to kernel tile requirements, dtype normalization, and backend
 dispatch: on TPU the Pallas kernel runs natively; elsewhere (this CPU
 container) the default is the jnp oracle (identical math), with
 ``interpret=True`` available to execute the actual kernel body for tests.
+
+Backend contract: an **explicit** ``backend="pallas"|"interpret"`` always
+runs the requested kernel — untileable N is padded up to the tile (and the
+output sliced back); it never silently reroutes to the oracle. Auto mode
+(``backend=None``) picks pallas on TPU and the oracle elsewhere.
+
+Batched dispatch (the continuous-batching scheduler): ``bitserial_matmul``
+is wrapped in :func:`jax.custom_batching.custom_vmap`, so when the
+scheduler vmaps the decode tick over slots, the mapped call does NOT get
+generically lifted (which would make every slot pay for the most expensive
+slot's planes). Instead the batching rule collapses the mapped axis into
+the slot axis of the batched kernel — per-slot ``b_sel`` rides in as a
+scalar-prefetch vector, planes ≥ b_sel[s] cost zero HBM traffic per slot,
+and ``b_sel[s] == 0`` (idle slot) skips compute entirely and returns
+zeros. ``TRACE_COUNTS`` counts Python traces of each dispatch entry point
+(the no-retrace-across-b_sel guarantee is testable).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bitplane import QuantizedLinear
-from repro.kernels.bitserial.kernel import bitserial_matmul_pallas
-from repro.kernels.bitserial.ref import bitserial_matmul_ref
+from repro.kernels.bitserial.kernel import (bitserial_matmul_pallas,
+                                            bitserial_matmul_slots_pallas)
+from repro.kernels.bitserial.ref import (bitserial_matmul_ref,
+                                         bitserial_matmul_slots_ref)
+from repro.kernels.common import pad_overlay_n
+
+TILE_CHOICES = (256, 128)
+
+# Python-trace counters per dispatch entry point ("single" / "slots"):
+# increments happen at trace time only, so a counter that stays flat across
+# calls with different b_sel values proves the compiled kernel is reused.
+TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _count_trace(key: str) -> None:
+    TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
 
 
 def _on_tpu() -> bool:
@@ -23,7 +53,7 @@ def _on_tpu() -> bool:
 
 
 def _pick_tile_n(n: int) -> int:
-    for t in (256, 128):
+    for t in TILE_CHOICES:
         if n % t == 0:
             return t
     return 0
@@ -31,14 +61,72 @@ def _pick_tile_n(n: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("bits", "backend"))
 def _dispatch(x, planes, scale, zero, b_sel, *, bits: int, backend: str):
+    _count_trace("single")
     if backend == "ref":
-        return bitserial_matmul_ref(x, planes, scale, zero, b_sel, bits=bits)
+        y = bitserial_matmul_ref(x, planes, scale, zero, b_sel, bits=bits)
+    else:
+        tile_n = _pick_tile_n(planes.shape[-1])
+        assert tile_n, (planes.shape, "caller pads N for explicit backends")
+        y = bitserial_matmul_pallas(
+            x, planes, scale, zero, b_sel, bits=bits, tile_n=tile_n,
+            interpret=(backend == "interpret"))
+    # b_sel == 0 (idle: an inactive applier outside the slot vmap) has the
+    # same contract here as in the slot-batched path: output is zeros, not
+    # the oracle's midpoint-correction residue
+    return jnp.where(b_sel[0] > 0, y, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+def _dispatch_slots(x, planes, scale, zero, b_sel, *, bits: int,
+                    backend: str):
+    """Slot-batched dispatch: x (S, M, K), b_sel (S,); idle slots -> 0."""
+    _count_trace("slots")
+    if backend == "ref":
+        return bitserial_matmul_slots_ref(x, planes, scale, zero, b_sel,
+                                          bits=bits)
     tile_n = _pick_tile_n(planes.shape[-1])
-    if tile_n == 0:
-        return bitserial_matmul_ref(x, planes, scale, zero, b_sel, bits=bits)
-    return bitserial_matmul_pallas(
+    assert tile_n, (planes.shape, "caller pads N for explicit backends")
+    y = bitserial_matmul_slots_pallas(
         x, planes, scale, zero, b_sel, bits=bits, tile_n=tile_n,
         interpret=(backend == "interpret"))
+    # idle slots skip writeback in the kernel — define their output as 0
+    return jnp.where((b_sel > 0)[:, None, None], y, 0.0)
+
+
+@functools.lru_cache(maxsize=None)
+def _batchable(bits: int, backend: str):
+    """custom_vmap'd core: unmapped calls run the single-request path;
+    a mapped call (the scheduler's slot axis) collapses into the batched
+    kernel with per-slot DMA elision instead of generic Pallas batching.
+
+    Cached per (bits, backend) so repeated traces reuse ONE custom_vmap
+    object (a fresh one per call would defeat jit caching)."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(x, planes, scale, zero, b_sel):
+        return _dispatch(x, planes, scale, zero, b_sel, bits=bits,
+                         backend=backend)
+
+    @fn.def_vmap
+    def _vmap_rule(axis_size, in_batched, x, planes, scale, zero, b_sel):
+        x_b, planes_b, scale_b, zero_b, b_b = in_batched
+        if planes_b or scale_b or zero_b:
+            # the overlay itself is batched (not the serving layout):
+            # generic per-element mapping, exactly what plain vmap did
+            axes = tuple(0 if b else None for b in in_batched)
+            y = jax.vmap(
+                functools.partial(_dispatch, bits=bits, backend=backend),
+                in_axes=axes)(x, planes, scale, zero, b_sel)
+            return y, True
+        if not x_b:
+            x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        if not b_b:
+            b_sel = jnp.broadcast_to(b_sel[None], (axis_size,) + b_sel.shape)
+        y = _dispatch_slots(x, planes, scale, zero, b_sel[:, 0],
+                            bits=bits, backend=backend)
+        return y, True
+
+    return fn
 
 
 def bitserial_matmul(
@@ -50,17 +138,28 @@ def bitserial_matmul(
 ) -> jax.Array:
     """``x @ W_{b_sel}`` for a bit-plane overlay; returns float32.
 
-    x: (..., K); b_sel: scalar int32 (runtime precision, 1..ql.bits).
+    x: (..., K); b_sel: scalar int32 (runtime precision, 1..ql.bits; under
+    the scheduler's slot vmap it is per-slot, and 0 marks an idle slot
+    whose output is zeros and whose planes are never fetched).
     """
     if backend is None:
         backend = "pallas" if _on_tpu() else "ref"
+    elif backend not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         f"'pallas', 'interpret', or 'ref'")
     lead = x.shape[:-1]
     xm = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
     kp = ql.planes.shape[1] * 32
     if kp != xm.shape[-1]:
         xm = jnp.pad(xm, ((0, 0), (0, kp - xm.shape[-1])))
-    y = _dispatch(
-        xm, ql.planes, ql.scale[None, :], ql.zero[None, :],
-        jnp.asarray(b_sel, jnp.int32).reshape((1,)),
-        bits=ql.bits, backend=backend)
+    n = ql.planes.shape[-1]
+    planes, scale, zero = ql.planes, ql.scale[None, :], ql.zero[None, :]
+    if backend != "ref" and _pick_tile_n(n) == 0:
+        # explicit kernel backend on untileable N: pad to the smallest tile
+        planes, scale, zero = pad_overlay_n(planes, scale, zero,
+                                            min(TILE_CHOICES))
+    y = _batchable(ql.bits, backend)(
+        xm, planes, scale, zero,
+        jnp.asarray(b_sel, jnp.int32).reshape((1,)))
+    y = y[..., :n]
     return y.reshape(lead + (y.shape[-1],))

@@ -32,3 +32,21 @@ def bitserial_matmul_ref(
     sx = jnp.sum(x.astype(jnp.float32), axis=-1, keepdims=True)
     mid = (jnp.exp2((bits - b).astype(jnp.float32)) - 1.0) * 0.5
     return (acc + (mid - zero) * sx) * scale
+
+
+def bitserial_matmul_slots_ref(
+    x: jax.Array,        # (S, M, K) float32 — per-slot activations
+    planes: jax.Array,   # (bits, K/32, N) int32 — shared overlay
+    scale: jax.Array,    # (1, N) float32
+    zero: jax.Array,     # (1, N) float32
+    b_sel: jax.Array,    # (S,) int32 — per-slot precision; 0 = idle
+    *,
+    bits: int,
+) -> jax.Array:
+    """Oracle for the batched-slot kernel: the single-request closed form
+    vmapped over slots, with idle slots (``b_sel == 0``) defined as zeros —
+    the same contract the Pallas dispatch enforces by masking."""
+    y = jax.vmap(
+        lambda xs, bs: bitserial_matmul_ref(xs, planes, scale, zero, bs,
+                                            bits=bits))(x, b_sel[:, None])
+    return jnp.where((b_sel > 0)[:, None, None], y, 0.0)

@@ -1,0 +1,27 @@
+"""Shared kernel-dispatch utilities (used by the per-kernel ``ops.py``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_overlay_n(planes: jax.Array, scale: jax.Array, zero: jax.Array,
+                  tile: int):
+    """Pad a bit-plane overlay's N dim up to a multiple of ``tile``.
+
+    The pad columns carry zero planes AND zero scale, so every padded
+    output column is exactly 0 and callers slice them off — the contract
+    that lets an explicitly requested kernel backend run on untileable N
+    instead of silently falling back to the oracle.
+
+    planes: (bits, K/32, N) int32; scale/zero: (1, N) f32. No-op when N
+    already tiles.
+    """
+    n = planes.shape[-1]
+    pad = (-n) % tile
+    if pad == 0:
+        return planes, scale, zero
+    planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad)))
+    scale = jnp.pad(scale, ((0, 0), (0, pad)))
+    zero = jnp.pad(zero, ((0, 0), (0, pad)))
+    return planes, scale, zero

@@ -1,19 +1,44 @@
-"""jit'd public wrapper for the static-precision dequant matmul (prefill)."""
+"""jit'd public wrapper for the static-precision dequant matmul (prefill).
+
+Backend contract: an **explicit** ``backend="pallas"|"interpret"`` always
+runs the requested kernel — an untileable N is padded up to the tile (zero
+scale on the pad, output sliced back); untileable M/K raise (padding the
+reduction dim would silently inflate the tile budget). Auto mode
+(``backend=None``) picks pallas on TPU when the shape tiles and otherwise
+falls back to the jnp oracle, logging the fallback once per process.
+"""
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bitplane import QuantizedLinear
+from repro.kernels.common import pad_overlay_n
 from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
 from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+
+TILE_M, TILE_N, TILE_K = 256, 256, 512
+
+_log = logging.getLogger(__name__)
+_fallback_logged = False
 
 
 def _tiles_ok(m, n, k, tm, tn, tk):
     return m % tm == 0 and n % tn == 0 and k % tk == 0
+
+
+def _log_fallback_once(m, n, k) -> None:
+    global _fallback_logged
+    if not _fallback_logged:
+        _log.warning(
+            "dequant_matmul auto backend: shape (m=%d, n=%d, k=%d) does not "
+            "tile (%d, %d, %d); falling back to the jnp oracle (logged once "
+            "per process)", m, n, k, TILE_M, TILE_N, TILE_K)
+        _fallback_logged = True
 
 
 @functools.partial(jax.jit, static_argnames=("bits_active", "bits_parent",
@@ -21,10 +46,12 @@ def _tiles_ok(m, n, k, tm, tn, tk):
 def _dispatch(x, planes, scale, zero, *, bits_active, bits_parent, backend):
     m, k = x.shape
     n = planes.shape[-1]
-    if backend == "ref" or not _tiles_ok(m, n, k, 256, 256, 512):
+    if backend == "ref":
         return dequant_matmul_ref(
             x, planes, scale, zero,
             bits_active=bits_active, bits_parent=bits_parent)
+    assert _tiles_ok(m, n, k, TILE_M, TILE_N, TILE_K), \
+        (x.shape, planes.shape, "caller pads N / rejects M,K")
     return dequant_matmul_pallas(
         x, planes, scale, zero, bits_active=bits_active,
         bits_parent=bits_parent, interpret=(backend == "interpret"))
@@ -38,14 +65,31 @@ def dequant_matmul(
     backend: Optional[str] = None,
 ) -> jax.Array:
     """Prefill matmul at static precision ``bits_active``; returns float32."""
-    if backend is None:
-        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
     lead = x.shape[:-1]
     xm = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
     kp = ql.planes.shape[1] * 32
     if kp != xm.shape[-1]:
         xm = jnp.pad(xm, ((0, 0), (0, kp - xm.shape[-1])))
-    y = _dispatch(xm, ql.planes, ql.scale[None, :], ql.zero[None, :],
+    m, k = xm.shape
+    n = ql.planes.shape[-1]
+    planes, scale, zero = ql.planes, ql.scale[None, :], ql.zero[None, :]
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+        if backend == "pallas" and not _tiles_ok(m, n, k, TILE_M, TILE_N,
+                                                 TILE_K):
+            _log_fallback_once(m, n, k)
+            backend = "ref"
+    elif backend in ("pallas", "interpret"):
+        if m % TILE_M or k % TILE_K:
+            raise ValueError(
+                f"dequant_matmul backend={backend!r} needs M % {TILE_M} == 0"
+                f" and K % {TILE_K} == 0, got (m={m}, k={k}); use "
+                f"backend=None to allow the oracle fallback")
+        planes, scale, zero = pad_overlay_n(planes, scale, zero, TILE_N)
+    elif backend != "ref":
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         f"'pallas', 'interpret', or 'ref'")
+    y = _dispatch(xm, planes, scale, zero,
                   bits_active=bits_active, bits_parent=ql.bits,
                   backend=backend)
-    return y.reshape(lead + (y.shape[-1],))
+    return y[..., :n].reshape(lead + (n,))

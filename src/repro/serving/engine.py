@@ -170,10 +170,14 @@ class ServingEngine:
 
     # -- the single decode tick --------------------------------------------------
     def build_tick(self, mode: str = "dynamic") -> Callable:
-        """Untraced ``tick(state, tokens, target_idx)`` for ``mode``.
+        """Untraced ``tick(state, tokens, target_idx, active=None)``.
 
         The scheduler vmaps this over a slot axis (per-slot positions,
         targets, and effective bits); the engine scans it over tokens.
+        ``active`` (per-slot under vmap) gates precision selection: an
+        inactive (idle/retired) slot selects 0 bits, so the batched
+        bit-serial kernel fetches none of its planes and its quantized
+        matmuls cost no HBM traffic or MXU work.
         """
         base_mode, static_bits = mode, None
         if mode.startswith("static:"):
@@ -183,12 +187,12 @@ class ServingEngine:
         serve_params = {"raw": self.raw, "overlays": self.overlays,
                         "est": est}
 
-        def tick(state, tokens, target_idx):
+        def tick(state, tokens, target_idx, active=None):
             lin = DynamicLinearApplier(
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend)
+                backend=self.backend, active=active)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin)
             return logits, new_state, lin.effective_bits()
@@ -377,7 +381,12 @@ class ServingEngine:
         out = jnp.concatenate([jnp.asarray(prompt), gen], axis=1)
         self.host_syncs += 2
         tokens_np = np.asarray(out)
-        ebits = [float(e) for e in np.asarray(ebs[p:p + max_new])]
+        # ebits[i] is the tick that PRODUCED generated token i: the token
+        # emitted at position p+i comes out of tick p-1+i, so the bits
+        # slice is aligned with the token slice above (not shifted one
+        # tick late, which would drop the first generated token's bits and
+        # report the final, discarded tick instead)
+        ebits = [float(e) for e in np.asarray(ebs[p - 1:p - 1 + max_new])]
         return tokens_np, ebits
 
     # -- accounting ---------------------------------------------------------------

@@ -50,12 +50,25 @@ class QueryBitTracker:
             self.per_query_bits.append(float(np.mean(step_bits)))
 
     def percentile_increase(self, q: float) -> float:
-        """(q-th percentile − mean) / mean of per-query effective bits."""
+        """(q-th percentile − mean) / mean of per-query effective bits.
+
+        Defined as 0.0 for an empty or zero-mean tracker (no queries to
+        deviate from / no scale to deviate against) — never NaN and never
+        a numpy RuntimeWarning.
+        """
+        if not self.per_query_bits:
+            return 0.0
         arr = np.asarray(self.per_query_bits)
         mean = arr.mean()
+        if mean == 0.0:
+            return 0.0
         return float((np.percentile(arr, q) - mean) / mean)
 
     def summary(self) -> Dict[str, float]:
+        """Distribution report; ``{}`` when no queries were recorded
+        (callers key off the empty dict instead of catching NaN)."""
+        if not self.per_query_bits:
+            return {}
         arr = np.asarray(self.per_query_bits)
         return {
             "mean": float(arr.mean()),

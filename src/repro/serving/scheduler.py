@@ -13,6 +13,14 @@ Mechanics:
   axis — each slot carries its own KV cache, its own position, its own
   target index, and makes its own per-step precision decisions (the
   estimator reduction never mixes slots);
+- the per-slot running mask rides into the vmapped tick as the applier's
+  ``active`` flag: an idle (``total_len == 0``) or finished slot selects
+  ``b_sel = 0``, and the vmapped bit-serial matmul — dispatched through
+  ``jax.custom_batching.custom_vmap`` to the slot-batched Pallas kernel —
+  fetches **none** of that slot's weight planes (per-slot DMA elision via
+  the scalar-prefetched b_sel vector) and skips its MXU work, so busy
+  slots never pay for idle ones and every slot's plane traffic is
+  ∝ its own precision;
 - prefill and generation are unified on device: a slot still consuming its
   prompt is teacher-forced from its prompt buffer, a generating slot feeds
   back its last token — all under one ``lax.scan`` chunk;
@@ -170,21 +178,30 @@ class SlotScheduler:
             def body(carry, _):
                 state, cur, count = carry
                 filling = count < prompt_len
+                # running doubles as the per-slot active mask: an idle
+                # (total_len == 0) or finished slot selects b_sel = 0 in
+                # the applier, so the batched bit-serial kernel fetches
+                # none of its weight planes and does no MXU work for it
+                running = count < total_len
                 idx = jnp.clip(count, 0, prompt_buf.shape[1] - 1)
                 ptok = jnp.take_along_axis(prompt_buf, idx[:, None],
                                            axis=1)[:, 0]
                 tok = jnp.where(filling, ptok, cur)
                 logits, state, eb = jax.vmap(tick)(
-                    state, tok[:, None, None], target_ix)
+                    state, tok[:, None, None], target_ix, running)
                 nxt = jnp.argmax(logits[:, 0, 0, :vocab],
                                  axis=-1).astype(jnp.int32)
-                running = count < total_len
-                emit_tok = running & (count >= prompt_len - 1) & \
+                # one mask for tokens AND bits: both come from the tick
+                # that PRODUCED the emitted token (ticks prompt_len-1 ..
+                # total_len-2). A separate ``running & ~filling`` bits
+                # mask would be one tick late — dropping the first
+                # generated token's bits and reporting the final,
+                # discarded tick's bits instead.
+                emit = running & (count >= prompt_len - 1) & \
                     (count < total_len - 1)
-                emit_bits = running & ~filling
                 cur = jnp.where(running, nxt, cur)
                 count = count + running.astype(jnp.int32)
-                return (state, cur, count), (nxt, eb, emit_tok, emit_bits)
+                return (state, cur, count), (nxt, eb, emit)
 
             (state, cur, step_count), ys = jax.lax.scan(
                 body, (state, cur, step_count), None, length=length)
@@ -199,7 +216,7 @@ class SlotScheduler:
         return jax.jit(chunk, donate_argnums=(0, 1, 2),
                        in_shardings=self._shardings,
                        out_shardings=(state_sh, vec_sh, vec_sh) +
-                                     (ys_sh,) * 4)
+                                     (ys_sh,) * 3)
 
     def _make_admit(self):
         def admit(state, cur, step_count, prompt_buf, prompt_len,
@@ -264,7 +281,7 @@ class SlotScheduler:
     def _run_chunk(self) -> None:
         with self.engine._mesh_ctx():
             (self._state, self._cur, self._step_count,
-             toks, ebs, emit_tok, emit_bits) = self._chunk_fn(
+             toks, ebs, emit) = self._chunk_fn(
                 self._state, self._cur, self._step_count, self._prompt_buf,
                 self._prompt_len, self._total_len, self._target_ix)
         # ONE host sync per chunk: pack emissions + slot progress into a
@@ -273,19 +290,18 @@ class SlotScheduler:
         c = self.chunk
         host = np.asarray(jnp.concatenate([
             toks.astype(jnp.float32), ebs.astype(jnp.float32),
-            emit_tok.astype(jnp.float32), emit_bits.astype(jnp.float32),
+            emit.astype(jnp.float32),
             self._step_count[None, :].astype(jnp.float32),
             self._total_len[None, :].astype(jnp.float32)], axis=0))
         toks = host[:c].astype(np.int32)
         ebs = host[c:2 * c]
-        emit_tok = host[2 * c:3 * c] > 0.5
-        emit_bits = host[3 * c:4 * c] > 0.5
-        counts, totals = host[4 * c], host[4 * c + 1]
+        emit = host[2 * c:3 * c] > 0.5
+        counts, totals = host[3 * c], host[3 * c + 1]
         for si, slot in enumerate(self._slots):
             if slot.request is None:
                 continue
-            slot.gen_tokens.extend(toks[emit_tok[:, si], si].tolist())
-            slot.gen_bits.extend(ebs[emit_bits[:, si], si].tolist())
+            slot.gen_tokens.extend(toks[emit[:, si], si].tolist())
+            slot.gen_bits.extend(ebs[emit[:, si], si].tolist())
             if counts[si] >= totals[si]:
                 self._retire(si)
 

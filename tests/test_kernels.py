@@ -36,6 +36,30 @@ def test_bitserial_dtypes(dtype):
     np.testing.assert_allclose(y_int, y_ref, rtol=1e-4, atol=1e-3)
 
 
+def test_unknown_backend_rejected():
+    """A typo'd backend raises up front instead of silently reaching the
+    dispatch un-padded / un-validated."""
+    w = jax.random.normal(jax.random.PRNGKey(30), (64, 128)) * 0.2
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(31), (2, 64))
+    with pytest.raises(ValueError, match="unknown backend"):
+        bitserial_matmul(x, ql, 3, backend="Interpret")
+    with pytest.raises(ValueError, match="unknown backend"):
+        dequant_matmul(x, ql, 3, backend="cuda")
+
+
+def test_bitserial_b_sel_zero_is_zeros_unbatched():
+    """b_sel = 0 (an inactive applier outside the slot vmap) follows the
+    same idle contract as the batched path: zeros, not the oracle's
+    midpoint-correction residue."""
+    w = jax.random.normal(jax.random.PRNGKey(21), (64, 128)) * 0.2
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(22), (2, 64))
+    for backend in ("ref", "interpret"):
+        np.testing.assert_array_equal(
+            np.asarray(bitserial_matmul(x, ql, 0, backend=backend)), 0.0)
+
+
 def test_bitserial_traffic_skips_planes():
     """The clamped index_map means planes >= b_sel are never re-fetched:
     consecutive grid steps past b_sel name the same block index."""
@@ -88,11 +112,138 @@ def test_dequant_matmul_interpret_vs_ref(bits_active):
                                rtol=2e-4, atol=2e-3)
 
 
-def test_dequant_matmul_small_shapes_fall_back():
-    # non-tileable shapes silently use the oracle (dispatch correctness)
+def test_dequant_small_shapes_auto_falls_back_to_oracle():
+    # auto mode on non-tileable shapes uses the oracle (and logs once)
     w = jax.random.normal(jax.random.PRNGKey(9), (96, 40)) * 0.1
     ql = quantize_linear(w, bits=6)
     x = jax.random.normal(jax.random.PRNGKey(10), (3, 96))
-    y = dequant_matmul(x, ql, 4, backend="interpret")
+    y = dequant_matmul(x, ql, 4)
     np.testing.assert_allclose(y, x @ materialize(ql, 4), rtol=2e-4,
                                atol=2e-3)
+
+
+def test_dequant_explicit_backend_pads_n():
+    """backend="interpret" is honored on untileable N: the wrapper pads N
+    to the tile and slices back instead of silently rerouting to the
+    oracle."""
+    w = jax.random.normal(jax.random.PRNGKey(9), (512, 40)) * 0.1
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(10), (256, 512))
+    y = dequant_matmul(x, ql, 4, backend="interpret")
+    assert y.shape == (256, 40)
+    np.testing.assert_allclose(y, x @ materialize(ql, 4), rtol=2e-4,
+                               atol=2e-3)
+
+
+def test_dequant_explicit_backend_rejects_untileable_mk():
+    w = jax.random.normal(jax.random.PRNGKey(9), (512, 256)) * 0.1
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(10), (3, 512))
+    with pytest.raises(ValueError, match="backend='interpret'"):
+        dequant_matmul(x, ql, 4, backend="interpret")
+
+
+def test_bitserial_explicit_backend_pads_n():
+    """Explicit kernel backends never silently fall back: untileable N is
+    padded to the tile (zero-scale pad columns) and sliced back."""
+    w = jax.random.normal(jax.random.PRNGKey(11), (64, 40)) * 0.2
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 64))
+    y_int = bitserial_matmul(x, ql, 3, backend="interpret")
+    assert y_int.shape == (2, 40)
+    np.testing.assert_allclose(y_int, bitserial_matmul(x, ql, 3,
+                                                       backend="ref"),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_int, x @ materialize(ql, 3),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Batched-slot kernel: per-slot DMA elision over heterogeneous precisions
+# ---------------------------------------------------------------------------
+def _slot_setup(k=64, n=256, bits=6, slots=5, m=2, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.2
+    ql = quantize_linear(w, bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (slots, m, k)).astype(jnp.float32)
+    return ql, x
+
+
+@pytest.mark.parametrize("b_sel", [[3, 0, 6, 1, 0], [2, 2, 2, 2, 2],
+                                   [0, 0, 0, 0, 0], [6, 5, 4, 3, 1]])
+def test_slot_kernel_interpret_vs_vmapped_ref(b_sel):
+    """The batched kernel is bit-level-equivalent to the vmapped oracle
+    across heterogeneous per-slot precisions, including idle (b_sel = 0)
+    slots (defined as zero output) and all-idle batches."""
+    from repro.kernels.bitserial import (bitserial_matmul_slots_pallas,
+                                         bitserial_matmul_slots_ref)
+    ql, x = _slot_setup()
+    bvec = jnp.asarray(b_sel, jnp.int32)
+    scale, zero = ql.scale[None, :], ql.zero[None, :]
+    y_ref = bitserial_matmul_slots_ref(x, ql.planes, scale, zero, bvec,
+                                       bits=ql.bits)
+    y_int = bitserial_matmul_slots_pallas(x, ql.planes, scale, zero, bvec,
+                                          bits=ql.bits, tile_n=128,
+                                          interpret=True)
+    y_int = jnp.where((bvec > 0)[:, None, None], y_int, 0.0)
+    np.testing.assert_allclose(y_int, y_ref, rtol=1e-5, atol=1e-5)
+    for s, b in enumerate(b_sel):
+        if b == 0:
+            np.testing.assert_array_equal(np.asarray(y_ref[s]), 0.0)
+        else:
+            np.testing.assert_allclose(
+                y_ref[s], x[s] @ materialize(ql, b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_vmapped_bitserial_dispatches_to_slot_batch(backend):
+    """jax.vmap over (x, b_sel) — the scheduler's slot axis — routes
+    through the custom_vmap rule into the slot-batched path instead of
+    generically lifting the single-request kernel."""
+    from repro.kernels.bitserial import TRACE_COUNTS, \
+        bitserial_matmul_slots_ref
+    ql, x = _slot_setup()
+    bvec = jnp.asarray([3, 0, 6, 1, 2], jnp.int32)
+    before = TRACE_COUNTS.get("slots", 0)
+    y = jax.vmap(lambda xs, bs: bitserial_matmul(xs, ql, bs,
+                                                 backend=backend))(x, bvec)
+    assert TRACE_COUNTS.get("slots", 0) > before   # slot path, not generic
+    y_ref = bitserial_matmul_slots_ref(
+        x, ql.planes, ql.scale[None, :], ql.zero[None, :], bvec,
+        bits=ql.bits)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_slot_dispatch_no_retrace_across_b_sel():
+    """Different b_sel vectors (same shapes) reuse ONE compiled slot
+    dispatch — precision churn in the scheduler never retraces."""
+    from repro.kernels.bitserial import TRACE_COUNTS
+    ql, x = _slot_setup(seed=20)
+    fn = lambda xs, bs: bitserial_matmul(xs, ql, bs, backend="ref")
+    jax.vmap(fn)(x, jnp.asarray([1, 2, 3, 4, 5], jnp.int32))   # warm
+    before = dict(TRACE_COUNTS)
+    for bvec in ([5, 4, 3, 2, 1], [0, 0, 6, 0, 1], [6, 6, 6, 6, 6]):
+        jax.vmap(fn)(x, jnp.asarray(bvec, jnp.int32))
+    assert TRACE_COUNTS == before, (before, TRACE_COUNTS)
+
+
+def test_slot_plane_traffic_proportional_to_bits():
+    """The elision contract, asserted: walking the grid through the
+    kernel's actual plane index_map counts n_tiles * sum(b_sel) fetches
+    (+1 when the batch ends idle) — NOT slots * n_tiles * bits. Idle slots
+    pin to one block, so an idle run costs at most one fetch."""
+    from repro.kernels.bitserial import plane_block_fetches
+    bits, n_tiles = 6, 4
+    for b_sel in ([3, 0, 6, 1, 0], [1, 1, 1, 1], [6, 6], [2, 0, 0, 4]):
+        got = plane_block_fetches(b_sel, n_tiles, bits)
+        want = n_tiles * sum(b_sel) + (1 if b_sel[-1] == 0 else 0)
+        assert got == want, (b_sel, got, want)
+        naive = len(b_sel) * n_tiles * bits
+        assert got <= naive
+        if any(b < bits for b in b_sel):
+            assert got < naive
+    # all-idle batch: the whole grid names one pinned block
+    assert plane_block_fetches([0, 0, 0], n_tiles, bits) == 1
+    # adding one bit to one busy slot costs exactly n_tiles more fetches
+    base = plane_block_fetches([3, 2, 4], n_tiles, bits)
+    assert plane_block_fetches([3, 3, 4], n_tiles, bits) == base + n_tiles

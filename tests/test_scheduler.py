@@ -77,6 +77,33 @@ def test_scheduler_matches_engine_generate(engine, tiny_bundle):
         np.testing.assert_allclose(ebits, r.effective_bits, atol=1e-5)
 
 
+def test_scheduler_idle_slots_inert_and_bits_aligned(engine, tiny_bundle):
+    """One request surrounded by permanently idle slots: the idle slots
+    run at b_sel = 0 (zero plane traffic in the batched kernel) and must
+    be completely inert — the busy slot decodes exactly like a solo
+    engine.generate run. Its effective bits line up with teacher-forcing
+    the generated sequence: bits[i] is the tick that PRODUCED token i
+    (engine-vs-scheduler parity for the corrected alignment)."""
+    cfg, _, model, _ = tiny_bundle
+    sched = SlotScheduler(engine, _planner(model), slots=4, max_prompt=8,
+                          max_new=5, chunk=4)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    req = Request(rid=0, prompt=prompt, max_new=5, tpot_budget_s=6e-3)
+    done = sched.run([req])[0]
+    assert sum(1 for s in sched._slots if s.request is not None) == 0
+
+    out, ebits = engine.generate(prompt[None, :], 5, done.target)
+    assert np.array_equal(out[0], done.tokens)
+    np.testing.assert_allclose(ebits, done.effective_bits, atol=1e-5)
+
+    p = len(prompt)
+    _, tf_ebits = engine.teacher_forced_nll(done.tokens[None, :],
+                                            done.target)
+    np.testing.assert_allclose(done.effective_bits,
+                               tf_ebits[p - 1:p - 1 + 5], atol=1e-5)
+
+
 def test_scheduler_no_retrace_after_warmup(engine, tiny_bundle):
     """Admission/retirement churn reuses the one compiled chunk."""
     cfg, _, model, _ = tiny_bundle

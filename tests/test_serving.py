@@ -65,6 +65,24 @@ def test_qos_planner_monotone():
     assert pl.plan(1e-9) == 3.0      # infeasible -> min precision
 
 
+def test_query_bit_tracker_empty_and_zero_mean():
+    """Empty / degenerate trackers report cleanly — no NaN, no numpy
+    RuntimeWarning, no crash."""
+    import warnings
+
+    tr = QueryBitTracker()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # any warning -> failure
+        assert tr.summary() == {}
+        assert tr.percentile_increase(99) == 0.0
+        tr.record_query([])                      # empty query is a no-op
+        assert tr.summary() == {}
+        tr.record_query([0.0, 0.0])              # zero-mean: defined as 0
+        assert tr.percentile_increase(99) == 0.0
+        s = tr.summary()
+    assert s["mean"] == 0.0 and np.isfinite(s["p99_increase"])
+
+
 def test_query_bit_tracker_percentiles():
     tr = QueryBitTracker()
     rng = np.random.default_rng(0)
@@ -80,7 +98,10 @@ def test_query_bit_tracker_percentiles():
 # ---------------------------------------------------------------------------
 def test_scan_decode_matches_stepwise(engine, tiny_bundle):
     """Fused chunked-scan generate == token-by-token loop over get_step:
-    identical tokens AND identical per-step effective bits."""
+    identical tokens AND identical per-step effective bits, where
+    ``ebits[i]`` is the bits of the tick that PRODUCED generated token i
+    (the first generated token comes out of the last prompt-consuming
+    tick)."""
     import jax.numpy as jnp
     from repro.serving import make_decode_state
 
@@ -94,16 +115,31 @@ def test_scan_decode_matches_stepwise(engine, tiny_bundle):
                               dtype=jnp.float32)
     toks = jnp.asarray(prompt)
     for t in range(prompt.shape[1]):
-        logits, state, _ = step(state, toks[:, t:t + 1])
+        logits, state, eb_last = step(state, toks[:, t:t + 1])
     cur = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1)
     ref_toks, ref_ebits = [], []
     for _ in range(max_new):
+        # eb_last belongs to the tick that produced ``cur``
         ref_toks.append(int(cur[0, 0]))
-        logits, state, eb = step(state, cur)
-        ref_ebits.append(float(eb))
+        ref_ebits.append(float(eb_last))
+        logits, state, eb_last = step(state, cur)
         cur = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1)
     assert list(out[0, prompt.shape[1]:]) == ref_toks
     np.testing.assert_allclose(ebits, ref_ebits, atol=1e-5)
+
+
+def test_generate_bits_align_with_teacher_forcing(engine, tiny_bundle):
+    """Feeding generate()'s own output back through teacher forcing drives
+    the exact same tick stream, so the per-token bits must line up: token
+    p+i was produced by tick p-1+i. A one-tick-late slice would miss the
+    first generated token's bits and report the final, discarded tick."""
+    _, _, _, batches = tiny_bundle
+    prompt = batches[0][0][:1, :4]
+    p, max_new = prompt.shape[1], 6
+    out, gen_ebits = engine.generate(prompt, max_new, 3.5)
+    _, tf_ebits = engine.teacher_forced_nll(out, 3.5)
+    np.testing.assert_allclose(
+        gen_ebits, tf_ebits[p - 1:p - 1 + max_new], atol=1e-5)
 
 
 def test_no_retrace_across_targets(engine, tiny_bundle):

@@ -96,6 +96,14 @@ sched_m.run(requests(1))
 assert sharded.trace_counts == baseline, (baseline,
                                           sharded.trace_counts)
 
+# the batched kernel's b_sel prefetch vector carries the slot axis:
+# slots -> 'data' when divisible (per-DP-group precisions), else replicated
+from repro.distributed.sharding import slot_prefetch_spec
+assert "data" in str(slot_prefetch_spec(mesh, 4)), \
+    slot_prefetch_spec(mesh, 4)
+assert str(slot_prefetch_spec(mesh, 3)) == "PartitionSpec(None,)", \
+    slot_prefetch_spec(mesh, 3)
+
 # fused-scan host-sync invariant holds on the mesh too
 n0 = sharded.host_syncs
 out_m, bits_m = sharded.generate(
