@@ -1,12 +1,18 @@
 """Paper Tables 4 / 5 / 6 analog: precision-selector overhead.
 
-Two views (no TPU in-container):
+Three views (no TPU in-container):
+- fused planner vs per-unit inline decisions: traced ops dispatched on
+  the decode critical path (O(1) vs O(U) — the PR-4 pipeline's tested
+  invariant) and decide-phase wall clock, decisions bit-identical;
 - measured CPU wall-clock per decode step: static baseline vs DP-LLM
-  dynamic, and the Table-6 ablation (RP-only vs hybrid vs hybrid+async);
+  dynamic (pipelined planner) vs inline-sync, and the Table-6 ablation
+  (RP-only vs hybrid vs hybrid+async);
 - the analytic TPU v5e model: selector FLOPs/bytes vs the decode GEMV
   traffic at each effective bitwidth (the paper's Table 5 latency scaling).
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -14,6 +20,73 @@ from benchmarks import hw
 from benchmarks.common import built_model, emit, eval_ppl, eval_sequences
 from repro.models import linear_units
 from repro.serving import ServingEngine
+
+
+def fused_vs_inline(engine: ServingEngine, quick: bool = False) -> dict:
+    """Fused one-launch planner vs the legacy per-unit inline selector.
+
+    Both consume the SAME (U, M, K_max) captured-activation buffer and
+    must produce identical decisions; what differs is the dispatch
+    shape: one fused kernel/einsum vs ~5 scattered jnp ops per unit.
+    Returns {n_units, inline_eqns, fused_eqns, inline_dots, fused_dots,
+    inline_us, fused_us, identical}.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.common import count_jaxpr_primitives
+
+    art = engine.artifacts
+    bundle = art.decision
+    planner = engine.planner("dynamic")
+    serve_params = {"raw": {}, "overlays": {}, "est": engine.est}
+    rng = np.random.default_rng(0)
+    # honor the capture contract: each unit's row is zero beyond its true
+    # estimator width (the applier zero-pads to K_max)
+    raw = rng.normal(size=(bundle.n_units, 1, bundle.k_pad))
+    raw *= (np.arange(bundle.k_pad)[None, None, :] <
+            bundle.k_actual[:, None, None])
+    acts = jnp.asarray(raw.astype(np.float32))
+
+    def inline_decide(acts, t):
+        return planner.inline_reference(acts, t, serve_params, art.table)
+
+    def fused_decide(acts, t):
+        return planner.plan(acts, t)
+
+    t0 = jnp.int32(0)
+    jx_i = jax.make_jaxpr(inline_decide)(acts, t0)
+    jx_f = jax.make_jaxpr(fused_decide)(acts, t0)
+    inline_fn = jax.jit(inline_decide)
+    fused_fn = jax.jit(fused_decide)
+    same = bool(np.array_equal(np.asarray(inline_fn(acts, t0)),
+                               np.asarray(fused_fn(acts, t0))))
+
+    def wall(fn, reps):
+        fn(acts, t0)                     # compile
+        t = time.monotonic()
+        for _ in range(reps):
+            r = fn(acts, t0)
+        jax.block_until_ready(r)
+        return (time.monotonic() - t) / reps * 1e6
+
+    reps = 20 if quick else 200
+    res = {
+        "n_units": bundle.n_units,
+        "inline_eqns": count_jaxpr_primitives(jx_i.jaxpr),
+        "fused_eqns": count_jaxpr_primitives(jx_f.jaxpr),
+        "inline_dots": count_jaxpr_primitives(jx_i.jaxpr, "dot_general"),
+        "fused_dots": count_jaxpr_primitives(jx_f.jaxpr, "dot_general"),
+        "inline_us": wall(inline_fn, reps),
+        "fused_us": wall(fused_fn, reps),
+        "identical": same,
+    }
+    emit("planner/inline", res["inline_us"],
+         f"eqns={res['inline_eqns']} dots={res['inline_dots']} "
+         f"units={res['n_units']}")
+    emit("planner/fused", res["fused_us"],
+         f"eqns={res['fused_eqns']} dots={res['fused_dots']} "
+         f"identical={same} speedup={res['inline_us'] / res['fused_us']:.2f}x")
+    return res
 
 
 def analytic_tpot(cfg, model, target: float, include_selector: bool):
@@ -38,6 +111,10 @@ def main(quick: bool = False) -> dict:
     cfg, params, model = built_model()
     toks = eval_sequences(cfg, n=1, seq=96 if quick else 128)
     results = {}
+
+    # --- fused planner vs inline selector (the PR-4 decision pipeline) -----
+    results["planner"] = fused_vs_inline(ServingEngine(cfg, params, model),
+                                         quick=quick)
 
     # --- measured wall-clock (Table 4 / 6 analog) ---------------------------
     for t in (3.5, 4.5):
@@ -106,5 +183,41 @@ def main(quick: bool = False) -> dict:
     return results
 
 
+def planner_smoke() -> dict:
+    """Self-contained fused-vs-inline gate for CI: a fresh tiny-dense
+    build (no trained bench-lm / artifact cache needed), asserting the
+    decide/apply invariants — identical decisions, one estimator GEMM."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import build_multiscale_model
+    from repro.models import init_model_params
+
+    cfg = get_config("tiny-dense")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [(rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32),
+                rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32))]
+    model = build_multiscale_model(cfg, params, batches,
+                                   targets=[3.5, 4.5], finetune_epochs=1,
+                                   baselines=())
+    res = fused_vs_inline(ServingEngine(cfg, params, model), quick=True)
+    assert res["identical"], "fused planner diverged from inline selector"
+    assert res["fused_dots"] == 1, res
+    assert res["inline_dots"] > res["fused_dots"], res
+    return res
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter eval sequences, fewer timing reps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fused-vs-inline planner gate only (tiny model, "
+                         "no artifact cache) — the CI smoke variant")
+    args = ap.parse_args()
+    if args.smoke:
+        planner_smoke()
+    else:
+        main(quick=args.quick)

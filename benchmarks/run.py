@@ -3,10 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV rows per the harness convention.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only MODULE]
+  PYTHONPATH=src python -m benchmarks.run --json [PATH]
+
+``--json`` runs the serve-path collection alone and writes a
+machine-readable ``BENCH_serve.json`` (decode tokens/s, mean effective
+bits, fused-planner overhead) so the perf trajectory is tracked across
+PRs; combine with ``--quick`` for the CI smoke variant.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -25,11 +32,59 @@ MODULES = [
 ]
 
 
+def collect_serve_json(quick: bool) -> dict:
+    """The tracked serve-path numbers: decode throughput, effective bits,
+    and the fused-planner-vs-inline decision overhead."""
+    from benchmarks.common import built_model, eval_ppl, eval_sequences
+    from benchmarks.estimator_overhead import fused_vs_inline
+    from repro.serving import ServingEngine
+
+    cfg, params, model = built_model()
+    engine = ServingEngine(cfg, params, model)
+    toks = eval_sequences(cfg, n=1, seq=64 if quick else 128)
+    target = 4.0
+    prompt, max_new = toks[:, :8], (24 if quick else 64)
+    engine.generate(prompt, max_new, target)            # compile
+    t0 = time.monotonic()
+    _, gen_bits = engine.generate(prompt, max_new, target)
+    gen_wall = time.monotonic() - t0
+    engine.teacher_forced_nll(toks[:1], target)         # compile
+    ppl, eff_bits, us_step = eval_ppl(engine, toks, target)
+    planner = fused_vs_inline(engine, quick=quick)
+    return {
+        "target": target,
+        "decode_tokens_per_s": max_new / gen_wall,
+        "teacher_forced_us_per_step": us_step,
+        "perplexity": ppl,
+        "effective_bits": eff_bits,
+        "generate_effective_bits": float(sum(gen_bits) / len(gen_bits)),
+        "planner": planner,
+        "quick": quick,
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="write the serve-path metrics to PATH and exit")
     args = ap.parse_args()
+
+    if args.json:
+        t0 = time.monotonic()
+        blob = collect_serve_json(args.quick)
+        blob["wall_s"] = time.monotonic() - t0
+        with open(args.json, "w") as fh:
+            json.dump(blob, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}: "
+              f"{blob['decode_tokens_per_s']:.1f} tok/s, "
+              f"eff_bits={blob['effective_bits']:.3f}, planner fused "
+              f"{blob['planner']['fused_eqns']} eqns vs inline "
+              f"{blob['planner']['inline_eqns']}")
+        return 0
 
     failures = 0
     for name, desc in MODULES:

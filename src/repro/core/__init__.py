@@ -1,9 +1,12 @@
 """DP-LLM core: the paper's contribution as a composable JAX module."""
-from repro.core.adaptation import (AdaptationSet, MultiScaleModel,
-                                   ServeArtifacts, UnitAdaptation,
-                                   UnitStatic, export_serve_arrays,
+from repro.core.adaptation import (AdaptationSet, DecisionBundle,
+                                   MultiScaleModel, ServeArtifacts,
+                                   UnitAdaptation, UnitStatic,
+                                   export_decision_bundle,
+                                   export_serve_arrays,
                                    export_static_arrays)
 from repro.core.allocator import allocate_precisions, uniform_allocation
+from repro.core.decision import PrecisionPlanner
 from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
                                  bitserial_matmul_ref, delta_weight,
                                  materialize, materialize_stacked,
@@ -15,12 +18,14 @@ from repro.core.pipeline import (build_multiscale_model, quantize_units,
 from repro.core.quantizer import dequantize, quantize_channelwise
 
 __all__ = [
-    "AdaptationSet", "DynamicLinearApplier", "EstimatorFit",
-    "MultiScaleModel", "QuantizedLinear", "QuantizedStacked",
+    "AdaptationSet", "DecisionBundle", "DynamicLinearApplier",
+    "EstimatorFit", "MultiScaleModel", "PrecisionPlanner",
+    "QuantizedLinear", "QuantizedStacked",
     "ServeArtifacts", "UnitAdaptation", "UnitStatic",
     "allocate_precisions", "bitserial_matmul_ref",
     "build_multiscale_model", "delta_weight", "dequantize", "estimate",
-    "export_serve_arrays", "export_static_arrays", "fit_estimator",
+    "export_decision_bundle", "export_serve_arrays",
+    "export_static_arrays", "fit_estimator",
     "materialize", "materialize_stacked", "quantize_channelwise",
     "quantize_linear", "quantize_stacked", "quantize_units",
     "static_allocation", "uniform_allocation",

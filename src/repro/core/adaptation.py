@@ -37,6 +37,25 @@ is replicated; the trailing K (and N) axes carry the same logical axis as
 the weight the artifact gates, so the estimator operands shard exactly
 like the matmul operands beside them. Reordering or re-stacking any of
 these arrays is a cross-layer breaking change.
+
+Unit-stacked decision bundle — the fused-planner contract
+---------------------------------------------------------
+The per-path ``est`` dict above is the *inline* (per-unit) view. The
+serving hot path instead consumes a :class:`DecisionBundle`: every
+scalar artifact additionally stacked over a leading **units** axis
+``(U, T)`` in a fixed row order (``paths`` / ``row_of`` is the static
+unit⇄row table), plus one packed G-matrix stack ``(R, k_proj, K_max)``
+holding only the JL rows (row 0 is a zero dummy) with ``g_row (U, T)``
+mapping each (unit, target) to its packed row. ``g_row`` carries the
+DMA-elision contract of the fused planner kernel: a non-JL (unit,
+target) re-names the *previous* unit's row, so consecutive grid steps
+fetch no new block (see ``kernels/jl_estimator``). ``K_max`` is the max
+estimator width over units, rounded up to a TPU lane multiple; all x
+rows and G matrices are zero-padded to it, which leaves every norm and
+projection mathematically unchanged. The bundle's row order, paddings,
+and ``g_row`` semantics are relied on by ``core/decision``,
+``core/dynamic_linear``, the jl_estimator kernels, and the scheduler's
+(S, U) decision carry — another cross-layer contract.
 """
 from __future__ import annotations
 
@@ -140,6 +159,65 @@ class UnitStatic:
     stacked: bool = False
 
 
+LANE = 128                 # TPU lane width: decision-bundle K padding
+
+
+@dataclass
+class DecisionBundle:
+    """Unit-stacked decision arrays for the fused precision planner.
+
+    One row per precision unit, in the fixed ``paths`` order (the static
+    unit⇄row table the lookup applier and the planner share). With U
+    units, T targets, R packed JL rows and K_max the padded estimator
+    width::
+
+        l, h, kind   : (U, T) int32
+        threshold,
+        a, b, gamma  : (U, T) float32   (0 where the kind doesn't use them)
+        g            : (R, k_proj, K_max) float32 — packed JL G matrices;
+                       row 0 is an all-zero dummy
+        g_row        : (U, T) int32 — (unit, target) -> packed G row.
+                       Non-JL entries REPEAT the previous unit's row
+                       (unit 0 falls back to the dummy row 0) so the
+                       fused kernel's consecutive grid steps re-name the
+                       same block and fetch nothing — the planner-side
+                       DMA-elision contract.
+        max_bits     : (U,) int32  — Phase-1 cap (mode="max" / prefill)
+        sizes        : (U,) float32 — parameter counts M_i, the weights
+                       of the vectorized effective-bits reduction
+        k_actual     : (U,) int32  — true estimator input width per unit
+    """
+    paths: Tuple[str, ...]
+    row_of: Dict[str, int]
+    k_pad: int
+    k_proj: int
+    l: np.ndarray
+    h: np.ndarray
+    kind: np.ndarray
+    threshold: np.ndarray
+    a: np.ndarray
+    b: np.ndarray
+    gamma: np.ndarray
+    g: np.ndarray
+    g_row: np.ndarray
+    max_bits: np.ndarray
+    sizes: np.ndarray
+    k_actual: np.ndarray
+
+    @property
+    def n_units(self) -> int:
+        return len(self.paths)
+
+    def stack_static(self, static_arrays: Dict[str, np.ndarray]
+                     ) -> np.ndarray:
+        """``path -> (T,)`` static-method bits, stacked to ``(U, T)``."""
+        t = self.l.shape[1]
+        out = np.zeros((self.n_units, t), np.int32)
+        for u, p in enumerate(self.paths):
+            out[u] = np.asarray(static_arrays[p], np.int32)
+        return out
+
+
 @dataclass
 class ServeArtifacts:
     """Array-form adaptation artifacts for the unified serving applier.
@@ -149,10 +227,16 @@ class ServeArtifacts:
       a, b                  : (T,)   — present iff any target is linear
       gamma                 : (T,)   — present iff any target is JL
       g                     : (T, k_proj, K) — ditto
+
+    ``decision`` is the same information re-stacked over a leading units
+    axis (:class:`DecisionBundle`) for the fused one-launch-per-tick
+    planner; ``est`` remains the per-unit view the inline (sync
+    fallback) path consumes.
     """
     targets: Tuple[float, ...]
     table: Dict[str, UnitStatic]
     est: Dict[str, Dict[str, np.ndarray]]
+    decision: Optional["DecisionBundle"] = None
 
     def target_index(self, target: float) -> int:
         for i, t in enumerate(self.targets):
@@ -224,7 +308,88 @@ def export_serve_arrays(model: MultiScaleModel) -> ServeArtifacts:
             async_eligible=ua0.async_eligible,
             stacked=(ua0.kind or "").startswith("expert_"),
         )
-    return ServeArtifacts(targets=targets, table=table, est=est)
+    bundle = export_decision_bundle(model, table, est)
+    return ServeArtifacts(targets=targets, table=table, est=est,
+                          decision=bundle)
+
+
+def _overlay_dims(ov) -> Tuple[int, float]:
+    """(reduction dim, legacy per-decision parameter count) of an overlay."""
+    if ov.planes.ndim == 4:                       # stacked (E, B, K/32, N)
+        e, _, _, n = ov.planes.shape
+        return ov.k, float(e * ov.k * n)
+    return ov.k, float(ov.k * ov.planes.shape[-1])
+
+
+def export_decision_bundle(
+    model: MultiScaleModel,
+    table: Dict[str, UnitStatic],
+    est: Dict[str, Dict[str, np.ndarray]],
+) -> DecisionBundle:
+    """Re-stack the per-unit serve arrays over a leading units axis.
+
+    Row order is the (deterministic) iteration order of ``est``; the
+    ``sizes`` weights reproduce the inline applier's per-decision
+    parameter counts exactly (``k * n`` per overlay, ``E * k * n`` for
+    stacked MoE units), so the vectorized effective-bits reduction is
+    bit-compatible with the legacy per-call records.
+    """
+    paths = tuple(est.keys())
+    n_u = len(paths)
+    n_t = len(next(iter(est.values()))["l"]) if n_u else 0
+    widths = [1]
+    for p in paths:
+        k, _ = _overlay_dims(model.overlays[p])
+        widths.append(k)
+        if "g" in est[p]:
+            widths.append(est[p]["g"].shape[-1])
+    k_pad = -(-max(widths) // LANE) * LANE
+    k_proj = max([e["g"].shape[1] for e in est.values() if "g" in e],
+                 default=1)
+
+    sh = (n_u, n_t)
+    li = np.zeros(sh, np.int32)
+    hi = np.zeros(sh, np.int32)
+    kind = np.zeros(sh, np.int32)
+    thr = np.zeros(sh, np.float32)
+    a = np.zeros(sh, np.float32)
+    b = np.zeros(sh, np.float32)
+    gamma = np.zeros(sh, np.float32)
+    g_row = np.zeros(sh, np.int32)
+    max_bits = np.zeros((n_u,), np.int32)
+    sizes = np.zeros((n_u,), np.float32)
+    k_actual = np.zeros((n_u,), np.int32)
+
+    g_rows: List[np.ndarray] = [np.zeros((k_proj, k_pad), np.float32)]
+    prev_row = np.zeros((n_t,), np.int32)         # row 0: zero dummy
+    for u, p in enumerate(paths):
+        e = est[p]
+        li[u], hi[u], kind[u] = e["l"], e["h"], e["kind"]
+        thr[u] = e["threshold"]
+        if "a" in e:
+            a[u], b[u] = e["a"], e["b"]
+        if "gamma" in e:
+            gamma[u] = e["gamma"]
+        for t in range(n_t):
+            if kind[u, t] == KIND_JL and "g" in e:
+                gm = np.asarray(e["g"][t], np.float32)
+                pad = np.zeros((k_proj, k_pad), np.float32)
+                pad[:gm.shape[0], :gm.shape[1]] = gm
+                g_row[u, t] = len(g_rows)
+                g_rows.append(pad)
+            else:
+                # non-JL: re-name the previous unit's row (DMA elision)
+                g_row[u, t] = prev_row[t]
+        prev_row = g_row[u]
+        max_bits[u] = table[p].h
+        k, size = _overlay_dims(model.overlays[p])
+        sizes[u] = size
+        k_actual[u] = k
+    return DecisionBundle(
+        paths=paths, row_of={p: i for i, p in enumerate(paths)},
+        k_pad=k_pad, k_proj=k_proj, l=li, h=hi, kind=kind, threshold=thr,
+        a=a, b=b, gamma=gamma, g=np.stack(g_rows), g_row=g_row,
+        max_bits=max_bits, sizes=sizes, k_actual=k_actual)
 
 
 def serve_array_axes(

@@ -1,0 +1,164 @@
+"""Two-phase decide/apply: the fused whole-model precision planner.
+
+DP-LLM's premise is that per-layer sensitivity is re-evaluated every
+decoding step *cheaply* — the decision must never block the matmuls. The
+:class:`PrecisionPlanner` is the "decide" phase: given the unit-stacked
+:class:`repro.core.adaptation.DecisionBundle` and one ``(U, M, K_max)``
+buffer of per-unit estimator inputs, :meth:`plan` resolves the ENTIRE
+tick's ``(U,)`` bits vector in one fused launch
+(``kernels/jl_estimator.plan_bits`` — Pallas on TPU, one vectorized
+einsum elsewhere). The "apply" phase is the lookup-mode
+:class:`repro.core.dynamic_linear.DynamicLinearApplier`, which indexes
+the planned vector by the static unit⇄row table and runs the bit-serial
+matmuls.
+
+Async pipelining (paper §5.2): the serving engine's scan carries the
+decision vector as state — tick *t* captures its residual-stream
+activations and plans tick *t+1*'s bits, so when tick *t+1* starts,
+every precision is already resolved before the first matmul issues.
+Tick 0 (and ``use_async=False``) falls back to the inline per-unit sync
+path; ``mode=static/max/exact`` route through this same planner
+(static/max are pure lookups with no estimator work at all; exact adds
+per-unit ΔW estimates on top of the fused pass — an eval-mode exception
+to the one-launch guarantee, documented below).
+
+Under the scheduler's slot vmap, :meth:`plan` batches over (S, U): the
+custom_vmap rule in ``kernels/jl_estimator`` collapses the slot axis
+into one (S, U)-grid kernel launch with per-slot traced targets and
+active flags — idle slots' rows gate to 0 bits in-kernel.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptation import DecisionBundle, KIND_PINNED
+from repro.kernels.jl_estimator import plan_bits
+
+MODES = ("dynamic", "static", "max", "exact")
+
+
+class PrecisionPlanner:
+    """Computes the per-tick ``(U,)`` decision vector for one mode.
+
+    Parameters
+    ----------
+    bundle: the unit-stacked decision arrays (host numpy; converted to
+        device arrays here, optionally placed by ``put``).
+    mode: ``dynamic | static | max | exact``.
+    static_stack: ``(U, T)`` int32 — required for ``mode="static"``
+        (build with ``bundle.stack_static``).
+    exact_deltas: ``{path: (T, K, N)}`` ΔW stacks for ``mode="exact"``
+        (plain-linear units only; others keep the fused approx estimate).
+    backend: kernel backend for the fused pass (None = auto).
+    put: optional placement fn (mesh device_put) applied to every table.
+    """
+
+    def __init__(
+        self,
+        bundle: DecisionBundle,
+        *,
+        mode: str = "dynamic",
+        static_stack=None,
+        exact_deltas: Optional[Dict[str, jax.Array]] = None,
+        backend: Optional[str] = None,
+        put: Optional[Callable] = None,
+    ):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected {MODES}")
+        if mode == "static" and static_stack is None:
+            raise ValueError("mode='static' needs a static_stack")
+        put = put or jnp.asarray
+        self.bundle = bundle
+        self.mode = mode
+        self.backend = backend
+        self.tables = {name: put(jnp.asarray(getattr(bundle, name)))
+                       for name in ("l", "h", "kind", "threshold", "a",
+                                    "b", "gamma", "g", "g_row")}
+        self.max_bits = put(jnp.asarray(bundle.max_bits))
+        self.sizes = put(jnp.asarray(bundle.sizes, jnp.float32))
+        self.static_stack = None if static_stack is None else \
+            put(jnp.asarray(static_stack, jnp.int32))
+        self.exact_deltas = exact_deltas or {}
+
+    @property
+    def needs_acts(self) -> bool:
+        """Whether :meth:`plan` consumes captured activations."""
+        return self.mode in ("dynamic", "exact")
+
+    # -- the decide phase --------------------------------------------------------
+    def plan(self, acts, target_idx, active=None) -> jax.Array:
+        """The whole tick's decisions: bits ``(U,)`` int32.
+
+        ``acts`` is the applier's captured ``(U, M, K_max)`` estimator
+        inputs (ignored — pass None — for static/max). ``target_idx``
+        and ``active`` are traced scalars (per-slot under vmap);
+        ``active=False`` gates every decision to 0 bits.
+        """
+        t = jnp.asarray(target_idx, jnp.int32)
+        if self.mode == "dynamic":
+            return plan_bits(acts, self.tables, t, active,
+                             backend=self.backend)
+        if self.mode == "exact":
+            return self._plan_exact(acts, t, active)
+        if self.mode == "max":
+            bits = self.max_bits
+        else:                                        # static
+            bits = self.static_stack[:, t]
+        if active is not None:
+            bits = jnp.where(jnp.asarray(active), bits, 0)
+        return bits.astype(jnp.int32)
+
+    def _plan_exact(self, acts, t, active) -> jax.Array:
+        """Exact mode: fused approx pass, then per-unit ΔW overrides.
+
+        The override loop is O(#delta units) jnp ops — exact mode is an
+        eval/debug mode (the deltas themselves are full (T, K, N) weight
+        stacks); the one-launch guarantee applies to the dynamic mode.
+        """
+        bits = plan_bits(acts, self.tables, t, active,
+                         backend=self.backend)
+        act = jnp.int32(1) if active is None else \
+            jnp.asarray(active).astype(jnp.int32)
+        for path, delta in self.exact_deltas.items():
+            u = self.bundle.row_of[path]
+            xf = acts[u][:, :delta.shape[-2]].astype(jnp.float32)
+            est = jnp.max(jnp.linalg.norm(xf @ delta[t], axis=-1))
+            dynamic = self.tables["kind"][u, t] != KIND_PINNED
+            b_u = jnp.where(dynamic & (est > self.tables["threshold"][u, t]),
+                            self.tables["h"][u, t], self.tables["l"][u, t])
+            bits = bits.at[u].set(jnp.where(act > 0, b_u, 0))
+        return bits
+
+    # -- accounting --------------------------------------------------------------
+    def inline_reference(self, acts, target_idx,
+                         serve_params: Dict, table: Dict,
+                         *, mode: str = "dynamic",
+                         static_bits=None) -> jax.Array:
+        """The legacy per-unit selector run over the same captured rows —
+        the independent reference :meth:`plan` must match bit-for-bit
+        (asserted by tests/test_decision.py and the CI benchmark smoke).
+
+        ``serve_params``/``table``/``static_bits`` are the applier's
+        usual inputs; rows are sliced back to each unit's true width
+        before estimation, exactly as the inline path sees them.
+        """
+        from repro.core.dynamic_linear import DynamicLinearApplier
+
+        lin = DynamicLinearApplier(table, serve_params,
+                                   target_idx=target_idx, mode=mode,
+                                   static_bits=static_bits)
+        out = []
+        for i, p in enumerate(self.bundle.paths):
+            xi = acts[i, :, :int(self.bundle.k_actual[i])]
+            out.append(lin._select_bits_active(table[p], xi, None))
+        return jnp.stack(out).astype(jnp.int32)
+
+    def effective_bits(self, bits: jax.Array) -> jax.Array:
+        """Parameter-weighted mean of a decision vector (matches the
+        applier's legacy per-record reduction: sizes are the per-unit
+        ``k*n`` / ``E*k*n`` counts)."""
+        return jnp.sum(bits.astype(jnp.float32) * self.sizes) / \
+            jnp.sum(self.sizes)

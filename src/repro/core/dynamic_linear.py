@@ -9,14 +9,29 @@ and the active target is a traced index — so one compiled step serves all
 targets without retracing, and the production mesh can shard the artifacts
 like any other weight.
 
+Decide/apply split (the serving hot path): when constructed with
+``planned_bits`` — the ``(U,)`` decision vector a
+:class:`repro.core.decision.PrecisionPlanner` computed in one fused
+launch (normally at the END of the *previous* tick: the paper's async
+pipelining) — this class shrinks to **lookup-and-apply**: each unit's
+bits come from a static-row index into the planned vector, zero
+estimator ops run between the matmuls. Without ``planned_bits`` the
+legacy inline path runs (~5 jnp ops per unit): the sync fallback for
+tick 0, ``use_async=False``, and the lowering builders. With
+``capture=True`` the applier additionally records every unit's
+estimator input row so the planner can decide the NEXT tick
+(:meth:`planner_inputs`).
+
 Implements the ``lin(path, x, async_input=...)`` protocol of the model zoo:
 for each quantized unit it estimates the relative error (linear / JL /
 exact), compares against the unit's threshold at the selected target, and
 runs the bit-serial matmul at the selected precision. Non-unit paths fall
 through to the raw parameters. ``weights(path, x)`` materializes stacked
-MoE expert weights at the selected precision. Every (bits, size) decision
-is recorded so callers can account per-step **effective bitwidth** (paper
-§6.3 QoS analysis).
+MoE expert weights at the selected precision. Per-step **effective
+bitwidth** (paper §6.3 QoS analysis) is a vectorized ``(U,)`` reduction
+over the decision vector when a bundle is attached (bit-compatible with
+the historical per-call records list, which remains only for
+bundle-less builders).
 
 Array-layout contract (shared with the mesh sharding rules)
 -----------------------------------------------------------
@@ -36,7 +51,9 @@ padded reduction dim, N the output dim, B the plane budget):
 traced (and per-slot under ``vmap``), so the T axis must stay replicated
 on the mesh, while K/N axes shard like the weight they gate and the
 plane axis is never split (a precision is a *prefix* of planes). See
-``core/adaptation.serve_array_axes`` for the canonical axis names.
+``core/adaptation.serve_array_axes`` for the canonical axis names, and
+``core/adaptation.DecisionBundle`` for the unit-stacked row order that
+``planned_bits`` / :meth:`planner_inputs` follow.
 """
 from __future__ import annotations
 
@@ -45,9 +62,17 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.adaptation import KIND_LINEAR, KIND_PINNED, UnitStatic
+from repro.core.adaptation import (DecisionBundle, KIND_LINEAR, KIND_PINNED,
+                                   UnitStatic)
 from repro.core.bitplane import QuantizedStacked, materialize_stacked
-from repro.kernels.bitserial import bitserial_matmul
+
+
+def _bitserial_matmul(*args, **kw):
+    # deferred: repro.kernels.bitserial's oracle imports core.bitplane,
+    # so a module-level import here cycles when the kernels package is
+    # imported first (e.g. `import repro.kernels.jl_estimator`)
+    from repro.kernels.bitserial import bitserial_matmul
+    return bitserial_matmul(*args, **kw)
 
 
 def _row_view(x: jax.Array) -> jax.Array:
@@ -85,6 +110,20 @@ class DynamicLinearApplier:
         materialized weights for consistency, but their dense vmapped
         build has no per-slot elision (a batched stacked kernel is future
         work). ``None`` (the engine's dense path) means always active.
+    bundle: optional :class:`DecisionBundle` — enables the vectorized
+        effective-bits reduction, ``planned_bits`` lookups, and
+        activation capture. The serving engine/scheduler always attach
+        it; bundle-less construction keeps the legacy records path for
+        the lowering builders.
+    planned_bits: optional ``(U,)`` int32 decision vector (the planner's
+        output for THIS tick). When given, ``_select_bits`` is a pure
+        row lookup — no estimator ops on the critical path. The
+        ``active`` gate still applies at use time (planned bits were
+        gated with the PREVIOUS tick's mask).
+    capture: record each unit's estimator input row (async-eligible
+        units: the pre-norm residual via ``async_input`` when
+        ``use_async``; otherwise the unit's own input) for
+        :meth:`planner_inputs`.
     """
 
     def __init__(
@@ -98,7 +137,16 @@ class DynamicLinearApplier:
         use_async: bool = True,
         backend: Optional[str] = None,
         active=None,
+        bundle: Optional[DecisionBundle] = None,
+        planned_bits: Optional[jax.Array] = None,
+        capture: bool = False,
     ):
+        if planned_bits is not None and bundle is None:
+            raise ValueError("planned_bits needs the decision bundle's "
+                             "unit⇄row table")
+        if capture and bundle is None:
+            raise ValueError("capture=True needs the decision bundle's "
+                             "row order and K padding")
         self.table = table
         self.raw = serve_params["raw"]
         self.overlays = serve_params["overlays"]
@@ -109,12 +157,21 @@ class DynamicLinearApplier:
         self.use_async = use_async
         self.backend = backend
         self.active = active
+        self.bundle = bundle
+        self.planned_bits = planned_bits
+        self.capture = capture
         self.records: List[Tuple[jax.Array, float]] = []
+        n_u = bundle.n_units if bundle is not None else 0
+        self._bits_rows: List[Optional[jax.Array]] = [None] * n_u
+        self._act_rows: List[Optional[jax.Array]] = [None] * n_u
 
     # -- precision selection ---------------------------------------------------
     def _select_bits(self, u: UnitStatic, x: jax.Array,
                      async_input) -> jax.Array:
-        bits = self._select_bits_active(u, x, async_input)
+        if self.planned_bits is not None:
+            bits = self.planned_bits[self.bundle.row_of[u.path]]
+        else:
+            bits = self._select_bits_active(u, x, async_input)
         if self.active is not None:
             # idle slot: 0 bits — the batched kernel elides every plane DMA
             bits = jnp.where(self.active, bits, jnp.int32(0))
@@ -122,6 +179,8 @@ class DynamicLinearApplier:
 
     def _select_bits_active(self, u: UnitStatic, x: jax.Array,
                             async_input) -> jax.Array:
+        """Legacy inline per-unit decision — the planner's reference
+        semantics (tested bit-identical) and the sync fallback."""
         t = self.target_idx
         if self.mode == "max":
             return jnp.int32(u.h)
@@ -133,15 +192,20 @@ class DynamicLinearApplier:
                 return e["l"][t]
             return jnp.int32(u.l)
         l, h = e["l"][t], e["h"][t]
-        x_est = async_input if (self.use_async and u.async_eligible and
-                                async_input is not None) else x
-        xf = _row_view(x_est)
+        xf = _row_view(self._est_input(u, x, async_input))
         if self.mode == "exact" and "delta" in e:
             est = jnp.max(jnp.linalg.norm(xf @ e["delta"][t], axis=-1))
         else:
             est = self._approx_estimate(e, xf, t)
         dynamic = e["kind"][t] != KIND_PINNED
         return jnp.where(dynamic & (est > e["threshold"][t]), h, l)
+
+    def _est_input(self, u: UnitStatic, x: jax.Array, async_input):
+        """The unit's estimator input: pre-norm residual for async-eligible
+        units under ``use_async``, the unit's own input otherwise."""
+        if self.use_async and u.async_eligible and async_input is not None:
+            return async_input
+        return x
 
     def _approx_estimate(self, e: Dict, xf: jax.Array, t) -> jax.Array:
         est_lin = est_jl = None
@@ -159,6 +223,35 @@ class DynamicLinearApplier:
             return est_lin
         return jnp.where(e["kind"][t] == KIND_LINEAR, est_lin, est_jl)
 
+    # -- decision/activation bookkeeping ----------------------------------------
+    def _account(self, u: UnitStatic, bits: jax.Array, size: float,
+                 x: jax.Array, async_input) -> None:
+        if self.bundle is None:
+            self.records.append((bits, size))
+            return
+        row = self.bundle.row_of[u.path]
+        self._bits_rows[row] = bits
+        if self.capture:
+            xf = _row_view(self._est_input(u, x, async_input))
+            self._act_rows[row] = _match_width(xf, self.bundle.k_pad)
+
+    def planner_inputs(self) -> jax.Array:
+        """The tick's captured estimator rows, unit-stacked (U, M, K_max)
+        in bundle row order — the fused planner's input for the NEXT
+        tick's decisions.
+
+        Units a decode tick statically never applies (e.g. enc-dec
+        cross-attention K/V projections, computed once at session start)
+        contribute zero rows — their planned bits are never looked up,
+        and zero rows cost nothing beyond the fixed (U, M, K) buffer.
+        """
+        applied = [a for a in self._act_rows if a is not None]
+        if not applied:
+            raise RuntimeError("no unit was applied this tick")
+        zero = jnp.zeros_like(applied[0])
+        return jnp.stack([a if a is not None else zero
+                          for a in self._act_rows])
+
     # -- lin protocol ------------------------------------------------------------
     def __call__(self, path: str, x: jax.Array, *,
                  async_input=None) -> jax.Array:
@@ -171,8 +264,9 @@ class DynamicLinearApplier:
                               self.raw[path]).astype(x.dtype)
         u = self.table[path]
         bits = self._select_bits(u, x, async_input)
-        self.records.append((bits, float(ov.k * ov.planes.shape[-1])))
-        y = bitserial_matmul(x, ov, bits, backend=self.backend)
+        self._account(u, bits, float(ov.k * ov.planes.shape[-1]), x,
+                      async_input)
+        y = _bitserial_matmul(x, ov, bits, backend=self.backend)
         return y.astype(x.dtype)
 
     def weights(self, path: str, x: jax.Array, *,
@@ -184,7 +278,7 @@ class DynamicLinearApplier:
         u = self.table[path]
         bits = self._select_bits(u, x, async_input)
         e, _, _, n = ov.planes.shape
-        self.records.append((bits, float(e * ov.k * n)))
+        self._account(u, bits, float(e * ov.k * n), x, async_input)
         w = materialize_stacked(ov, bits).astype(x.dtype)
         if self.active is not None:
             # idle contract for stacked units: zero weights (bits = 0
@@ -195,8 +289,32 @@ class DynamicLinearApplier:
         return w
 
     # -- accounting ----------------------------------------------------------------
+    def decision_vector(self) -> jax.Array:
+        """The tick's applied decisions as a (U,) int32 vector (bundle
+        row order) — what actually ran, post ``active`` gating. Rows of
+        statically-unapplied units are 0 (see :meth:`effective_bits` for
+        how they are excluded from accounting)."""
+        zero = jnp.int32(0)
+        return jnp.stack([b if b is not None else zero
+                          for b in self._bits_rows]).astype(jnp.int32)
+
     def effective_bits(self) -> jax.Array:
-        """Parameter-weighted mean of this step's precision decisions."""
+        """Parameter-weighted mean of this step's precision decisions.
+
+        With a bundle attached this is the vectorized (U,) reduction
+        over the decision vector (sizes = the bundle's per-unit k·n
+        counts — identical weights to the legacy per-call records).
+        Units the traced step never applied are masked out of both the
+        numerator and the denominator, matching the legacy records
+        semantics (applied-ness is a trace-time constant)."""
+        if self.bundle is not None:
+            applied = [b is not None for b in self._bits_rows]
+            if not any(applied):           # no quantized unit in the trace
+                return jnp.float32(0.0)    # (matches the records path)
+            mask = jnp.asarray(applied, jnp.float32)
+            sizes = jnp.asarray(self.bundle.sizes, jnp.float32) * mask
+            bits = self.decision_vector().astype(jnp.float32)
+            return jnp.sum(bits * sizes) / jnp.sum(sizes)
         if not self.records:
             return jnp.float32(0.0)
         num = sum(b.astype(jnp.float32) * s for b, s in self.records)

@@ -40,7 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, JL_PROJ,
                                  KV_HEADS, PLANES, SLOTS, SSM_HEADS,
-                                 SSM_INNER, TARGETS, VOCAB)
+                                 SSM_INNER, TARGETS, UNITS, VOCAB)
 
 Rules = Dict[Optional[str], Tuple[str, ...]]
 
@@ -76,6 +76,12 @@ SERVE_RULES: Rules = {
                                 # reads a *prefix* of it — never shard
     SLOTS: ("data",),           # continuous-batching slots: each DP group
                                 # decodes its own admitted requests
+    UNITS: (),                  # decision-bundle unit axis: the planner's
+                                # (U,) bits vector is consumed by static
+                                # row lookups inside every layer — it must
+                                # stay replicated (its K_max pad mixes
+                                # units with different weight axes, so the
+                                # packed G stack replicates too)
     None: (),
 }
 
@@ -238,6 +244,21 @@ def slot_prefetch_spec(mesh: Mesh, slots: int,
     explicit shardings must use this spec for b_sel.
     """
     return slot_vec_spec(mesh, (slots,), rules)
+
+
+def decision_carry_spec(mesh: Mesh, shape: Sequence[int],
+                        rules: Optional[Rules] = None) -> P:
+    """The pipelined decision carry's sharding.
+
+    ``(U,)`` — the engine's per-tick bits vector — is replicated (UNITS
+    never shards: every layer's lookup reads it). ``(S, U)`` — the
+    scheduler's per-slot carry — shards slots → 'data' like every other
+    per-slot control vector, units replicated, so each data-parallel
+    group carries only its own slots' decisions.
+    """
+    rules = rules or SERVE_RULES
+    axes = (SLOTS, UNITS) if len(shape) == 2 else (UNITS,)
+    return resolve_spec(shape, axes, mesh, rules)
 
 
 def decode_state_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:

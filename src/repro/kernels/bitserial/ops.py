@@ -24,12 +24,14 @@ zeros. ``TRACE_COUNTS`` counts Python traces of each dispatch entry point
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import TYPE_CHECKING, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitplane import QuantizedLinear
+if TYPE_CHECKING:                    # annotation-only: a module-level import
+    from repro.core.bitplane import QuantizedLinear   # would cycle through
+                                                      # repro.core/__init__
 from repro.kernels.bitserial.kernel import (bitserial_matmul_pallas,
                                             bitserial_matmul_slots_pallas)
 from repro.kernels.bitserial.ref import (bitserial_matmul_ref,

@@ -25,3 +25,28 @@ def pad_overlay_n(planes: jax.Array, scale: jax.Array, zero: jax.Array,
     scale = jnp.pad(scale, ((0, 0), (0, pad)))
     zero = jnp.pad(zero, ((0, 0), (0, pad)))
     return planes, scale, zero
+
+
+def count_jaxpr_primitives(jaxpr, name: str | None = None) -> int:
+    """Count primitive eqns in a jaxpr, recursing into sub-jaxprs (pjit
+    bodies, scans, custom calls).
+
+    ``name=None`` counts every eqn; otherwise only eqns of that
+    primitive (e.g. ``"dot_general"``). This is how the repo's op-count
+    invariants are asserted — e.g. the fused decision planner issuing
+    exactly ONE estimator GEMM regardless of unit count
+    (tests/test_kernels.py, benchmarks/estimator_overhead.py).
+    """
+    total = 0
+    for eqn in jaxpr.eqns:
+        if name is None or eqn.primitive.name == name:
+            total += 1
+        for v in eqn.params.values():
+            # sub-jaxprs hide both as direct params (pjit/scan) and
+            # inside tuples/lists (lax.cond/switch 'branches')
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for item in vs:
+                inner = getattr(item, "jaxpr", None)
+                if inner is not None:
+                    total += count_jaxpr_primitives(inner, name)
+    return total

@@ -11,12 +11,14 @@ from __future__ import annotations
 
 import functools
 import logging
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitplane import QuantizedLinear
+if TYPE_CHECKING:                    # annotation-only: a module-level import
+    from repro.core.bitplane import QuantizedLinear   # would cycle through
+                                                      # repro.core/__init__
 from repro.kernels.common import pad_overlay_n
 from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
 from repro.kernels.dequant_matmul.ref import dequant_matmul_ref

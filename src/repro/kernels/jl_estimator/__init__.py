@@ -1,5 +1,11 @@
-from repro.kernels.jl_estimator.kernel import jl_estimate_pallas
-from repro.kernels.jl_estimator.ops import jl_estimate
-from repro.kernels.jl_estimator.ref import jl_estimate_ref
+from repro.kernels.jl_estimator.kernel import (g_block_fetches,
+                                               jl_estimate_pallas,
+                                               plan_bits_pallas,
+                                               plan_bits_slots_pallas)
+from repro.kernels.jl_estimator.ops import (TRACE_COUNTS, jl_estimate,
+                                            plan_bits)
+from repro.kernels.jl_estimator.ref import jl_estimate_ref, plan_bits_ref
 
-__all__ = ["jl_estimate", "jl_estimate_pallas", "jl_estimate_ref"]
+__all__ = ["TRACE_COUNTS", "g_block_fetches", "jl_estimate",
+           "jl_estimate_pallas", "jl_estimate_ref", "plan_bits",
+           "plan_bits_pallas", "plan_bits_ref", "plan_bits_slots_pallas"]

@@ -1,13 +1,32 @@
-"""Fused JL relative-error estimator (Pallas TPU).
+"""Fused JL relative-error estimator + decision planner (Pallas TPU).
 
-Estimates ``err_l = ||G_l x||`` for a *stack* of layers that share the same
-input — exactly the async-eligible q/k/v/up group of one transformer block
-(DESIGN.md §2.2) — and compares against per-layer thresholds in-kernel,
-emitting both the estimate and the high/low precision decision.
+Two kernels share this file:
 
-For batched decode the per-layer decision must stay uniform across the batch
-(one GEMM per layer), so the kernel reduces with ``max`` over batch rows —
-the conservative aggregate (any row that needs h-bit upgrades the layer).
+* ``jl_estimate_pallas`` — estimates ``err_l = ||G_l x||`` for a *stack*
+  of layers that share the same input — the async-eligible q/k/v/up group
+  of one transformer block (DESIGN.md §2.2) — and compares against
+  per-layer thresholds in-kernel, emitting both the estimate and the
+  high/low precision decision.
+
+* ``plan_bits_pallas`` — the whole-model decision pass: ONE launch
+  resolves the precision of every unit for a decode tick. Grid = (U,),
+  one step per unit; per-unit estimator inputs ride in as a unit-stacked
+  ``(U, M, K_max)`` buffer, the target-gathered l/h/kind/a/b/γ/threshold
+  scalars ride in as SMEM scalar-prefetch vectors, and the packed JL
+  G-matrix stack's ``index_map`` reads the scalar-prefetched ``g_row``
+  table: linear/pinned units *re-name the previous unit's G block*
+  (:func:`_g_block`), so Pallas elides their HBM→VMEM copy — G traffic
+  is ∝ the number of JL units at the active target, not U
+  (:func:`g_block_fetches` is the host-side model of this contract).
+  The idle gate (``active == 0``) zeroes every decision in-kernel — the
+  batched bit-serial matmul treats 0 bits as "fetch no planes".
+  ``plan_bits_slots_pallas`` is the continuous-batching variant: grid
+  (S, U) with per-slot traced targets and active flags.
+
+For batched decode the per-layer decision must stay uniform across the
+batch (one GEMM per layer), so both kernels reduce with ``max`` over
+batch rows — the conservative aggregate (any row that needs h-bit
+upgrades the layer). The M axis is NEVER a per-row decision axis.
 
 Grid = (L,): one step per stacked layer; ``x`` is named by a constant
 index_map so it is copied into VMEM once.
@@ -18,8 +37,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.jl_estimator.ref import KIND_LINEAR, KIND_PINNED
 
 # renamed upstream (TPUCompilerParams -> CompilerParams); support both
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
@@ -83,3 +105,171 @@ def jl_estimate_pallas(
         ),
         interpret=interpret,
     )(x, g_stack, thresholds)
+
+
+# ---------------------------------------------------------------------------
+# Fused decision planner: one launch resolves every unit's precision
+# ---------------------------------------------------------------------------
+def _plan_unit_bits(x, g, l, h, kind, a, b, gamma, thr, act):
+    """One unit's decision from VMEM-resident x (M, K) and g (kproj, K).
+
+    Shared by the single and slot-batched kernel bodies. The linear and
+    JL estimates are both evaluated (the JL GEMM is k_proj × K × M —
+    noise next to the decode matmuls; skipping it per-kind would cost a
+    branch without saving meaningful MXU time) and selected by kind; the
+    *DMA* for non-JL units is already elided by the G index_map.
+    """
+    xn = jnp.sqrt(jnp.sum(x * x, axis=-1))                 # (M,)
+    est_lin = jnp.max(a * xn + b)
+    y = jax.lax.dot_general(g, x, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (kproj, M)
+    est_jl = gamma * jnp.sqrt(jnp.max(jnp.sum(y * y, axis=0)))
+    est = jnp.where(kind == KIND_LINEAR, est_lin, est_jl)
+    bits = jnp.where(kind == KIND_PINNED, l,
+                     jnp.where(est > thr, h, l))
+    return jnp.where(act > 0, bits, 0).astype(jnp.int32)
+
+
+def _plan_kernel(t_act_ref, grow_ref, l_ref, h_ref, kind_ref, a_ref, b_ref,
+                 gam_ref, thr_ref, x_ref, g_ref, bits_ref):
+    u = pl.program_id(0)
+    bits_ref[0, 0] = _plan_unit_bits(
+        x_ref[0], g_ref[0], l_ref[u], h_ref[u], kind_ref[u], a_ref[u],
+        b_ref[u], gam_ref[u], thr_ref[u], t_act_ref[1])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def plan_bits_pallas(
+    x: jax.Array,          # (U, M, K) float32 — per-unit estimator inputs
+    g: jax.Array,          # (R, kproj, K) float32 — packed JL G stack
+    g_row_t: jax.Array,    # (U,) int32 — packed G row per unit (elision)
+    l_t: jax.Array,        # (U,) int32
+    h_t: jax.Array,        # (U,) int32
+    kind_t: jax.Array,     # (U,) int32
+    a_t: jax.Array,        # (U,) float32
+    b_t: jax.Array,        # (U,) float32
+    gamma_t: jax.Array,    # (U,) float32
+    thr_t: jax.Array,      # (U,) float32
+    t_act: jax.Array,      # (2,) int32 [target_idx, active]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns bits (U, 1) int32 — the whole tick's decisions, one launch."""
+    u, m, k = x.shape
+    r, kproj, k2 = g.shape
+    assert k == k2, (k, k2)
+
+    def x_map(i, *refs):
+        del refs
+        return (i, 0, 0)
+
+    def g_map(i, t_act_ref, grow_ref, *refs):
+        del t_act_ref, refs
+        # non-JL rows repeat the previous unit's row -> copy elided
+        return (grow_ref[i], 0, 0)
+
+    def out_map(i, *refs):
+        del refs
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=9,
+        grid=(u,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), x_map),
+            pl.BlockSpec((1, kproj, k), g_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1), out_map),
+    )
+    return pl.pallas_call(
+        _plan_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, 1), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(t_act, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t, x, g)
+
+
+def _plan_slots_kernel(act_ref, grow_ref, l_ref, h_ref, kind_ref, a_ref,
+                       b_ref, gam_ref, thr_ref, x_ref, g_ref, bits_ref):
+    s, u = pl.program_id(0), pl.program_id(1)
+    bits_ref[0, 0] = _plan_unit_bits(
+        x_ref[0, 0], g_ref[0], l_ref[s, u], h_ref[s, u], kind_ref[s, u],
+        a_ref[s, u], b_ref[s, u], gam_ref[s, u], thr_ref[s, u], act_ref[s])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def plan_bits_slots_pallas(
+    x: jax.Array,          # (S, U, M, K) float32
+    g: jax.Array,          # (R, kproj, K) float32 — shared packed stack
+    g_row_t: jax.Array,    # (S, U) int32 — per-slot target-gathered rows
+    l_t: jax.Array,        # (S, U) int32
+    h_t: jax.Array,        # (S, U) int32
+    kind_t: jax.Array,     # (S, U) int32
+    a_t: jax.Array,        # (S, U) float32
+    b_t: jax.Array,        # (S, U) float32
+    gamma_t: jax.Array,    # (S, U) float32
+    thr_t: jax.Array,      # (S, U) float32
+    active: jax.Array,     # (S,) int32 — 0 gates the slot's row to 0 bits
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns bits (S, U) int32 — all slots' decisions in one launch."""
+    s, u, m, k = x.shape
+    r, kproj, k2 = g.shape
+    assert k == k2, (k, k2)
+
+    def x_map(si, i, *refs):
+        del refs
+        return (si, i, 0, 0)
+
+    def g_map(si, i, act_ref, grow_ref, *refs):
+        del act_ref, refs
+        return (grow_ref[si, i], 0, 0)
+
+    def out_map(si, i, *refs):
+        del refs
+        return (si, i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=9,
+        grid=(s, u),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, k), x_map),
+            pl.BlockSpec((1, kproj, k), g_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1), out_map),
+    )
+    return pl.pallas_call(
+        _plan_slots_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, u), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(active, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t, x, g)
+
+
+def g_block_fetches(g_row_t) -> int:
+    """Host-side model of the planner kernel's G-matrix HBM traffic.
+
+    Walks the planner grid in iteration order through the actual G
+    ``index_map`` (the scalar-prefetched ``g_row`` table) and counts the
+    steps whose named block differs from the previous step's — exactly
+    the HBM→VMEM copies Pallas cannot elide. Because non-JL units repeat
+    the previous unit's row (core/adaptation's ``g_row`` contract), the
+    count equals the number of JL units at the active target, plus one
+    fetch when the walk *starts* on the zero dummy row (a leading non-JL
+    run) — i.e. G traffic is ∝ #JL units, not U. Accepts a (U,) single
+    walk or (S, U) slot-batched rows (flattened in grid order).
+    """
+    rows = np.asarray(g_row_t, dtype=np.int64).reshape(-1)
+    fetches, prev = 0, None
+    for r in rows:
+        if int(r) != prev:
+            fetches += 1
+            prev = int(r)
+    return fetches

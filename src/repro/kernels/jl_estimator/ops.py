@@ -1,18 +1,46 @@
-"""jit'd public wrapper for the fused JL estimator."""
+"""jit'd public wrappers for the fused JL estimator / decision planner.
+
+``jl_estimate`` is the layer-group estimator (paper DESIGN.md §2.2);
+``plan_bits`` is the whole-model decision pass the serving engine runs
+once per decode tick: every unit's precision resolved in ONE fused
+launch (Pallas on TPU, a single vectorized einsum elsewhere), instead of
+~5 scattered jnp ops per unit inlined between the decode matmuls.
+
+Batched dispatch (the continuous-batching scheduler): ``plan_bits`` is
+wrapped in :func:`jax.custom_batching.custom_vmap`, so when the
+scheduler vmaps the decode tick over slots the planner collapses into
+the (S, U)-grid slot kernel — per-slot traced targets and active flags,
+one launch for the whole batch — rather than being generically lifted.
+``TRACE_COUNTS`` counts Python traces of each dispatch entry point (the
+no-retrace-across-targets/slots guarantee is testable).
+"""
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.jl_estimator.kernel import jl_estimate_pallas
-from repro.kernels.jl_estimator.ref import jl_estimate_ref
+from repro.kernels.jl_estimator.kernel import (jl_estimate_pallas,
+                                               plan_bits_pallas,
+                                               plan_bits_slots_pallas)
+from repro.kernels.jl_estimator.ref import jl_estimate_ref, plan_bits_ref
+
+# Python-trace counters per dispatch entry point ("estimate" / "plan" /
+# "plan_slots"): increments happen at trace time only, so a counter that
+# stays flat across calls with different targets/activations proves the
+# compiled kernel is reused.
+TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _count_trace(key: str) -> None:
+    TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _dispatch(x, g_stack, thresholds, *, backend: str):
+    _count_trace("estimate")
     if backend == "ref":
         return jl_estimate_ref(x, g_stack, thresholds)
     return jl_estimate_pallas(
@@ -26,7 +54,15 @@ def jl_estimate(
     *,
     backend: Optional[str] = None,
 ):
-    """Returns (err (L,), select_high (L,) int32)."""
+    """Returns (err (L,), select_high (L,) int32).
+
+    Multi-row contract: ``x`` with leading dims is flattened to (M, K)
+    and the M rows form a *batch sharing one decision per layer* — the
+    kernel reduces ``max`` over rows (the conservative aggregate: any
+    row that needs the high precision upgrades the layer). Callers that
+    want per-row estimates must loop rows themselves; nothing here ever
+    silently returns row 0's estimate.
+    """
     if backend is None:
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
     xm = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
@@ -34,3 +70,108 @@ def jl_estimate(
         xm, g_stack.astype(jnp.float32),
         thresholds.reshape((-1, 1)).astype(jnp.float32), backend=backend)
     return err[:, 0], sel[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused decision planner
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _plan_dispatch(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t,
+                   thr_t, t_act, *, backend: str):
+    _count_trace("plan")
+    if backend == "ref":
+        return plan_bits_ref(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t,
+                             gamma_t, thr_t, t_act)
+    bits = plan_bits_pallas(
+        x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t, t_act,
+        interpret=(backend == "interpret"))
+    return bits[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _plan_dispatch_slots(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t,
+                         gamma_t, thr_t, t_act, *, backend: str):
+    """Slot-batched planner: x (S, U, M, K), tables (S, U), t_act (S, 2)."""
+    _count_trace("plan_slots")
+    if backend == "ref":
+        return jax.vmap(plan_bits_ref,
+                        in_axes=(0, None, 0, 0, 0, 0, 0, 0, 0, 0, 0))(
+            x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t,
+            t_act)
+    return plan_bits_slots_pallas(
+        x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t,
+        t_act[:, 1], interpret=(backend == "interpret"))
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_batchable(backend: str):
+    """custom_vmap'd core: unmapped calls run the single-tick planner;
+    a mapped call (the scheduler's slot axis) collapses into the (S, U)
+    slot kernel instead of generic Pallas batching.
+
+    Cached per backend so repeated traces reuse ONE custom_vmap object."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t,
+           t_act):
+        return _plan_dispatch(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t,
+                              gamma_t, thr_t, t_act, backend=backend)
+
+    @fn.def_vmap
+    def _vmap_rule(axis_size, in_batched, x, g, g_row_t, l_t, h_t, kind_t,
+                   a_t, b_t, gamma_t, thr_t, t_act):
+        if in_batched[1]:
+            # a batched G stack is not the serving layout: generic mapping
+            axes = tuple(0 if b else None for b in in_batched)
+            y = jax.vmap(functools.partial(_plan_dispatch, backend=backend),
+                         in_axes=axes)(x, g, g_row_t, l_t, h_t, kind_t,
+                                       a_t, b_t, gamma_t, thr_t, t_act)
+            return y, True
+
+        def bc(v, batched):
+            return v if batched else \
+                jnp.broadcast_to(v[None], (axis_size,) + v.shape)
+
+        args = [x, None, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t,
+                thr_t, t_act]
+        for i in (0, 2, 3, 4, 5, 6, 7, 8, 9, 10):
+            args[i] = bc(args[i], in_batched[i])
+        y = _plan_dispatch_slots(args[0], g, *args[2:], backend=backend)
+        return y, True
+
+    return fn
+
+
+def plan_bits(
+    x: jax.Array,                       # (U, M, K) per-unit estimator rows
+    tables: Dict[str, jax.Array],       # unit-stacked decision arrays
+    target_idx,
+    active=None,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """All units' precision decisions for one tick — one fused launch.
+
+    ``tables`` follows the :class:`repro.core.adaptation.DecisionBundle`
+    layout: l/h/kind/threshold/a/b/gamma/g_row (U, T) and the packed G
+    stack g (R, kproj, K). ``target_idx`` is a traced scalar (per-slot
+    under the scheduler's vmap — the custom_vmap rule collapses the slot
+    axis into the (S, U) kernel); ``active=False`` gates every decision
+    to 0 bits (idle slot). Returns bits (U,) int32.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    elif backend not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         f"'pallas', 'interpret', or 'ref'")
+    t = jnp.asarray(target_idx, jnp.int32)
+    act = jnp.int32(1) if active is None else \
+        jnp.asarray(active).astype(jnp.int32)
+    t_act = jnp.stack([t, act])
+    gather = lambda name: tables[name][:, t]
+    return _plan_batchable(backend)(
+        x.astype(jnp.float32), tables["g"],
+        gather("g_row"), gather("l"), gather("h"), gather("kind"),
+        gather("a").astype(jnp.float32), gather("b").astype(jnp.float32),
+        gather("gamma").astype(jnp.float32),
+        gather("threshold").astype(jnp.float32), t_act)

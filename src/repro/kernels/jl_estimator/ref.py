@@ -1,15 +1,53 @@
-"""Pure-jnp oracle for the fused JL estimator."""
+"""Pure-jnp oracles for the fused JL estimator and the decision planner."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+# estimator-kind codes (mirrors core/adaptation; no import to keep the
+# kernel package dependency-free)
+KIND_PINNED, KIND_LINEAR, KIND_JL = 0, 1, 2
+
 
 def jl_estimate_ref(x, g_stack, thresholds):
     """x (M,K); g_stack (L,kproj,K); thresholds (L,1) ->
-    (err (L,1) f32, select_high (L,1) i32)."""
+    (err (L,1) f32, select_high (L,1) i32).
+
+    Multi-row contract: the M rows are a *batch sharing one decision per
+    layer* — err is the row-max ||G x_m|| (the conservative aggregate:
+    any row that needs the high precision upgrades the layer), never
+    row 0 alone.
+    """
     y = jnp.einsum("lpk,mk->lpm", g_stack.astype(jnp.float32),
                    x.astype(jnp.float32))
     sq = jnp.sum(y * y, axis=1)                    # (L, M)
     err = jnp.sqrt(jnp.max(sq, axis=-1, keepdims=True))  # (L, 1)
     sel = (err > thresholds).astype(jnp.int32)
     return err, sel
+
+
+def plan_bits_ref(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t,
+                  thr_t, t_act):
+    """Fused decision oracle over the whole unit stack.
+
+    x        (U, M, K)        per-unit estimator inputs (zero-padded K)
+    g        (R, kproj, K)    packed JL G matrices (row 0 = zero dummy)
+    g_row_t  (U,) i32         per-unit packed G row at the active target
+    l/h/kind (U,) i32, a/b/gamma/thr (U,) f32 — target-gathered scalars
+    t_act    (2,) i32         [target_idx, active]; active == 0 gates
+                              every decision to 0 bits (idle slot)
+
+    Returns bits (U,) int32. Per unit: linear estimate
+    ``max_m(a*||x_m|| + b)``, JL estimate ``gamma * max_m ||G x_m||``,
+    selected by kind; pinned rows always take l. The row reduction is the
+    same conservative batch-max as :func:`jl_estimate_ref`.
+    """
+    xf = x.astype(jnp.float32)
+    xn = jnp.linalg.norm(xf, axis=-1)                       # (U, M)
+    est_lin = jnp.max(a_t[:, None] * xn + b_t[:, None], axis=-1)
+    g_t = g.astype(jnp.float32)[g_row_t]                    # (U, kproj, K)
+    proj = jnp.einsum("umk,upk->ump", xf, g_t)              # (U, M, kproj)
+    est_jl = gamma_t * jnp.max(jnp.linalg.norm(proj, axis=-1), axis=-1)
+    est = jnp.where(kind_t == KIND_LINEAR, est_lin, est_jl)
+    bits = jnp.where(kind_t == KIND_PINNED, l_t,
+                     jnp.where(est > thr_t, h_t, l_t))
+    return jnp.where(t_act[1] > 0, bits, 0).astype(jnp.int32)

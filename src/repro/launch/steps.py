@@ -122,18 +122,26 @@ def pick_microbatches(cfg: ModelConfig, global_batch: int,
 def build_serve_step(cfg: ModelConfig,
                      table_rel: Dict[str, UnitStatic],
                      *, backend: Optional[str] = None,
-                     use_async: bool = True) -> Callable:
+                     use_async: bool = True,
+                     bundle=None) -> Callable:
     """Dynamic-precision decode:
-    step(serve_params, cache, pos, tokens, target_idx)."""
+    step(serve_params, cache, pos, tokens, target_idx[, planned_bits]).
 
-    def serve_step(serve_params, cache, pos, tokens, target_idx=0):
+    ``planned_bits`` (with a decision ``bundle``) lowers the
+    lookup-and-apply half of the engine's decide/apply pipeline — the
+    dry-run's default (None) keeps inline decisions.
+    """
+
+    def serve_step(serve_params, cache, pos, tokens, target_idx=0,
+                   planned_bits=None):
         def lin_factory(view, extra):
             return DynamicLinearApplier(
                 table_rel,
                 {"raw": view, "overlays": extra["overlays"],
                  "est": extra["est"]},
                 target_idx=target_idx, backend=backend,
-                use_async=use_async)
+                use_async=use_async, bundle=bundle,
+                planned_bits=planned_bits)
 
         logits, new_cache, new_pos, eff = decode_step_stacked(
             cfg, serve_params["glob"], serve_params["stack"], cache, pos,

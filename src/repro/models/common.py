@@ -39,6 +39,8 @@ TARGETS = "targets"    # leading target-stacked axis of every serve artifact
 JL_PROJ = "jl_proj"    # JL sketch rows (k_proj) of estimator G matrices
 PLANES = "planes"      # bit-plane axis of Any-Precision overlays
 SLOTS = "slots"        # continuous-batching slot axis (scheduler state)
+UNITS = "units"        # unit-stacked axis of the decision bundle / the
+                       # planner's (U,) bits vector and (U, M, K) inputs
 
 
 @dataclass(frozen=True)

@@ -14,6 +14,18 @@
   on device and sync to the host O(1) times per query — never per token;
 - per-query effective-bit tracking feeds the QoS analysis (paper §6.3).
 
+Pipelined decision pass (``use_async=True``, the default): the scan
+carries the planner's ``(U,)`` decision vector as state. Tick *t*'s
+applier is pure lookup-and-apply (zero estimator ops between matmuls);
+at the end of tick *t* the :class:`repro.core.decision.PrecisionPlanner`
+turns the tick's captured residual-stream activations into tick *t+1*'s
+bits in ONE fused launch — the paper's async estimator scheme, with the
+decision work off the decode critical path. Tick 0 of every query runs
+as a separate "boot" tick with inline (sync, same-tick) decisions — the
+pipeline's seed — and ``use_async=False`` keeps the fully-inline legacy
+chunks. ``mode=static/max/exact`` route through the same planner
+(static/max plan with no estimator work at all).
+
 Instrumentation: ``trace_counts`` counts Python traces of each compiled
 entry point (the no-retrace guarantee is testable), ``host_syncs`` counts
 device→host transfer points (the O(1)-syncs guarantee is testable).
@@ -43,10 +55,12 @@ from repro.core.adaptation import (MultiScaleModel, export_serve_arrays,
                                    serve_array_axes)
 from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
                                  truncate_overlay, truncate_stacked)
+from repro.core.decision import PrecisionPlanner
 from repro.core.dynamic_linear import DynamicLinearApplier
 from repro.core.thresholds import delta_weight_of
 from repro.distributed.context import use_mesh
-from repro.distributed.sharding import (SERVE_RULES, decode_state_spec,
+from repro.distributed.sharding import (SERVE_RULES, decision_carry_spec,
+                                        decode_state_spec,
                                         overlay_shardings, resolve_spec)
 from repro.models import decode_step, model_logical_axes
 from repro.serving.kv_cache import make_decode_state
@@ -89,8 +103,10 @@ class ServingEngine:
                     for p, e in self.artifacts.est.items()}
         self._exact_est: Optional[Dict] = None
         self._static_arrays: Dict[str, Dict[str, jax.Array]] = {}
-        self._ticks: Dict[str, Callable] = {}
+        self._ticks: Dict[Tuple[str, str], Callable] = {}
         self._chunks: Dict[Tuple, Callable] = {}
+        self._boots: Dict[Tuple, Callable] = {}
+        self._planners: Dict[str, PrecisionPlanner] = {}
         self.trace_counts: Dict[Tuple[str, str], int] = {}
         self.host_syncs = 0
         if mesh is not None:
@@ -168,128 +184,335 @@ class ServingEngine:
                 for p, v in export_static_arrays(self.model, method).items()}
         return self._static_arrays[method]
 
-    # -- the single decode tick --------------------------------------------------
-    def build_tick(self, mode: str = "dynamic") -> Callable:
-        """Untraced ``tick(state, tokens, target_idx, active=None)``.
-
-        The scheduler vmaps this over a slot axis (per-slot positions,
-        targets, and effective bits); the engine scans it over tokens.
-        ``active`` (per-slot under vmap) gates precision selection: an
-        inactive (idle/retired) slot selects 0 bits, so the batched
-        bit-serial kernel fetches none of its planes and its quantized
-        matmuls cost no HBM traffic or MXU work.
-        """
+    # -- mode plumbing -----------------------------------------------------------
+    def _mode_env(self, mode: str):
+        """(base_mode, static_bits, serve_params) for a mode string."""
         base_mode, static_bits = mode, None
         if mode.startswith("static:"):
             base_mode = "static"
             static_bits = self._static_for(mode.split(":", 1)[1])
         est = self._est_for(base_mode)
-        serve_params = {"raw": self.raw, "overlays": self.overlays,
-                        "est": est}
+        return base_mode, static_bits, {"raw": self.raw,
+                                        "overlays": self.overlays,
+                                        "est": est}
+
+    def planner(self, mode: str = "dynamic") -> PrecisionPlanner:
+        """The mode's fused decision planner (shared by all targets)."""
+        if mode not in self._planners:
+            base_mode, static_stack, exact_deltas = mode, None, None
+            if mode.startswith("static:"):
+                base_mode = "static"
+                static_stack = self.artifacts.decision.stack_static(
+                    self._static_for(mode.split(":", 1)[1]))
+            if base_mode == "exact":
+                exact_deltas = {p: e["delta"]
+                                for p, e in self._est_for("exact").items()
+                                if "delta" in e}
+            put = None
+            if self.mesh is not None:
+                put = lambda a: self._put(a, P())   # tables replicate
+            self._planners[mode] = PrecisionPlanner(
+                self.artifacts.decision, mode=base_mode,
+                static_stack=static_stack, exact_deltas=exact_deltas,
+                backend=self.backend, put=put)
+        return self._planners[mode]
+
+    # -- the single decode tick --------------------------------------------------
+    def build_tick(self, mode: str = "dynamic") -> Callable:
+        """Untraced inline ``tick(state, tokens, target_idx, active=None)``.
+
+        The *sync* tick: every unit's precision is decided inline from
+        the current tick's activations (the legacy per-unit path). Used
+        for ``use_async=False`` and as the reference semantics; the
+        pipelined hot path uses :meth:`build_planned_tick`. ``active``
+        (per-slot under vmap) gates precision selection: an inactive
+        (idle/retired) slot selects 0 bits, so the batched bit-serial
+        kernel fetches none of its planes and its quantized matmuls cost
+        no HBM traffic or MXU work.
+        """
+        base_mode, static_bits, serve_params = self._mode_env(mode)
 
         def tick(state, tokens, target_idx, active=None):
             lin = DynamicLinearApplier(
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend, active=active)
+                backend=self.backend, active=active,
+                bundle=self.artifacts.decision)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin)
             return logits, new_state, lin.effective_bits()
 
         return tick
 
-    def _get_tick(self, mode: str) -> Callable:
-        """Jitted single step, shared by all targets of ``mode``."""
-        if mode not in self._ticks:
-            tick = self.build_tick(mode)
+    def build_planned_tick(self, mode: str = "dynamic") -> Callable:
+        """Untraced pipelined ``tick(state, tokens, target_idx,
+        planned_bits, active=None) -> (logits, state, eff_bits,
+        next_bits)``.
 
-            def counted(state, tokens, target_idx):
-                key = ("tick", mode)
-                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
-                return tick(state, tokens, target_idx)
+        The decode hot path: the applier is pure lookup-and-apply over
+        ``planned_bits`` (zero estimator ops between the matmuls), and
+        ONE fused planner launch at the end of the tick turns the
+        captured activations into the NEXT tick's decisions (the paper's
+        async pipelining — decisions are one tick stale by design). With
+        ``planned_bits=None`` the applier falls back to inline (sync,
+        same-tick) decisions — the boot variant. The scheduler vmaps
+        this over its slot axis; the planner's custom_vmap rule
+        collapses that into one (S, U) launch.
+        """
+        base_mode, static_bits, serve_params = self._mode_env(mode)
+        planner = self.planner(mode)
 
-            self._ticks[mode] = jax.jit(counted, donate_argnums=(0,))
-        return self._ticks[mode]
+        def tick(state, tokens, target_idx, planned_bits=None,
+                 active=None):
+            lin = DynamicLinearApplier(
+                self.artifacts.table, serve_params,
+                target_idx=target_idx, mode=base_mode,
+                static_bits=static_bits, use_async=self.use_async,
+                backend=self.backend, active=active,
+                bundle=self.artifacts.decision,
+                planned_bits=planned_bits, capture=planner.needs_acts)
+            logits, new_state = decode_step(self.cfg, self.raw, state,
+                                            tokens, lin=lin)
+            acts = lin.planner_inputs() if planner.needs_acts else None
+            next_bits = planner.plan(acts, target_idx, active)
+            return logits, new_state, lin.effective_bits(), next_bits
+
+        return tick
+
+    def build_boot_tick(self, mode: str = "dynamic") -> Callable:
+        """Untraced pipeline-seeding tick: the planned tick with NO
+        planned bits — inline (sync) decisions plus the planner pass
+        over the tick's captured activations, returning ``(logits,
+        state, eff_bits, next_bits)``. Tick 0 of every query (and of
+        every admitted scheduler slot) runs through this, so the first
+        pipelined tick starts with real decisions instead of a cold
+        vector."""
+        planned = self.build_planned_tick(mode)
+
+        def tick(state, tokens, target_idx, active=None):
+            return planned(state, tokens, target_idx, None, active)
+
+        return tick
+
+    def _counted_jit(self, key: Tuple[str, str], fn: Callable,
+                     **jit_kw) -> Callable:
+        def counted(*args):
+            self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+            return fn(*args)
+
+        return jax.jit(counted, **jit_kw)
+
+    def _get_tick(self, mode: str, kind: str = "sync") -> Callable:
+        """Jitted single step, shared by all targets of ``mode``.
+
+        ``kind``: ``sync`` (inline decisions), ``boot`` (inline + next
+        bits), ``planned`` (lookup + next bits).
+        """
+        key = (mode, kind)
+        if key not in self._ticks:
+            build = {"sync": self.build_tick,
+                     "boot": self.build_boot_tick,
+                     "planned": self.build_planned_tick}[kind]
+            self._ticks[key] = self._counted_jit(
+                (f"{kind}_tick", mode), build(mode), donate_argnums=(0,))
+        return self._ticks[key]
 
     def get_step(self, target: float, mode: str = "dynamic"):
         """Compat shim: ``step(state, tokens)`` at a fixed target.
 
         All targets of a mode share one compiled function — the target
         enters as a traced index, so calling this for a new target does
-        not recompile.
+        not recompile. With ``use_async=True`` the returned closure is
+        STATEFUL across calls: it threads the pipelined decision vector
+        (call 0 is the inline boot tick, later calls apply the bits the
+        previous call planned) — driving it token-by-token reproduces
+        the fused scan exactly for ONE query. To reuse the closure on a
+        fresh decode state, call ``step.reset()`` first (it clears the
+        carry so tick 0 boots again). ``use_async=False`` returns the
+        stateless inline step.
         """
-        fn = self._get_tick(mode)
         t_idx = jnp.int32(self.artifacts.target_index(target))
-        return lambda state, tokens: fn(state, tokens, t_idx)
+        if not self.use_async:
+            fn = self._get_tick(mode, "sync")
+            return lambda state, tokens: fn(state, tokens, t_idx)
+        boot = self._get_tick(mode, "boot")
+        planned = self._get_tick(mode, "planned")
+        carry = {"bits": None}
+
+        def step(state, tokens):
+            if carry["bits"] is None:
+                logits, state, eb, bits = boot(state, tokens, t_idx)
+            else:
+                logits, state, eb, bits = planned(state, tokens, t_idx,
+                                                  carry["bits"])
+            carry["bits"] = bits
+            return logits, state, eb
+
+        # one closure == one query's tick stream; call reset() before
+        # reusing it on a fresh decode state, or the first tick of the
+        # next query would apply the PREVIOUS query's final planned bits
+        # instead of running the sync boot tick
+        step.reset = lambda: carry.update(bits=None)
+        return step
 
     # -- fused chunked decode ----------------------------------------------------
+    def _emit(self, logits, gold_col, want_nll: bool):
+        """(next token (b,), gold log-prob (b,)) from one tick's logits."""
+        vocab = self.cfg.vocab_size
+        if want_nll:
+            logp = jax.nn.log_softmax(
+                logits[:, 0, :vocab].astype(jnp.float32), axis=-1)
+            gold_lp = jnp.take_along_axis(
+                logp, gold_col[:, None], axis=-1)[:, 0]
+        else:
+            gold_lp = jnp.zeros(gold_col.shape, jnp.float32)
+        nxt = jnp.argmax(logits[:, 0, :vocab], axis=-1).astype(jnp.int32)
+        return nxt, gold_lp
+
     def _get_chunk(self, mode: str, want_nll: bool,
                    state_sh=None, cache_key: Tuple = ()) -> Callable:
         """Jitted scan over ``decode_chunk`` ticks.
 
-        ``chunk(state, cur, toks, use_prompt, gold, target_idx)`` where
-        ``toks``/``gold`` are (b, C) teacher/gold tokens and ``use_prompt``
-        (C,) selects teacher forcing vs. feeding the generated token.
-        Returns (state, cur, tokens_out (C, b), eff_bits (C,),
-        gold_logp (C, b)) — everything stays on device. With
-        ``want_nll=False`` the per-tick full-vocab log-softmax is skipped
-        (generation discards it) and gold_logp is zeros.
+        Pipelined (``use_async=True``):
+        ``chunk(state, cur, bits, toks, use_prompt, gold, target_idx)``
+        — ``bits`` is the carried (U,) decision vector: each tick applies
+        it by lookup and the planner replaces it for the next tick.
+        Sync (``use_async=False``): the legacy inline chunk without the
+        bits carry. In both, ``toks``/``gold`` are (b, C) teacher/gold
+        tokens and ``use_prompt`` (C,) selects teacher forcing vs.
+        feeding the generated token. Returns (state, cur[, bits],
+        tokens_out (C, b), eff_bits (C,), gold_logp (C, b)) — everything
+        stays on device. With ``want_nll=False`` the per-tick full-vocab
+        log-softmax is skipped (generation discards it) and gold_logp is
+        zeros.
 
         On a mesh the chunk is compiled with explicit in/out shardings:
         the donated decode state keeps its KV sharding across chunks,
-        control vectors and emissions stay replicated (``state_sh`` is the
-        state's sharding tree; ``cache_key`` disambiguates state shapes,
-        whose divisibility decides the resolved specs).
+        control vectors, the decision carry, and emissions stay
+        replicated (``state_sh`` is the state's sharding tree;
+        ``cache_key`` disambiguates state shapes, whose divisibility
+        decides the resolved specs).
         """
         key = (mode, want_nll) + tuple(cache_key)
         if key in self._chunks:
             return self._chunks[key]
-        tick = self.build_tick(mode)
-        vocab = self.cfg.vocab_size
 
-        def chunk(state, cur, toks, use_prompt, gold, target_idx):
-            tkey = ("chunk", mode)
-            self.trace_counts[tkey] = self.trace_counts.get(tkey, 0) + 1
+        if self.use_async:
+            tick = self.build_planned_tick(mode)
 
-            def body(carry, xs):
-                state, cur = carry
-                tok_col, use_p, gold_col = xs
-                tok = jnp.where(use_p, tok_col, cur)[:, None]
-                logits, state, eb = tick(state, tok, target_idx)
-                if want_nll:
-                    logp = jax.nn.log_softmax(
-                        logits[:, 0, :vocab].astype(jnp.float32), axis=-1)
-                    gold_lp = jnp.take_along_axis(
-                        logp, gold_col[:, None], axis=-1)[:, 0]
-                else:
-                    gold_lp = jnp.zeros(tok_col.shape, jnp.float32)
-                nxt = jnp.argmax(logits[:, 0, :vocab],
-                                 axis=-1).astype(jnp.int32)
-                return (state, nxt), (nxt, eb, gold_lp)
+            def chunk(state, cur, bits, toks, use_prompt, gold,
+                      target_idx):
+                tkey = ("chunk", mode)
+                self.trace_counts[tkey] = \
+                    self.trace_counts.get(tkey, 0) + 1
 
-            (state, cur), (toks_out, ebs, gold_lps) = jax.lax.scan(
-                body, (state, cur), (toks.T, use_prompt, gold.T))
-            return state, cur, toks_out, ebs, gold_lps
+                def body(carry, xs):
+                    state, cur, bits = carry
+                    tok_col, use_p, gold_col = xs
+                    tok = jnp.where(use_p, tok_col, cur)[:, None]
+                    logits, state, eb, bits = tick(state, tok, target_idx,
+                                                   bits)
+                    nxt, gold_lp = self._emit(logits, gold_col, want_nll)
+                    return (state, nxt, bits), (nxt, eb, gold_lp)
+
+                (state, cur, bits), (toks_out, ebs, gold_lps) = \
+                    jax.lax.scan(body, (state, cur, bits),
+                                 (toks.T, use_prompt, gold.T))
+                return state, cur, bits, toks_out, ebs, gold_lps
+
+            n_in, n_out = 7, 6
+        else:
+            tick = self.build_tick(mode)
+
+            def chunk(state, cur, toks, use_prompt, gold, target_idx):
+                tkey = ("chunk", mode)
+                self.trace_counts[tkey] = \
+                    self.trace_counts.get(tkey, 0) + 1
+
+                def body(carry, xs):
+                    state, cur = carry
+                    tok_col, use_p, gold_col = xs
+                    tok = jnp.where(use_p, tok_col, cur)[:, None]
+                    logits, state, eb = tick(state, tok, target_idx)
+                    nxt, gold_lp = self._emit(logits, gold_col, want_nll)
+                    return (state, nxt), (nxt, eb, gold_lp)
+
+                (state, cur), (toks_out, ebs, gold_lps) = jax.lax.scan(
+                    body, (state, cur), (toks.T, use_prompt, gold.T))
+                return state, cur, toks_out, ebs, gold_lps
+
+            n_in, n_out = 6, 5
 
         if self.mesh is None:
             self._chunks[key] = jax.jit(chunk, donate_argnums=(0,))
         else:
             rep = NamedSharding(self.mesh, P())
+            in_sh = [state_sh] + [rep] * (n_in - 1)
+            out_sh = [state_sh] + [rep] * (n_out - 1)
+            if self.use_async:
+                # the (U,) decision carry rides at position 2 in both
+                # directions; its named spec (units replicated) is the
+                # same contract the scheduler's (S, U) carry shards by
+                in_sh[2] = out_sh[2] = self._bits_sharding()
             self._chunks[key] = jax.jit(
                 chunk, donate_argnums=(0,),
-                in_shardings=(state_sh, rep, rep, rep, rep, rep),
-                out_shardings=(state_sh, rep, rep, rep, rep))
+                in_shardings=tuple(in_sh), out_shardings=tuple(out_sh))
         return self._chunks[key]
+
+    def _bits_sharding(self) -> NamedSharding:
+        """The engine-path (U,) decision carry's named sharding."""
+        return NamedSharding(self.mesh, decision_carry_spec(
+            self.mesh, (self.artifacts.decision.n_units,)))
+
+    def _get_boot(self, mode: str, want_nll: bool,
+                  state_sh=None, cache_key: Tuple = ()) -> Callable:
+        """Jitted query-seeding step: tick 0 with inline (sync) decisions.
+
+        ``boot(state, cur, tok0, use_p0, gold0, target_idx) -> (state,
+        cur, bits, tok_out (b,), eff_bits (), gold_logp (b,))`` — same
+        emissions as one chunk tick, plus the planner's decision vector
+        for tick 1 (the pipeline seed).
+        """
+        key = (mode, want_nll) + tuple(cache_key)
+        if key in self._boots:
+            return self._boots[key]
+        tick = self.build_boot_tick(mode)
+
+        def boot(state, cur, tok0, use_p0, gold0, target_idx):
+            tkey = ("boot", mode)
+            self.trace_counts[tkey] = self.trace_counts.get(tkey, 0) + 1
+            tok = jnp.where(use_p0, tok0, cur)[:, None]
+            logits, state, eb, bits = tick(state, tok, target_idx)
+            nxt, gold_lp = self._emit(logits, gold0, want_nll)
+            return state, nxt, bits, nxt, eb, gold_lp
+
+        if self.mesh is None:
+            self._boots[key] = jax.jit(boot, donate_argnums=(0,))
+        else:
+            rep = NamedSharding(self.mesh, P())
+            out_sh = [state_sh] + [rep] * 5
+            out_sh[2] = self._bits_sharding()     # the seeded carry
+            self._boots[key] = jax.jit(
+                boot, donate_argnums=(0,),
+                in_shardings=(state_sh,) + (rep,) * 5,
+                out_shardings=tuple(out_sh))
+        return self._boots[key]
 
     def _run_chunks(self, mode: str, toks: np.ndarray,
                     use_prompt: np.ndarray, gold: np.ndarray,
                     target_idx: jax.Array, *, want_nll: bool):
-        """Drive the fused chunks over ``total`` ticks; device outputs."""
+        """Drive the fused decode over ``total`` ticks; device outputs.
+
+        Pipelined path: tick 0 runs as the boot step (inline sync
+        decisions seed the pipeline), ticks 1.. run as bits-carrying
+        chunks. Sync path: the legacy all-inline chunks.
+        """
         b, total = toks.shape
         c = self.decode_chunk
-        n_chunks = -(-total // c)
-        padded = n_chunks * c
+        lead = 1 if self.use_async else 0        # boot consumes tick 0
+        n_chunks = -(-(total - lead) // c) if total > lead else 0
+        padded = lead + n_chunks * c
         pad = padded - total
         toks = np.pad(toks, ((0, 0), (0, pad)))
         gold = np.pad(gold, ((0, 0), (0, pad)))
@@ -306,7 +529,8 @@ class ServingEngine:
             state = {k: jax.device_put(v, state_sh[k])
                      for k, v in state.items()}
         chunk_fn = self._get_chunk(mode, want_nll, state_sh=state_sh,
-                                   cache_key=(b, max_len))
+                                   cache_key=(b, max_len)) \
+            if n_chunks else None
         cur = jnp.zeros((b,), jnp.int32)
         out_t, out_e, out_g = [], [], []
         # any device->host pull inside the decode loop is a per-token sync
@@ -314,12 +538,28 @@ class ServingEngine:
         # hard error (on CPU, arrays are host-resident and it cannot fire,
         # so the ``host_syncs`` counter remains the tested invariant there)
         with self._mesh_ctx(), jax.transfer_guard_device_to_host("disallow"):
-            for ci in range(n_chunks):
-                sl = slice(ci * c, (ci + 1) * c)
-                state, cur, tc, ec, gc = chunk_fn(
-                    state, cur, jnp.asarray(toks[:, sl]),
-                    jnp.asarray(use_prompt[sl]), jnp.asarray(gold[:, sl]),
+            bits = None
+            if self.use_async:
+                boot_fn = self._get_boot(mode, want_nll, state_sh=state_sh,
+                                         cache_key=(b, max_len))
+                state, cur, bits, t0, e0, g0 = boot_fn(
+                    state, cur, jnp.asarray(toks[:, 0]),
+                    jnp.asarray(use_prompt[0]), jnp.asarray(gold[:, 0]),
                     target_idx)
+                out_t.append(t0[None])
+                out_e.append(e0[None])
+                out_g.append(g0[None])
+            for ci in range(n_chunks):
+                sl = slice(lead + ci * c, lead + (ci + 1) * c)
+                args = (state, cur) + ((bits,) if self.use_async else ()) \
+                    + (jnp.asarray(toks[:, sl]),
+                       jnp.asarray(use_prompt[sl]),
+                       jnp.asarray(gold[:, sl]), target_idx)
+                out = chunk_fn(*args)
+                if self.use_async:
+                    state, cur, bits, tc, ec, gc = out
+                else:
+                    state, cur, tc, ec, gc = out
                 out_t.append(tc)
                 out_e.append(ec)
                 out_g.append(gc)

@@ -13,6 +13,16 @@ Mechanics:
   axis — each slot carries its own KV cache, its own position, its own
   target index, and makes its own per-step precision decisions (the
   estimator reduction never mixes slots);
+- precision decisions are PIPELINED (``engine.use_async``, the default):
+  the chunk carries a per-slot ``(S, U)`` decision matrix; every tick
+  applies it by static row lookup and ONE fused (S, U) planner launch
+  (``kernels/jl_estimator.plan_bits`` through its custom_vmap rule)
+  replaces it for the next tick — decision work per tick is one kernel,
+  not slots × units scattered estimator ops. A freshly admitted request
+  runs its tick 0 *at admission time* through the engine's boot tick
+  (inline sync decisions — the pipeline seed), exactly like tick 0 of
+  ``engine.generate``, so a slot decoding next to strangers stays
+  bit-identical to a solo run;
 - the per-slot running mask rides into the vmapped tick as the applier's
   ``active`` flag: an idle (``total_len == 0``) or finished slot selects
   ``b_sel = 0``, and the vmapped bit-serial matmul — dispatched through
@@ -38,6 +48,8 @@ ALWAYS the slot axis)::
                  state per slot; KV leaves are (S, 1, L, kv_heads, head_dim)
     cur          (S,) int32   last generated token per slot
     step_count   (S,) int32   ticks consumed (prompt + generated)
+    bits         (S, U) int32 pipelined decision carry (planner output;
+                              admission seeds the row via the boot tick)
     prompt_buf   (S, P) int32 admitted prompt, zero-padded
     prompt_len   (S,) int32   actual prompt length
     total_len    (S,) int32   prompt_len + max_new; 0 marks an idle slot
@@ -63,7 +75,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import slot_state_spec, slot_vec_spec
+from repro.distributed.sharding import (decision_carry_spec,
+                                        slot_state_spec, slot_vec_spec)
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import make_decode_state
 from repro.serving.qos import QoSPlanner, QueryBitTracker
@@ -121,12 +134,17 @@ class SlotScheduler:
         s = self.n_slots
         max_len = self.max_prompt + self.max_new + 1
         self.mesh = engine.mesh
+        # pipelined decisions ride shotgun with the engine's async flag;
+        # a sync engine keeps the legacy all-inline vmapped tick
+        self._use_planner = engine.use_async
+        self._n_units = engine.artifacts.decision.n_units
         # per-slot state: each slot is an independent batch-1 decode state
         proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32)
         self._state = jax.tree.map(
             lambda x: jnp.zeros((s,) + x.shape, x.dtype), proto)
         self._cur = jnp.zeros((s,), jnp.int32)
         self._step_count = jnp.zeros((s,), jnp.int32)
+        self._bits = jnp.zeros((s, self._n_units), jnp.int32)
         self._prompt_buf = jnp.zeros((s, self.max_prompt), jnp.int32)
         self._prompt_len = jnp.zeros((s,), jnp.int32)
         self._total_len = jnp.zeros((s,), jnp.int32)   # 0 => slot idle
@@ -135,18 +153,33 @@ class SlotScheduler:
         if self.mesh is not None:
             self._shard_slot_state()
 
-        self._chunk_fn = self._make_chunk(engine.build_tick(mode),
-                                          cfg.vocab_size, self.chunk, mode)
-        self._admit_fn = self._make_admit()
+        self._chunk_fn = self._make_chunk(cfg.vocab_size, self.chunk, mode)
+        self._admit_fn = self._make_admit(mode)
+
+    def _arrays(self) -> tuple:
+        """The carried slot arrays, in compiled-signature order."""
+        base = (self._state, self._cur, self._step_count)
+        if self._use_planner:
+            base = base + (self._bits,)
+        return base + (self._prompt_buf, self._prompt_len,
+                       self._total_len, self._target_ix)
+
+    def _set_arrays(self, arrays) -> None:
+        (self._state, self._cur, self._step_count) = arrays[:3]
+        rest = arrays[3:]
+        if self._use_planner:
+            self._bits, rest = rest[0], rest[1:]
+        (self._prompt_buf, self._prompt_len, self._total_len,
+         self._target_ix) = rest
 
     def _shard_slot_state(self) -> None:
         """Map the slot axis onto the 'data' mesh axis.
 
-        Every per-slot array (the stacked decode state and the host
-        control vectors) is device_put with its SERVE_RULES sharding, and
-        the compiled chunk/admit steps are built with those shardings as
-        explicit in/out shardings — so the donated slot state never
-        leaves the mesh between chunks.
+        Every per-slot array (the stacked decode state, the decision
+        carry, and the host control vectors) is device_put with its
+        SERVE_RULES sharding, and the compiled chunk/admit steps are
+        built with those shardings as explicit in/out shardings — so the
+        donated slot state never leaves the mesh between chunks.
         """
         mesh = self.mesh
         state_sh = {k: NamedSharding(mesh, slot_state_spec(mesh, k, v.shape))
@@ -155,40 +188,68 @@ class SlotScheduler:
             mesh, (self.n_slots,)))
         buf_sh = NamedSharding(mesh, slot_vec_spec(
             mesh, (self.n_slots, self.max_prompt)))
-        self._shardings = (state_sh, vec_sh, vec_sh, buf_sh, vec_sh,
-                           vec_sh, vec_sh)
+        bits_sh = NamedSharding(mesh, decision_carry_spec(
+            mesh, (self.n_slots, self._n_units)))
+        shardings = (state_sh, vec_sh, vec_sh)
+        if self._use_planner:
+            shardings = shardings + (bits_sh,)
+        self._shardings = shardings + (buf_sh, vec_sh, vec_sh, vec_sh)
         self._state = {k: jax.device_put(v, state_sh[k])
                        for k, v in self._state.items()}
         self._cur = jax.device_put(self._cur, vec_sh)
         self._step_count = jax.device_put(self._step_count, vec_sh)
+        self._bits = jax.device_put(self._bits, bits_sh)
         self._prompt_buf = jax.device_put(self._prompt_buf, buf_sh)
         self._prompt_len = jax.device_put(self._prompt_len, vec_sh)
         self._total_len = jax.device_put(self._total_len, vec_sh)
         self._target_ix = jax.device_put(self._target_ix, vec_sh)
 
     # -- compiled pieces ---------------------------------------------------------
-    def _make_chunk(self, tick: Callable, vocab: int, length: int,
-                    mode: str):
-        def chunk(state, cur, step_count, prompt_buf, prompt_len,
-                  total_len, target_ix):
+    def _tick_pieces(self, count, prompt_buf, prompt_len, total_len, cur):
+        """Per-tick control vectors shared by both chunk variants."""
+        filling = count < prompt_len
+        # running doubles as the per-slot active mask: an idle
+        # (total_len == 0) or finished slot selects b_sel = 0 in
+        # the applier, so the batched bit-serial kernel fetches
+        # none of its weight planes and does no MXU work for it
+        running = count < total_len
+        idx = jnp.clip(count, 0, prompt_buf.shape[1] - 1)
+        ptok = jnp.take_along_axis(prompt_buf, idx[:, None],
+                                   axis=1)[:, 0]
+        tok = jnp.where(filling, ptok, cur)
+        return running, tok
+
+    def _make_chunk(self, vocab: int, length: int, mode: str):
+        if self._use_planner:
+            tick = self.engine.build_planned_tick(mode)
+        else:
+            tick = self.engine.build_tick(mode)
+
+        def chunk(state, cur, step_count, *rest):
             key = ("slot_chunk", mode)
             self.engine.trace_counts[key] = \
                 self.engine.trace_counts.get(key, 0) + 1
+            if self._use_planner:
+                (bits, prompt_buf, prompt_len, total_len,
+                 target_ix) = rest
+            else:
+                bits = None
+                prompt_buf, prompt_len, total_len, target_ix = rest
 
             def body(carry, _):
-                state, cur, count = carry
-                filling = count < prompt_len
-                # running doubles as the per-slot active mask: an idle
-                # (total_len == 0) or finished slot selects b_sel = 0 in
-                # the applier, so the batched bit-serial kernel fetches
-                # none of its weight planes and does no MXU work for it
-                running = count < total_len
-                idx = jnp.clip(count, 0, prompt_buf.shape[1] - 1)
-                ptok = jnp.take_along_axis(prompt_buf, idx[:, None],
-                                           axis=1)[:, 0]
-                tok = jnp.where(filling, ptok, cur)
-                logits, state, eb = jax.vmap(tick)(
-                    state, tok[:, None, None], target_ix, running)
+                state, cur, count, bits = carry
+                running, tok = self._tick_pieces(
+                    count, prompt_buf, prompt_len, total_len, cur)
+                if self._use_planner:
+                    # lookup-and-apply + ONE fused (S, U) planner launch
+                    # deciding the next tick — the (S, U) carry is the
+                    # scheduler's half of the async pipeline
+                    logits, state, eb, bits = jax.vmap(tick)(
+                        state, tok[:, None, None], target_ix, bits,
+                        running)
+                else:
+                    logits, state, eb = jax.vmap(tick)(
+                        state, tok[:, None, None], target_ix, running)
                 nxt = jnp.argmax(logits[:, 0, 0, :vocab],
                                  axis=-1).astype(jnp.int32)
                 # one mask for tokens AND bits: both come from the tick
@@ -201,45 +262,86 @@ class SlotScheduler:
                     (count < total_len - 1)
                 cur = jnp.where(running, nxt, cur)
                 count = count + running.astype(jnp.int32)
-                return (state, cur, count), (nxt, eb, emit)
+                return (state, cur, count, bits), (nxt, eb, emit)
 
-            (state, cur, step_count), ys = jax.lax.scan(
-                body, (state, cur, step_count), None, length=length)
-            return (state, cur, step_count) + ys
+            (state, cur, step_count, bits), ys = jax.lax.scan(
+                body, (state, cur, step_count, bits), None, length=length)
+            lead = (state, cur, step_count)
+            if self._use_planner:
+                lead = lead + (bits,)
+            return lead + ys
 
+        n_carry = 4 if self._use_planner else 3
         if self._shardings is None:
-            return jax.jit(chunk, donate_argnums=(0, 1, 2))
+            return jax.jit(chunk, donate_argnums=tuple(range(n_carry)))
         state_sh, vec_sh = self._shardings[0], self._shardings[1]
         # emissions are (chunk, slots): slot axis sharded like the state
         slot_entry = vec_sh.spec[0] if len(vec_sh.spec) else None
         ys_sh = NamedSharding(self.mesh, P(None, slot_entry))
-        return jax.jit(chunk, donate_argnums=(0, 1, 2),
+        return jax.jit(chunk, donate_argnums=tuple(range(n_carry)),
                        in_shardings=self._shardings,
-                       out_shardings=(state_sh, vec_sh, vec_sh) +
+                       out_shardings=self._shardings[:n_carry] +
                                      (ys_sh,) * 3)
 
-    def _make_admit(self):
-        def admit(state, cur, step_count, prompt_buf, prompt_len,
-                  total_len, target_ix, slot, prow, plen, tot, tix):
-            state = jax.tree.map(
-                lambda a: a.at[slot].set(jnp.zeros(a.shape[1:], a.dtype)),
-                state)
-            return (state,
-                    cur.at[slot].set(0),
-                    step_count.at[slot].set(0),
-                    prompt_buf.at[slot].set(prow),
-                    prompt_len.at[slot].set(plen),
-                    total_len.at[slot].set(tot),
-                    target_ix.at[slot].set(tix))
+    def _make_admit(self, mode: str):
+        boot = self.engine.build_boot_tick(mode) if self._use_planner \
+            else None
+        vocab = self.engine.cfg.vocab_size
 
+        def admit(state, cur, step_count, *rest):
+            key = ("slot_admit", mode)
+            self.engine.trace_counts[key] = \
+                self.engine.trace_counts.get(key, 0) + 1
+            if self._use_planner:
+                (bits, prompt_buf, prompt_len, total_len, target_ix,
+                 slot, prow, plen, tot, tix) = rest
+            else:
+                (prompt_buf, prompt_len, total_len, target_ix,
+                 slot, prow, plen, tot, tix) = rest
+
+            if self._use_planner:
+                # the admitted request's tick 0 runs HERE — the engine's
+                # boot tick (inline sync decisions) on a fresh batch-1
+                # state, exactly like tick 0 of engine.generate — so the
+                # slot enters the pipelined chunk with real planned bits
+                # and the first chunk tick is already lookup-and-apply
+                fresh = jax.tree.map(
+                    lambda a: jnp.zeros(a.shape[1:], a.dtype), state)
+                logits, st1, eb0, bits1 = boot(
+                    fresh, prow[0][None, None], tix, jnp.bool_(True))
+                nxt = jnp.argmax(
+                    logits[0, 0, :vocab]).astype(jnp.int32)
+                state = jax.tree.map(lambda a, b: a.at[slot].set(b),
+                                     state, st1)
+                # (token, eff bits) of tick 0 for the host: emitted iff
+                # the prompt is a single token (tick 0 produced output)
+                boot_out = jnp.stack([nxt.astype(jnp.float32), eb0])
+                out = (state,
+                       cur.at[slot].set(nxt),
+                       step_count.at[slot].set(1),
+                       bits.at[slot].set(bits1))
+            else:
+                state = jax.tree.map(
+                    lambda a: a.at[slot].set(
+                        jnp.zeros(a.shape[1:], a.dtype)), state)
+                boot_out = jnp.zeros((2,), jnp.float32)
+                out = (state, cur.at[slot].set(0),
+                       step_count.at[slot].set(0))
+            return out + (prompt_buf.at[slot].set(prow),
+                          prompt_len.at[slot].set(plen),
+                          total_len.at[slot].set(tot),
+                          target_ix.at[slot].set(tix),
+                          boot_out)
+
+        n_carry = 8 if self._use_planner else 7
         if self._shardings is None:
-            return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+            return jax.jit(admit, donate_argnums=tuple(range(n_carry)))
         rep = NamedSharding(self.mesh, P())
         buf_rep = NamedSharding(self.mesh, P(None))
-        return jax.jit(admit, donate_argnums=(0, 1, 2, 3, 4, 5, 6),
+        return jax.jit(admit, donate_argnums=tuple(range(n_carry)),
                        in_shardings=self._shardings +
                                     (rep, buf_rep, rep, rep, rep),
-                       out_shardings=self._shardings)
+                       out_shardings=self._shardings + (rep,))
 
     # -- host control loop -------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -268,22 +370,25 @@ class SlotScheduler:
             prow = np.zeros((self.max_prompt,), np.int32)
             prow[:len(prompt)] = prompt
             with self.engine._mesh_ctx():
-                (self._state, self._cur, self._step_count, self._prompt_buf,
-                 self._prompt_len, self._total_len, self._target_ix) = \
-                    self._admit_fn(
-                        self._state, self._cur, self._step_count,
-                        self._prompt_buf, self._prompt_len, self._total_len,
-                        self._target_ix, jnp.int32(si), jnp.asarray(prow),
-                        jnp.int32(len(prompt)),
-                        jnp.int32(len(prompt) + r.max_new), jnp.int32(tix))
+                out = self._admit_fn(
+                    *self._arrays(), jnp.int32(si), jnp.asarray(prow),
+                    jnp.int32(len(prompt)),
+                    jnp.int32(len(prompt) + r.max_new), jnp.int32(tix))
+            self._set_arrays(out[:-1])
             self._slots[si] = _Slot(request=r)
+            if self._use_planner and len(prompt) == 1:
+                # tick 0 (run at admission) already produced this
+                # request's first generated token + its bits
+                boot_out = np.asarray(out[-1])
+                self._slots[si].gen_tokens.append(int(boot_out[0]))
+                self._slots[si].gen_bits.append(float(boot_out[1]))
 
     def _run_chunk(self) -> None:
+        n_carry = 4 if self._use_planner else 3
         with self.engine._mesh_ctx():
-            (self._state, self._cur, self._step_count,
-             toks, ebs, emit) = self._chunk_fn(
-                self._state, self._cur, self._step_count, self._prompt_buf,
-                self._prompt_len, self._total_len, self._target_ix)
+            out = self._chunk_fn(*self._arrays())
+        self._set_arrays(out[:n_carry] + self._arrays()[n_carry:])
+        toks, ebs, emit = out[n_carry:]
         # ONE host sync per chunk: pack emissions + slot progress into a
         # single device array and pull it once (token ids are exact in
         # f32 — vocab sizes sit far below 2**24)

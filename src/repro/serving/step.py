@@ -22,7 +22,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.adaptation import UnitStatic
+from repro.core.adaptation import DecisionBundle, UnitStatic
 from repro.core.dynamic_linear import DynamicLinearApplier
 from repro.models import decode_step, forward
 
@@ -32,17 +32,24 @@ __all__ = ["UnitStatic", "build_prefill_step", "build_serve_step"]
 def build_serve_step(cfg: ModelConfig,
                      table: Dict[str, UnitStatic],
                      *, backend: Optional[str] = None,
-                     use_async: bool = True) -> Callable:
+                     use_async: bool = True,
+                     bundle: Optional[DecisionBundle] = None) -> Callable:
     """One dynamic-precision decode step (the paper's runtime path).
 
-    ``step(serve_params, state, tokens, target_idx)`` — ``target_idx`` is a
-    traced int32 index into the target-stacked adaptation arrays.
+    ``step(serve_params, state, tokens, target_idx, planned_bits=None)``
+    — ``target_idx`` is a traced int32 index into the target-stacked
+    adaptation arrays. With a ``bundle``, a traced ``planned_bits`` (U,)
+    vector (a :class:`repro.core.decision.PrecisionPlanner` output) turns
+    the step into pure lookup-and-apply — the decide/apply split the
+    serving engine pipelines; without it, decisions are inline (sync).
     """
 
-    def step(serve_params, state, tokens, target_idx=0):
+    def step(serve_params, state, tokens, target_idx=0,
+             planned_bits=None):
         lin = DynamicLinearApplier(table, serve_params,
                                    target_idx=target_idx, backend=backend,
-                                   use_async=use_async)
+                                   use_async=use_async, bundle=bundle,
+                                   planned_bits=planned_bits)
         logits, new_state = decode_step(cfg, serve_params["raw"], state,
                                         tokens, lin=lin)
         return logits, new_state, lin.effective_bits()

@@ -1,0 +1,182 @@
+"""Decide/apply pipeline: bundle layout, planner bit-identity, async seed.
+
+The fused planner must be a pure re-packaging of the inline per-unit
+selector: same decisions, one launch. The engine's pipelining must seed
+tick 0 with sync (same-tick) decisions and feed tick t's activations
+into tick t+1's decisions — both verified here against the legacy
+inline path as an independent reference implementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import ServingEngine, make_decode_state
+
+MODES = ("dynamic", "static:llm_mq", "max", "exact")
+
+
+@pytest.fixture(scope="module")
+def engine(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    return ServingEngine(cfg, params, model)
+
+
+def _rand_acts(bundle, m=1, seed=0):
+    """Random estimator rows honoring the capture contract: zero beyond
+    each unit's true width (the applier zero-pads to K_max)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.normal(size=(bundle.n_units, m, bundle.k_pad))
+    raw *= (np.arange(bundle.k_pad)[None, None, :] <
+            bundle.k_actual[:, None, None])
+    return jnp.asarray(raw.astype(np.float32))
+
+
+def _inline_reference(engine, mode, acts, t):
+    """The legacy per-unit selector run over the same captured rows —
+    the independent reference the fused planner must match bit-for-bit
+    (shared harness: ``PrecisionPlanner.inline_reference``)."""
+    base_mode, static_bits, serve_params = engine._mode_env(mode)
+    bits = engine.planner(mode).inline_reference(
+        acts, t, serve_params, engine.artifacts.table,
+        mode=base_mode, static_bits=static_bits)
+    return np.asarray(bits, np.int32)
+
+
+def test_decision_bundle_layout(engine):
+    """Row table, sizes, paddings, and the g_row elision chain."""
+    from repro.core.adaptation import KIND_JL
+
+    bundle = engine.artifacts.decision
+    assert bundle.n_units == len(engine.artifacts.est)
+    for i, p in enumerate(bundle.paths):
+        assert bundle.row_of[p] == i
+    # sizes reproduce the legacy per-record weights exactly
+    for i, p in enumerate(bundle.paths):
+        ov = engine.overlays[p]
+        if ov.planes.ndim == 4:
+            e, _, _, n = ov.planes.shape
+            want = float(e * ov.k * n)
+        else:
+            want = float(ov.k * ov.planes.shape[-1])
+        assert bundle.sizes[i] == want, p
+    assert bundle.k_pad % 128 == 0
+    assert np.all(bundle.k_actual <= bundle.k_pad)
+    # g_row: JL entries own a distinct packed row; others repeat the
+    # previous unit's row (the kernel's DMA-elision contract)
+    prev = np.zeros((bundle.l.shape[1],), np.int64)
+    seen = set()
+    for u in range(bundle.n_units):
+        for t in range(bundle.l.shape[1]):
+            r = int(bundle.g_row[u, t])
+            if bundle.kind[u, t] == KIND_JL:
+                assert r not in seen and 1 <= r < bundle.g.shape[0]
+                seen.add(r)
+            else:
+                assert r == prev[t]
+        prev = bundle.g_row[u]
+    assert len(seen) == bundle.g.shape[0] - 1      # row 0 = zero dummy
+    assert not np.asarray(bundle.g[0]).any()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_planner_bit_identity_all_modes(engine, mode):
+    """The fused planner == the legacy inline selector, bit for bit, on
+    identical inputs — every mode, every target."""
+    planner = engine.planner(mode)
+    bundle = engine.artifacts.decision
+    for t in range(len(engine.artifacts.targets)):
+        for seed in (0, 1):
+            acts = _rand_acts(bundle, seed=seed + 10 * t)
+            fused = np.asarray(planner.plan(acts, t))
+            ref = _inline_reference(engine, mode, acts, t)
+            np.testing.assert_array_equal(fused, ref, err_msg=(mode, t))
+        # idle gate zeroes everything regardless of mode
+        gated = planner.plan(_rand_acts(bundle), t, active=False)
+        np.testing.assert_array_equal(np.asarray(gated), 0)
+
+
+def test_planner_effective_bits_matches_applier_weights(engine):
+    bundle = engine.artifacts.decision
+    planner = engine.planner("dynamic")
+    bits = planner.plan(_rand_acts(bundle), 0)
+    eff = float(planner.effective_bits(bits))
+    want = float(np.sum(np.asarray(bits) * bundle.sizes) /
+                 np.sum(bundle.sizes))
+    np.testing.assert_allclose(eff, want, rtol=1e-6)
+    assert 0.0 < eff <= 8.0
+
+
+def test_first_async_tick_uses_sync_decisions(engine, tiny_bundle):
+    """Tick 0 of a pipelined query runs with inline (same-tick, sync)
+    decisions — generate()'s first reported bits on a 1-token prompt
+    must equal the standalone inline tick's effective bits."""
+    cfg, _, _, batches = tiny_bundle
+    prompt = batches[0][0][:1, :1]
+    t_idx = jnp.int32(engine.artifacts.target_index(3.5))
+    tick = jax.jit(engine.build_tick("dynamic"))
+    state = make_decode_state(cfg, 1, engine.kv_bucket,
+                              dtype=jnp.float32)
+    _, _, eb_sync = tick(state, jnp.asarray(prompt), t_idx)
+    _, ebits = engine.generate(prompt, 3, 3.5)
+    np.testing.assert_allclose(ebits[0], float(eb_sync), atol=1e-5)
+
+
+def test_pipelined_tick_uses_previous_tick_activations(engine,
+                                                       tiny_bundle):
+    """The async wiring: tick 1's applied bits must be what the LEGACY
+    per-unit selector derives from tick 0's captured activations (the
+    one-tick-stale pipeline), not from tick 1's own inputs."""
+    from repro.core.dynamic_linear import DynamicLinearApplier
+    from repro.models import decode_step
+
+    cfg, _, _, batches = tiny_bundle
+    prompt = batches[0][0][:1, :2]
+    target = 3.5
+    t_idx = jnp.int32(engine.artifacts.target_index(target))
+    bundle = engine.artifacts.decision
+    base_mode, static_bits, serve_params = engine._mode_env("dynamic")
+
+    # tick 0 by hand: inline decisions + capture (what the boot tick does)
+    state = make_decode_state(cfg, 1, engine.kv_bucket, dtype=jnp.float32)
+    lin0 = DynamicLinearApplier(
+        engine.artifacts.table, serve_params, target_idx=t_idx,
+        mode=base_mode, use_async=engine.use_async, bundle=bundle,
+        capture=True)
+    decode_step(cfg, engine.raw, state, jnp.asarray(prompt[:, :1]),
+                lin=lin0)
+    acts0 = np.asarray(lin0.planner_inputs())
+
+    # legacy selector over tick-0 activations -> expected tick-1 bits
+    bits1 = _inline_reference(engine, "dynamic", jnp.asarray(acts0),
+                              t_idx)
+    eb1_ref = float(np.sum(bits1 * bundle.sizes) / np.sum(bundle.sizes))
+
+    # the engine's pipelined run: with p=2, the first reported entry is
+    # tick 1 (the tick that produced the first generated token)
+    _, ebits = engine.generate(prompt, 1, target)
+    np.testing.assert_allclose(ebits[0], eb1_ref, atol=1e-5)
+
+
+def test_scheduler_carries_slot_decision_matrix(engine, tiny_bundle):
+    """The scheduler's (S, U) decision carry exists, is gated to zero on
+    never-admitted slots, and survives a full run."""
+    from repro.serving import LatencyModel, QoSPlanner, Request, \
+        SlotScheduler
+
+    cfg, _, model, _ = tiny_bundle
+    qos = QoSPlanner(sorted(model.adaptations),
+                     LatencyModel(bytes_per_bit=1e9), chips=1)
+    sched = SlotScheduler(engine, qos, slots=3, max_prompt=8, max_new=3,
+                          chunk=4)
+    n_units = engine.artifacts.decision.n_units
+    assert sched._bits.shape == (3, n_units)
+    assert not np.asarray(sched._bits[2]).any()        # never admitted
+    rng = np.random.default_rng(9)
+    req = Request(rid=0,
+                  prompt=rng.integers(0, cfg.vocab_size,
+                                      (3,)).astype(np.int32),
+                  max_new=3, tpot_budget_s=6e-3)
+    done = sched.run([req])
+    assert len(done) == 1 and done[0].tokens.shape == (6,)
+    assert sched._bits.shape == (3, n_units)

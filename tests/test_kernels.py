@@ -86,6 +86,26 @@ def test_jl_estimator_interpret_vs_ref(l, kproj, k, m):
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
 
+def test_jl_estimate_multi_row_is_row_max():
+    """The documented batch contract: a multi-row input yields the
+    conservative row-max estimate per layer — NOT row 0's estimate (the
+    silent-truncation failure mode), and NOT any other single row's."""
+    l, kproj, k, m = 3, 8, 64, 5
+    g = jax.random.normal(jax.random.PRNGKey(5), (l, kproj, k))
+    x = jax.random.normal(jax.random.PRNGKey(6), (m, k)) * \
+        jnp.arange(1, m + 1, dtype=jnp.float32)[:, None]   # rows differ
+    thr = jnp.zeros((l,))
+    for backend in ("ref", "interpret"):
+        err, _ = jl_estimate(x, g, thr, backend=backend)
+        per_row = jnp.stack(
+            [jl_estimate(x[i:i + 1], g, thr, backend=backend)[0]
+             for i in range(m)])                            # (m, l)
+        np.testing.assert_allclose(err, jnp.max(per_row, axis=0),
+                                   rtol=1e-6)
+        # the scaled rows make row 0 strictly smaller: err must not be it
+        assert np.all(np.asarray(err) > np.asarray(per_row[0]) * 1.5)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_jl_concentration(seed):
@@ -247,3 +267,141 @@ def test_slot_plane_traffic_proportional_to_bits():
     # adding one bit to one busy slot costs exactly n_tiles more fetches
     base = plane_block_fetches([3, 2, 4], n_tiles, bits)
     assert plane_block_fetches([3, 3, 4], n_tiles, bits) == base + n_tiles
+
+
+# ---------------------------------------------------------------------------
+# Fused decision planner: one launch resolves every unit's precision
+# ---------------------------------------------------------------------------
+def _plan_setup(u=6, t=3, m=2, k=128, kproj=16, seed=0):
+    """Synthetic decision tables in the DecisionBundle layout, with the
+    g_row DMA-elision chain (non-JL entries repeat the previous row)."""
+    rng = np.random.default_rng(seed)
+    tables = {
+        "l": jnp.asarray(rng.integers(2, 4, (u, t)), jnp.int32),
+        "h": jnp.asarray(rng.integers(5, 7, (u, t)), jnp.int32),
+        "kind": jnp.asarray(rng.integers(0, 3, (u, t)), jnp.int32),
+        "threshold": jnp.asarray(
+            rng.uniform(0.1, 3.0, (u, t)).astype(np.float32)),
+        "a": jnp.asarray(rng.uniform(0, 0.2, (u, t)).astype(np.float32)),
+        "b": jnp.asarray(rng.uniform(0, 0.2, (u, t)).astype(np.float32)),
+        "gamma": jnp.asarray(
+            rng.uniform(0.5, 1.5, (u, t)).astype(np.float32)),
+    }
+    kinds = np.asarray(tables["kind"])
+    g_rows = [np.zeros((kproj, k), np.float32)]
+    g_row = np.zeros((u, t), np.int32)
+    prev = np.zeros((t,), np.int32)
+    for ui in range(u):
+        for ti in range(t):
+            if kinds[ui, ti] == 2:                       # KIND_JL
+                g_row[ui, ti] = len(g_rows)
+                g_rows.append(rng.normal(size=(kproj, k))
+                              .astype(np.float32) / np.sqrt(kproj))
+            else:
+                g_row[ui, ti] = prev[ti]
+        prev = g_row[ui]
+    tables["g"] = jnp.asarray(np.stack(g_rows))
+    tables["g_row"] = jnp.asarray(g_row)
+    x = jnp.asarray(rng.normal(size=(u, m, k)).astype(np.float32))
+    return tables, x, kinds, g_row
+
+
+@pytest.mark.parametrize("t", [0, 1, 2])
+def test_plan_bits_interpret_vs_ref(t):
+    from repro.kernels.jl_estimator import plan_bits
+    tables, x, _, _ = _plan_setup()
+    b_ref = plan_bits(x, tables, t, backend="ref")
+    b_int = plan_bits(x, tables, t, backend="interpret")
+    assert b_ref.shape == (x.shape[0],)
+    np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_int))
+    # pinned rows always take l; decisions land on l or h everywhere
+    kinds = np.asarray(tables["kind"])[:, t]
+    lo = np.asarray(tables["l"])[:, t]
+    hi = np.asarray(tables["h"])[:, t]
+    got = np.asarray(b_ref)
+    assert np.all((got == lo) | (got == hi))
+    assert np.all(got[kinds == 0] == lo[kinds == 0])
+
+
+def test_plan_bits_idle_gate_zeros():
+    from repro.kernels.jl_estimator import plan_bits
+    tables, x, _, _ = _plan_setup()
+    for backend in ("ref", "interpret"):
+        bits = plan_bits(x, tables, 1, active=False, backend=backend)
+        np.testing.assert_array_equal(np.asarray(bits), 0)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_plan_bits_vmapped_slots_parity_incl_idle(backend):
+    """jax.vmap over (x, target, active) — the scheduler's slot axis —
+    routes through the custom_vmap rule into the (S, U) slot planner and
+    matches the per-slot loop exactly, idle slots gated to all-zero."""
+    from repro.kernels.jl_estimator import TRACE_COUNTS, plan_bits
+    tables, _, _, _ = _plan_setup()
+    s, u, m, k = 4, 6, 2, 128
+    rng = np.random.default_rng(7)
+    xs = jnp.asarray(rng.normal(size=(s, u, m, k)).astype(np.float32))
+    ts = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    act = jnp.asarray([True, True, False, True])
+    before = TRACE_COUNTS.get("plan_slots", 0)
+    bs = jax.vmap(lambda xv, tv, av: plan_bits(xv, tables, tv, av,
+                                               backend=backend))(xs, ts, act)
+    assert TRACE_COUNTS.get("plan_slots", 0) > before
+    man = np.stack([np.asarray(plan_bits(xs[i], tables, ts[i], act[i],
+                                         backend=backend))
+                    for i in range(s)])
+    np.testing.assert_array_equal(np.asarray(bs), man)
+    np.testing.assert_array_equal(np.asarray(bs)[2], 0)   # idle slot
+
+
+def test_plan_bits_no_retrace_across_targets_and_slots():
+    """Different targets / active masks / slot b-vectors reuse ONE
+    compiled planner dispatch — per-tick decision churn never retraces."""
+    from repro.kernels.jl_estimator import TRACE_COUNTS, plan_bits
+    tables, x, _, _ = _plan_setup()
+    plan_bits(x, tables, 0, backend="ref")                    # warm
+    s = 3
+    xs = jnp.stack([x] * s)
+    vf = jax.jit(jax.vmap(lambda xv, tv, av: plan_bits(
+        xv, tables, tv, av, backend="ref")))
+    vf(xs, jnp.asarray([0, 1, 2]), jnp.asarray([True, True, True]))  # warm
+    before = dict(TRACE_COUNTS)
+    for t in (0, 1, 2):
+        plan_bits(x, tables, t, backend="ref")
+        plan_bits(x, tables, t, active=False, backend="ref")
+    vf(xs, jnp.asarray([2, 0, 1]), jnp.asarray([False, True, True]))
+    assert TRACE_COUNTS == before, (before, TRACE_COUNTS)
+
+
+def test_plan_bits_one_estimator_gemm_regardless_of_units():
+    """THE op-count invariant of the decide/apply split: the fused
+    planner issues exactly ONE estimator GEMM (dot_general) no matter
+    how many units the model has — O(1) dispatched decision work on the
+    decode critical path, vs O(U) for the inline path."""
+    from repro.kernels.common import count_jaxpr_primitives
+    from repro.kernels.jl_estimator import plan_bits
+
+    for u in (4, 16):
+        tables, x, _, _ = _plan_setup(u=u)
+        jx = jax.make_jaxpr(
+            lambda xv: plan_bits(xv, tables, 1, backend="ref"))(x)
+        got = count_jaxpr_primitives(jx.jaxpr, "dot_general")
+        assert got == 1, (u, got)
+
+
+def test_planner_g_traffic_proportional_to_jl_units():
+    """The planner-side DMA-elision contract: walking the grid through
+    the scalar-prefetched g_row table fetches one block per JL unit
+    (plus one leading dummy when the walk starts on a non-JL unit) —
+    NOT one per unit."""
+    from repro.kernels.jl_estimator import g_block_fetches
+    tables, _, kinds, g_row = _plan_setup(u=8, seed=3)
+    for t in range(kinds.shape[1]):
+        n_jl = int((kinds[:, t] == 2).sum())
+        lead = 1 if kinds[0, t] != 2 else 0
+        got = g_block_fetches(g_row[:, t])
+        assert got == n_jl + lead, (t, got, n_jl, lead)
+        assert got <= kinds.shape[0]
+    # slot-batched walk: consecutive slots chain through the same table
+    two = np.stack([g_row[:, 0], g_row[:, 0]])
+    assert g_block_fetches(two) <= 2 * g_block_fetches(g_row[:, 0])
