@@ -1,0 +1,137 @@
+"""Prefill/decode disaggregation: TTFT and launch-count benchmark.
+
+The legacy serve path teacher-forced every prompt token through the M=1
+decode tick — O(prompt_len) launches before the first generated token, each
+streaming the full overlay for ONE token of work. The batched prefill stage
+(``ServingEngine(prefill_chunk=C)``) runs the prompt as
+``ceil(prompt_len / C)`` M-row fused launches with per-row precision
+decisions, bit-identical tokens/effective-bits, and hands the KV block +
+decision carry to the decode stage.
+
+Reports, per prompt length:
+- launches to the first token: staged ``ceil(p/C)`` vs legacy
+  ``1 + ceil((p-1)/decode_chunk)`` (counted from the engines'
+  ``call_counts`` instrumentation, not modeled);
+- measured TTFT — wall clock until the first generated token is computed,
+  i.e. the prompt ticks ONLY (driven through the engine's tick runner with
+  zero generation ticks, blocked on the emitted tokens; no trailing decode
+  chunk pollutes the number) — and prefill tokens/s for both engines;
+- parity check: identical first token and prompt-tick effective bits.
+
+Uses the cached bench-lm build; run from the repo root:
+    PYTHONPATH=src python -m benchmarks.prefill --quick
+``--smoke`` is the CI variant: a fresh tiny-dense build (no trained
+bench-lm / artifact cache needed), same asserts.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _first_token_wall(engine, prompt, target: float) -> float:
+    """Wall seconds until the first generated token exists on device.
+
+    Drives exactly the prompt ticks (all teacher-forced, no generation
+    ticks): the first generated token is the last prompt tick's argmax,
+    so this measures the prefill stage alone for a staged engine and the
+    boot-tick + teacher-forced chunks for a legacy one.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    p = prompt.shape[1]
+    t_idx = jnp.int32(engine.artifacts.target_index(target))
+    t0 = time.monotonic()
+    toks_out, _, _ = engine._run_chunks(
+        "dynamic", np.asarray(prompt, np.int32), np.ones((p,), bool),
+        np.zeros(prompt.shape, np.int32), t_idx, want_nll=False)
+    jax.block_until_ready(toks_out)
+    return time.monotonic() - t0
+
+
+def measure(engine_staged, engine_legacy, prompt, target: float) -> dict:
+    p = prompt.shape[1]
+    out = {}
+    for name, eng in (("staged", engine_staged), ("legacy", engine_legacy)):
+        _first_token_wall(eng, prompt, target)     # warm the compiles
+        eng.call_counts.clear()
+        wall = _first_token_wall(eng, prompt, target)
+        calls = dict(eng.call_counts)
+        out[f"{name}_ttft_s"] = wall
+        out[f"{name}_prefill_tokens_per_s"] = p / wall
+        out[f"{name}_launches"] = calls.get("prefill", 0) + \
+            calls.get("boot", 0) + calls.get("chunk", 0)
+    out["prompt_len"] = p
+    # parity: the stage split may not change the query's output
+    out_s, bits_s = engine_staged.generate(prompt, 1, target)
+    out_l, bits_l = engine_legacy.generate(prompt, 1, target)
+    assert np.array_equal(out_s, out_l), "prefill changed the first token"
+    np.testing.assert_allclose(bits_s, bits_l, atol=1e-5)
+    return out
+
+
+def _run(cfg, params, model, lens, chunk: int) -> dict:
+    from repro.serving import ServingEngine
+    from repro.serving.kv_cache import n_prefill_chunks
+
+    staged = ServingEngine(cfg, params, model, prefill_chunk=chunk)
+    legacy = ServingEngine(cfg, params, model, prefill_chunk=0)
+    target = sorted(model.adaptations)[0]
+    toks = np.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size,
+                                          (1, max(lens))), np.int32)
+    out = {"prefill_chunk": chunk, "rows": []}
+    for p in lens:
+        row = measure(staged, legacy, toks[:, :p], target)
+        out["rows"].append(row)
+        emit(f"prefill_p{p}_staged", row["staged_ttft_s"] * 1e6,
+             f"{row['staged_launches']}_launches")
+        emit(f"prefill_p{p}_legacy", row["legacy_ttft_s"] * 1e6,
+             f"{row['legacy_launches']}_launches")
+        assert row["staged_launches"] == n_prefill_chunks(p, chunk), row
+        assert row["legacy_launches"] >= row["staged_launches"], row
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    from benchmarks.common import built_model
+
+    cfg, params, model = built_model()
+    return _run(cfg, params, model, (8, 32) if quick else (8, 32, 96),
+                chunk=16)
+
+
+def smoke() -> dict:
+    """Self-contained CI gate: a fresh tiny-dense build (no trained
+    bench-lm, no artifact cache) — asserts launch counts and first-token
+    parity without paying for the 300-step benchmark training run."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import build_multiscale_model
+    from repro.models import init_model_params
+
+    cfg = get_config("tiny-dense")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [(rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32),
+                rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32))]
+    model = build_multiscale_model(cfg, params, batches,
+                                   targets=[3.5, 4.5], finetune_epochs=1,
+                                   baselines=())
+    return _run(cfg, params, model, (4, 12), chunk=8)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fresh tiny-dense gate (no artifact cache) — "
+                         "the CI smoke variant")
+    args = ap.parse_args()
+    smoke() if args.smoke else main(quick=args.quick)

@@ -28,15 +28,18 @@ MODULES = [
     ("calib_sensitivity", "Table 14: calibration-set swap"),
     ("sensitivity_dynamics", "Figure 3: per-step sensitivity dynamics"),
     ("slot_kernel", "Batched-slot kernel: per-slot DMA elision"),
+    ("prefill", "Prefill/decode disaggregation: TTFT + launch counts"),
     ("roofline", "§Roofline: 3-term analysis from the dry-run"),
 ]
 
 
 def collect_serve_json(quick: bool) -> dict:
     """The tracked serve-path numbers: decode throughput, effective bits,
-    and the fused-planner-vs-inline decision overhead."""
+    TTFT / prefill throughput of the disaggregated prefill stage, and the
+    fused-planner-vs-inline decision overhead."""
     from benchmarks.common import built_model, eval_ppl, eval_sequences
     from benchmarks.estimator_overhead import fused_vs_inline
+    from benchmarks.prefill import measure as prefill_measure
     from repro.serving import ServingEngine
 
     cfg, params, model = built_model()
@@ -51,6 +54,9 @@ def collect_serve_json(quick: bool) -> dict:
     engine.teacher_forced_nll(toks[:1], target)         # compile
     ppl, eff_bits, us_step = eval_ppl(engine, toks, target)
     planner = fused_vs_inline(engine, quick=quick)
+    legacy = ServingEngine(cfg, params, model, prefill_chunk=0)
+    p_len = 32 if quick else 64
+    prefill = prefill_measure(engine, legacy, toks[:, :p_len], target)
     return {
         "target": target,
         "decode_tokens_per_s": max_new / gen_wall,
@@ -59,6 +65,11 @@ def collect_serve_json(quick: bool) -> dict:
         "effective_bits": eff_bits,
         "generate_effective_bits": float(sum(gen_bits) / len(gen_bits)),
         "planner": planner,
+        "ttft_s": prefill["staged_ttft_s"],
+        "ttft_legacy_s": prefill["legacy_ttft_s"],
+        "prefill_tokens_per_s": prefill["staged_prefill_tokens_per_s"],
+        "prefill_launches": prefill["staged_launches"],
+        "prefill_prompt_len": p_len,
         "quick": quick,
     }
 

@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=None,
                     help="default: devices/slots so slots shard over "
                          "'data'")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="token rows per batched prefill launch at "
+                         "admission (0 = legacy tick-by-tick prefill)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -60,7 +63,8 @@ def main():
         chips = serve_chips(mesh)
         print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
               f"({chips} chip(s)/request)")
-    engine = ServingEngine(cfg, params, model, mesh=mesh)
+    engine = ServingEngine(cfg, params, model, mesh=mesh,
+                           prefill_chunk=args.prefill_chunk)
     planner = QoSPlanner(
         list(model.adaptations),
         LatencyModel(bytes_per_bit=engine.overlay_bytes() / 5),
@@ -84,9 +88,10 @@ def main():
     completed = scheduler.run(requests)
     for r in completed:
         completion = bdecode(r.tokens[32:])
+        ttft = f", TTFT {r.ttft_s*1e3:.0f}ms" if r.ttft_s else ""
         print(f"query {r.rid}: TPOT budget {r.tpot_budget_s*1e3:.2f}ms "
               f"-> target {r.target}b, realized "
-              f"{np.mean(r.effective_bits):.2f}b")
+              f"{np.mean(r.effective_bits):.2f}b{ttft}")
         print(f"  prompt: {bdecode(r.tokens[:32])!r}")
         print(f"  completion: {completion!r}\n")
     print("QoS summary:", {k: round(v, 4)

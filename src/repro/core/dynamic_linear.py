@@ -124,6 +124,22 @@ class DynamicLinearApplier:
         units: the pre-norm residual via ``async_input`` when
         ``use_async``; otherwise the unit's own input) for
         :meth:`planner_inputs`.
+    rows: prefill mode — the number M of token rows per call. Every
+        unit call sees ``(b, M, K)`` inputs; decisions are made PER ROW
+        (vectorized over M, reducing over the batch axis like the
+        legacy per-tick max), the bit-serial matmul applies per-row
+        precision through the slot-batched kernel (rows ride the slot
+        axis — each row fetches exactly its own planes), and
+        :meth:`effective_bits` returns an ``(M,)`` vector. Under
+        ``use_async`` row m applies the decision derived from row m-1
+        (the pipelined one-tick-stale contract): row 0 applies
+        ``carry_bits`` (the previous chunk's last-row decision) or its
+        own same-tick decision when ``carry_bits is None`` (the boot
+        chunk) — so a prefill launch reproduces M sequential ticks'
+        decisions exactly. :meth:`planned_rows` exposes the per-row
+        decision matrix for the carry handoff to the decode stage.
+    carry_bits: optional ``(U,)`` int32 — the decision vector the
+        previous prefill chunk's last row planned (rows mode only).
     """
 
     def __init__(
@@ -140,6 +156,8 @@ class DynamicLinearApplier:
         bundle: Optional[DecisionBundle] = None,
         planned_bits: Optional[jax.Array] = None,
         capture: bool = False,
+        rows: Optional[int] = None,
+        carry_bits: Optional[jax.Array] = None,
     ):
         if planned_bits is not None and bundle is None:
             raise ValueError("planned_bits needs the decision bundle's "
@@ -147,6 +165,15 @@ class DynamicLinearApplier:
         if capture and bundle is None:
             raise ValueError("capture=True needs the decision bundle's "
                              "row order and K padding")
+        if rows is not None:
+            if bundle is None:
+                raise ValueError("rows mode needs the decision bundle's "
+                                 "unit⇄row table")
+            if planned_bits is not None or capture or active is not None:
+                raise ValueError("rows mode is the prefill stage: no "
+                                 "planned_bits/capture/active")
+        elif carry_bits is not None:
+            raise ValueError("carry_bits only applies in rows mode")
         self.table = table
         self.raw = serve_params["raw"]
         self.overlays = serve_params["overlays"]
@@ -160,14 +187,19 @@ class DynamicLinearApplier:
         self.bundle = bundle
         self.planned_bits = planned_bits
         self.capture = capture
+        self.rows = rows
+        self.carry_bits = carry_bits
         self.records: List[Tuple[jax.Array, float]] = []
         n_u = bundle.n_units if bundle is not None else 0
         self._bits_rows: List[Optional[jax.Array]] = [None] * n_u
         self._act_rows: List[Optional[jax.Array]] = [None] * n_u
+        self._dec_rows: List[Optional[jax.Array]] = [None] * n_u
 
     # -- precision selection ---------------------------------------------------
     def _select_bits(self, u: UnitStatic, x: jax.Array,
                      async_input) -> jax.Array:
+        if self.rows is not None:
+            return self._select_bits_rows(u, x, async_input)
         if self.planned_bits is not None:
             bits = self.planned_bits[self.bundle.row_of[u.path]]
         else:
@@ -176,6 +208,75 @@ class DynamicLinearApplier:
             # idle slot: 0 bits — the batched kernel elides every plane DMA
             bits = jnp.where(self.active, bits, jnp.int32(0))
         return bits
+
+    def _select_bits_rows(self, u: UnitStatic, x: jax.Array,
+                          async_input) -> jax.Array:
+        """Prefill: the (M,) bits vector row m's matmul actually runs at.
+
+        ``_decide_rows`` is the per-row decision (row m decided FROM row
+        m's activations); under ``use_async`` the applied vector is that
+        decision shifted one row late — exactly the pipelined carry the
+        sequential path threads tick to tick — with row 0 applying the
+        chunk's ``carry_bits`` (or its own sync decision when booting).
+        """
+        dec = self._decide_rows(u, x, async_input)
+        row = self.bundle.row_of[u.path]
+        self._dec_rows[row] = dec
+        if not self.use_async:
+            return dec
+        first = dec[:1] if self.carry_bits is None else \
+            self.carry_bits[row][None].astype(dec.dtype)
+        return jnp.concatenate([first, dec[:-1]])
+
+    def _decide_rows(self, u: UnitStatic, x: jax.Array,
+                     async_input) -> jax.Array:
+        """Vectorized per-row inline decision, (M,) int32 — row m's value
+        is exactly what :meth:`_select_bits_active` computes for the
+        sequential tick that consumed row m (estimates reduce over the
+        batch axis per row, matching the per-tick row max)."""
+        m = self.rows
+        t = self.target_idx
+        if self.mode == "max":
+            return jnp.full((m,), u.h, jnp.int32)
+        if self.mode == "static":
+            return jnp.broadcast_to(self.static_bits[u.path][t],
+                                    (m,)).astype(jnp.int32)
+        e = self.est.get(u.path)
+        if e is None or u.est_kind == "pinned":
+            if e is not None:
+                return jnp.broadcast_to(e["l"][t], (m,)).astype(jnp.int32)
+            return jnp.full((m,), u.l, jnp.int32)
+        l, h = e["l"][t], e["h"][t]
+        inp = self._est_input(u, x, async_input)
+        xf = inp.reshape((-1, m, inp.shape[-1])).astype(jnp.float32)
+        if self.mode == "exact" and "delta" in e:
+            d = e["delta"][t]
+            est = jnp.max(jnp.linalg.norm(
+                xf[..., :d.shape[-2]] @ d, axis=-1), axis=0)
+        else:
+            est = self._approx_estimate_rows(e, xf, t)
+        dynamic = e["kind"][t] != KIND_PINNED
+        return jnp.where(dynamic & (est > e["threshold"][t]),
+                         h, l).astype(jnp.int32)
+
+    def _approx_estimate_rows(self, e: Dict, xf: jax.Array, t) -> jax.Array:
+        """(b, M, K) rows -> (M,) estimates (max over the batch axis)."""
+        est_lin = est_jl = None
+        if "a" in e:
+            xn = jnp.linalg.norm(xf, axis=-1)               # (b, M)
+            est_lin = jnp.max(e["a"][t] * xn + e["b"][t], axis=0)
+        if "g" in e:
+            g = e["g"][t]                                   # (k_proj, K)
+            proj = _match_width(xf.reshape((-1, xf.shape[-1])),
+                                g.shape[-1]) @ g.T
+            proj = proj.reshape(xf.shape[:-1] + (g.shape[0],))
+            est_jl = e["gamma"][t] * jnp.max(
+                jnp.linalg.norm(proj, axis=-1), axis=0)
+        if est_lin is None:
+            return est_jl
+        if est_jl is None:
+            return est_lin
+        return jnp.where(e["kind"][t] == KIND_LINEAR, est_lin, est_jl)
 
     def _select_bits_active(self, u: UnitStatic, x: jax.Array,
                             async_input) -> jax.Array:
@@ -266,7 +367,16 @@ class DynamicLinearApplier:
         bits = self._select_bits(u, x, async_input)
         self._account(u, bits, float(ov.k * ov.planes.shape[-1]), x,
                       async_input)
-        y = _bitserial_matmul(x, ov, bits, backend=self.backend)
+        if self.rows is not None:
+            # per-row precision through the slot-batched kernel: the M
+            # row axis rides the kernel's slot axis (custom_vmap), so
+            # row m fetches exactly bits[m] planes — per-row DMA elision
+            y = jax.vmap(
+                lambda xr, br: _bitserial_matmul(xr, ov, br,
+                                                 backend=self.backend),
+                in_axes=(1, 0), out_axes=1)(x, bits)
+        else:
+            y = _bitserial_matmul(x, ov, bits, backend=self.backend)
         return y.astype(x.dtype)
 
     def weights(self, path: str, x: jax.Array, *,
@@ -288,15 +398,62 @@ class DynamicLinearApplier:
             w = jnp.where(self.active, w, jnp.zeros_like(w))
         return w
 
+    def weights_rows(self, path: str, x: jax.Array, *,
+                     async_input=None) -> jax.Array:
+        """Per-row stacked (MoE) weights for the prefill stage.
+
+        Row-invariant decisions (pinned units, static/max modes — the
+        common case) materialize ONE ``(E, K, N)`` stack; genuinely
+        per-row decisions (dynamic expert up/gate units) vmap the
+        materialization into ``(M, E, K, N)`` so each prefill row
+        applies exactly the bits the sequential tick would have.
+
+        MEMORY NOTE: the per-row branch holds M dequantized expert
+        stacks live at once — M× the legacy tick's peak for that layer.
+        Fine for the eval-scale MoE configs this path serves today;
+        production-scale MoE prefill wants the batched stacked kernel
+        (ROADMAP) or a smaller ``prefill_chunk`` when expert units are
+        dynamic.
+        """
+        ov = self.overlays.get(path)
+        if ov is None:
+            return self.raw[path]
+        u = self.table[path]
+        bits = self._select_bits(u, x, async_input)            # (M,)
+        e, _, _, n = ov.planes.shape
+        self._account(u, bits, float(e * ov.k * n), x, async_input)
+        e_tab = self.est.get(path)
+        invariant = (self.mode in ("static", "max") or e_tab is None
+                     or u.est_kind == "pinned")
+        if invariant:
+            return materialize_stacked(ov, bits[0]).astype(x.dtype)
+        w = jax.vmap(lambda b: materialize_stacked(ov, b))(bits)
+        return w.astype(x.dtype)
+
     # -- accounting ----------------------------------------------------------------
     def decision_vector(self) -> jax.Array:
         """The tick's applied decisions as a (U,) int32 vector (bundle
-        row order) — what actually ran, post ``active`` gating. Rows of
+        row order) — what actually ran, post ``active`` gating. In rows
+        mode this is the (U, M) per-row applied matrix. Rows of
         statically-unapplied units are 0 (see :meth:`effective_bits` for
         how they are excluded from accounting)."""
-        zero = jnp.int32(0)
+        zero = jnp.int32(0) if self.rows is None else \
+            jnp.zeros((self.rows,), jnp.int32)
         return jnp.stack([b if b is not None else zero
                           for b in self._bits_rows]).astype(jnp.int32)
+
+    def planned_rows(self) -> jax.Array:
+        """Rows mode: the (U, M) per-row DECISION matrix (row m's value
+        was decided FROM row m's activations — what the fused planner
+        would have planned for tick m+1). Column ``n_valid - 1`` is the
+        carry the decode stage's first pipelined tick applies; rows of
+        units the trace never applied are 0 (their planned bits are
+        never looked up, exactly like the planner's zero-row capture)."""
+        if self.rows is None:
+            raise RuntimeError("planned_rows() is prefill (rows mode) only")
+        zero = jnp.zeros((self.rows,), jnp.int32)
+        return jnp.stack([d if d is not None else zero
+                          for d in self._dec_rows]).astype(jnp.int32)
 
     def effective_bits(self) -> jax.Array:
         """Parameter-weighted mean of this step's precision decisions.
@@ -306,7 +463,9 @@ class DynamicLinearApplier:
         counts — identical weights to the legacy per-call records).
         Units the traced step never applied are masked out of both the
         numerator and the denominator, matching the legacy records
-        semantics (applied-ness is a trace-time constant)."""
+        semantics (applied-ness is a trace-time constant). Rows mode
+        returns the (M,) per-row vector — one entry per prefill row,
+        bit-compatible with M sequential ticks' scalars."""
         if self.bundle is not None:
             applied = [b is not None for b in self._bits_rows]
             if not any(applied):           # no quantized unit in the trace
@@ -314,6 +473,9 @@ class DynamicLinearApplier:
             mask = jnp.asarray(applied, jnp.float32)
             sizes = jnp.asarray(self.bundle.sizes, jnp.float32) * mask
             bits = self.decision_vector().astype(jnp.float32)
+            if self.rows is not None:
+                return jnp.sum(bits * sizes[:, None], axis=0) / \
+                    jnp.sum(sizes)
             return jnp.sum(bits * sizes) / jnp.sum(sizes)
         if not self.records:
             return jnp.float32(0.0)

@@ -274,6 +274,32 @@ def decode_state_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:
     return P()
 
 
+def prefill_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:
+    """Prefill-STAGE state sharding — ``decode_state_spec``'s pair half.
+
+    The prefill slice is the 'model' (× 'pod' weight-K) axis group: a
+    prefill launch is one arithmetic-intense batched forward whose
+    activations and KV rows shard over the tensor-parallel axes only.
+    The 'data' axis — the decode scheduler's slot axis — is deliberately
+    LEFT OUT of every leaf, so a prefill-stage state is replicated
+    across data-parallel groups and the KV block changes placement
+    exactly once, at the handoff (``serving.kv_cache.insert_slot_state``
+    compiled with these specs in and the slot specs out — GSPMD emits
+    the slice-to-slice transfer there; on a mesh without 'data', or with
+    no mesh at all, the handoff degenerates to an identity transfer).
+
+    KV leaves shard heads → 'model' (like the attention weights that
+    fill them, when divisible); everything else in the batch-1 prefill
+    scratch is small and stays replicated.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    if (key.startswith("kv.") or key.startswith("xkv.")) and len(shape) == 4:
+        head_entry = "model" if ("model" in sizes and
+                                 shape[2] % sizes["model"] == 0) else None
+        return P(None, None, head_entry, None)
+    return P()
+
+
 def tree_shardings(mesh: Mesh, tree, spec_fn) -> object:
     """Map ``spec_fn(path_str, leaf) -> PartitionSpec`` over a pytree."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)

@@ -31,7 +31,8 @@ from repro.serving import (LatencyModel, QoSPlanner, QueryBitTracker,
 def serve_demo(arch: str = "bench-lm", params=None, model=None,
                targets=(3.5, 4.0, 4.5), n_queries: int = 6,
                tokens_per_query: int = 12, slots: int = 4,
-               seed: int = 0, mesh=None, log=print):
+               seed: int = 0, mesh=None, prefill_chunk: int = 16,
+               log=print):
     cfg = get_config(arch)
     rng = np.random.default_rng(seed)
     if params is None:
@@ -42,7 +43,8 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
                  for _ in range(2)]
         model = build_multiscale_model(cfg, params, calib, targets=targets,
                                        finetune_epochs=1, baselines=())
-    engine = ServingEngine(cfg, params, model, mesh=mesh)
+    engine = ServingEngine(cfg, params, model, mesh=mesh,
+                           prefill_chunk=prefill_chunk)
     chips = 1
     if mesh is not None:
         from repro.distributed.sharding import slot_vec_spec
@@ -68,9 +70,10 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
     completed = scheduler.run(requests)
     wall = time.monotonic() - t0
     for r in completed:
+        ttft = f"; TTFT {r.ttft_s*1e3:.0f}ms" if r.ttft_s else ""
         log(f"query {r.rid}: budget {r.tpot_budget_s*1e3:.2f}ms -> "
             f"target {r.target}b; realized eff bits "
-            f"{np.mean(r.effective_bits):.2f}")
+            f"{np.mean(r.effective_bits):.2f}{ttft}")
     log(f"{len(completed)} queries on {slots} slots in {wall*1e3:.0f}ms "
         f"({wall / max(1, n_queries * tokens_per_query) * 1e3:.1f}ms/token "
         f"amortized)")
@@ -91,6 +94,9 @@ def main():
                     help="'model' axis size of the local mesh (default: "
                          "devices/slots, so the slot axis shards fully "
                          "over 'data')")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="token rows per batched prefill launch at "
+                         "admission (0 = legacy tick-by-tick prefill)")
     ap.add_argument("--artifacts", default=None,
                     help="pickle produced by examples/train_lm.py")
     args = ap.parse_args()
@@ -104,7 +110,8 @@ def main():
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh(args.slots, args.model_parallel)
     serve_demo(args.arch, params=params, model=model,
-               n_queries=args.queries, slots=args.slots, mesh=mesh)
+               n_queries=args.queries, slots=args.slots, mesh=mesh,
+               prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

@@ -92,39 +92,56 @@ def flash_attention(
 
 
 def decode_attention(
-    q: jax.Array,            # (b, 1, hq, dh)
+    q: jax.Array,            # (b, M, hq, dh) — M = 1 (decode) or >1 (prefill)
     k_cache: jax.Array,      # (b, S, hkv, dh)  bf16/f32 or int8 (quantized)
     v_cache: jax.Array,      # (b, S, hkv, dh)
-    cache_len: jax.Array,    # scalar int32 — valid prefix length (incl. new)
+    cache_len: jax.Array,    # scalar int32 — valid prefix length (incl. new);
+                             # or (M,) per-row lengths for the prefill pass
     *,
     logit_softcap: float = 0.0,
     k_scale: jax.Array = None,   # (b, S, hkv, 1) f32 — int8 cache scales
     v_scale: jax.Array = None,
 ) -> jax.Array:
-    """Single-token attention over a (possibly sequence-sharded) KV cache.
+    """Token attention over a (possibly sequence-sharded) KV cache.
+
+    M == 1 is the decode hot path (unchanged math). M > 1 is the batched
+    prefill stage: the M token rows were just written into the cache at
+    consecutive positions, and row m masks the cache to its own causal
+    prefix (``cache_len[m]`` — typically ``pos + m + 1``), so every row's
+    softmax sees exactly the prefix the sequential tick-by-tick path saw.
 
     int8 KV (beyond-paper §Perf optimization): cache stored as int8 with
     per-(batch, position, head) scales — halves the decode memory term at
     <0.5% score perturbation (tests/test_models.py).
     """
-    b, _, hq, dh = q.shape
+    b, m, hq, dh = q.shape
     _, s, hkv, _ = k_cache.shape
     g = hq // hkv
     scale = dh ** -0.5
-    qf = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
     kf = k_cache.astype(jnp.float32)
     if k_scale is not None:
         kf = kf * k_scale
-    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
-    scores = _soft_cap(scores, logit_softcap)
-    mask = jnp.arange(s)[None, None, None, :] < cache_len
-    scores = jnp.where(mask, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
     vf = v_cache.astype(jnp.float32)
     if v_scale is not None:
         vf = vf * v_scale
-    out = jnp.einsum("bhgs,bshd->bhgd", probs, vf)
-    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+    if m == 1:
+        qf = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+        scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+        scores = _soft_cap(scores, logit_softcap)
+        mask = jnp.arange(s)[None, None, None, :] < cache_len
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgs,bshd->bhgd", probs, vf)
+        return out.reshape(b, 1, hq, dh).astype(q.dtype)
+    qf = q.reshape(b, m, hkv, g, dh).astype(jnp.float32) * scale
+    scores = jnp.einsum("bmhgd,bshd->bmhgs", qf, kf)
+    scores = _soft_cap(scores, logit_softcap)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (m,))
+    mask = jnp.arange(s)[None, :] < lens[:, None]            # (m, s)
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bmhgs,bshd->bmhgd", probs, vf)
+    return out.reshape(b, m, hq, dh).astype(q.dtype)
 
 
 def quantize_kv_entry(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

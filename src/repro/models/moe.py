@@ -103,6 +103,59 @@ def moe_forward(
     return out.reshape(b, s, d), aux
 
 
+class _FixedWeightLin:
+    """lin shim for the per-row prefill MoE: router calls pass through to
+    the real applier (a raw, stateless matmul); expert-weight fetches
+    return the pre-materialized per-row tensors instead of re-deciding."""
+
+    def __init__(self, lin, weights):
+        self._lin, self._weights = lin, weights
+
+    def __call__(self, path, x, **kw):
+        return self._lin(path, x, **kw)
+
+    def weights(self, path, x, **kw):
+        return self._weights[path.rsplit(".", 1)[1]]
+
+
+def moe_decode_rows(cfg_mlp_kind, lin, params, prefix, x, *,
+                    num_experts: int, top_k: int, async_input=None):
+    """M-row prefill MoE: per-row precision decisions, per-row dispatch.
+
+    The applier decides every row's expert-unit precision in one
+    vectorized pass (``weights_rows`` — row-invariant pinned units
+    materialize once and broadcast), then the single-token dropless
+    dispatch is ``vmap``-ed over the M row axis with each row's own
+    weights — so row m's routing, capacity math, and expert GEMMs are
+    exactly the sequential decode tick's, and the batched prefill stays
+    bit-compatible with tick-by-tick decoding.
+    """
+    b, m, d = x.shape
+    names = (["w_gate", "w_up", "w_down"] if _uses_gate(cfg_mlp_kind)
+             else ["w_up", "w_down"])
+    wfetch = getattr(lin, "weights_rows", None)
+    weights, axes = {}, {}
+    for name in names:
+        w = (wfetch(f"{prefix}.{name}", x, async_input=async_input)
+             if wfetch else params[f"{prefix}.{name}"])
+        # (M, E, K, N) = per-row dynamic decisions; (E, K, N) = shared
+        weights[name], axes[name] = (w, 0) if w.ndim == 4 else (w, None)
+
+    def one_row(x_row, w_row):
+        y, _ = moe_forward(
+            cfg_mlp_kind, _FixedWeightLin(lin, w_row), params, prefix,
+            x_row[:, None, :], num_experts=num_experts, top_k=top_k,
+            capacity_factor=float(num_experts) / top_k, group_size=b)
+        return y[:, 0, :]
+
+    y = jax.vmap(one_row, in_axes=(1, axes), out_axes=1)(x, weights)
+    return y, jnp.float32(0.0)
+
+
+def _uses_gate(cfg_mlp_kind) -> bool:
+    return cfg_mlp_kind == SWIGLU
+
+
 def moe_decode_forward(cfg_mlp_kind, lin, params, prefix, x, *,
                        num_experts: int, top_k: int):
     """Decode-path MoE: dropless grouped dispatch (single group).

@@ -204,3 +204,71 @@ def ssm_decode_step(
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                  params[f"{prefix}.norm_g"], cfg.norm_eps)
     return lin(f"{prefix}.out_proj", y), new_conv, new_state
+
+
+def ssm_decode_rows(
+    cfg: ModelConfig,
+    lin,
+    params,
+    prefix: str,
+    x_in: jax.Array,        # (b, M, d_model) — M consecutive token rows
+    conv_state: jax.Array,  # (b, width-1, d_xbc)
+    ssm_state: jax.Array,   # (b, H, N, P) float32
+    *,
+    valid=None,             # (M,) bool — rows ≥ the true prompt tail are
+                            # pads: their conv/state updates are gated off
+                            # so the carried state equals the sequential
+                            # tick-by-tick state after the valid prefix
+    async_input=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """M-row prefill step: batched projections + sequential recurrence.
+
+    The in/out projections (the precision units) run as ONE batched
+    launch over all M rows; only the O(M · state) conv/SSM recurrence is
+    a ``lax.scan`` — per row it applies exactly the
+    :func:`ssm_decode_step` update, so the carried state and every row's
+    output are the same as M sequential decode ticks.
+    """
+    d = ssm_dims(cfg)
+    bsz, m, _ = x_in.shape
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    zxbcdt = lin(f"{prefix}.in_proj", x_in, async_input=async_input)
+    z, x, bc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([x, bc], axis=-1)              # (b, M, d_xbc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params[f"{prefix}.dt_bias"])        # (b, M, H)
+    a = -jnp.exp(params[f"{prefix}.a_log"].astype(jnp.float32))
+    w = params[f"{prefix}.conv_w"]
+    width = w.shape[0]
+    rep = d["nheads"] // d["ngroups"]
+    gn = d["ngroups"] * d["d_state"]
+
+    def step(carry, xs):
+        conv, st = carry
+        xbc_m, dt_m, ok = xs                 # (b, d_xbc), (b, H), scalar
+        window = jnp.concatenate([conv, xbc_m[:, None, :]], axis=1)
+        out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
+        xbc = jax.nn.silu(out + params[f"{prefix}.conv_b"])
+        xh = xbc[:, :d["d_inner"]].reshape(
+            -1, d["nheads"], d["d_inner"] // d["nheads"])
+        bh = jnp.repeat(xbc[:, d["d_inner"]:d["d_inner"] + gn].reshape(
+            -1, d["ngroups"], d["d_state"]), rep, axis=1)
+        ch = jnp.repeat(xbc[:, d["d_inner"] + gn:].reshape(
+            -1, d["ngroups"], d["d_state"]), rep, axis=1)
+        decay = jnp.exp(dt_m * a)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dt_m, bh, xh)
+        new_st = st * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ch, new_st)
+        y = y + params[f"{prefix}.d_skip"][:, None] * xh
+        conv = jnp.where(ok, window[:, 1:width, :], conv)
+        st = jnp.where(ok, new_st, st)
+        return (conv, st), y.reshape(-1, d["d_inner"])
+
+    (new_conv, new_state), ys = jax.lax.scan(
+        step, (conv_state, ssm_state),
+        (jnp.moveaxis(xbc_new, 1, 0), jnp.moveaxis(dt, 1, 0), valid))
+    y = jnp.moveaxis(ys, 0, 1).astype(x_in.dtype)            # (b, M, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params[f"{prefix}.norm_g"], cfg.norm_eps)
+    return lin(f"{prefix}.out_proj", y), new_conv, new_state

@@ -24,7 +24,8 @@ from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, KV_HEADS,
                                  apply_rope, cross_entropy, default_linear,
                                  init_params, logical_axes, rms_norm)
 from repro.models.mlp import mlp_forward, mlp_param_dims
-from repro.models.moe import moe_decode_forward, moe_forward
+from repro.models.moe import (moe_decode_forward, moe_decode_rows,
+                              moe_forward)
 
 # ---------------------------------------------------------------------------
 # Parameter specs
@@ -360,16 +361,34 @@ def decode_step(
     cfg: ModelConfig,
     params: Params,
     state: Dict[str, jax.Array],
-    tokens: jax.Array,                       # (b, 1) int32
+    tokens: jax.Array,                       # (b, M) int32; M=1 is decode
     *,
     lin: Optional[Callable] = None,
+    n_valid: Optional[jax.Array] = None,     # prefill: rows >= n_valid are
+                                             # pads (bucketed prompt tail)
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step. Returns (logits (b, 1, vocab_padded), new_state)."""
+    """One decode tick (M=1) or one batched prefill launch (M>1).
+
+    Returns (logits (b, M, vocab_padded), new_state). The M>1 path is the
+    prefill stage's decode cell: M consecutive token rows run through the
+    SAME per-layer math as M sequential ticks — KV rows are written at
+    ``pos..pos+M-1`` and each attention row masks to its own causal
+    prefix, the SSM recurrence scans the rows sequentially (pad rows
+    gated out of the carried state), and MoE dispatch is vmapped per row
+    — so a prefill launch is tick-by-tick-equivalent while issuing one
+    launch instead of M. ``new_state["pos"]`` advances by ``n_valid``
+    (default M): pad rows beyond the true prompt leave garbage KV past
+    ``pos + n_valid`` that later ticks overwrite before ever attending.
+    """
     lin = lin or default_linear(params)
     pos = state["pos"]
     h = params["embed.tok"][tokens]
     new_state = dict(state)
     hd = cfg.resolved_head_dim
+    m = tokens.shape[1]
+    if n_valid is None:
+        n_valid = jnp.int32(m)
+    valid = jnp.arange(m) < n_valid
 
     for i in range(cfg.num_layers):
         p = f"layers.{i}"
@@ -380,10 +399,16 @@ def decode_step(
             q = lin(f"{p}.attn.wq", x, async_input=resid)
             k = lin(f"{p}.attn.wk", x, async_input=resid)
             v = lin(f"{p}.attn.wv", x, async_input=resid)
-            q = q.reshape(b, 1, cfg.num_heads, hd)
-            k = k.reshape(b, 1, cfg.num_kv_heads, hd)
-            v = v.reshape(b, 1, cfg.num_kv_heads, hd)
-            ppos = pos[None, None].astype(jnp.float32) * jnp.ones((b, 1))
+            q = q.reshape(b, m, cfg.num_heads, hd)
+            k = k.reshape(b, m, cfg.num_kv_heads, hd)
+            v = v.reshape(b, m, cfg.num_kv_heads, hd)
+            if m == 1:
+                ppos = pos[None, None].astype(jnp.float32) * jnp.ones((b, 1))
+                lens = pos + 1
+            else:
+                ppos = (pos + jnp.arange(m))[None, :].astype(jnp.float32) \
+                    * jnp.ones((b, 1))
+                lens = pos + 1 + jnp.arange(m)       # per-row causal prefix
             q = apply_rope(q, ppos, cfg.rope_theta)
             k = apply_rope(k, ppos, cfg.rope_theta)
             ks = state.get(f"kv.{i}.k_scale")
@@ -395,15 +420,21 @@ def decode_step(
             if ks2 is not None:
                 new_state[f"kv.{i}.k_scale"] = ks2
                 new_state[f"kv.{i}.v_scale"] = vs2
-            o = decode_attention(q, kc, vc, pos + 1,
+            o = decode_attention(q, kc, vc, lens,
                                  logit_softcap=cfg.attn_logit_softcap,
                                  k_scale=ks2, v_scale=vs2)
-            h = resid + lin(f"{p}.attn.wo", o.reshape(b, 1, -1))
+            h = resid + lin(f"{p}.attn.wo", o.reshape(b, m, -1))
         else:
-            y, conv, st = ssm_mod.ssm_decode_step(
-                cfg, lin, params, f"{p}.ssm", x,
-                state[f"ssm.{i}.conv"], state[f"ssm.{i}.state"],
-                async_input=resid)
+            if m == 1:
+                y, conv, st = ssm_mod.ssm_decode_step(
+                    cfg, lin, params, f"{p}.ssm", x,
+                    state[f"ssm.{i}.conv"], state[f"ssm.{i}.state"],
+                    async_input=resid)
+            else:
+                y, conv, st = ssm_mod.ssm_decode_rows(
+                    cfg, lin, params, f"{p}.ssm", x,
+                    state[f"ssm.{i}.conv"], state[f"ssm.{i}.state"],
+                    valid=valid, async_input=resid)
             new_state[f"ssm.{i}.conv"] = conv
             new_state[f"ssm.{i}.state"] = st
             h = resid + y
@@ -412,16 +443,17 @@ def decode_step(
             x = rms_norm(h, params[f"{p}.ln_x"], cfg.norm_eps)
             b = x.shape[0]
             q = lin(f"{p}.xattn.wq", x, async_input=resid)
-            q = q.reshape(b, 1, cfg.num_heads, hd)
+            q = q.reshape(b, m, cfg.num_heads, hd)
             kc = state[f"xkv.{i}.k"]
             vc = state[f"xkv.{i}.v"]
             o = decode_attention(q, kc, vc, jnp.int32(kc.shape[1]))
-            h = resid + lin(f"{p}.xattn.wo", o.reshape(b, 1, -1))
+            h = resid + lin(f"{p}.xattn.wo", o.reshape(b, m, -1))
         if cfg.d_ff > 0:
             resid = h
             x = rms_norm(h, params[f"{p}.ln2"], cfg.norm_eps)
             if cfg.layer_is_moe(i):
-                y, _ = moe_decode_forward(
+                fwd = moe_decode_forward if m == 1 else moe_decode_rows
+                y, _ = fwd(
                     cfg.mlp_kind, lin, params, f"{p}.moe", x,
                     num_experts=cfg.num_experts,
                     top_k=cfg.experts_per_token)
@@ -435,7 +467,8 @@ def decode_step(
         logits = jnp.einsum("bsd,vd->bsv", h, params["embed.tok"])
     else:
         logits = lin("lm_head", h)
-    new_state["pos"] = pos + 1
+    new_state["pos"] = pos + (jnp.int32(1) if m == 1 else
+                              n_valid.astype(jnp.int32))
     return logits, new_state
 
 

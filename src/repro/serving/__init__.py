@@ -1,8 +1,13 @@
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import make_decode_state, reset_state, state_bytes
+from repro.serving.kv_cache import (handoff_state, insert_slot_state,
+                                    make_decode_state, make_prefill_state,
+                                    n_prefill_chunks, prefill_len,
+                                    reset_state, stage_bytes, state_bytes)
 from repro.serving.qos import LatencyModel, QoSPlanner, QueryBitTracker
 from repro.serving.scheduler import Request, SlotScheduler
 
 __all__ = ["LatencyModel", "QoSPlanner", "QueryBitTracker", "Request",
-           "ServingEngine", "SlotScheduler", "make_decode_state",
-           "reset_state", "state_bytes"]
+           "ServingEngine", "SlotScheduler", "handoff_state",
+           "insert_slot_state", "make_decode_state", "make_prefill_state",
+           "n_prefill_chunks", "prefill_len", "reset_state", "stage_bytes",
+           "state_bytes"]

@@ -8,10 +8,15 @@
   artifact is exported as a target-stacked traced array
   (:func:`repro.core.adaptation.export_serve_arrays`) and the active
   target is a traced index, so switching targets never retraces;
-- ``generate`` / ``teacher_forced_nll`` run as ``lax.scan``-fused
-  multi-token decode in fixed-size chunks (bounded compile time, chunk
-  graphs reused across query lengths). Per-step effective bits accumulate
-  on device and sync to the host O(1) times per query — never per token;
+- ``generate`` / ``teacher_forced_nll`` run as a TWO-STAGE pipeline:
+  the prompt executes as the batched PREFILL stage —
+  ``ceil(prompt_len / prefill_chunk)`` M-row fused launches with
+  per-row precision decisions (bit-identical to the legacy
+  tick-by-tick path, which ``prefill_chunk=0`` preserves) — and the
+  generation ticks as ``lax.scan``-fused decode chunks seeded by the
+  prefill's decision carry (bounded compile time, chunk graphs reused
+  across query lengths). Per-step effective bits accumulate on device
+  and sync to the host O(1) times per query — never per token;
 - per-query effective-bit tracking feeds the QoS analysis (paper §6.3).
 
 Pipelined decision pass (``use_async=True``, the default): the scan
@@ -76,6 +81,7 @@ class ServingEngine:
         backend: Optional[str] = None,
         use_async: bool = True,
         decode_chunk: int = 16,
+        prefill_chunk: Optional[int] = 16,
         kv_bucket: int = 128,
         mesh: Optional[Mesh] = None,
     ):
@@ -84,6 +90,11 @@ class ServingEngine:
         self.backend = backend
         self.use_async = use_async
         self.decode_chunk = int(decode_chunk)
+        # batched prefill stage: a whole prompt (or a prefill_chunk-sized
+        # piece of a long one) runs as ONE M-row fused launch instead of
+        # M teacher-forced decode ticks. None/0 keeps the legacy
+        # tick-by-tick path (the prefill stage's bit-identity reference).
+        self.prefill_chunk = int(prefill_chunk or 0)
         self.kv_bucket = int(kv_bucket)
         self.mesh = mesh
         # raw params for non-unit paths (norms, router, embeds, conv, head)
@@ -106,8 +117,12 @@ class ServingEngine:
         self._ticks: Dict[Tuple[str, str], Callable] = {}
         self._chunks: Dict[Tuple, Callable] = {}
         self._boots: Dict[Tuple, Callable] = {}
+        self._prefills: Dict[Tuple, Callable] = {}
         self._planners: Dict[str, PrecisionPlanner] = {}
         self.trace_counts: Dict[Tuple[str, str], int] = {}
+        # compiled-call launch counters ("prefill"/"boot"/"chunk"): the
+        # O(prompt_len / prefill_chunk)-launches guarantee is testable
+        self.call_counts: Dict[str, int] = {}
         self.host_syncs = 0
         if mesh is not None:
             self._shard_serve_state()
@@ -294,6 +309,149 @@ class ServingEngine:
             return planned(state, tokens, target_idx, None, active)
 
         return tick
+
+    def build_prefill_rows(self, mode: str, rows: int,
+                           carried: bool) -> Callable:
+        """Untraced M-row prefill pass: ``run(state, tokens (b, M),
+        target_idx, n_valid[, carry]) -> (logits, state, eff_bits (M,),
+        dec (U, M))``.
+
+        One launch replaces M teacher-forced ticks: the applier decides
+        every row's precision in one vectorized pass (row m applies row
+        m-1's decision under ``use_async`` — ``carry`` seeds row 0 when
+        ``carried``, else row 0 boots with its own sync decision), the
+        per-row bit-serial matmuls ride the slot-batched kernel, and
+        ``dec[:, n_valid-1]`` is the decision carry the decode stage's
+        first pipelined tick applies (the prefill→decode handoff, KV
+        side handled by ``serving.kv_cache``).
+        """
+        base_mode, static_bits, serve_params = self._mode_env(mode)
+
+        def run(state, tokens, target_idx, n_valid, carry=None):
+            lin = DynamicLinearApplier(
+                self.artifacts.table, serve_params,
+                target_idx=target_idx, mode=base_mode,
+                static_bits=static_bits, use_async=self.use_async,
+                backend=self.backend, bundle=self.artifacts.decision,
+                rows=rows, carry_bits=carry)
+            logits, new_state = decode_step(self.cfg, self.raw, state,
+                                            tokens, lin=lin,
+                                            n_valid=n_valid)
+            return logits, new_state, lin.effective_bits(), \
+                lin.planned_rows()
+
+        if carried:
+            return run
+        return lambda state, tokens, target_idx, n_valid: \
+            run(state, tokens, target_idx, n_valid)
+
+    def _get_prefill(self, mode: str, want_nll: bool, boot: bool,
+                     state_sh=None, cache_key: Tuple = ()) -> Callable:
+        """Jitted prefill launch over one ``prefill_chunk``-row bucket.
+
+        Async: ``pf(state[, carry], toks (b, C), gold (b, C), n_valid,
+        target_idx) -> (state, cur (b,), next_carry (U,), toks_out
+        (C, b), eff_bits (C,), gold_logp (C, b))`` — the boot variant
+        (first chunk of a query) takes no ``carry`` and seeds row 0 with
+        its own sync decision. Sync (``use_async=False``): no carry in
+        or out. Emissions are row-aligned with the sequential ticks the
+        launch replaces; ``cur``/``next_carry`` are row ``n_valid - 1``'s
+        (the last REAL prompt row — pad rows of the bucketed final chunk
+        never feed the decode stage).
+        """
+        C = self.prefill_chunk
+        key = (mode, want_nll, boot) + tuple(cache_key)
+        if key in self._prefills:
+            return self._prefills[key]
+        carried = self.use_async and not boot
+        run = self.build_prefill_rows(mode, C, carried)
+        vocab = self.cfg.vocab_size
+
+        def emit_rows(logits, gold):
+            lv = logits[:, :, :vocab]
+            nxt = jnp.argmax(lv, axis=-1).astype(jnp.int32)    # (b, C)
+            if want_nll:
+                logp = jax.nn.log_softmax(lv.astype(jnp.float32), axis=-1)
+                gold_lp = jnp.take_along_axis(
+                    logp, gold[..., None], axis=-1)[..., 0]
+            else:
+                gold_lp = jnp.zeros(gold.shape, jnp.float32)
+            return nxt, gold_lp
+
+        def body(state, toks, gold, n_valid, t_idx, carry=None):
+            tkey = ("prefill", mode)
+            self.trace_counts[tkey] = self.trace_counts.get(tkey, 0) + 1
+            n_valid = jnp.asarray(n_valid, jnp.int32)
+            args = (state, toks, t_idx, n_valid) + \
+                ((carry,) if carried else ())
+            logits, state, ebs, dec = run(*args)
+            nxt, gold_lp = emit_rows(logits, gold)
+            cur = jnp.take_along_axis(nxt, (n_valid - 1)[None, None],
+                                      axis=1)[:, 0]
+            out = (state, cur)
+            if self.use_async:
+                out = out + (dec[:, n_valid - 1],)
+            return out + (nxt.T, ebs, gold_lp.T)
+
+        if carried:
+            pf = lambda state, carry, toks, gold, n_valid, t_idx: \
+                body(state, toks, gold, n_valid, t_idx, carry)
+        else:
+            pf = lambda state, toks, gold, n_valid, t_idx: \
+                body(state, toks, gold, n_valid, t_idx)
+
+        n_in = 6 if carried else 5
+        n_out = 6 if self.use_async else 5
+        if self.mesh is None:
+            self._prefills[key] = jax.jit(pf, donate_argnums=(0,))
+        else:
+            rep = NamedSharding(self.mesh, P())
+            in_sh = [state_sh] + [rep] * (n_in - 1)
+            out_sh = [state_sh] + [rep] * (n_out - 1)
+            if carried:
+                in_sh[1] = self._bits_sharding()
+            if self.use_async:
+                out_sh[2] = self._bits_sharding()
+            self._prefills[key] = jax.jit(
+                pf, donate_argnums=(0,),
+                in_shardings=tuple(in_sh), out_shardings=tuple(out_sh))
+        return self._prefills[key]
+
+    def iter_prefill(self, mode: str, state, toks_pf: np.ndarray,
+                     gold_pf: np.ndarray, n_pf: int, target_idx,
+                     *, want_nll: bool, state_sh=None,
+                     cache_key: Tuple = (), counter: str = "prefill"):
+        """Drive the prefill stage: ``ceil(n_pf / prefill_chunk)``
+        launches over ``toks_pf`` (already padded to whole chunks),
+        threading the boot/carry protocol and the launch counter.
+
+        Yields ``(nv, state, cur, bits, toks_out, eff_bits, gold_lps)``
+        per launch (``bits`` is None for a sync engine; ``nv`` is the
+        chunk's valid-row count). The ONE place the prefill callable's
+        signature is assembled — the engine's two-stage path and the
+        scheduler's prefill-at-admission both drive through here.
+        """
+        C = self.prefill_chunk
+        bits = None
+        for ci in range(-(-n_pf // C)):
+            boot = (ci == 0) if self.use_async else True
+            nv = min(C, n_pf - ci * C)
+            pf = self._get_prefill(mode, want_nll, boot,
+                                   state_sh=state_sh, cache_key=cache_key)
+            args = (state,)
+            if self.use_async and not boot:
+                args = args + (bits,)
+            args = args + (jnp.asarray(toks_pf[:, ci * C:(ci + 1) * C]),
+                           jnp.asarray(gold_pf[:, ci * C:(ci + 1) * C]),
+                           jnp.int32(nv), target_idx)
+            self.call_counts[counter] = \
+                self.call_counts.get(counter, 0) + 1
+            out = pf(*args)
+            if self.use_async:
+                state, cur, bits, tc, ec, gc = out
+            else:
+                state, cur, tc, ec, gc = out
+            yield nv, state, cur, bits, tc, ec, gc
 
     def _counted_jit(self, key: Tuple[str, str], fn: Callable,
                      **jit_kw) -> Callable:
@@ -504,10 +662,27 @@ class ServingEngine:
                     target_idx: jax.Array, *, want_nll: bool):
         """Drive the fused decode over ``total`` ticks; device outputs.
 
-        Pipelined path: tick 0 runs as the boot step (inline sync
-        decisions seed the pipeline), ticks 1.. run as bits-carrying
-        chunks. Sync path: the legacy all-inline chunks.
+        Two-stage path (``prefill_chunk > 0``, the default): the leading
+        teacher-forced run of ticks — the prompt — executes as the
+        batched PREFILL stage (O(prompt_len / prefill_chunk) M-row
+        launches that fill the KV cache, emit every row's token/bits/
+        gold-logp, and hand the decision carry to the decode stage);
+        the remaining generation ticks run as the pipelined decode
+        chunks, seeded by the prefill carry instead of a boot tick.
+
+        Legacy path (``prefill_chunk=0``): tick 0 runs as the boot step
+        (inline sync decisions seed the pipeline), ticks 1.. run as
+        bits-carrying chunks — O(prompt_len) launches; the prefill
+        stage's bit-identity reference. Sync path: all-inline chunks.
         """
+        if self.prefill_chunk > 0:
+            up = np.asarray(use_prompt, bool)
+            n_pf = int(np.argmin(up)) if not np.all(up) else len(up)
+            # the stage split needs a pure prompt-then-generate shape;
+            # teacher forcing resuming mid-stream falls back to legacy
+            if n_pf >= 1 and not np.any(up[n_pf:]):
+                return self._run_prefill_decode(
+                    mode, toks, gold, n_pf, target_idx, want_nll=want_nll)
         b, total = toks.shape
         c = self.decode_chunk
         lead = 1 if self.use_async else 0        # boot consumes tick 0
@@ -522,12 +697,7 @@ class ServingEngine:
         kv = self.kv_bucket
         max_len = -(-(padded + 1) // kv) * kv
         state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
-        state_sh = None
-        if self.mesh is not None:
-            state_sh = {k: NamedSharding(self.mesh, decode_state_spec(
-                self.mesh, k, v.shape)) for k, v in state.items()}
-            state = {k: jax.device_put(v, state_sh[k])
-                     for k, v in state.items()}
+        state_sh, state = self._decode_state_shardings(state)
         chunk_fn = self._get_chunk(mode, want_nll, state_sh=state_sh,
                                    cache_key=(b, max_len)) \
             if n_chunks else None
@@ -542,6 +712,8 @@ class ServingEngine:
             if self.use_async:
                 boot_fn = self._get_boot(mode, want_nll, state_sh=state_sh,
                                          cache_key=(b, max_len))
+                self.call_counts["boot"] = \
+                    self.call_counts.get("boot", 0) + 1
                 state, cur, bits, t0, e0, g0 = boot_fn(
                     state, cur, jnp.asarray(toks[:, 0]),
                     jnp.asarray(use_prompt[0]), jnp.asarray(gold[:, 0]),
@@ -549,20 +721,108 @@ class ServingEngine:
                 out_t.append(t0[None])
                 out_e.append(e0[None])
                 out_g.append(g0[None])
-            for ci in range(n_chunks):
-                sl = slice(lead + ci * c, lead + (ci + 1) * c)
-                args = (state, cur) + ((bits,) if self.use_async else ()) \
-                    + (jnp.asarray(toks[:, sl]),
-                       jnp.asarray(use_prompt[sl]),
-                       jnp.asarray(gold[:, sl]), target_idx)
-                out = chunk_fn(*args)
-                if self.use_async:
-                    state, cur, bits, tc, ec, gc = out
-                else:
-                    state, cur, tc, ec, gc = out
-                out_t.append(tc)
-                out_e.append(ec)
-                out_g.append(gc)
+            self._drive_chunks(chunk_fn, n_chunks, toks[:, lead:],
+                               use_prompt[lead:], gold[:, lead:],
+                               target_idx, (state, cur, bits),
+                               out_t, out_e, out_g)
+            return (jnp.concatenate(out_t, axis=0),
+                    jnp.concatenate(out_e, axis=0),
+                    jnp.concatenate(out_g, axis=0))
+
+    def _drive_chunks(self, chunk_fn, n_chunks: int, toks, use_prompt,
+                      gold, target_idx, carry, out_t, out_e, out_g):
+        """Drive ``n_chunks`` decode-chunk calls from host arrays.
+
+        ``carry`` is ``(state, cur, bits)`` (``bits`` ignored for a sync
+        engine); emissions append to the ``out_*`` lists. Shared by the
+        legacy path (post-boot ticks) and the two-stage path (generation
+        ticks after the prefill stage) so the carry/unpack/count logic
+        exists exactly once.
+        """
+        state, cur, bits = carry
+        c = self.decode_chunk
+        for ci in range(n_chunks):
+            sl = slice(ci * c, (ci + 1) * c)
+            args = (state, cur) + ((bits,) if self.use_async else ()) \
+                + (jnp.asarray(toks[:, sl]), jnp.asarray(use_prompt[sl]),
+                   jnp.asarray(gold[:, sl]), target_idx)
+            self.call_counts["chunk"] = \
+                self.call_counts.get("chunk", 0) + 1
+            out = chunk_fn(*args)
+            if self.use_async:
+                state, cur, bits, tc, ec, gc = out
+            else:
+                state, cur, tc, ec, gc = out
+            out_t.append(tc)
+            out_e.append(ec)
+            out_g.append(gc)
+        return state, cur, bits
+
+    def _decode_state_shardings(self, state):
+        if self.mesh is None:
+            return None, state
+        state_sh = {k: NamedSharding(self.mesh, decode_state_spec(
+            self.mesh, k, v.shape)) for k, v in state.items()}
+        return state_sh, {k: jax.device_put(v, state_sh[k])
+                          for k, v in state.items()}
+
+    def _run_prefill_decode(self, mode: str, toks: np.ndarray,
+                            gold: np.ndarray, n_pf: int,
+                            target_idx: jax.Array, *, want_nll: bool):
+        """The disaggregated two-stage path behind ``_run_chunks``.
+
+        Stage 1 (prefill): ticks ``[0, n_pf)`` — the teacher-forced
+        prompt — run as ``ceil(n_pf / prefill_chunk)`` M-row launches on
+        the SAME decode state (engine-side handoff is the identity: the
+        KV rows are written in place). Stage 2 (decode): the remaining
+        generation ticks run as the usual pipelined chunks, with the
+        decision carry seeded by the prefill's last valid row instead of
+        a boot tick. Emissions from both stages concatenate row-aligned
+        with the legacy tick stream, so the callers' slicing is
+        unchanged.
+        """
+        b, total = toks.shape
+        C, c = self.prefill_chunk, self.decode_chunk
+        n_pf_chunks = -(-n_pf // C)
+        pf_padded = n_pf_chunks * C
+        rem = total - n_pf
+        n_chunks = -(-rem // c) if rem > 0 else 0
+        kv = self.kv_bucket
+        # the cache must hold the bucketed prefill (pad rows write past
+        # the prompt; decode overwrites them) AND the decode ticks
+        need = max(pf_padded, n_pf + n_chunks * c + 1)
+        max_len = -(-need // kv) * kv
+        state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        state_sh, state = self._decode_state_shardings(state)
+        toks_pf = np.zeros((b, pf_padded), np.int32)
+        toks_pf[:, :n_pf] = toks[:, :n_pf]
+        gold_pf = np.zeros((b, pf_padded), np.int32)
+        gold_pf[:, :n_pf] = gold[:, :n_pf]
+        dec_gold = np.zeros((b, n_chunks * c), np.int32)
+        if rem > 0:
+            dec_gold[:, :rem] = gold[:, n_pf:]
+        dec_toks = np.zeros((b, n_chunks * c), np.int32)  # never consumed
+        out_t, out_e, out_g = [], [], []
+        cur = jnp.zeros((b,), jnp.int32)
+        bits = None
+        with self._mesh_ctx(), jax.transfer_guard_device_to_host("disallow"):
+            for nv, state, cur, bits, tc, ec, gc in self.iter_prefill(
+                    mode, state, toks_pf, gold_pf, n_pf, target_idx,
+                    want_nll=want_nll, state_sh=state_sh,
+                    cache_key=(b, max_len)):
+                # bucketed final chunk: only the real prompt rows emit
+                out_t.append(tc[:nv])
+                out_e.append(ec[:nv])
+                out_g.append(gc[:nv])
+            if n_chunks:
+                chunk_fn = self._get_chunk(mode, want_nll,
+                                           state_sh=state_sh,
+                                           cache_key=(b, max_len))
+                self._drive_chunks(
+                    chunk_fn, n_chunks, dec_toks,
+                    np.zeros((n_chunks * c,), bool),  # pure generation
+                    dec_gold, target_idx, (state, cur, bits),
+                    out_t, out_e, out_g)
             return (jnp.concatenate(out_t, axis=0),
                     jnp.concatenate(out_e, axis=0),
                     jnp.concatenate(out_g, axis=0))

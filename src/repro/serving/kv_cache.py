@@ -1,15 +1,39 @@
-"""Decode-state management for the serving engine.
+"""Decode-state management and the prefill→decode stage boundary.
 
 Preallocated ring-style KV caches (and SSM recurrent states) built from the
 model config; byte accounting feeds the QoS latency model and the roofline.
+
+With prefill/decode disaggregation this module is the KV HANDOFF CONTRACT
+between the two serve stages:
+
+- :func:`make_prefill_state` allocates the prefill stage's bucketed
+  scratch state — its KV length is rounded up to whole prefill chunks
+  (``prefill_len``), so every prompt length shares the handful of compiled
+  prefill launches instead of one shape per length;
+- :func:`insert_slot_state` is the handoff — it writes a prefill-filled
+  batch-1 state into one slot of the scheduler's stacked per-slot state,
+  placing the KV block at a (traced) sequence ``offset``, copying the SSM
+  recurrent/conv tails wholesale, and rebasing ``pos``. Compiled with the
+  prefill stage's shardings on the inputs and the slot shardings on the
+  outputs, GSPMD inserts the cross-slice collective here: this ONE step is
+  where a KV block moves from the prefill mesh slice to the decode slice;
+- :func:`handoff_state` is the explicit reshard for engine-style (slotless)
+  handoffs: prefill placement in, decode placement out. On a single
+  mesh/no mesh it is an identity transfer (bit-identical, tested);
+- :func:`reset_state` / :func:`state_bytes` / :func:`stage_bytes` do
+  buffer recycling and per-stage byte accounting. ``reset_state`` DONATES
+  the incoming buffers to a jitted zero-fill, so slot retirement and
+  prefill-scratch reuse rewrite the existing HBM pages instead of
+  allocating a fresh pytree per query.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.models import init_decode_state
@@ -20,11 +44,143 @@ def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     return init_decode_state(cfg, batch, max_len, dtype=dtype)
 
 
+# ---------------------------------------------------------------------------
+# Prefill-stage shapes (bucketed)
+# ---------------------------------------------------------------------------
+def prefill_len(prompt_len: int, prefill_chunk: int) -> int:
+    """Bucketed prefill length: prompt rounded up to whole chunks."""
+    if prefill_chunk <= 0:
+        raise ValueError(f"prefill_chunk must be positive, "
+                         f"got {prefill_chunk}")
+    return -(-int(prompt_len) // int(prefill_chunk)) * int(prefill_chunk)
+
+
+def n_prefill_chunks(prompt_len: int, prefill_chunk: int) -> int:
+    """Launches the prefill stage issues for a prompt: ceil(p / chunk)."""
+    return prefill_len(prompt_len, prefill_chunk) // int(prefill_chunk)
+
+
+def make_prefill_state(cfg: ModelConfig, batch: int, max_prompt: int,
+                       prefill_chunk: int,
+                       dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """The prefill stage's scratch state, sized for the LONGEST admissible
+    prompt (so one allocation serves every admission) with its KV length
+    rounded up to whole prefill chunks — pad rows of the final chunk
+    write inside the same buffer."""
+    return make_decode_state(cfg, batch,
+                             prefill_len(max_prompt, prefill_chunk),
+                             dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Buffer recycling / accounting
+# ---------------------------------------------------------------------------
+# donated arg: XLA reuses the incoming buffers for the zero fill (one
+# compiled zeroing per state shape, cached by jit)
+_zero_state = jax.jit(lambda state: jax.tree.map(jnp.zeros_like, state),
+                      donate_argnums=0)
+
+
+def reset_state(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Zero a decode/prefill state IN PLACE (buffer donation).
+
+    The input buffers are donated to a jitted zero-fill, so retiring a
+    slot or recycling the prefill scratch between admissions rewrites
+    the existing HBM pages — no fresh pytree allocation per query, no
+    allocator churn at continuous-batching rates. The caller must drop
+    its reference to the argument (it is consumed).
+    """
+    return _zero_state(state)
+
+
 def state_bytes(state: Dict[str, jax.Array]) -> int:
     return int(sum(np.prod(v.shape) * v.dtype.itemsize
                    for v in state.values()))
 
 
-def reset_state(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    out = {k: jnp.zeros_like(v) for k, v in state.items()}
+def stage_bytes(state: Dict[str, jax.Array]) -> Dict[str, int]:
+    """Per-component byte accounting of one stage's state.
+
+    Keys: ``kv`` (self-attention caches + int8 scales), ``ssm``
+    (recurrent + conv tails), ``xkv`` (cross-attention caches), ``other``
+    (positions etc.), ``total``. The prefill/decode stages report this
+    separately so the handoff traffic (= the prefill state's ``kv`` +
+    ``ssm`` terms) is a first-class number in the benchmarks.
+    """
+    out = {"kv": 0, "ssm": 0, "xkv": 0, "other": 0}
+    for k, v in state.items():
+        nbytes = int(np.prod(v.shape) * v.dtype.itemsize)
+        if k.startswith("kv."):
+            out["kv"] += nbytes
+        elif k.startswith("ssm."):
+            out["ssm"] += nbytes
+        elif k.startswith("xkv."):
+            out["xkv"] += nbytes
+        else:
+            out["other"] += nbytes
+    out["total"] = sum(out.values())
     return out
+
+
+# ---------------------------------------------------------------------------
+# The handoff: prefill state -> decode placement / slot insertion
+# ---------------------------------------------------------------------------
+def handoff_state(state: Dict[str, jax.Array],
+                  mesh: Optional[Mesh] = None,
+                  spec_fn: Optional[Callable] = None
+                  ) -> Dict[str, jax.Array]:
+    """Reshard a prefill-stage state onto the decode stage's placement.
+
+    ``spec_fn(mesh, key, shape) -> PartitionSpec`` names the target
+    layout (normally ``distributed.sharding.decode_state_spec``). With
+    ``mesh=None`` this is the single-mesh identity transfer — the SAME
+    arrays come back (no copy, bit-identical by construction).
+    """
+    if mesh is None or spec_fn is None:
+        return state
+    return {k: jax.device_put(v, NamedSharding(mesh,
+                                               spec_fn(mesh, k, v.shape)))
+            for k, v in state.items()}
+
+
+def insert_slot_state(dst: Dict[str, jax.Array],
+                      src: Dict[str, jax.Array],
+                      slot: jax.Array,
+                      offset: jax.Array = 0) -> Dict[str, jax.Array]:
+    """Write a batch-1 prefill state into slot ``slot`` of a stacked
+    per-slot decode state, KV block at sequence position ``offset``.
+
+    This is the per-slot half of the handoff contract: KV leaves (and
+    their int8 scale planes) are inserted at ``(slot, 0, offset, ...)``
+    via ``dynamic_update_slice`` — when the prefill bucket is longer
+    than the slot's cache only the leading window that fits is copied
+    (prefill pad rows past the true prompt are garbage that decode
+    overwrites before ever attending); SSM conv/recurrent tails and
+    cross-attention caches replace the slot's wholesale; ``pos`` is
+    rebased by ``offset``. Trace this under the prefill shardings in and
+    the slot shardings out and GSPMD emits the cross-slice transfer
+    right here.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    offset = jnp.asarray(offset, jnp.int32)
+    out = dict(dst)
+    for k, v in src.items():
+        d = dst[k]
+        if k == "pos":
+            out[k] = d.at[slot].set(v + offset)
+        elif k.startswith("kv.") and v.ndim >= 3:
+            keep = min(v.shape[1], d.shape[2])   # leading window that fits
+            block = v[:, :keep][None]            # (1, 1, keep, ...)
+            start = (slot, 0, offset) + (jnp.int32(0),) * (v.ndim - 2)
+            out[k] = jax.lax.dynamic_update_slice(d, block.astype(d.dtype),
+                                                  start)
+        else:
+            # slot leaves are (S,) + src.shape: SSM conv/recurrent tails
+            # and cross-attention caches replace the slot's wholesale
+            out[k] = d.at[slot].set(v.astype(d.dtype))
+    return out
+
+
+__all__ = ["handoff_state", "insert_slot_state", "make_decode_state",
+           "make_prefill_state", "n_prefill_chunks", "prefill_len",
+           "reset_state", "stage_bytes", "state_bytes"]

@@ -24,6 +24,21 @@ class LatencyModel:
     def tpot(self, bits: float, chips: int = 1) -> float:
         return self.bytes_per_bit * bits / (HBM_BW * chips) + self.overhead_s
 
+    def ttft(self, bits: float, prompt_len: int, prefill_chunk: int,
+             chips: int = 1) -> float:
+        """Predicted time-to-first-token of the batched prefill stage.
+
+        Each of the ``ceil(p / prefill_chunk)`` launches streams the
+        overlay once (weight traffic is amortized over the chunk's rows
+        — the arithmetic-intensity flip that motivates disaggregation)
+        plus the per-launch dispatch overhead. The legacy tick-by-tick
+        prefill is the ``prefill_chunk=1`` special case: p launches,
+        p× the weight traffic — which is exactly why long prompts used
+        to blow short TPOT budgets.
+        """
+        launches = max(1, -(-int(prompt_len) // max(1, int(prefill_chunk))))
+        return launches * self.tpot(bits, chips)
+
 
 @dataclass
 class QoSPlanner:
@@ -32,11 +47,32 @@ class QoSPlanner:
     chips: int = 1
 
     def plan(self, tpot_budget_s: float,
-             utilization: float = 0.0) -> float:
-        """Highest precision fitting the budget at current utilization."""
+             utilization: float = 0.0,
+             prompt_len: Optional[int] = None,
+             ttft_budget_s: Optional[float] = None,
+             prefill_chunk: Optional[int] = None) -> float:
+        """Highest precision fitting the budget at current utilization.
+
+        With a ``ttft_budget_s`` (and the prompt length), a TTFT term
+        joins the admission test: a target is feasible only if the
+        prefill-stage cost model says the prompt's first token lands
+        inside the TTFT budget too — so a long prompt can no longer
+        admit at a precision whose prefill alone blows a short-budget
+        slot's deadline. ``prefill_chunk=None`` models the tick-by-tick
+        prefill (chunk of 1 — the legacy worst case, p launches).
+        Requests without a TTFT budget keep the TPOT-only admission.
+        """
+        if ttft_budget_s is not None and not prompt_len:
+            raise ValueError("a ttft_budget_s needs prompt_len — without "
+                             "it the TTFT guard would be silently skipped")
         slack = tpot_budget_s * max(0.0, 1.0 - utilization)
         feasible = [t for t in sorted(self.targets)
                     if self.latency.tpot(t, self.chips) <= slack]
+        if prompt_len and ttft_budget_s is not None:
+            chunk = prefill_chunk or 1
+            feasible = [t for t in feasible
+                        if self.latency.ttft(t, prompt_len, chunk,
+                                             self.chips) <= ttft_budget_s]
         return feasible[-1] if feasible else min(self.targets)
 
 

@@ -31,12 +31,24 @@ Mechanics:
   the scalar-prefetched b_sel vector) and skips its MXU work, so busy
   slots never pay for idle ones and every slot's plane traffic is
   ∝ its own precision;
-- prefill and generation are unified on device: a slot still consuming its
-  prompt is teacher-forced from its prompt buffer, a generating slot feeds
-  back its last token — all under one ``lax.scan`` chunk;
+- prefill and decode are DISAGGREGATED stages (``engine.prefill_chunk >
+  0``, the default): admission runs the whole prompt as batched M-row
+  prefill launches on a recycled batch-1 scratch state — emitting the
+  request's first generated token (and its effective bits) at admission
+  time — then ONE compiled insert step hands the KV block, SSM tails,
+  and decision carry into the freed slot (`serving/kv_cache`'s handoff
+  contract; on a mesh the insert compiles prefill-slice shardings in and
+  slot shardings out, so the KV block reshards exactly once). Decode
+  chunks then never teacher-force: prompts no longer spend O(p) vmapped
+  slot ticks inside the shared chunk starving the other slots, and TTFT
+  costs O(p / prefill_chunk) launches. ``prefill_chunk=0`` keeps the
+  legacy flow (spun boot tick at admission, teacher-forced prompt ticks
+  inside the chunk — the disaggregated path's bit-identity reference);
 - the host syncs once per *chunk* (not per token) to harvest finished
   slots, record per-request effective bits into the
-  :class:`QueryBitTracker`, and admit queued requests into freed slots.
+  :class:`QueryBitTracker`, and admit queued requests into freed slots
+  (plus one small pull per admission for the prefill-emitted first
+  token).
 
 Slot-axis array layout — the contract the mesh sharding relies on
 -----------------------------------------------------------------
@@ -66,6 +78,7 @@ with explicit in/out shardings.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
@@ -75,10 +88,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import (decision_carry_spec,
+from repro.distributed.sharding import (decision_carry_spec, prefill_spec,
                                         slot_state_spec, slot_vec_spec)
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import make_decode_state
+from repro.serving.kv_cache import (insert_slot_state, make_decode_state,
+                                    make_prefill_state, n_prefill_chunks,
+                                    prefill_len, reset_state)
 from repro.serving.qos import QoSPlanner, QueryBitTracker
 
 
@@ -89,10 +104,13 @@ class Request:
     prompt: np.ndarray                 # (p,) int32
     max_new: int
     tpot_budget_s: float
+    ttft_budget_s: Optional[float] = None   # admission adds a TTFT term
     # filled on completion:
     target: Optional[float] = None
     tokens: Optional[np.ndarray] = None            # (p + max_new,)
     effective_bits: Optional[np.ndarray] = None    # (max_new,)
+    ttft_s: Optional[float] = None     # submit -> first generated token
+    _submit_t: Optional[float] = None
 
 
 @dataclass
@@ -134,10 +152,33 @@ class SlotScheduler:
         s = self.n_slots
         max_len = self.max_prompt + self.max_new + 1
         self.mesh = engine.mesh
+        self._mode = mode
         # pipelined decisions ride shotgun with the engine's async flag;
         # a sync engine keeps the legacy all-inline vmapped tick
         self._use_planner = engine.use_async
         self._n_units = engine.artifacts.decision.n_units
+        # prefill/decode disaggregation: admission runs the whole prompt
+        # as batched prefill launches on a reusable batch-1 scratch state
+        # (the prefill stage), then ONE insert step hands the KV block +
+        # decision carry into the admitted slot (the decode stage). The
+        # engine's prefill_chunk=0 keeps the legacy spun-boot admission.
+        self._use_prefill = engine.prefill_chunk > 0
+        self._pf_state = None
+        self._pf_sh = None
+        if self._use_prefill:
+            self._pf_state = make_prefill_state(
+                cfg, 1, self.max_prompt, engine.prefill_chunk,
+                dtype=jnp.float32)
+            self._pf_key = ("slot_pf", 1,
+                            prefill_len(self.max_prompt,
+                                        engine.prefill_chunk))
+            if self.mesh is not None:
+                self._pf_sh = {
+                    k: NamedSharding(self.mesh,
+                                     prefill_spec(self.mesh, k, v.shape))
+                    for k, v in self._pf_state.items()}
+                self._pf_state = {k: jax.device_put(v, self._pf_sh[k])
+                                  for k, v in self._pf_state.items()}
         # per-slot state: each slot is an independent batch-1 decode state
         proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32)
         self._state = jax.tree.map(
@@ -154,7 +195,10 @@ class SlotScheduler:
             self._shard_slot_state()
 
         self._chunk_fn = self._make_chunk(cfg.vocab_size, self.chunk, mode)
-        self._admit_fn = self._make_admit(mode)
+        self._admit_fn = None if self._use_prefill \
+            else self._make_admit(mode)
+        self._insert_fn = self._make_insert(mode) if self._use_prefill \
+            else None
 
     def _arrays(self) -> tuple:
         """The carried slot arrays, in compiled-signature order."""
@@ -343,6 +387,53 @@ class SlotScheduler:
                                     (rep, buf_rep, rep, rep, rep),
                        out_shardings=self._shardings + (rep,))
 
+    def _make_insert(self, mode: str):
+        """The prefill→decode HANDOFF step (one compiled call/admission).
+
+        Consumes the prefill stage's filled batch-1 state and writes it
+        into the admitted slot: KV block at offset 0 of the slot's cache
+        (``kv_cache.insert_slot_state``), SSM tails wholesale, ``pos``/
+        ``step_count`` rebased to the prompt length, the decision carry
+        into the slot's (S, U) bits row, and the request's control
+        vectors. On a mesh it is compiled with the PREFILL specs on the
+        incoming state and the SLOT specs on the outputs — GSPMD emits
+        the prefill-slice → decode-slice transfer inside this one step,
+        which is exactly the KV-handoff contract (identity on a single
+        device).
+        """
+
+        def ins(state, cur, step_count, *rest):
+            key = ("slot_insert", mode)
+            self.engine.trace_counts[key] = \
+                self.engine.trace_counts.get(key, 0) + 1
+            if self._use_planner:
+                (bits, prompt_buf, prompt_len, total_len, target_ix,
+                 pf_state, slot, tok, carry, prow, plen, tot, tix) = rest
+            else:
+                (prompt_buf, prompt_len, total_len, target_ix,
+                 pf_state, slot, tok, prow, plen, tot, tix) = rest
+            state = insert_slot_state(state, pf_state, slot, 0)
+            out = (state, cur.at[slot].set(tok),
+                   step_count.at[slot].set(plen))
+            if self._use_planner:
+                out = out + (bits.at[slot].set(carry),)
+            return out + (prompt_buf.at[slot].set(prow),
+                          prompt_len.at[slot].set(plen),
+                          total_len.at[slot].set(tot),
+                          target_ix.at[slot].set(tix))
+
+        n_carry = 8 if self._use_planner else 7
+        if self._shardings is None:
+            return jax.jit(ins, donate_argnums=tuple(range(n_carry)))
+        rep = NamedSharding(self.mesh, P())
+        buf_rep = NamedSharding(self.mesh, P(None))
+        extra = (self._pf_sh, rep, rep) + \
+            ((rep,) if self._use_planner else ()) + \
+            (buf_rep, rep, rep, rep)
+        return jax.jit(ins, donate_argnums=tuple(range(n_carry)),
+                       in_shardings=self._shardings + extra,
+                       out_shardings=self._shardings)
+
     # -- host control loop -------------------------------------------------------
     def submit(self, request: Request) -> None:
         p = len(np.asarray(request.prompt).reshape(-1))
@@ -352,6 +443,7 @@ class SlotScheduler:
         if not 1 <= request.max_new <= self.max_new:
             raise ValueError(f"max_new {request.max_new} not in [1, "
                              f"{self.max_new}]")
+        request._submit_t = time.monotonic()
         self._queue.append(request)
 
     @property
@@ -364,9 +456,15 @@ class SlotScheduler:
             if slot.request is not None or not self._queue:
                 continue
             r: Request = self._queue.popleft()
-            r.target = self.planner.plan(r.tpot_budget_s, self.utilization)
-            tix = self.engine.artifacts.target_index(r.target)
             prompt = np.asarray(r.prompt, np.int32).reshape(-1)
+            r.target = self.planner.plan(
+                r.tpot_budget_s, self.utilization,
+                prompt_len=len(prompt), ttft_budget_s=r.ttft_budget_s,
+                prefill_chunk=self.engine.prefill_chunk or None)
+            if self._use_prefill:
+                self._admit_prefill(si, r, prompt)
+                continue
+            tix = self.engine.artifacts.target_index(r.target)
             prow = np.zeros((self.max_prompt,), np.int32)
             prow[:len(prompt)] = prompt
             with self.engine._mesh_ctx():
@@ -382,6 +480,66 @@ class SlotScheduler:
                 boot_out = np.asarray(out[-1])
                 self._slots[si].gen_tokens.append(int(boot_out[0]))
                 self._slots[si].gen_bits.append(float(boot_out[1]))
+                if r._submit_t is not None:
+                    r.ttft_s = time.monotonic() - r._submit_t
+
+    def _admit_prefill(self, si: int, r: Request,
+                       prompt: np.ndarray) -> None:
+        """Disaggregated admission: prefill stage -> KV handoff -> slot.
+
+        The whole prompt runs as ``ceil(p / prefill_chunk)`` batched
+        launches on the recycled batch-1 prefill scratch (its buffers
+        are donated through every launch and the reset — zero new HBM
+        per admission), emitting the request's FIRST generated token and
+        its effective bits at admission time; ONE insert step then hands
+        the KV block, SSM tails, and decision carry into the slot. The
+        decode chunks see ``step_count = prompt_len``, so they never
+        teacher-force — prompts no longer spend O(p) vmapped slot ticks
+        inside the shared chunk, and long prompts stop starving the
+        other slots.
+        """
+        eng = self.engine
+        C = eng.prefill_chunk
+        p = len(prompt)
+        n_ch = n_prefill_chunks(p, C)
+        tix = eng.artifacts.target_index(r.target)
+        toks = np.zeros((1, n_ch * C), np.int32)
+        toks[0, :p] = prompt
+        gold = np.zeros((1, n_ch * C), np.int32)
+        if self._pf_state is None:       # lost to a failed admission
+            self._pf_state = make_prefill_state(
+                eng.cfg, 1, self.max_prompt, C, dtype=jnp.float32)
+            if self._pf_sh is not None:
+                self._pf_state = {k: jax.device_put(v, self._pf_sh[k])
+                                  for k, v in self._pf_state.items()}
+        state = reset_state(self._pf_state)
+        self._pf_state = None            # buffers in flight (donated)
+        with eng._mesh_ctx():
+            for nv, state, cur, bits, _, ec, _ in eng.iter_prefill(
+                    self._mode, state, toks, gold, p, jnp.int32(tix),
+                    want_nll=False, state_sh=self._pf_sh,
+                    cache_key=self._pf_key, counter="slot_prefill"):
+                pass
+            first_bits = ec[nv - 1]      # the tick that produced token 0
+            extra = (state, jnp.int32(si), cur[0])
+            if self._use_planner:
+                extra = extra + (bits,)
+            prow = np.zeros((self.max_prompt,), np.int32)
+            prow[:p] = prompt
+            extra = extra + (jnp.asarray(prow), jnp.int32(p),
+                             jnp.int32(p + r.max_new), jnp.int32(tix))
+            eng.call_counts["slot_insert"] = \
+                eng.call_counts.get("slot_insert", 0) + 1
+            out = self._insert_fn(*self._arrays(), *extra)
+        self._set_arrays(out)
+        self._pf_state = state           # recycle scratch next admission
+        host = np.asarray(jnp.stack([cur[0].astype(jnp.float32),
+                                     first_bits]))
+        self._slots[si] = _Slot(request=r)
+        self._slots[si].gen_tokens.append(int(host[0]))
+        self._slots[si].gen_bits.append(float(host[1]))
+        if r._submit_t is not None:
+            r.ttft_s = time.monotonic() - r._submit_t
 
     def _run_chunk(self) -> None:
         n_carry = 4 if self._use_planner else 3

@@ -60,7 +60,14 @@ def build_serve_step(cfg: ModelConfig,
 def build_prefill_step(cfg: ModelConfig,
                        table: Dict[str, UnitStatic],
                        *, backend: Optional[str] = None) -> Callable:
-    """Prefill at each unit's highest available precision (paper §6.1)."""
+    """Prefill at each unit's highest available precision (paper §6.1).
+
+    This is the LOWERING-oriented whole-sequence forward (no KV cache,
+    no decisions) used by the dry-run's prefill cells. The serving
+    path's prefill is the engine's batched M-row stage
+    (``ServingEngine(prefill_chunk=...)``): KV-filling, per-row dynamic
+    decisions, bit-identical to tick-by-tick decode.
+    """
 
     def step(serve_params, tokens, frames=None, prefix_embeds=None):
         lin = DynamicLinearApplier(table, serve_params, mode="max",

@@ -1,0 +1,466 @@
+"""Prefill/decode disaggregation: bit-identity, launch counts, handoff.
+
+The batched prefill stage must be a pure LAUNCH-SHAPE change: identical
+tokens and identical per-token effective bits to the legacy tick-by-tick
+path (the engines differ only in ``prefill_chunk``), while issuing
+O(prompt_len / prefill_chunk) launches instead of O(prompt_len). The
+prefill→decode handoff (``serving/kv_cache``) is exercised at the
+scheduler level: prefill-at-admission + KV insert must reproduce the
+legacy spun-boot scheduler bit for bit.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (LatencyModel, QoSPlanner, Request, ServingEngine,
+                           SlotScheduler, handoff_state, insert_slot_state,
+                           make_decode_state, make_prefill_state,
+                           n_prefill_chunks, prefill_len, reset_state,
+                           stage_bytes, state_bytes)
+
+PREFILL_CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def engines(tiny_bundle):
+    """(staged, legacy) engine pair: identical but for the prefill stage."""
+    cfg, params, model, _ = tiny_bundle
+    staged = ServingEngine(cfg, params, model,
+                           prefill_chunk=PREFILL_CHUNK)
+    legacy = ServingEngine(cfg, params, model, prefill_chunk=0)
+    return staged, legacy
+
+
+def _planner(model):
+    return QoSPlanner(sorted(model.adaptations),
+                      LatencyModel(bytes_per_bit=1e9), chips=1)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: prefill stage vs legacy tick-by-tick, all 4 modes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["dynamic", "static:llm_mq", "max",
+                                  "exact"])
+def test_prefill_bit_identity_all_modes(engines, tiny_bundle, mode):
+    """Same tokens AND same per-token effective bits in every mode —
+    short prompt (one bucketed launch) and long prompt (multi-chunk
+    prefill with a carried decision vector across chunk boundaries)."""
+    _, _, _, batches = tiny_bundle
+    staged, legacy = engines
+    for p in (4, 2 * PREFILL_CHUNK + 3):
+        prompt = batches[0][0][:1, :p]
+        out_l, eb_l = legacy.generate(prompt, 6, 3.5, mode=mode)
+        out_s, eb_s = staged.generate(prompt, 6, 3.5, mode=mode)
+        assert np.array_equal(out_l, out_s), (mode, p)
+        np.testing.assert_allclose(eb_s, eb_l, atol=1e-5)
+    toks = batches[0][0][:1, :24]
+    nll_l, eb_l = legacy.teacher_forced_nll(toks, 3.5, mode=mode)
+    nll_s, eb_s = staged.teacher_forced_nll(toks, 3.5, mode=mode)
+    assert abs(nll_l - nll_s) < 1e-5
+    np.testing.assert_allclose(eb_s, eb_l, atol=1e-5)
+
+
+def test_prefill_bit_identity_sync_engine(tiny_bundle):
+    """use_async=False: per-row same-tick decisions, no carry."""
+    cfg, params, model, batches = tiny_bundle
+    staged = ServingEngine(cfg, params, model, use_async=False,
+                           prefill_chunk=PREFILL_CHUNK)
+    legacy = ServingEngine(cfg, params, model, use_async=False,
+                           prefill_chunk=0)
+    prompt = batches[0][0][:1, :PREFILL_CHUNK + 3]
+    out_l, eb_l = legacy.generate(prompt, 5, 4.0)
+    out_s, eb_s = staged.generate(prompt, 5, 4.0)
+    assert np.array_equal(out_l, out_s)
+    np.testing.assert_allclose(eb_s, eb_l, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Long-prompt edges
+# ---------------------------------------------------------------------------
+def test_prompt_longer_than_decode_chunk(tiny_bundle):
+    """prompt_len > decode_chunk: the prefill stage covers what used to
+    span multiple teacher-forced decode chunks."""
+    cfg, params, model, batches = tiny_bundle
+    staged = ServingEngine(cfg, params, model, decode_chunk=4,
+                           prefill_chunk=PREFILL_CHUNK)
+    legacy = ServingEngine(cfg, params, model, decode_chunk=4,
+                           prefill_chunk=0)
+    prompt = batches[0][0][:1, :11]        # 11 > decode_chunk = 4
+    out_l, eb_l = legacy.generate(prompt, 5, 3.5)
+    out_s, eb_s = staged.generate(prompt, 5, 3.5)
+    assert np.array_equal(out_l, out_s)
+    np.testing.assert_allclose(eb_s, eb_l, atol=1e-5)
+
+
+def test_prompt_straddles_kv_bucket(tiny_bundle):
+    """Bucketed KV allocation: prompts on both sides of a kv_bucket
+    boundary (and a bucketed prefill tail crossing it) stay bit-identical
+    and the cache is always long enough for the padded prefill."""
+    cfg, params, model, batches = tiny_bundle
+    staged = ServingEngine(cfg, params, model, kv_bucket=16,
+                           prefill_chunk=PREFILL_CHUNK)
+    legacy = ServingEngine(cfg, params, model, kv_bucket=16,
+                           prefill_chunk=0)
+    for p in (14, 15, 17):                 # around the 16-token bucket
+        prompt = batches[0][0][:1, :p]
+        out_l, eb_l = legacy.generate(prompt, 4, 4.0)
+        out_s, eb_s = staged.generate(prompt, 4, 4.0)
+        assert np.array_equal(out_l, out_s), p
+        np.testing.assert_allclose(eb_s, eb_l, atol=1e-5)
+
+
+def test_single_token_prompt(engines, tiny_bundle):
+    """p=1: the prefill launch IS the boot tick (one bucketed row)."""
+    _, _, _, batches = tiny_bundle
+    staged, legacy = engines
+    prompt = batches[0][0][:1, :1]
+    out_l, eb_l = legacy.generate(prompt, 5, 4.5)
+    out_s, eb_s = staged.generate(prompt, 5, 4.5)
+    assert np.array_equal(out_l, out_s)
+    np.testing.assert_allclose(eb_s, eb_l, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Launch counts: O(prompt_len / prefill_chunk), measured not modeled
+# ---------------------------------------------------------------------------
+def test_prefill_launch_counts(engines, tiny_bundle):
+    staged, legacy = engines
+    _, _, _, batches = tiny_bundle
+    c = staged.decode_chunk
+    for p, max_new in ((4, 6), (PREFILL_CHUNK, 6),
+                       (2 * PREFILL_CHUNK + 3, 6)):
+        prompt = batches[0][0][:1, :p]
+        staged.call_counts.clear()
+        staged.generate(prompt, max_new, 3.5)
+        want_pf = n_prefill_chunks(p, PREFILL_CHUNK)
+        want_dec = -(-max_new // c)
+        assert staged.call_counts.get("prefill", 0) == want_pf, \
+            (p, staged.call_counts)
+        assert staged.call_counts.get("chunk", 0) == want_dec
+        assert "boot" not in staged.call_counts
+        # legacy: the boot tick + one chunk per decode_chunk ticks over
+        # the WHOLE stream — prompt launches scale with prompt length
+        legacy.call_counts.clear()
+        legacy.generate(prompt, max_new, 3.5)
+        want_legacy = 1 + -(-(p + max_new - 1) // c)
+        got_legacy = legacy.call_counts.get("boot", 0) + \
+            legacy.call_counts.get("chunk", 0)
+        assert got_legacy == want_legacy, (p, legacy.call_counts)
+    # teacher forcing is pure prefill: zero decode chunks
+    staged.call_counts.clear()
+    staged.teacher_forced_nll(batches[0][0][:1, :24], 3.5)
+    assert staged.call_counts.get("prefill", 0) == \
+        n_prefill_chunks(23, PREFILL_CHUNK)
+    assert "chunk" not in staged.call_counts
+
+
+def test_prefill_host_syncs_constant(engines, tiny_bundle):
+    """The O(1) host-sync invariant survives disaggregation."""
+    staged, _ = engines
+    _, _, _, batches = tiny_bundle
+    before = staged.host_syncs
+    staged.generate(batches[0][0][:1, :PREFILL_CHUNK + 2], 8, 3.5)
+    assert staged.host_syncs - before == 2
+
+
+def test_prefill_no_retrace_across_targets(engines, tiny_bundle):
+    """The prefill launches are compiled once per mode — switching
+    targets and prompt lengths reuses them (lengths share the bucketed
+    (b, C) shape; only n_valid changes, and it is traced)."""
+    staged, _ = engines
+    _, _, model, batches = tiny_bundle
+    targets = sorted(model.adaptations)
+    staged.generate(batches[0][0][:1, :5], 4, targets[0])      # warm
+    staged.generate(batches[0][0][:1, :PREFILL_CHUNK + 2], 4, targets[0])
+    baseline = dict(staged.trace_counts)
+    for t in targets:
+        for p in (3, 6, PREFILL_CHUNK + 1):
+            staged.generate(batches[0][0][:1, :p], 4, t)
+    assert staged.trace_counts == baseline, (baseline,
+                                             staged.trace_counts)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: prefill admission + KV handoff into slots
+# ---------------------------------------------------------------------------
+def _requests(cfg, seed=2, budgets=(6e-3, 5.2e-3, 4.6e-3, 1e-3, 6e-3)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (3 + i % 4,)).astype(np.int32),
+                    max_new=4 + i % 3, tpot_budget_s=b)
+            for i, b in enumerate(budgets)]
+
+
+def test_scheduler_prefill_matches_legacy_admission(engines, tiny_bundle):
+    """Prefill-at-admission + insert handoff == legacy spun-boot
+    scheduler: identical targets, tokens, and per-token bits; the first
+    generated token is emitted at admission (TTFT recorded)."""
+    cfg, _, model, _ = tiny_bundle
+    staged, legacy = engines
+    s_staged = SlotScheduler(staged, _planner(model), slots=2,
+                             max_prompt=8, max_new=6, chunk=4)
+    s_legacy = SlotScheduler(legacy, _planner(model), slots=2,
+                             max_prompt=8, max_new=6, chunk=4)
+    done_s = {r.rid: r for r in s_staged.run(_requests(cfg))}
+    done_l = {r.rid: r for r in s_legacy.run(_requests(cfg))}
+    assert set(done_s) == set(done_l)
+    for rid, rl in done_l.items():
+        rs = done_s[rid]
+        assert rs.target == rl.target
+        assert np.array_equal(rs.tokens, rl.tokens), rid
+        np.testing.assert_allclose(rs.effective_bits, rl.effective_bits,
+                                   atol=1e-5)
+        assert rs.ttft_s is not None and rs.ttft_s > 0
+    # admission issued ceil(p/C) prefill launches + ONE insert each
+    assert staged.call_counts.get("slot_insert", 0) == len(done_s)
+    assert staged.call_counts.get("slot_prefill", 0) == sum(
+        n_prefill_chunks(len(r.prompt), PREFILL_CHUNK)
+        for r in done_s.values())
+
+
+def test_scheduler_prefill_sync_engine(tiny_bundle):
+    """Sync engine: each prefill-admitted slot decodes exactly like a
+    solo tick-by-tick sync engine run at its admitted target. (Direct
+    staged-vs-legacy scheduler runs can admit at different targets —
+    admission-time utilization evolves differently when prompts stop
+    consuming chunk ticks — so the solo engine is the parity oracle.)"""
+    cfg, params, model, _ = tiny_bundle
+    staged = ServingEngine(cfg, params, model, use_async=False,
+                           prefill_chunk=PREFILL_CHUNK)
+    legacy = ServingEngine(cfg, params, model, use_async=False,
+                           prefill_chunk=0)
+    s_staged = SlotScheduler(staged, _planner(model), slots=2,
+                             max_prompt=8, max_new=6, chunk=4)
+    done_s = {r.rid: r for r in s_staged.run(_requests(cfg, seed=4))}
+    for rid, r in done_s.items():
+        out, ebits = legacy.generate(r.prompt[None, :], r.max_new,
+                                     r.target)
+        assert np.array_equal(out[0], r.tokens), rid
+        np.testing.assert_allclose(ebits, r.effective_bits, atol=1e-5)
+
+
+def test_scheduler_prefill_no_retrace(engines, tiny_bundle):
+    """Admission churn with varying prompt lengths reuses the compiled
+    prefill/insert/chunk steps."""
+    cfg, _, model, _ = tiny_bundle
+    staged, _ = engines
+    sched = SlotScheduler(staged, _planner(model), slots=2, max_prompt=8,
+                          max_new=6, chunk=4)
+    sched.run(_requests(cfg, seed=5))                # warm
+    baseline = dict(staged.trace_counts)
+    sched.run(_requests(cfg, seed=6))
+    assert staged.trace_counts == baseline
+
+
+# ---------------------------------------------------------------------------
+# M-row decode cells: every model family, raw params
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["tiny-dense", "tiny-sqrelu", "tiny-moe",
+                                  "tiny-ssm", "tiny-hybrid", "tiny-encdec"])
+def test_decode_step_rows_match_sequential(name):
+    """decode_step with (b, M) token rows == M sequential single-token
+    ticks: logits per row, KV/SSM state, and position all line up —
+    for attention, squared-ReLU, MoE (per-row dispatch), SSM (gated
+    recurrence), hybrid interleave, and enc-dec cells."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import decode_step, init_decode_state, \
+        init_model_params
+
+    cfg = get_config(name)
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    m = 5
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, m), 0,
+                              cfg.vocab_size)
+    st_ref = init_decode_state(cfg, 2, 8, dtype=jnp.float32)
+    ref = []
+    for t in range(m):
+        lg, st_ref = decode_step(cfg, params, st_ref, toks[:, t:t + 1])
+        ref.append(lg[:, 0])
+    st = init_decode_state(cfg, 2, 8, dtype=jnp.float32)
+    logits, st = decode_step(cfg, params, st, toks)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(jnp.stack(ref, axis=1)),
+                               rtol=1e-4, atol=1e-4)
+    assert int(st["pos"]) == int(st_ref["pos"]) == m
+    for k in st_ref:
+        np.testing.assert_allclose(np.asarray(st[k]),
+                                   np.asarray(st_ref[k]),
+                                   rtol=1e-4, atol=1e-4, err_msg=k)
+
+
+def test_decode_step_rows_pad_gating():
+    """Pad rows (>= n_valid) advance nothing the sequential path would
+    not have: pos stops at n_valid, SSM conv/recurrent state equals the
+    valid prefix's, and KV rows past the prompt are scratch the decode
+    stage overwrites before attending."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import decode_step, init_decode_state, \
+        init_model_params
+
+    cfg = get_config("tiny-hybrid")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    nv, m = 3, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, m), 0,
+                              cfg.vocab_size)
+    st_ref = init_decode_state(cfg, 1, 8, dtype=jnp.float32)
+    for t in range(nv):
+        lg_ref, st_ref = decode_step(cfg, params, st_ref,
+                                     toks[:, t:t + 1])
+    st = init_decode_state(cfg, 1, 8, dtype=jnp.float32)
+    logits, st = decode_step(cfg, params, st, toks,
+                             n_valid=jnp.int32(nv))
+    assert int(st["pos"]) == nv
+    np.testing.assert_allclose(np.asarray(logits[:, nv - 1]),
+                               np.asarray(lg_ref[:, 0]),
+                               rtol=1e-4, atol=1e-4)
+    for k in st_ref:
+        if k.startswith("ssm."):
+            np.testing.assert_allclose(np.asarray(st[k]),
+                                       np.asarray(st_ref[k]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+        elif k.startswith("kv.") and st[k].ndim == 4:
+            np.testing.assert_allclose(np.asarray(st[k][:, :nv]),
+                                       np.asarray(st_ref[k][:, :nv]),
+                                       rtol=1e-4, atol=1e-4, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# KV handoff contract (serving/kv_cache)
+# ---------------------------------------------------------------------------
+def test_prefill_len_bucketing():
+    assert prefill_len(1, 8) == 8
+    assert prefill_len(8, 8) == 8
+    assert prefill_len(9, 8) == 16
+    assert n_prefill_chunks(17, 8) == 3
+    with pytest.raises(ValueError):
+        prefill_len(4, 0)
+
+
+def test_insert_slot_state_offsets():
+    """KV block lands at the given offset of the slot's cache; SSM/pos
+    leaves transfer wholesale; other slots untouched."""
+    from repro.configs import get_config
+    cfg = get_config("tiny-dense")
+    src = make_prefill_state(cfg, 1, 8, 8, dtype=jnp.float32)
+    src = {k: (jnp.arange(v.size, dtype=v.dtype).reshape(v.shape)
+               if v.ndim else jnp.int32(5)) for k, v in src.items()}
+    proto = make_decode_state(cfg, 1, 20, dtype=jnp.float32)
+    dst = {k: jnp.zeros((3,) + v.shape, v.dtype) for k, v in proto.items()}
+    out = insert_slot_state(dst, src, 1, offset=2)
+    for k, v in src.items():
+        if k == "pos":
+            assert int(out[k][1]) == 5 + 2
+            assert int(out[k][0]) == 0
+        elif k.startswith("kv."):
+            got = np.asarray(out[k][1, 0])
+            np.testing.assert_array_equal(got[2:10], np.asarray(v[0]))
+            assert np.all(got[:2] == 0) and np.all(got[10:] == 0)
+            assert np.all(np.asarray(out[k][0]) == 0)   # other slots
+        else:
+            np.testing.assert_array_equal(np.asarray(out[k][1]),
+                                          np.asarray(v))
+
+
+def test_insert_slot_state_clips_long_bucket():
+    """A prefill bucket longer than the slot cache inserts only the
+    window that fits (pad rows past the prompt are disposable)."""
+    from repro.configs import get_config
+    cfg = get_config("tiny-dense")
+    src = make_prefill_state(cfg, 1, 16, 16, dtype=jnp.float32)  # len 16
+    src = {k: jnp.ones_like(v) for k, v in src.items()}
+    proto = make_decode_state(cfg, 1, 10, dtype=jnp.float32)     # len 10
+    dst = {k: jnp.zeros((2,) + v.shape, v.dtype) for k, v in proto.items()}
+    out = insert_slot_state(dst, src, 0, offset=0)
+    for k in src:
+        if k.startswith("kv."):
+            assert np.all(np.asarray(out[k][0, 0]) == 1.0)
+            assert out[k].shape[2] == 10
+
+
+def test_reset_state_donates_buffers():
+    """reset_state zeroes through ONE jitted call whose argument is
+    DONATED — on accelerator backends XLA reuses the incoming HBM pages
+    for the zero fill (CPU ignores donation but honors the contract),
+    so slot retirement stops allocating a fresh pytree per query."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.serving import kv_cache
+
+    cfg = get_config("tiny-dense")
+    state = make_decode_state(cfg, 1, 16, dtype=jnp.float32)
+    state = {k: v + 1.0 if v.dtype == jnp.float32 else v
+             for k, v in state.items()}
+    kv_key = next(k for k in state if k.startswith("kv."))
+    shape = state[kv_key].shape
+    donated = jax.tree.leaves(jax.tree.map(
+        lambda i: i.donated,
+        kv_cache._zero_state.lower(state).args_info))
+    assert donated and all(donated)
+    out = reset_state(state)
+    assert float(jnp.sum(out[kv_key])) == 0.0
+    assert out[kv_key].shape == shape
+    # recycling the same shapes reuses the one compiled zero fill
+    n = kv_cache._zero_state._cache_size()
+    reset_state(out)
+    assert kv_cache._zero_state._cache_size() == n
+
+
+def test_stage_bytes_accounting():
+    from repro.configs import get_config
+    cfg = get_config("tiny-dense")
+    state = make_prefill_state(cfg, 1, 8, 8)
+    rep = stage_bytes(state)
+    assert rep["total"] == state_bytes(state)
+    assert rep["kv"] > 0
+    assert rep["total"] == rep["kv"] + rep["ssm"] + rep["xkv"] + \
+        rep["other"]
+
+
+def test_handoff_state_identity():
+    """Single-mesh path: the handoff is an identity transfer — the SAME
+    arrays come back untouched."""
+    state = {"kv.0.k": jnp.ones((1, 4, 2, 8)), "pos": jnp.int32(3)}
+    out = handoff_state(state)
+    assert out["kv.0.k"] is state["kv.0.k"]
+    assert out["pos"] is state["pos"]
+
+
+# ---------------------------------------------------------------------------
+# QoS: TTFT admission term
+# ---------------------------------------------------------------------------
+def test_qos_ttft_model_monotone():
+    lat = LatencyModel(bytes_per_bit=1e9)
+    assert lat.ttft(4.0, 64, 16) == pytest.approx(4 * lat.tpot(4.0))
+    assert lat.ttft(4.0, 64, 16) < lat.ttft(4.0, 64, 8)
+    assert lat.ttft(4.0, 64, 1) == pytest.approx(64 * lat.tpot(4.0))
+    assert lat.ttft(3.0, 64, 16) < lat.ttft(5.0, 64, 16)
+
+
+def test_qos_ttft_guards_long_prompts():
+    """A long prompt with a tight TTFT budget admits at a lower
+    precision than TPOT alone would pick; chunked prefill restores it."""
+    lat = LatencyModel(bytes_per_bit=1e9)
+    pl = QoSPlanner([3.0, 4.0, 5.0], lat, chips=1)
+    tpot_only = pl.plan(8e-3)
+    assert tpot_only == 5.0
+    # tick-by-tick prefill of a 64-token prompt blows an 80ms TTFT
+    # budget at 5 bits (64 * 6.3ms); only 3.0 fits
+    tight = pl.plan(8e-3, prompt_len=64, ttft_budget_s=0.27,
+                    prefill_chunk=None)
+    assert tight == 3.0
+    # the batched prefill stage (chunk 16 -> 4 launches) restores 5.0
+    staged = pl.plan(8e-3, prompt_len=64, ttft_budget_s=0.27,
+                     prefill_chunk=16)
+    assert staged == 5.0
+    # no TTFT budget -> TPOT-only admission (back-compat)
+    assert pl.plan(8e-3, prompt_len=64) == tpot_only
+    # a TTFT budget without a prompt length is a loud error, not a
+    # silently skipped guard
+    with pytest.raises(ValueError):
+        pl.plan(8e-3, ttft_budget_s=0.1)
