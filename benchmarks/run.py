@@ -29,6 +29,7 @@ MODULES = [
     ("sensitivity_dynamics", "Figure 3: per-step sensitivity dynamics"),
     ("slot_kernel", "Batched-slot kernel: per-slot DMA elision"),
     ("prefill", "Prefill/decode disaggregation: TTFT + launch counts"),
+    ("speculative", "Self-speculative decode: draft/verify speedup sweep"),
     ("roofline", "§Roofline: 3-term analysis from the dry-run"),
 ]
 
@@ -40,6 +41,7 @@ def collect_serve_json(quick: bool) -> dict:
     from benchmarks.common import built_model, eval_ppl, eval_sequences
     from benchmarks.estimator_overhead import fused_vs_inline
     from benchmarks.prefill import measure as prefill_measure
+    from benchmarks.speculative import measure as spec_measure
     from repro.serving import ServingEngine
 
     cfg, params, model = built_model()
@@ -57,7 +59,14 @@ def collect_serve_json(quick: bool) -> dict:
     legacy = ServingEngine(cfg, params, model, prefill_chunk=0)
     p_len = 32 if quick else 64
     prefill = prefill_measure(engine, legacy, toks[:, :p_len], target)
+    spec_k = 4
+    spec = spec_measure(engine, prompt, max_new, target, ks=(spec_k,))
+    spec_row = spec["rows"][0]
     return {
+        "spec_k": spec_k,
+        "spec_tokens_per_s": spec_row["tokens_per_s"],
+        "spec_acceptance_rate": spec_row["acceptance_rate"],
+        "spec_launches_per_token": spec_row["launches_per_token"],
         "target": target,
         "decode_tokens_per_s": max_new / gen_wall,
         "teacher_forced_us_per_step": us_step,

@@ -1,0 +1,127 @@
+"""Self-speculative decoding: tokens/s vs baseline, acceptance, launches.
+
+The any-precision overlay is its own draft model: pinning every unit to
+the 2-bit plane prefix (``core.decision.draft_floor_bits``) makes a draft
+tick that streams a fraction of the overlay with ZERO planner launches,
+and one batched k-row verify launch (the PR-5 prefill cells on the PR-3
+slot-batched kernel) re-scores the whole window at planner-assigned bits.
+Greedy longest-prefix accept keeps the output token- and bits-identical
+to baseline decode, so the sweep below is a pure latency experiment.
+
+Reports, per k in the sweep:
+- spec tokens/s vs the baseline decode tokens/s (same engine, same
+  prompt, same target);
+- acceptance rate (accepted drafts / offered drafts) from the engine's
+  on-device counters;
+- verify launches per emitted token, ASSERTED against the closed form
+  ``windows / (windows + accepted)`` — the invariant that makes the
+  speedup mechanical: any acceptance at all pushes it below 1.
+
+Uses the cached bench-lm build; run from the repo root:
+    PYTHONPATH=src python -m benchmarks.speculative --quick
+``--smoke`` is the CI variant: a fresh tiny-dense build (no trained
+bench-lm / artifact cache needed), same asserts.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _decode_wall(engine, prompt, max_new: int, target: float,
+                 spec_k=None) -> tuple:
+    """(wall seconds, tokens, effective bits) for one generate call."""
+    kw = {} if spec_k is None else {"spec_k": spec_k}
+    t0 = time.monotonic()
+    out, ebits = engine.generate(prompt, max_new, target, **kw)
+    return time.monotonic() - t0, out, ebits
+
+
+def measure(engine, prompt, max_new: int, target: float,
+            ks=(2, 4, 8)) -> dict:
+    """Spec-vs-baseline sweep on one engine; asserts parity + invariant."""
+    _decode_wall(engine, prompt, max_new, target)          # warm baseline
+    wall_b, out_b, eb_b = _decode_wall(engine, prompt, max_new, target)
+    res = {"baseline_tokens_per_s": max_new / wall_b, "rows": []}
+    for k in ks:
+        _decode_wall(engine, prompt, max_new, target, spec_k=k)  # warm
+        wall, out_s, eb_s = _decode_wall(engine, prompt, max_new, target,
+                                         spec_k=k)
+        # greedy verification is exact: same tokens, same emitted bits
+        assert np.array_equal(out_b, out_s), f"spec k={k} changed tokens"
+        np.testing.assert_allclose(eb_b, eb_s, atol=1e-5,
+                                   err_msg=f"spec k={k} changed bits")
+        s = dict(engine.last_spec)
+        w, a = s["windows"], s["accepted"]
+        # closed-form launch invariant: every window is exactly ONE
+        # verify launch and emits 1 + (its accepted drafts) tokens
+        assert s["verify_launches"] == w, s
+        assert s["emitted_raw"] == w + a, s
+        assert abs(s["launches_per_token"] - w / (w + a)) < 1e-9, s
+        if a > 0:
+            assert s["launches_per_token"] < 1.0, s
+        row = {"k": k, "tokens_per_s": max_new / wall,
+               "acceptance_rate": s["acceptance_rate"],
+               "verify_launches": w,
+               "launches_per_token": s["launches_per_token"]}
+        res["rows"].append(row)
+        emit(f"spec_k{k}", wall / max_new * 1e6,
+             f"{row['acceptance_rate']:.3f}_acc_"
+             f"{row['launches_per_token']:.3f}_lpt")
+    emit("spec_baseline", wall_b / max_new * 1e6,
+         f"{res['baseline_tokens_per_s']:.1f}_tok_per_s")
+    return res
+
+
+def _run(cfg, params, model, engine, max_new: int, ks) -> dict:
+    target = sorted(model.adaptations)[0]
+    prompt = np.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab_size, (1, 8)),
+        np.int32)
+    return measure(engine, prompt, max_new, target, ks=ks)
+
+
+def main(quick: bool = False) -> dict:
+    from benchmarks.common import built_model
+    from repro.serving import ServingEngine
+
+    cfg, params, model = built_model()
+    engine = ServingEngine(cfg, params, model)
+    return _run(cfg, params, model, engine,
+                max_new=24 if quick else 64,
+                ks=(2, 4) if quick else (2, 4, 8))
+
+
+def smoke() -> dict:
+    """Self-contained CI gate: fresh tiny-dense build, same asserts."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import build_multiscale_model
+    from repro.models import init_model_params
+    from repro.serving import ServingEngine
+
+    cfg = get_config("tiny-dense")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [(rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32),
+                rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32))]
+    model = build_multiscale_model(cfg, params, batches,
+                                   targets=[3.5, 4.5], finetune_epochs=1,
+                                   baselines=())
+    engine = ServingEngine(cfg, params, model)
+    return _run(cfg, params, model, engine, max_new=12, ks=(2, 4))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fresh tiny-dense gate (no artifact cache) — "
+                         "the CI smoke variant")
+    args = ap.parse_args()
+    smoke() if args.smoke else main(quick=args.quick)

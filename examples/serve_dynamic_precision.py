@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="token rows per batched prefill launch at "
                          "admission (0 = legacy tick-by-tick prefill)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative window size: draft k-1 tokens at "
+                         "the 2-bit floor, verify all k in one batched "
+                         "launch (needs --prefill-chunk > 0)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -68,11 +72,11 @@ def main():
     planner = QoSPlanner(
         list(model.adaptations),
         LatencyModel(bytes_per_bit=engine.overlay_bytes() / 5),
-        chips=chips)
+        chips=chips, spec_k=args.spec_k)
     tracker = QueryBitTracker()
     scheduler = SlotScheduler(engine, planner, slots=args.slots,
                               max_prompt=32, max_new=args.gen_len,
-                              tracker=tracker)
+                              tracker=tracker, spec_k=args.spec_k)
 
     corpus = load_corpus("eval", 500_000)
     rng = np.random.default_rng(0)
@@ -94,6 +98,11 @@ def main():
               f"{np.mean(r.effective_bits):.2f}b{ttft}")
         print(f"  prompt: {bdecode(r.tokens[:32])!r}")
         print(f"  completion: {completion!r}\n")
+    if args.spec_k and args.spec_k > 1 and scheduler.spec_windows:
+        w, a = scheduler.spec_windows, scheduler.spec_accepted
+        print(f"speculative k={args.spec_k}: {w:.0f} windows, {a:.0f} "
+              f"accepted (acceptance {a / (w * (args.spec_k - 1)):.2f}, "
+              f"{w / (w + a):.2f} launches/token)")
     print("QoS summary:", {k: round(v, 4)
                            for k, v in tracker.summary().items()})
 

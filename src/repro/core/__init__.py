@@ -6,7 +6,7 @@ from repro.core.adaptation import (AdaptationSet, DecisionBundle,
                                    export_serve_arrays,
                                    export_static_arrays)
 from repro.core.allocator import allocate_precisions, uniform_allocation
-from repro.core.decision import PrecisionPlanner
+from repro.core.decision import PrecisionPlanner, draft_floor_bits
 from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
                                  bitserial_matmul_ref, delta_weight,
                                  materialize, materialize_stacked,
@@ -23,7 +23,8 @@ __all__ = [
     "QuantizedLinear", "QuantizedStacked",
     "ServeArtifacts", "UnitAdaptation", "UnitStatic",
     "allocate_precisions", "bitserial_matmul_ref",
-    "build_multiscale_model", "delta_weight", "dequantize", "estimate",
+    "build_multiscale_model", "delta_weight", "dequantize",
+    "draft_floor_bits", "estimate",
     "export_decision_bundle", "export_serve_arrays",
     "export_static_arrays", "fit_estimator",
     "materialize", "materialize_stacked", "quantize_channelwise",

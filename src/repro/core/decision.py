@@ -40,6 +40,21 @@ from repro.kernels.jl_estimator import plan_bits
 MODES = ("dynamic", "static", "max", "exact")
 
 
+def draft_floor_bits(bundle: DecisionBundle, floor: int = 2) -> jax.Array:
+    """The speculative DRAFT plan: every unit pinned to the overlay's bit
+    floor — ``min(floor, unit max_bits)`` so shallow overlays stay valid.
+
+    This is a static ``(U,)`` vector (no estimator inputs, no planner
+    launch): the draft path runs the same bit-serial kernel through the
+    lookup-mode applier with this vector as ``planned_bits``, so drafting
+    k tokens costs k low-bit ticks and ZERO decide launches. The
+    any-precision overlay makes the draft model free — the first
+    ``floor`` bit-planes of the very same weights.
+    """
+    return jnp.minimum(jnp.asarray(bundle.max_bits, jnp.int32),
+                       jnp.int32(floor))
+
+
 class PrecisionPlanner:
     """Computes the per-tick ``(U,)`` decision vector for one mode.
 

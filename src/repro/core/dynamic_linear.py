@@ -64,7 +64,8 @@ import jax.numpy as jnp
 
 from repro.core.adaptation import (DecisionBundle, KIND_LINEAR, KIND_PINNED,
                                    UnitStatic)
-from repro.core.bitplane import QuantizedStacked, materialize_stacked
+from repro.core.bitplane import (QuantizedStacked, materialize,
+                                 materialize_stacked)
 
 
 def _bitserial_matmul(*args, **kw):
@@ -85,6 +86,64 @@ def _match_width(xf: jax.Array, k: int) -> jax.Array:
     if xf.shape[-1] < k:
         xf = jnp.pad(xf, ((0, 0), (0, k - xf.shape[-1])))
     return xf
+
+
+class StaticDraftLinear:
+    """Dense ``lin`` protocol for the speculative DRAFT path.
+
+    The draft plan is STATIC — every unit pinned to the overlay's bit
+    floor — so the plane prefix can be materialized ONCE per engine into
+    plain dense weights and a draft tick becomes one GEMV per unit: no
+    per-plane ops, no estimator, no decision accounting.
+    ``x @ materialize(ov, floor)`` is the bit-serial closed form at
+    ``floor`` bits up to float association, and draft numerics only
+    steer ACCEPTANCE — the verify launch re-derives every emitted token
+    — so this is a pure fast path. The engine uses it where the
+    bit-serial matmul would run the jnp oracle (whose plane loop costs
+    full-``B`` compute regardless of ``b_sel``); the Pallas backend
+    keeps the plane-prefix kernel draft, where fetching two planes IS
+    the cheap path. See :func:`materialize_draft_weights`.
+
+    Single-token drafts only: linear units via ``__call__``, stacked
+    (MoE) units via ``weights`` — the prefill-only ``weights_rows``
+    entry point is deliberately absent.
+    """
+
+    def __init__(self, raw: Dict, dense: Dict):
+        self.raw = raw
+        self.dense = dense
+
+    def __call__(self, path: str, x: jax.Array, *,
+                 async_input=None) -> jax.Array:
+        w = self.dense.get(path)
+        if w is None:
+            w = self.raw[path]
+        return jnp.einsum("...k,kn->...n", x, w).astype(x.dtype)
+
+    def weights(self, path: str, x: jax.Array, *,
+                async_input=None) -> jax.Array:
+        w = self.dense.get(path)
+        return self.raw[path] if w is None else w.astype(x.dtype)
+
+
+def materialize_draft_weights(overlays: Dict, floor_bits,
+                              row_of: Dict) -> Dict:
+    """``path -> dense floor-bit weights`` for :class:`StaticDraftLinear`.
+
+    ``floor_bits`` is the static ``(U,)`` draft plan
+    (:func:`repro.core.decision.draft_floor_bits`, host-readable);
+    ``row_of`` maps unit paths into it. Built once per engine — the
+    weights are as static as the overlays they were unpacked from.
+    """
+    floor = jax.device_get(floor_bits)
+    dense = {}
+    for path, ov in overlays.items():
+        b = int(floor[row_of[path]])
+        if isinstance(ov, QuantizedStacked):
+            dense[path] = materialize_stacked(ov, b)
+        else:
+            dense[path] = materialize(ov, b)
+    return dense
 
 
 class DynamicLinearApplier:
@@ -169,9 +228,9 @@ class DynamicLinearApplier:
             if bundle is None:
                 raise ValueError("rows mode needs the decision bundle's "
                                  "unit⇄row table")
-            if planned_bits is not None or capture or active is not None:
-                raise ValueError("rows mode is the prefill stage: no "
-                                 "planned_bits/capture/active")
+            if planned_bits is not None or capture:
+                raise ValueError("rows mode is the prefill/verify stage: "
+                                 "no planned_bits/capture")
         elif carry_bits is not None:
             raise ValueError("carry_bits only applies in rows mode")
         self.table = table
@@ -199,13 +258,15 @@ class DynamicLinearApplier:
     def _select_bits(self, u: UnitStatic, x: jax.Array,
                      async_input) -> jax.Array:
         if self.rows is not None:
-            return self._select_bits_rows(u, x, async_input)
-        if self.planned_bits is not None:
+            bits = self._select_bits_rows(u, x, async_input)
+        elif self.planned_bits is not None:
             bits = self.planned_bits[self.bundle.row_of[u.path]]
         else:
             bits = self._select_bits_active(u, x, async_input)
         if self.active is not None:
-            # idle slot: 0 bits — the batched kernel elides every plane DMA
+            # idle slot: 0 bits — the batched kernel elides every plane
+            # DMA. Rows mode (the scheduler's gated VERIFY launch)
+            # broadcasts the scalar mask over the (M,) row vector.
             bits = jnp.where(self.active, bits, jnp.int32(0))
         return bits
 
@@ -426,8 +487,13 @@ class DynamicLinearApplier:
         invariant = (self.mode in ("static", "max") or e_tab is None
                      or u.est_kind == "pinned")
         if invariant:
-            return materialize_stacked(ov, bits[0]).astype(x.dtype)
-        w = jax.vmap(lambda b: materialize_stacked(ov, b))(bits)
+            w = materialize_stacked(ov, bits[0])
+        else:
+            w = jax.vmap(lambda b: materialize_stacked(ov, b))(bits)
+        if self.active is not None:
+            # idle contract mirrors .weights(): bits = 0 alone leaves the
+            # non-zero midpoint residue, so zero the materialized stack
+            w = jnp.where(self.active, w, jnp.zeros_like(w))
         return w.astype(x.dtype)
 
     # -- accounting ----------------------------------------------------------------

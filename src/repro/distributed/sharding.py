@@ -246,6 +246,24 @@ def slot_prefetch_spec(mesh: Mesh, slots: int,
     return slot_vec_spec(mesh, (slots,), rules)
 
 
+def verify_batch_spec(mesh: Mesh, slots: int, k: int,
+                      rules: Optional[Rules] = None) -> P:
+    """EXPECTED sharding of the speculative VERIFY batch — a named,
+    test-asserted contract like :func:`slot_prefetch_spec`.
+
+    The verify launch is ONE (S, k)-row batched decode: the scheduler's
+    S slots each carry a k-row speculation window, and the nested
+    custom_vmap collapse (kernels/bitserial ``_slots_batchable``) lands
+    all S·k rows on the batched kernel's slot axis. The layout follows
+    the slot axis — slots → 'data' when divisible (each data-parallel
+    group verifies its own slots' windows), the k row axis replicated
+    (a window's rows are one sequential speculation, never split across
+    groups) — so propagation off the slot-sharded state keeps the
+    verify batch aligned with every other per-slot control tensor.
+    """
+    return slot_vec_spec(mesh, (slots, k), rules)
+
+
 def decision_carry_spec(mesh: Mesh, shape: Sequence[int],
                         rules: Optional[Rules] = None) -> P:
     """The pipelined decision carry's sharding.

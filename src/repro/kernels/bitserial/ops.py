@@ -96,6 +96,45 @@ def _dispatch_slots(x, planes, scale, zero, b_sel, *, bits: int,
 
 
 @functools.lru_cache(maxsize=None)
+def _slots_batchable(bits: int, backend: str):
+    """custom_vmap'd SLOT-batched core: vmapping an already slot-batched
+    call flattens the new axis into the existing slot axis instead of
+    generic Pallas lifting. This is how the speculative VERIFY launch
+    gets its (S, k) batch: the rows-mode applier's per-row vmap lands k
+    rows on the slot axis, and the scheduler's slot vmap on top folds to
+    ONE (S·k)-slot launch — per-row b_sel prefetch, plane-DMA elision
+    and all. The rule calls the same custom_vmap object recursively, so
+    any vmap depth composes down to a single kernel launch."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(x, planes, scale, zero, b_sel):
+        return _dispatch_slots(x, planes, scale, zero, b_sel, bits=bits,
+                               backend=backend)
+
+    @fn.def_vmap
+    def _vmap_rule(axis_size, in_batched, x, planes, scale, zero, b_sel):
+        x_b, planes_b, scale_b, zero_b, b_b = in_batched
+        if planes_b or scale_b or zero_b:
+            # batched overlay: not the serving layout — generic mapping
+            axes = tuple(0 if b else None for b in in_batched)
+            y = jax.vmap(
+                functools.partial(_dispatch_slots, bits=bits,
+                                  backend=backend),
+                in_axes=axes)(x, planes, scale, zero, b_sel)
+            return y, True
+        if not x_b:
+            x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        if not b_b:
+            b_sel = jnp.broadcast_to(b_sel[None], (axis_size,) + b_sel.shape)
+        s2, s1, m, k = x.shape
+        y = fn(x.reshape(s2 * s1, m, k), planes, scale, zero,
+               b_sel.reshape(s2 * s1))
+        return y.reshape(s2, s1, m, y.shape[-1]), True
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
 def _batchable(bits: int, backend: str):
     """custom_vmap'd core: unmapped calls run the single-request path;
     a mapped call (the scheduler's slot axis) collapses into the batched
@@ -124,8 +163,11 @@ def _batchable(bits: int, backend: str):
             x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
         if not b_b:
             b_sel = jnp.broadcast_to(b_sel[None], (axis_size,) + b_sel.shape)
-        y = _dispatch_slots(x, planes, scale, zero, b_sel[:, 0],
-                            bits=bits, backend=backend)
+        # route through the slot-batched custom_vmap wrapper so a FURTHER
+        # vmap (scheduler slots over speculative verify rows) flattens
+        # into the slot axis instead of generically batching the kernel
+        y = _slots_batchable(bits, backend)(x, planes, scale, zero,
+                                            b_sel[:, 0])
         return y, True
 
     return fn

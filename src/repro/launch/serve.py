@@ -32,7 +32,7 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
                targets=(3.5, 4.0, 4.5), n_queries: int = 6,
                tokens_per_query: int = 12, slots: int = 4,
                seed: int = 0, mesh=None, prefill_chunk: int = 16,
-               log=print):
+               spec_k=None, log=print):
     cfg = get_config(arch)
     rng = np.random.default_rng(seed)
     if params is None:
@@ -55,10 +55,12 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
             f"{slot_vec_spec(mesh, (slots,))}; {chips} chip(s)/request)")
     planner = QoSPlanner(
         list(model.adaptations), LatencyModel(
-            bytes_per_bit=engine.overlay_bytes() / 5), chips=chips)
+            bytes_per_bit=engine.overlay_bytes() / 5), chips=chips,
+        spec_k=spec_k)
     tracker = QueryBitTracker()
     scheduler = SlotScheduler(engine, planner, slots=slots, max_prompt=8,
-                              max_new=tokens_per_query, tracker=tracker)
+                              max_new=tokens_per_query, tracker=tracker,
+                              spec_k=spec_k)
 
     requests = [
         Request(rid=qi,
@@ -77,6 +79,13 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
     log(f"{len(completed)} queries on {slots} slots in {wall*1e3:.0f}ms "
         f"({wall / max(1, n_queries * tokens_per_query) * 1e3:.1f}ms/token "
         f"amortized)")
+    if spec_k and spec_k > 1 and scheduler.spec_windows:
+        w, a = scheduler.spec_windows, scheduler.spec_accepted
+        log(f"speculative k={spec_k}: {w:.0f} verify windows, "
+            f"{a:.0f} drafts accepted "
+            f"(acceptance {a / (w * (spec_k - 1)):.2f}, "
+            f"{w / (w + a):.2f} launches/token; planner EMA "
+            f"{planner.acceptance_ema:.2f})")
     log("per-query QoS summary: "
         f"{ {k: round(v, 4) for k, v in tracker.summary().items()} }")
     return tracker
@@ -97,6 +106,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="token rows per batched prefill launch at "
                          "admission (0 = legacy tick-by-tick prefill)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative window size: draft k-1 tokens at "
+                         "the 2-bit floor, verify all k in one batched "
+                         "launch (needs --prefill-chunk > 0)")
     ap.add_argument("--artifacts", default=None,
                     help="pickle produced by examples/train_lm.py")
     args = ap.parse_args()
@@ -111,7 +124,7 @@ def main():
         mesh = make_serve_mesh(args.slots, args.model_parallel)
     serve_demo(args.arch, params=params, model=model,
                n_queries=args.queries, slots=args.slots, mesh=mesh,
-               prefill_chunk=args.prefill_chunk)
+               prefill_chunk=args.prefill_chunk, spec_k=args.spec_k)
 
 
 if __name__ == "__main__":

@@ -220,6 +220,7 @@ def ssm_decode_rows(
                             # so the carried state equals the sequential
                             # tick-by-tick state after the valid prefix
     async_input=None,
+    snapshots: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """M-row prefill step: batched projections + sequential recurrence.
 
@@ -228,6 +229,12 @@ def ssm_decode_rows(
     a ``lax.scan`` — per row it applies exactly the
     :func:`ssm_decode_step` update, so the carried state and every row's
     output are the same as M sequential decode ticks.
+
+    ``snapshots=True`` additionally returns the carried (conv, state)
+    AFTER each row — ``(M, ...)``-leading stacks. Speculative decoding's
+    accept/reject rolls the recurrence back to the last accepted row by
+    selecting index ``n_acc`` of these, which is bit-identical to having
+    stopped the sequential ticks there.
     """
     d = ssm_dims(cfg)
     bsz, m, _ = x_in.shape
@@ -263,12 +270,22 @@ def ssm_decode_rows(
         y = y + params[f"{prefix}.d_skip"][:, None] * xh
         conv = jnp.where(ok, window[:, 1:width, :], conv)
         st = jnp.where(ok, new_st, st)
-        return (conv, st), y.reshape(-1, d["d_inner"])
+        out = y.reshape(-1, d["d_inner"])
+        if snapshots:
+            return (conv, st), (out, conv, st)
+        return (conv, st), out
 
     (new_conv, new_state), ys = jax.lax.scan(
         step, (conv_state, ssm_state),
         (jnp.moveaxis(xbc_new, 1, 0), jnp.moveaxis(dt, 1, 0), valid))
+    snaps = None
+    if snapshots:
+        ys, convs, states = ys
+        snaps = (convs, states)                  # (M, b, ...) per-row
     y = jnp.moveaxis(ys, 0, 1).astype(x_in.dtype)            # (b, M, d_in)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                  params[f"{prefix}.norm_g"], cfg.norm_eps)
-    return lin(f"{prefix}.out_proj", y), new_conv, new_state
+    y = lin(f"{prefix}.out_proj", y)
+    if snapshots:
+        return y, new_conv, new_state, snaps
+    return y, new_conv, new_state

@@ -366,6 +366,7 @@ def decode_step(
     lin: Optional[Callable] = None,
     n_valid: Optional[jax.Array] = None,     # prefill: rows >= n_valid are
                                              # pads (bucketed prompt tail)
+    row_states: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode tick (M=1) or one batched prefill launch (M>1).
 
@@ -379,13 +380,23 @@ def decode_step(
     launch instead of M. ``new_state["pos"]`` advances by ``n_valid``
     (default M): pad rows beyond the true prompt leave garbage KV past
     ``pos + n_valid`` that later ticks overwrite before ever attending.
+
+    ``row_states=True`` (the speculative VERIFY launch) returns a third
+    output: per-row SSM carry snapshots ``{"ssm.i.conv"/"ssm.i.state":
+    (M, b, ...)}`` — entry m is the recurrent state after consuming row
+    m, which accept/reject selects to roll back to the last accepted
+    row. KV needs no snapshot: rejected rows are zeroed at the stage
+    boundary (``serving.kv_cache.rollback_decode_state``). The M-row
+    cells are used even at M=1 so the rows-mode applier composes.
     """
     lin = lin or default_linear(params)
     pos = state["pos"]
     h = params["embed.tok"][tokens]
     new_state = dict(state)
+    snaps: Dict[str, jax.Array] = {}
     hd = cfg.resolved_head_dim
     m = tokens.shape[1]
+    rows_cells = row_states or m > 1
     if n_valid is None:
         n_valid = jnp.int32(m)
     valid = jnp.arange(m) < n_valid
@@ -425,11 +436,18 @@ def decode_step(
                                  k_scale=ks2, v_scale=vs2)
             h = resid + lin(f"{p}.attn.wo", o.reshape(b, m, -1))
         else:
-            if m == 1:
+            if not rows_cells:
                 y, conv, st = ssm_mod.ssm_decode_step(
                     cfg, lin, params, f"{p}.ssm", x,
                     state[f"ssm.{i}.conv"], state[f"ssm.{i}.state"],
                     async_input=resid)
+            elif row_states:
+                y, conv, st, (convs, states) = ssm_mod.ssm_decode_rows(
+                    cfg, lin, params, f"{p}.ssm", x,
+                    state[f"ssm.{i}.conv"], state[f"ssm.{i}.state"],
+                    valid=valid, async_input=resid, snapshots=True)
+                snaps[f"ssm.{i}.conv"] = convs
+                snaps[f"ssm.{i}.state"] = states
             else:
                 y, conv, st = ssm_mod.ssm_decode_rows(
                     cfg, lin, params, f"{p}.ssm", x,
@@ -452,7 +470,7 @@ def decode_step(
             resid = h
             x = rms_norm(h, params[f"{p}.ln2"], cfg.norm_eps)
             if cfg.layer_is_moe(i):
-                fwd = moe_decode_forward if m == 1 else moe_decode_rows
+                fwd = moe_decode_rows if rows_cells else moe_decode_forward
                 y, _ = fwd(
                     cfg.mlp_kind, lin, params, f"{p}.moe", x,
                     num_experts=cfg.num_experts,
@@ -469,6 +487,8 @@ def decode_step(
         logits = lin("lm_head", h)
     new_state["pos"] = pos + (jnp.int32(1) if m == 1 else
                               n_valid.astype(jnp.int32))
+    if row_states:
+        return logits, new_state, snaps
     return logits, new_state
 
 

@@ -2,12 +2,13 @@ from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import (handoff_state, insert_slot_state,
                                     make_decode_state, make_prefill_state,
                                     n_prefill_chunks, prefill_len,
-                                    reset_state, stage_bytes, state_bytes)
+                                    reset_state, rollback_decode_state,
+                                    stage_bytes, state_bytes)
 from repro.serving.qos import LatencyModel, QoSPlanner, QueryBitTracker
 from repro.serving.scheduler import Request, SlotScheduler
 
 __all__ = ["LatencyModel", "QoSPlanner", "QueryBitTracker", "Request",
            "ServingEngine", "SlotScheduler", "handoff_state",
            "insert_slot_state", "make_decode_state", "make_prefill_state",
-           "n_prefill_chunks", "prefill_len", "reset_state", "stage_bytes",
-           "state_bytes"]
+           "n_prefill_chunks", "prefill_len", "reset_state",
+           "rollback_decode_state", "stage_bytes", "state_bytes"]

@@ -60,15 +60,17 @@ from repro.core.adaptation import (MultiScaleModel, export_serve_arrays,
                                    serve_array_axes)
 from repro.core.bitplane import (QuantizedLinear, QuantizedStacked,
                                  truncate_overlay, truncate_stacked)
-from repro.core.decision import PrecisionPlanner
-from repro.core.dynamic_linear import DynamicLinearApplier
+from repro.core.decision import PrecisionPlanner, draft_floor_bits
+from repro.core.dynamic_linear import (DynamicLinearApplier,
+                                       StaticDraftLinear,
+                                       materialize_draft_weights)
 from repro.core.thresholds import delta_weight_of
 from repro.distributed.context import use_mesh
 from repro.distributed.sharding import (SERVE_RULES, decision_carry_spec,
                                         decode_state_spec,
                                         overlay_shardings, resolve_spec)
 from repro.models import decode_step, model_logical_axes
-from repro.serving.kv_cache import make_decode_state
+from repro.serving.kv_cache import make_decode_state, rollback_decode_state
 
 
 class ServingEngine:
@@ -119,6 +121,12 @@ class ServingEngine:
         self._boots: Dict[Tuple, Callable] = {}
         self._prefills: Dict[Tuple, Callable] = {}
         self._planners: Dict[str, PrecisionPlanner] = {}
+        self._specs: Dict[Tuple, Callable] = {}
+        # dense floor-bit draft weights (lazy; see build_draft_tick)
+        self._draft_dense: Optional[Dict[str, jax.Array]] = None
+        # per-query speculative stats (windows, accepted, acceptance_rate,
+        # launches_per_token) — refreshed by every generate(spec_k=...)
+        self.last_spec: Dict[str, float] = {}
         self.trace_counts: Dict[Tuple[str, str], int] = {}
         # compiled-call launch counters ("prefill"/"boot"/"chunk"): the
         # O(prompt_len / prefill_chunk)-launches guarantee is testable
@@ -344,6 +352,107 @@ class ServingEngine:
             return run
         return lambda state, tokens, target_idx, n_valid: \
             run(state, tokens, target_idx, n_valid)
+
+    def build_draft_tick(self, mode: str = "dynamic") -> Callable:
+        """Untraced speculative DRAFT tick: ``tick(state, tokens (b, 1),
+        target_idx, active=None) -> (logits, state)``.
+
+        Every unit is pinned to the overlay's 2-bit floor via a STATIC
+        plan (:func:`repro.core.decision.draft_floor_bits`): a draft
+        tick reads only the first two bit-planes of the same weights —
+        the any-precision overlay's free draft model — with ZERO planner
+        launches and zero estimator ops. Identical across modes (the
+        floor doesn't depend on the estimator); drafted KV rows are
+        garbage the verify launch overwrites, and the caller restores
+        the SSM/pos leaves it snapshotted before drafting.
+
+        Two executions of the same function: on the Pallas backend the
+        lookup-mode applier drives the bit-serial kernel, whose per-slot
+        index_map clamp makes a 2-bit tick fetch exactly two plane
+        blocks (the DMA elision IS the draft's cheapness). Where the
+        matmul would run the jnp oracle — whose plane loop costs
+        full-``B`` compute regardless of ``b_sel`` — the floor prefix is
+        instead materialized ONCE into dense weights
+        (:class:`StaticDraftLinear`) so a draft tick is one GEMV per
+        unit. Same floor-bit function up to float association; draft
+        rounding only steers acceptance, the verify launch re-derives
+        every emitted token. The dense path ignores ``active``: every
+        drafted row (KV written past ``pos``) is overwritten by the
+        gated verify launch, zeros included for idle slots.
+        """
+        base_mode, static_bits, serve_params = self._mode_env(mode)
+        on_kernel = self.backend == "pallas" or (
+            self.backend is None and jax.default_backend() == "tpu")
+        if not on_kernel and self.mesh is None:
+            # single-device oracle fast path; under a mesh the overlay
+            # arrays already carry SERVE_RULES placements and the
+            # bit-serial draft below reuses them as-is
+            if self._draft_dense is None:
+                self._draft_dense = materialize_draft_weights(
+                    self.overlays, draft_floor_bits(self.artifacts.decision),
+                    self.artifacts.decision.row_of)
+            lin_dense = StaticDraftLinear(self.raw, self._draft_dense)
+
+            def dense_tick(state, tokens, target_idx, active=None):
+                logits, new_state = decode_step(self.cfg, self.raw, state,
+                                                tokens, lin=lin_dense)
+                return logits, new_state
+
+            return dense_tick
+        draft_vec = draft_floor_bits(self.artifacts.decision)
+
+        def tick(state, tokens, target_idx, active=None):
+            lin = DynamicLinearApplier(
+                self.artifacts.table, serve_params,
+                target_idx=target_idx, mode=base_mode,
+                static_bits=static_bits, use_async=self.use_async,
+                backend=self.backend, active=active,
+                bundle=self.artifacts.decision, planned_bits=draft_vec)
+            logits, new_state = decode_step(self.cfg, self.raw, state,
+                                            tokens, lin=lin)
+            return logits, new_state
+
+        return tick
+
+    def build_verify_rows(self, mode: str, k: int) -> Callable:
+        """Untraced speculative VERIFY launch: ``run(state, tokens (b, k),
+        target_idx[, carry], active=None) -> (logits, state, eff_bits
+        (k,), dec (U, k), snaps)``.
+
+        ONE batched k-row launch at the planner-assigned bits, reusing
+        the prefill-stage decode cells (``decode_step`` M>1 —
+        ``ssm_decode_rows``/``moe_decode_rows``) with per-row precision
+        through the slot-batched kernel (rows ride the kernel's slot
+        axis; under the scheduler's slot vmap the nested custom_vmap
+        collapse folds all S·k rows into one launch). Row semantics are
+        the prefill contract: under ``use_async`` row m applies row
+        m-1's decision with ``carry`` seeding row 0 — exactly the
+        pipelined bits baseline ticks would have applied — so greedy
+        verification is token- AND bits-identical to baseline decode.
+        ``decode_step(row_states=True)`` adds the per-row SSM snapshots
+        accept/reject rolls back with; ``dec[:, n_acc]`` is the carry
+        rewind (row n_acc's plan = baseline's next-tick decision).
+        """
+        base_mode, static_bits, serve_params = self._mode_env(mode)
+        carried = self.use_async
+
+        def run(state, tokens, target_idx, carry=None, active=None):
+            lin = DynamicLinearApplier(
+                self.artifacts.table, serve_params,
+                target_idx=target_idx, mode=base_mode,
+                static_bits=static_bits, use_async=self.use_async,
+                backend=self.backend, active=active,
+                bundle=self.artifacts.decision, rows=k, carry_bits=carry)
+            logits, new_state, snaps = decode_step(
+                self.cfg, self.raw, state, tokens, lin=lin,
+                row_states=True)
+            return logits, new_state, lin.effective_bits(), \
+                lin.planned_rows(), snaps
+
+        if carried:
+            return run
+        return lambda state, tokens, target_idx, active=None: \
+            run(state, tokens, target_idx, active=active)
 
     def _get_prefill(self, mode: str, want_nll: bool, boot: bool,
                      state_sh=None, cache_key: Tuple = ()) -> Callable:
@@ -857,7 +966,7 @@ class ServingEngine:
 
     def generate(
         self, prompt: np.ndarray, max_new: int, target: float,
-        mode: str = "dynamic",
+        mode: str = "dynamic", spec_k: Optional[int] = None,
     ) -> Tuple[np.ndarray, List[float]]:
         """Greedy decode; returns (tokens (b, prompt+max_new), eff bits).
 
@@ -865,11 +974,21 @@ class ServingEngine:
         fused chunked scan; the generated tokens and per-step effective
         bits accumulate on device and sync to the host a constant number
         of times per query (two pulls), independent of token count.
+
+        ``spec_k``: speculative decoding window — draft ``spec_k - 1``
+        tokens at the overlay's 2-bit floor, verify all ``spec_k`` rows
+        in one batched launch at the planner-assigned bits, accept the
+        longest matching prefix on device (:meth:`_generate_spec`).
+        Greedy verification makes the output token- and bits-identical
+        to ``spec_k=None``; per-query stats land in ``last_spec``.
         """
         prompt = np.asarray(prompt)
         b, p = prompt.shape
         if p == 0:
             raise ValueError("generate() needs a non-empty prompt")
+        if spec_k is not None:
+            return self._generate_spec(prompt, max_new, target, mode,
+                                       int(spec_k))
         total = p + max_new
         t_idx = jnp.int32(self.artifacts.target_index(target))
         toks = np.zeros((b, total), np.int32)
@@ -887,6 +1006,244 @@ class ServingEngine:
         # tick late, which would drop the first generated token's bits and
         # report the final, discarded tick instead)
         ebits = [float(e) for e in np.asarray(ebs[p - 1:p - 1 + max_new])]
+        return tokens_np, ebits
+
+    # -- speculative decode (draft @ floor bits / batched verify) ---------------
+    def _run_prompt(self, mode: str, prompt: np.ndarray, target_idx,
+                    max_len: int):
+        """Consume the prompt; return ``(state, cur, bits, eb_last,
+        state_sh)`` — the decode-ready carry the speculative loop starts
+        from (``cur`` is generated token 0, ``eb_last`` the effective
+        bits of the tick that produced it, ``bits`` the pipelined
+        decision carry — None for a sync engine).
+
+        Staged engines (``prefill_chunk > 0``) drive :meth:`iter_prefill`
+        — the usual O(prompt/chunk) batched launches. Legacy engines run
+        the prompt tick-by-tick through the boot/planned (or sync) jitted
+        ticks: O(prompt) launches, same as the legacy chunked path, kept
+        as the bit-identity reference. Everything stays on device.
+        """
+        b, p = prompt.shape
+        state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        state_sh, state = self._decode_state_shardings(state)
+        if self.prefill_chunk > 0:
+            C = self.prefill_chunk
+            pf_padded = -(-p // C) * C
+            toks_pf = np.zeros((b, pf_padded), np.int32)
+            toks_pf[:, :p] = prompt
+            gold_pf = np.zeros((b, pf_padded), np.int32)
+            cur = bits = eb_last = None
+            for nv, state, cur, bits, tc, ec, gc in self.iter_prefill(
+                    mode, state, toks_pf, gold_pf, p, target_idx,
+                    want_nll=False, state_sh=state_sh,
+                    cache_key=(b, max_len)):
+                eb_last = ec[nv - 1]
+            return state, cur, bits, eb_last, state_sh
+        vocab = self.cfg.vocab_size
+        bits = None
+        if self.use_async:
+            boot = self._get_tick(mode, "boot")
+            planned = self._get_tick(mode, "planned")
+        else:
+            sync = self._get_tick(mode, "sync")
+        for i in range(p):
+            tok = jnp.asarray(prompt[:, i])[:, None]
+            self.call_counts["spec_prompt_tick"] = \
+                self.call_counts.get("spec_prompt_tick", 0) + 1
+            if not self.use_async:
+                logits, state, eb = sync(state, tok, target_idx)
+            elif i == 0:
+                logits, state, eb, bits = boot(state, tok, target_idx)
+            else:
+                logits, state, eb, bits = planned(state, tok, target_idx,
+                                                  bits)
+        cur = jnp.argmax(logits[:, 0, :vocab], axis=-1).astype(jnp.int32)
+        return state, cur, bits, eb, state_sh
+
+    def _get_spec_loop(self, mode: str, k: int, state_sh=None,
+                       cache_key: Tuple = ()) -> Callable:
+        """Jitted speculative decode loop — ONE compiled call per query.
+
+        ``spec(state, cur[, bits], target_idx, rem) -> (tok_buf (cap, b),
+        eb_buf (cap,), windows, accepted)`` — a ``lax.while_loop`` whose
+        body is one draft/verify window:
+
+        1. snapshot the SSM/pos leaves, draft ``k-1`` tokens
+           autoregressively at the 2-bit floor (KV rows written past
+           ``pos`` are garbage the verify overwrites), restore SSM/pos;
+        2. verify ``[cur, g_1..g_{k-1}]`` in ONE batched k-row launch at
+           planner bits (``build_verify_rows``);
+        3. greedy longest-prefix accept on device: ``n_acc`` = leading
+           rows where the draft matched the verify argmax (all-over-
+           batch — lockstep windows for a dense batch), emitting
+           ``n_acc + 1`` baseline-exact tokens (the bonus token is the
+           verify output after the last match);
+        4. roll back KV/SSM to the last accepted row
+           (``rollback_decode_state``), rewind the decision carry to
+           ``dec[:, n_acc]`` (row ``n_acc``'s plan IS baseline's
+           next-tick decision), bump the device counters.
+
+        Emissions land in a ``cap``-row device buffer at a dynamic
+        offset (``cap`` >= rem + k - 1, bucketed by ``decode_chunk`` —
+        the final window may legally overshoot ``rem``; the caller
+        slices the first ``rem`` rows, every one of them accepted). The
+        counters make the closed-form launch invariant testable:
+        verify launches == ``windows``, raw emitted == ``windows +
+        accepted``, so launches-per-emitted-token == ``windows /
+        (windows + accepted)`` < 1 whenever anything was accepted.
+        ``rem`` is traced — one compiled loop serves every ``max_new``
+        within a ``cap`` bucket; the cache key is (mode, k, shapes).
+        """
+        key = (mode, k) + tuple(cache_key)
+        if key in self._specs:
+            return self._specs[key]
+        cap = cache_key[-1]
+        verify = self.build_verify_rows(mode, k)
+        draft = self.build_draft_tick(mode)
+        vocab = self.cfg.vocab_size
+        use_async = self.use_async
+        snap_of = lambda st: {kk: v for kk, v in st.items()
+                              if kk.startswith("ssm.") or kk == "pos"}
+
+        def window(state, cur, bits, t_idx):
+            """One draft/verify/accept window; returns the advanced
+            carry plus (v (b, k), ebs (k,), n_acc)."""
+            snap = snap_of(state)
+
+            def d_body(carry, _):
+                st, tok = carry
+                logits, st = draft(st, tok[:, None], t_idx)
+                nxt = jnp.argmax(logits[:, 0, :vocab],
+                                 axis=-1).astype(jnp.int32)
+                return (st, nxt), nxt
+
+            (state, _), g = jax.lax.scan(d_body, (state, cur), None,
+                                         length=k - 1)     # g (k-1, b)
+            state = dict(state, **snap)     # drafted SSM/pos never leak
+            toks = jnp.concatenate([cur[:, None], g.T.astype(jnp.int32)],
+                                   axis=1) if k > 1 else cur[:, None]
+            args = (state, toks, t_idx) + ((bits,) if use_async else ())
+            logits, state, ebs, dec, snaps = verify(*args)
+            v = jnp.argmax(logits[:, :, :vocab],
+                           axis=-1).astype(jnp.int32)       # (b, k)
+            if k > 1:
+                ok = jnp.all(g.T == v[:, :k - 1], axis=0)   # (k-1,)
+                n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
+            else:
+                n_acc = jnp.int32(0)
+            state = rollback_decode_state(state, snaps, n_acc + 1, k)
+            cur = jax.lax.dynamic_index_in_dim(v, n_acc, axis=1,
+                                               keepdims=False)
+            if use_async:
+                bits = jax.lax.dynamic_index_in_dim(dec, n_acc, axis=1,
+                                                    keepdims=False)
+            return state, cur, bits, v, ebs, n_acc
+
+        def spec(state, cur, *rest):
+            tkey = ("spec", mode)
+            self.trace_counts[tkey] = self.trace_counts.get(tkey, 0) + 1
+            if use_async:
+                bits, t_idx, rem = rest
+            else:
+                (t_idx, rem), bits = rest, jnp.int32(0)
+            b = cur.shape[0]
+            buf0 = (jnp.zeros((cap, b), jnp.int32),
+                    jnp.zeros((cap,), jnp.float32))
+
+            def cond(c):
+                return c[3] < rem
+
+            def body(c):
+                state, cur, bits, n, w, a, tok_buf, eb_buf = c
+                state, cur, bits, v, ebs, n_acc = window(state, cur, bits,
+                                                         t_idx)
+                tok_buf = jax.lax.dynamic_update_slice(tok_buf, v.T,
+                                                       (n, 0))
+                eb_buf = jax.lax.dynamic_update_slice(eb_buf, ebs, (n,))
+                return (state, cur, bits, n + n_acc + 1, w + 1,
+                        a + n_acc, tok_buf, eb_buf)
+
+            out = jax.lax.while_loop(
+                cond, body,
+                (state, cur, bits, jnp.int32(0), jnp.int32(0),
+                 jnp.int32(0)) + buf0)
+            _, _, _, _, w, a, tok_buf, eb_buf = out
+            return tok_buf, eb_buf, w, a
+
+        if self.mesh is None:
+            self._specs[key] = jax.jit(spec, donate_argnums=(0,))
+        else:
+            rep = NamedSharding(self.mesh, P())
+            n_in = 5 if use_async else 4
+            in_sh = [state_sh] + [rep] * (n_in - 1)
+            if use_async:
+                in_sh[2] = self._bits_sharding()
+            self._specs[key] = jax.jit(
+                spec, donate_argnums=(0,), in_shardings=tuple(in_sh),
+                out_shardings=(rep,) * 4)
+        return self._specs[key]
+
+    def _generate_spec(self, prompt: np.ndarray, max_new: int,
+                       target: float, mode: str, k: int
+                       ) -> Tuple[np.ndarray, List[float]]:
+        """Speculative :meth:`generate`: prompt stage + ONE jitted
+        draft/verify loop; two host pulls per query, like the baseline.
+
+        Token 0 comes out of the prompt's last tick (as in the baseline
+        scan); the loop emits the remaining ``max_new - 1``. Emitted
+        effective bits are the VERIFY rows' applied bits — draft-floor
+        bits are never attributed to an emitted token.
+        """
+        if k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {k}")
+        b, p = prompt.shape
+        t_idx = jnp.int32(self.artifacts.target_index(target))
+        rem = max_new - 1
+        C, c, kv = self.prefill_chunk, self.decode_chunk, self.kv_bucket
+        pf_padded = (-(-p // C) * C) if C > 0 else 0
+        # 2k rows of slack: a window may verify k rows starting at the
+        # final emitted position, and the rollback zero-block extends k
+        # more — dynamic_update_slice must never clamp (kv_cache contract)
+        need = max(pf_padded, p + max_new + 2 * k)
+        max_len = -(-need // kv) * kv
+        cap = -(-(max(rem, 1) + k - 1) // c) * c
+        with self._mesh_ctx(), \
+                jax.transfer_guard_device_to_host("disallow"):
+            state, cur, bits, eb_last, state_sh = self._run_prompt(
+                mode, prompt, t_idx, max_len)
+            if rem > 0:
+                spec_fn = self._get_spec_loop(mode, k, state_sh=state_sh,
+                                              cache_key=(b, max_len, cap))
+                self.call_counts["spec_loop"] = \
+                    self.call_counts.get("spec_loop", 0) + 1
+                args = (state, cur) + \
+                    ((bits,) if self.use_async else ()) + \
+                    (t_idx, jnp.int32(rem))
+                tok_buf, eb_buf, w, a = spec_fn(*args)
+                gen = jnp.concatenate([cur[:, None], tok_buf[:rem].T],
+                                      axis=1)
+            else:
+                w = a = jnp.int32(0)
+                eb_buf = jnp.zeros((0,), jnp.float32)
+                gen = cur[:, None]
+            out = jnp.concatenate([jnp.asarray(prompt, jnp.int32), gen],
+                                  axis=1)
+            packed = jnp.concatenate([
+                eb_last[None].astype(jnp.float32), eb_buf[:max(rem, 0)],
+                w.astype(jnp.float32)[None], a.astype(jnp.float32)[None]])
+        self.host_syncs += 2
+        tokens_np = np.asarray(out)
+        host = np.asarray(packed)
+        ebits = [float(e) for e in host[:1 + rem]]
+        w_f, a_f = float(host[-2]), float(host[-1])
+        emitted = w_f + a_f
+        self.last_spec = {
+            "k": k, "windows": w_f, "accepted": a_f,
+            "verify_launches": w_f, "emitted_raw": emitted,
+            "acceptance_rate": (a_f / (w_f * (k - 1)))
+            if k > 1 and w_f else 0.0,
+            "launches_per_token": (w_f / emitted) if emitted else 0.0,
+        }
         return tokens_np, ebits
 
     # -- accounting ---------------------------------------------------------------

@@ -181,6 +181,57 @@ def insert_slot_state(dst: Dict[str, jax.Array],
     return out
 
 
+def rollback_decode_state(state: Dict[str, jax.Array],
+                          snaps: Dict[str, jax.Array],
+                          n_keep: jax.Array,
+                          window: int) -> Dict[str, jax.Array]:
+    """Roll a post-VERIFY decode state back to the last accepted row.
+
+    Speculative decoding's accept/reject stage boundary: the verify
+    launch consumed a full ``window``-row block — advancing ``pos`` by
+    ``window`` and writing ``window`` KV rows — but only the first
+    ``n_keep`` (traced, >= 1) rows were accepted. This restores the
+    exact state ``n_keep`` sequential baseline ticks would have left:
+
+    - KV leaves (and int8 scale planes): a static ``window``-row ZERO
+      block is written at the new position. Rows at or past ``pos`` are
+      zero by invariant — fresh states are zero-filled and every window
+      re-establishes it here — so zeroing ``[new_pos, new_pos+window)``
+      erases exactly the rejected rows. The caller must size the cache
+      with ``window`` rows of slack past the last possible ``new_pos``
+      so the ``dynamic_update_slice`` never clamps (the engine and
+      scheduler allocate ``2k`` rows of slack).
+    - SSM conv/recurrent leaves: restored from the verify launch's
+      per-row snapshots (``decode_step(row_states=True)`` — leading
+      ``(window, ...)`` axis), selecting row ``n_keep - 1`` — which is
+      bit-identical to having stopped the sequential recurrence there.
+    - ``pos``: rebased to ``pos - window + n_keep``.
+
+    Cross-attention caches are decode-invariant and pass through
+    untouched. Leaves have a leading batch axis (the engine's dense
+    batch, or batch-1 under the scheduler's slot ``vmap`` — vmapping
+    this function over the slot axis is the per-slot rollback).
+    """
+    n_keep = jnp.asarray(n_keep, jnp.int32)
+    out = dict(state)
+    new_pos = state["pos"] - jnp.int32(window) + n_keep
+    for key, v in state.items():
+        if key == "pos":
+            out[key] = new_pos
+        elif key.startswith("kv.") and v.ndim >= 3:
+            zeros = jnp.zeros((v.shape[0], int(window)) + v.shape[2:],
+                              v.dtype)
+            start = (jnp.int32(0), new_pos) + \
+                (jnp.int32(0),) * (v.ndim - 2)
+            out[key] = jax.lax.dynamic_update_slice(v, zeros, start)
+        elif key in snaps:
+            out[key] = jax.lax.dynamic_index_in_dim(
+                snaps[key], n_keep - 1, axis=0,
+                keepdims=False).astype(v.dtype)
+    return out
+
+
 __all__ = ["handoff_state", "insert_slot_state", "make_decode_state",
            "make_prefill_state", "n_prefill_chunks", "prefill_len",
-           "reset_state", "stage_bytes", "state_bytes"]
+           "reset_state", "rollback_decode_state", "stage_bytes",
+           "state_bytes"]

@@ -39,12 +39,57 @@ class LatencyModel:
         launches = max(1, -(-int(prompt_len) // max(1, int(prefill_chunk))))
         return launches * self.tpot(bits, chips)
 
+    def spec_tpot(self, bits: float, k: int, acceptance: float,
+                  draft_bits: float = 2.0, chips: int = 1) -> float:
+        """Predicted per-emitted-token latency under speculative decode.
+
+        One draft/verify window costs ``k - 1`` draft ticks streaming
+        the ``draft_bits``-plane prefix plus ONE verify launch streaming
+        the full ``bits`` overlay (weight traffic amortized over the
+        window's k rows, like prefill), and emits ``1 + acceptance *
+        (k - 1)`` tokens in expectation::
+
+            t = ((k-1) * tpot(draft) + tpot(bits)) / (1 + a * (k-1))
+
+        ``k=1`` (or ``acceptance=0``) degenerates to plain ``tpot`` —
+        verify-only windows emit exactly one token each. The acceptance
+        input is the planner's observed EMA, so admission predictions
+        track the workload's actual draft quality.
+        """
+        k = max(1, int(k))
+        a = min(1.0, max(0.0, float(acceptance)))
+        window = (k - 1) * self.tpot(draft_bits, chips) + \
+            self.tpot(bits, chips)
+        return window / (1.0 + a * (k - 1))
+
 
 @dataclass
 class QoSPlanner:
     targets: Sequence[float]          # supported target precisions
     latency: LatencyModel
     chips: int = 1
+    # speculative serving: when spec_k is set, admission predicts TPOT
+    # with the draft/verify window model at the OBSERVED acceptance EMA
+    # (scheduler feeds observe_acceptance after every chunk) — a workload
+    # whose drafts keep landing admits higher precisions into the same
+    # TPOT budget, which is the paper's runtime-adaptation dial extended
+    # from "how many bit-planes" to "how many tokens per launch"
+    spec_k: Optional[int] = None
+    draft_bits: float = 2.0
+    acceptance_ema: float = 0.0
+
+    def observe_acceptance(self, rate: float, alpha: float = 0.2) -> None:
+        """Fold one chunk's measured acceptance rate into the EMA."""
+        r = min(1.0, max(0.0, float(rate)))
+        self.acceptance_ema = (1.0 - alpha) * self.acceptance_ema + \
+            alpha * r
+
+    def _tpot(self, bits: float) -> float:
+        if self.spec_k is not None and self.spec_k > 1:
+            return self.latency.spec_tpot(
+                bits, self.spec_k, self.acceptance_ema,
+                draft_bits=self.draft_bits, chips=self.chips)
+        return self.latency.tpot(bits, self.chips)
 
     def plan(self, tpot_budget_s: float,
              utilization: float = 0.0,
@@ -67,7 +112,7 @@ class QoSPlanner:
                              "it the TTFT guard would be silently skipped")
         slack = tpot_budget_s * max(0.0, 1.0 - utilization)
         feasible = [t for t in sorted(self.targets)
-                    if self.latency.tpot(t, self.chips) <= slack]
+                    if self._tpot(t) <= slack]
         if prompt_len and ttft_budget_s is not None:
             chunk = prefill_chunk or 1
             feasible = [t for t in feasible

@@ -93,7 +93,8 @@ from repro.distributed.sharding import (decision_carry_spec, prefill_spec,
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import (insert_slot_state, make_decode_state,
                                     make_prefill_state, n_prefill_chunks,
-                                    prefill_len, reset_state)
+                                    prefill_len, reset_state,
+                                    rollback_decode_state)
 from repro.serving.qos import QoSPlanner, QueryBitTracker
 
 
@@ -134,6 +135,7 @@ class SlotScheduler:
         chunk: int = 8,
         mode: str = "dynamic",
         tracker: Optional[QueryBitTracker] = None,
+        spec_k: Optional[int] = None,
     ):
         self.engine = engine
         self.planner = planner
@@ -142,6 +144,12 @@ class SlotScheduler:
         self.max_new = int(max_new)
         self.chunk = int(chunk)
         self.tracker = tracker
+        self.spec_k = int(spec_k) if spec_k else None
+        # cumulative speculative counters (verify windows / accepted
+        # drafts over running slots) — the acceptance EMA feed and the
+        # closed-form launch-invariant numbers
+        self.spec_windows = 0.0
+        self.spec_accepted = 0.0
         self.completed: List[Request] = []
         self._queue: deque = deque()
         self._slots = [_Slot() for _ in range(self.n_slots)]
@@ -149,8 +157,20 @@ class SlotScheduler:
         cfg = engine.cfg
         if cfg.vocab_size >= 2 ** 24:   # chunk harvest packs ids via f32
             raise ValueError("vocab too large for f32-exact token packing")
+        if self.spec_k is not None:
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+            if engine.prefill_chunk <= 0:
+                # spec windows never teacher-force: prompts must be
+                # consumed by the prefill-at-admission stage
+                raise ValueError("spec_k needs a prefill-staged engine "
+                                 "(engine.prefill_chunk > 0)")
         s = self.n_slots
-        max_len = self.max_prompt + self.max_new + 1
+        # speculative windows need 2·k rows of KV slack past the last
+        # emitted position (verify block + rollback zero-block — see
+        # kv_cache.rollback_decode_state)
+        max_len = self.max_prompt + self.max_new + 1 + \
+            2 * (self.spec_k or 0)
         self.mesh = engine.mesh
         self._mode = mode
         # pipelined decisions ride shotgun with the engine's async flag;
@@ -194,7 +214,11 @@ class SlotScheduler:
         if self.mesh is not None:
             self._shard_slot_state()
 
-        self._chunk_fn = self._make_chunk(cfg.vocab_size, self.chunk, mode)
+        self._chunk_fn = (
+            self._make_spec_chunk(cfg.vocab_size, self.chunk, mode,
+                                  self.spec_k)
+            if self.spec_k is not None
+            else self._make_chunk(cfg.vocab_size, self.chunk, mode))
         self._admit_fn = None if self._use_prefill \
             else self._make_admit(mode)
         self._insert_fn = self._make_insert(mode) if self._use_prefill \
@@ -326,6 +350,129 @@ class SlotScheduler:
                        in_shardings=self._shardings,
                        out_shardings=self._shardings[:n_carry] +
                                      (ys_sh,) * 3)
+
+    def _make_spec_chunk(self, vocab: int, length: int, mode: str, k: int):
+        """Speculative chunk: ``length`` draft/verify windows per call.
+
+        Each window drafts ``k - 1`` tokens per slot at the overlay's
+        2-bit floor (``engine.build_draft_tick`` under the slot vmap —
+        zero planner launches), then verifies all ``S x k`` rows in ONE
+        batched launch at planner bits: the verify runner rides
+        ``engine.build_verify_rows`` under the same slot vmap, and the
+        kernel's nested custom_vmap collapse folds slots x rows onto the
+        slot-batched bit-serial kernel's slot axis. Accept/reject is
+        PER-SLOT (slots are independent requests — no all-over-batch
+        lockstep): slot s advances ``n_acc_s + 1`` positions, emits
+        window rows ``m <= n_acc_s`` still inside its budget, rolls its
+        KV/SSM back via ``kv_cache.rollback_decode_state`` and rewinds
+        its decision-carry row to ``dec[:, n_acc_s]``. Idle/finished
+        slots ride along gated (``b_sel = 0``): their projections emit
+        zero k/v over rows the zero-rows invariant already keeps zero,
+        so only their ssm/conv/pos leaves (which a gated launch still
+        advances) need a where-restore. Emissions harvest as
+        ``length * k`` chronological rows plus two broadcast counter
+        rows (windows / accepted over running slots) feeding the QoS
+        planner's acceptance EMA — still ONE host sync per chunk.
+        """
+        draft = self.engine.build_draft_tick(mode)
+        verify = self.engine.build_verify_rows(mode, k)
+        use_planner = self._use_planner
+        n_units = self._n_units
+
+        def window_slot(state, cur, bits, count, total_len, tix):
+            """One window for ONE slot (batch-1 state under the vmap)."""
+            running = count < total_len
+            orig = {kk: v for kk, v in state.items()
+                    if kk.startswith("ssm.") or kk == "pos"}
+
+            def d_body(carry, _):
+                st, tok = carry
+                logits, st = draft(st, tok[None, None], tix, running)
+                nxt = jnp.argmax(logits[0, 0, :vocab]).astype(jnp.int32)
+                return (st, nxt), nxt
+
+            (state, _), g = jax.lax.scan(d_body, (state, cur), None,
+                                         length=k - 1)       # (k-1,)
+            state = dict(state, **orig)   # drafted SSM/pos never leak
+            toks = jnp.concatenate([cur[None],
+                                    g.astype(jnp.int32)])[None]  # (1, k)
+            if use_planner:
+                logits, state, ebs, dec, snaps = verify(
+                    state, toks, tix, bits, active=running)
+            else:
+                logits, state, ebs, dec, snaps = verify(
+                    state, toks, tix, active=running)
+            v = jnp.argmax(logits[0, :, :vocab],
+                           axis=-1).astype(jnp.int32)         # (k,)
+            if k > 1:
+                ok = (g == v[:k - 1]).astype(jnp.int32)
+                n_acc = jnp.sum(jnp.cumprod(ok))
+            else:
+                n_acc = jnp.int32(0)
+            state = rollback_decode_state(state, snaps, n_acc + 1, k)
+            # gated slot: its ssm/conv/pos still advanced through the
+            # gated launches — restore the pre-window leaves. KV needs
+            # no restore: gated projections wrote zero k/v over rows the
+            # zero-rows invariant already keeps zero.
+            for kk, ov in orig.items():
+                state[kk] = jnp.where(running, state[kk], ov)
+            cur = jnp.where(running,
+                            jax.lax.dynamic_index_in_dim(
+                                v, n_acc, axis=0, keepdims=False), cur)
+            if use_planner:
+                bits = jnp.where(running,
+                                 jax.lax.dynamic_index_in_dim(
+                                     dec, n_acc, axis=1, keepdims=False),
+                                 bits)
+            m = jnp.arange(k, dtype=jnp.int32)
+            emit = running & (m <= n_acc) & (count + m < total_len - 1)
+            count = count + jnp.where(running, n_acc + 1, 0)
+            return (state, cur, bits, count, v, ebs, emit,
+                    running.astype(jnp.int32),
+                    jnp.where(running, n_acc, 0))
+
+        def chunk(state, cur, step_count, *rest):
+            key = ("slot_spec_chunk", mode)
+            self.engine.trace_counts[key] = \
+                self.engine.trace_counts.get(key, 0) + 1
+            if use_planner:
+                (bits, prompt_buf, prompt_len, total_len, target_ix) = rest
+            else:
+                prompt_buf, prompt_len, total_len, target_ix = rest
+                bits = jnp.zeros((cur.shape[0], n_units), jnp.int32)
+
+            def body(carry, _):
+                state, cur, count, bits = carry
+                state, cur, bits, count, v, ebs, emit, run_i, acc_i = \
+                    jax.vmap(window_slot)(state, cur, bits, count,
+                                          total_len, target_ix)
+                return (state, cur, count, bits), \
+                    (v, ebs, emit, jnp.sum(run_i), jnp.sum(acc_i))
+
+            (state, cur, step_count, bits), ys = jax.lax.scan(
+                body, (state, cur, step_count, bits), None, length=length)
+            vs, ebss, emits, ws, accs = ys
+            # (W, S, k) -> (W*k, S): chronological window-major rows, the
+            # same harvest layout as the baseline chunk's (chunk, S)
+            rows = lambda a: a.swapaxes(1, 2).reshape(length * k, -1)
+            wa = jnp.stack([jnp.sum(ws), jnp.sum(accs)]
+                           ).astype(jnp.float32)
+            lead = (state, cur, step_count)
+            if use_planner:
+                lead = lead + (bits,)
+            return lead + (rows(vs), rows(ebss), rows(emits), wa)
+
+        n_carry = 4 if use_planner else 3
+        if self._shardings is None:
+            return jax.jit(chunk, donate_argnums=tuple(range(n_carry)))
+        vec_sh = self._shardings[1]
+        slot_entry = vec_sh.spec[0] if len(vec_sh.spec) else None
+        ys_sh = NamedSharding(self.mesh, P(None, slot_entry))
+        rep = NamedSharding(self.mesh, P())
+        return jax.jit(chunk, donate_argnums=tuple(range(n_carry)),
+                       in_shardings=self._shardings,
+                       out_shardings=self._shardings[:n_carry] +
+                                     (ys_sh,) * 3 + (rep,))
 
     def _make_admit(self, mode: str):
         boot = self.engine.build_boot_tick(mode) if self._use_planner \
@@ -546,20 +693,36 @@ class SlotScheduler:
         with self.engine._mesh_ctx():
             out = self._chunk_fn(*self._arrays())
         self._set_arrays(out[:n_carry] + self._arrays()[n_carry:])
-        toks, ebs, emit = out[n_carry:]
+        if self.spec_k is not None:
+            toks, ebs, emit, wa = out[n_carry:]
+            c = self.chunk * self.spec_k
+            extra = [jnp.broadcast_to(wa[:, None], (2, self.n_slots))]
+        else:
+            toks, ebs, emit = out[n_carry:]
+            c = self.chunk
+            extra = []
         # ONE host sync per chunk: pack emissions + slot progress into a
         # single device array and pull it once (token ids are exact in
         # f32 — vocab sizes sit far below 2**24)
-        c = self.chunk
         host = np.asarray(jnp.concatenate([
             toks.astype(jnp.float32), ebs.astype(jnp.float32),
             emit.astype(jnp.float32),
             self._step_count[None, :].astype(jnp.float32),
-            self._total_len[None, :].astype(jnp.float32)], axis=0))
+            self._total_len[None, :].astype(jnp.float32),
+            *extra], axis=0))
         toks = host[:c].astype(np.int32)
         ebs = host[c:2 * c]
         emit = host[2 * c:3 * c] > 0.5
         counts, totals = host[3 * c], host[3 * c + 1]
+        if self.spec_k is not None:
+            w_tot, a_tot = float(host[3 * c + 2, 0]), \
+                float(host[3 * c + 3, 0])
+            self.spec_windows += w_tot
+            self.spec_accepted += a_tot
+            if (self.spec_k > 1 and w_tot > 0
+                    and hasattr(self.planner, "observe_acceptance")):
+                self.planner.observe_acceptance(
+                    a_tot / (w_tot * (self.spec_k - 1)))
         for si, slot in enumerate(self._slots):
             if slot.request is None:
                 continue

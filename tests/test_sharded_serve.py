@@ -140,6 +140,40 @@ out_s, bits_s = single.generate(long_prompt, 5, 4.0)
 assert np.array_equal(out_m, out_s)
 np.testing.assert_allclose(bits_m, bits_s, atol=1e-5)
 assert sharded.call_counts.get("prefill", 0) >= 2   # ceil(19/16) + warm
+
+# --- speculative decode on the mesh (PR 6) -------------------------------
+# verify rows ride the kernel's slot axis: the (slots, k) verify batch
+# shards slots -> 'data' when divisible and NEVER shards the window axis
+from repro.distributed.sharding import verify_batch_spec
+assert "data" in str(verify_batch_spec(mesh, 4, 3)), \
+    verify_batch_spec(mesh, 4, 3)
+assert str(verify_batch_spec(mesh, 3, 2)) == "PartitionSpec(None, None)", \
+    verify_batch_spec(mesh, 3, 2)
+
+# spec_k scheduler on the mesh == plain single-device scheduler: same
+# tokens, same per-step bits, per-slot accept/reject under the 'data'
+# sharding (variable accepted lengths across slots in one chunk)
+sched_k = SlotScheduler(sharded, planner(sharded), slots=4, max_prompt=8,
+                        max_new=6, chunk=4, spec_k=2)
+done_k = {r.rid: r for r in sched_k.run(requests(0))}
+assert set(done_k) == set(done_s)
+for rid, rs in done_s.items():
+    rk = done_k[rid]
+    assert rs.target == rk.target, (rid, rs.target, rk.target)
+    assert np.array_equal(rs.tokens, rk.tokens), rid
+    np.testing.assert_allclose(rs.effective_bits, rk.effective_bits,
+                               atol=1e-5)
+assert sched_k.spec_windows > 0
+
+# spec generate parity on the mesh with the O(1) host-sync invariant
+out_b, bits_b = sharded.generate(
+    np.asarray([[5, 7, 11]], np.int32), 6, 4.0)
+n0 = sharded.host_syncs
+out_k, bits_k = sharded.generate(
+    np.asarray([[5, 7, 11]], np.int32), 6, 4.0, spec_k=2)
+assert sharded.host_syncs - n0 == 2, sharded.host_syncs
+assert np.array_equal(out_k, out_b)
+np.testing.assert_allclose(bits_k, bits_b, atol=1e-5)
 print("sharded-serve-ok")
 """ % (_N_DEV, _N_DEV)
 
@@ -147,6 +181,6 @@ print("sharded-serve-ok")
 def test_sharded_scheduler_parity_and_no_retrace():
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(_BODY)],
                        capture_output=True, text=True, cwd=".",
-                       timeout=420)
+                       timeout=600)
     assert r.returncode == 0, r.stderr[-4000:]
     assert "sharded-serve-ok" in r.stdout

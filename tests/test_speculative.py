@@ -1,0 +1,253 @@
+"""Self-speculative decoding: parity, rollback, launch invariants, QoS.
+
+The contract under test: drafting k-1 tokens at the overlay's 2-bit
+floor and re-scoring the window in one batched verify launch must be a
+PURE latency optimization — greedy longest-prefix acceptance keeps
+``generate`` token- AND effective-bits-identical to baseline decode in
+every mode, sync or async, for every k (k=1 is the verify-only
+degenerate case). Everything observable — KV/SSM rollback after a
+mid-window rejection, the async decision-carry rewind, the per-token
+bit attribution — is covered by that identity; the launch counters and
+host-sync/no-retrace invariants pin down the "optimization" half.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (LatencyModel, QoSPlanner, QueryBitTracker,
+                           Request, ServingEngine, SlotScheduler,
+                           rollback_decode_state)
+
+MODES = ("dynamic", "static:llm_mq", "max", "exact")
+
+
+@pytest.fixture(scope="module")
+def engines(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    return {"async": ServingEngine(cfg, params, model),
+            "sync": ServingEngine(cfg, params, model, use_async=False)}
+
+
+@pytest.fixture(scope="module")
+def prompt(tiny_bundle):
+    cfg = tiny_bundle[0]
+    rng = np.random.default_rng(11)
+    return rng.integers(1, cfg.vocab_size, (2, 3)).astype(np.int32)
+
+
+_BASE = {}
+
+
+def _baseline(engines, which, mode, prompt):
+    if (which, mode) not in _BASE:
+        _BASE[(which, mode)] = engines[which].generate(prompt, 6, 4.0,
+                                                       mode=mode)
+    return _BASE[(which, mode)]
+
+
+@pytest.mark.parametrize("k", (1, 2, 4))
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("which", ("async", "sync"))
+def test_spec_generate_identical_to_baseline(engines, prompt, which,
+                                             mode, k):
+    """Tokens and per-token effective bits match baseline decode exactly.
+
+    The bits identity is the strong half: it proves accepted tokens are
+    attributed the VERIFY launch's planner-assigned bits (never the
+    2-bit draft floor), that the async decision carry rewinds to the
+    last accepted row's plan, and that KV/SSM rollback after a
+    mid-window rejection leaves no trace in later steps.
+    """
+    out_b, eb_b = _baseline(engines, which, mode, prompt)
+    out_s, eb_s = engines[which].generate(prompt, 6, 4.0, mode=mode,
+                                          spec_k=k)
+    assert np.array_equal(out_b, out_s)
+    np.testing.assert_allclose(eb_b, eb_s, atol=1e-5)
+    s = engines[which].last_spec
+    assert s["k"] == k
+    assert s["verify_launches"] == s["windows"]
+    assert s["emitted_raw"] == s["windows"] + s["accepted"]
+    if k == 1:      # verify-only windows: no drafts offered, 1 tok/launch
+        assert s["accepted"] == 0
+        assert s["launches_per_token"] == 1.0
+
+
+def test_spec_launch_invariant(engines, tiny_bundle):
+    """Closed form: launches/emitted == windows / (windows + accepted),
+    and any acceptance at all pushes it below one launch per token.
+
+    Acceptance is data-dependent on the tiny model, so probe a few
+    prompts (same shape — zero retrace) until one accepts; the closed
+    form is asserted for EVERY probe, accepting or not."""
+    cfg = engines["async"].cfg
+    eng = engines["async"]
+    found = None
+    for seed in range(20, 28):
+        p = np.random.default_rng(seed).integers(
+            1, cfg.vocab_size, (2, 3)).astype(np.int32)
+        eng.generate(p, 16, 4.0, spec_k=4)
+        s = eng.last_spec
+        w, a = s["windows"], s["accepted"]
+        assert s["verify_launches"] == w
+        assert s["launches_per_token"] == pytest.approx(w / (w + a))
+        if a > 0 and found is None:
+            found = s
+            break
+    # the tiny model's 2-bit drafts do land on greedy continuations —
+    # the sub-one-launch regime exists, not just the closed form
+    assert found is not None, "no acceptance across 8 probe prompts"
+    assert found["launches_per_token"] < 1.0
+    assert 0.0 < found["acceptance_rate"] <= 1.0
+
+
+def test_spec_mid_window_rejection_occurs(engines, prompt):
+    """The parity matrix above must actually exercise rejection paths:
+    with k=4 the tiny model's drafts are NOT all accepted, so the
+    KV/SSM rollback and carry rewind ran under a partial window."""
+    eng = engines["async"]
+    eng.generate(prompt, 8, 4.0, spec_k=4)
+    s = eng.last_spec
+    assert s["accepted"] < s["windows"] * (s["k"] - 1)
+
+
+def test_spec_host_syncs_o1(engines, prompt):
+    """One spec generate syncs the host exactly twice (tokens + packed
+    bits/counters) regardless of max_new or k."""
+    eng = engines["async"]
+    eng.generate(prompt, 6, 4.0, spec_k=2)          # warm
+    h0 = eng.host_syncs
+    eng.generate(prompt, 6, 4.0, spec_k=2)
+    assert eng.host_syncs - h0 == 2
+
+
+def test_spec_no_retrace_across_targets_and_k(engines, prompt):
+    """One compiled spec loop per (mode, k, bucket): sweeping targets
+    and max_new within a bucket must not retrace or recompile."""
+    eng = engines["async"]
+    for k in (2, 4):
+        eng.generate(prompt, 6, 3.5, spec_k=k)      # warm both k loops
+    before = dict(eng.trace_counts)
+    calls0 = eng.call_counts.get("spec_loop", 0)
+    n = 0
+    for k in (2, 4):
+        for t in (3.5, 4.0, 4.5):
+            eng.generate(prompt, 6, t, spec_k=k)
+            eng.generate(prompt, 4, t, spec_k=k)
+            n += 2
+    assert eng.trace_counts == before
+    assert eng.call_counts["spec_loop"] == calls0 + n
+
+
+def test_spec_bits_never_draft_floor(engines, prompt):
+    """Attribution regression: in max mode every emitted token's bits
+    sit at the overlay ceiling — if draft-tick bits leaked into the
+    per-token stream, 2-bit entries would show up."""
+    eng = engines["async"]
+    _, eb = eng.generate(prompt, 8, 4.0, mode="max", spec_k=4)
+    assert min(eb) > 2.5
+
+
+def test_rollback_decode_state_unit():
+    """Direct check of the rollback algebra on a synthetic state."""
+    L, W, b = 10, 3, 1
+    kv = jnp.arange(b * L * 2 * 4, dtype=jnp.float32).reshape(b, L, 2, 4)
+    kv = kv.at[:, 8:].set(0.0)          # zero-rows invariant: rows >= pos
+    state = {"pos": jnp.int32(8),                   # post-verify: 5 + W
+             "kv.0.k": kv,
+             "ssm.0.conv": jnp.ones((b, 4), jnp.float32) * 9.0}
+    snaps = {"ssm.0.conv": jnp.stack(
+        [jnp.full((b, 4), float(m)) for m in range(W)])}   # (W, b, 4)
+    out = rollback_decode_state(state, snaps, n_keep=2, window=W)
+    assert int(out["pos"]) == 7                     # 8 - 3 + 2
+    np.testing.assert_array_equal(np.asarray(out["kv.0.k"][0, 7:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["kv.0.k"][:, :7]),
+                                  np.asarray(kv[:, :7]))   # kept rows
+    np.testing.assert_array_equal(np.asarray(out["ssm.0.conv"]),
+                                  1.0)              # snapshot row n_keep-1
+
+
+def test_scheduler_spec_parity_and_tracker(engines, tiny_bundle):
+    """spec_k scheduler == baseline scheduler: same tokens, same bits,
+    same tracker attribution; acceptance counters feed the planner."""
+    cfg, _, model, _ = tiny_bundle
+    eng = engines["async"]
+    rng = np.random.default_rng(5)
+    mk = lambda: [Request(rid=i,
+                          prompt=rng.integers(1, cfg.vocab_size,
+                                              (ln,)).astype(np.int32),
+                          max_new=mn, tpot_budget_s=1.0)
+                  for i, (ln, mn) in enumerate([(3, 5), (1, 4), (6, 5)])]
+    reqs = mk()
+
+    def run(spec_k):
+        tracker = QueryBitTracker()
+        planner = QoSPlanner(sorted(model.adaptations),
+                             LatencyModel(bytes_per_bit=1e6),
+                             spec_k=spec_k)
+        sched = SlotScheduler(eng, planner, slots=2, max_prompt=8,
+                              max_new=5, chunk=3, tracker=tracker,
+                              spec_k=spec_k)
+        done = sorted(sched.run([Request(rid=r.rid, prompt=r.prompt,
+                                         max_new=r.max_new,
+                                         tpot_budget_s=r.tpot_budget_s)
+                                 for r in reqs]), key=lambda r: r.rid)
+        return done, tracker, sched
+
+    base, tr_b, _ = run(None)
+    spec, tr_s, sched = run(2)
+    for rb, rs in zip(base, spec):
+        assert np.array_equal(rb.tokens, rs.tokens)
+        np.testing.assert_allclose(rb.effective_bits, rs.effective_bits,
+                                   atol=1e-5)
+    # retirement ORDER may differ (spec slots advance at variable rates),
+    # but the per-query attribution must be the same multiset
+    np.testing.assert_allclose(sorted(tr_b.per_query_bits),
+                               sorted(tr_s.per_query_bits), atol=1e-5)
+    assert sched.spec_windows > 0
+    # the chunk's acceptance counters reached the planner's EMA
+    assert sched.planner.acceptance_ema >= 0.0
+    assert sched.spec_accepted >= 0.0
+
+
+def test_scheduler_spec_requires_prefill(engines, tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    legacy = ServingEngine(cfg, params, model, prefill_chunk=0)
+    planner = QoSPlanner(sorted(model.adaptations),
+                         LatencyModel(bytes_per_bit=1e6))
+    with pytest.raises(ValueError, match="prefill"):
+        SlotScheduler(legacy, planner, spec_k=2)
+
+
+def test_latency_model_spec_tpot():
+    lm = LatencyModel(bytes_per_bit=1e9, overhead_s=0.0)
+    # k=1 (and acceptance=0 at k=1) degenerates to plain tpot
+    assert lm.spec_tpot(4.0, 1, 0.7) == pytest.approx(lm.tpot(4.0))
+    # zero acceptance: full window cost buys exactly one token
+    assert lm.spec_tpot(4.0, 3, 0.0) == pytest.approx(
+        2 * lm.tpot(2.0) + lm.tpot(4.0))
+    # good acceptance with cheap drafts beats the plain tick
+    assert lm.spec_tpot(4.0, 4, 1.0) < lm.tpot(4.0)
+    # acceptance clamps: out-of-range inputs don't corrupt the model
+    assert lm.spec_tpot(4.0, 4, 2.0) == pytest.approx(
+        lm.spec_tpot(4.0, 4, 1.0))
+
+
+def test_qos_planner_spec_admission():
+    """Observed acceptance moves admission: a workload whose drafts land
+    admits a higher precision into the SAME TPOT budget."""
+    lm = LatencyModel(bytes_per_bit=1e9, overhead_s=0.0)
+    targets = [3.5, 4.0, 4.5]
+    budget = lm.tpot(4.0)               # plain: 4.0 fits, 4.5 doesn't
+    assert QoSPlanner(targets, lm).plan(budget) == 4.0
+    p = QoSPlanner(targets, lm, spec_k=4)
+    # cold EMA (acceptance 0): spec windows cost more per token, so the
+    # planner is conservative rather than optimistic
+    assert p.plan(budget) <= 4.0
+    for _ in range(60):
+        p.observe_acceptance(1.0)
+    assert p.acceptance_ema > 0.95
+    assert p.plan(budget) == 4.5
+    # EMA input is clamped
+    p.observe_acceptance(7.0)
+    assert p.acceptance_ema <= 1.0

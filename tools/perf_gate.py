@@ -1,0 +1,69 @@
+"""CI perf gate: fail on serve-path regressions vs the committed baseline.
+
+Compares a freshly collected ``BENCH_serve.json`` (``benchmarks.run
+--json --quick``) against the committed one and fails when a tracked
+metric regresses by more than ``--tolerance`` (default 20%):
+
+- ``decode_tokens_per_s``  lower is worse
+- ``ttft_s``               higher is worse
+- ``spec_tokens_per_s``    lower is worse (when both files carry it)
+
+Wall-clock metrics vary across machines, so the gate is a guard against
+step-function regressions (a retrace on the decode path, a lost launch
+fusion), not a micro-benchmark. Usage::
+
+    python -m benchmarks.run --json /tmp/bench_new.json --quick
+    python tools/perf_gate.py /tmp/bench_new.json [--baseline BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric -> direction; +1 means higher-is-better, -1 means lower-is-better
+METRICS = {
+    "decode_tokens_per_s": +1,
+    "ttft_s": -1,
+    "spec_tokens_per_s": +1,
+}
+
+
+def check(new: dict, base: dict, tolerance: float) -> list:
+    failures = []
+    for name, sign in METRICS.items():
+        if name not in base or name not in new:
+            continue            # metric added after the baseline landed
+        b, n = float(base[name]), float(new[name])
+        if b <= 0:
+            continue
+        ratio = n / b if sign > 0 else b / n if n > 0 else 0.0
+        verdict = "ok" if ratio >= 1.0 - tolerance else "FAIL"
+        print(f"{name}: baseline={b:.4g} new={n:.4g} "
+              f"ratio={ratio:.3f} {verdict}")
+        if verdict == "FAIL":
+            failures.append(name)
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly collected BENCH_serve.json")
+    ap.add_argument("--baseline", default="BENCH_serve.json")
+    ap.add_argument("--tolerance", type=float, default=0.20)
+    args = ap.parse_args()
+    with open(args.new) as fh:
+        new = json.load(fh)
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    failures = check(new, base, args.tolerance)
+    if failures:
+        print(f"perf gate FAILED: {', '.join(failures)} regressed "
+              f">{args.tolerance:.0%} vs {args.baseline}")
+        return 1
+    print("perf gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
