@@ -91,7 +91,10 @@ def built_model(targets: Sequence[float] = TARGETS, *,
                 steps: int = 300, tag: str = "", force: bool = False):
     """Trained bench-lm + built MultiScaleModel (cached)."""
     cfg, params, _ = trained_bench_lm(steps)
-    key = f"msm_{budget}b_{'_'.join(str(t) for t in targets)}" \
+    # the key must cover EVERY build argument: a key that dropped
+    # `steps` once served a 300-step model to a 50-step caller (same
+    # targets/budget), silently mixing weight checkpoints across runs
+    key = f"msm_{budget}b_{steps}s_{'_'.join(str(t) for t in targets)}" \
           f"_{calib_split}{tag}.pkl"
     cache = _path(key)
     if cache in _MEMO and not force:

@@ -28,6 +28,7 @@ MODULES = [
     ("calib_sensitivity", "Table 14: calibration-set swap"),
     ("sensitivity_dynamics", "Figure 3: per-step sensitivity dynamics"),
     ("slot_kernel", "Batched-slot kernel: per-slot DMA elision"),
+    ("moe_kernel", "Grouped MoE kernel: per-expert DMA elision"),
     ("prefill", "Prefill/decode disaggregation: TTFT + launch counts"),
     ("speculative", "Self-speculative decode: draft/verify speedup sweep"),
     ("roofline", "§Roofline: 3-term analysis from the dry-run"),
@@ -40,6 +41,7 @@ def collect_serve_json(quick: bool) -> dict:
     fused-planner-vs-inline decision overhead."""
     from benchmarks.common import built_model, eval_ppl, eval_sequences
     from benchmarks.estimator_overhead import fused_vs_inline
+    from benchmarks.moe_kernel import measure as moe_measure
     from benchmarks.prefill import measure as prefill_measure
     from benchmarks.speculative import measure as spec_measure
     from repro.serving import ServingEngine
@@ -62,7 +64,11 @@ def collect_serve_json(quick: bool) -> dict:
     spec_k = 4
     spec = spec_measure(engine, prompt, max_new, target, ks=(spec_k,))
     spec_row = spec["rows"][0]
+    moe = moe_measure(quick=quick)
     return {
+        "moe_tokens_per_s": moe["moe_tokens_per_s"],
+        "moe_peak_bytes": moe["moe_peak_bytes"],
+        "moe_dense_peak_bytes": moe["moe_dense_peak_bytes"],
         "spec_k": spec_k,
         "spec_tokens_per_s": spec_row["tokens_per_s"],
         "spec_acceptance_rate": spec_row["acceptance_rate"],

@@ -160,6 +160,10 @@ class DynamicLinearApplier:
         ``jax.vmap`` (the scheduler's slot axis) this becomes per-slot.
     mode: ``dynamic | static | max | exact``. ``static`` requires
         ``static_bits``: per-path (T,) int32 arrays (traced).
+    grouped: let MoE layers stream stacked (expert) units through the
+        grouped bit-serial kernel via :meth:`grouped_weights` instead of
+        materializing dense expert stacks. ``False`` forces the legacy
+        ``weights``/``weights_rows`` dense path (the parity oracle).
     active: optional traced bool — ``False`` gates every precision decision
         to 0 bits. Under the scheduler's slot vmap this is the per-slot
         running mask: idle/retired slots select ``b_sel = 0``, which the
@@ -211,6 +215,7 @@ class DynamicLinearApplier:
         static_bits: Optional[Dict[str, jax.Array]] = None,
         use_async: bool = True,
         backend: Optional[str] = None,
+        grouped: bool = True,
         active=None,
         bundle: Optional[DecisionBundle] = None,
         planned_bits: Optional[jax.Array] = None,
@@ -242,6 +247,7 @@ class DynamicLinearApplier:
         self.static_bits = static_bits or {}
         self.use_async = use_async
         self.backend = backend
+        self.grouped = grouped
         self.active = active
         self.bundle = bundle
         self.planned_bits = planned_bits
@@ -495,6 +501,35 @@ class DynamicLinearApplier:
             # non-zero midpoint residue, so zero the materialized stack
             w = jnp.where(self.active, w, jnp.zeros_like(w))
         return w.astype(x.dtype)
+
+    def grouped_weights(self, path: str, x: jax.Array, *,
+                        async_input=None):
+        """Decision handle for the grouped MoE expert kernel: the overlay
+        plus this tick's selected bits, WITHOUT materializing anything.
+
+        The MoE layers probe this before :meth:`weights` /
+        :meth:`weights_rows`: a non-``None`` return means "stream the
+        expert stacks through ``bitserial_matmul_grouped`` at these
+        bits" — the dense ``(E, K, N)`` (or per-row ``(M, E, K, N)``)
+        dequantized stack never exists, and idle experts / idle slots
+        (``bits == 0`` after the ``active`` gate) elide their plane DMAs
+        inside the kernel instead of multiplying by a zeroed stack.
+        Accounting (decision vector, effective bits, capture) is
+        identical to the dense entry points — only the APPLY changes.
+
+        Returns ``(overlay, bits)`` — bits a scalar (tick mode) or
+        ``(M,)`` (rows mode) — or ``None`` when the path has no stacked
+        overlay or grouped dispatch is disabled, in which case the
+        caller falls back to the dense weights path.
+        """
+        ov = self.overlays.get(path)
+        if ov is None or not self.grouped:
+            return None
+        u = self.table[path]
+        bits = self._select_bits(u, x, async_input)
+        e, _, _, n = ov.planes.shape
+        self._account(u, bits, float(e * ov.k * n), x, async_input)
+        return ov, bits
 
     # -- accounting ----------------------------------------------------------------
     def decision_vector(self) -> jax.Array:

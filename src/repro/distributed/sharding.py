@@ -264,6 +264,30 @@ def verify_batch_spec(mesh: Mesh, slots: int, k: int,
     return slot_vec_spec(mesh, (slots, k), rules)
 
 
+def expert_group_spec(mesh: Mesh, shape: Sequence[int],
+                      rules: Optional[Rules] = None) -> P:
+    """EXPECTED sharding of the grouped MoE kernel's operands — a named,
+    test-asserted contract like :func:`slot_prefetch_spec`.
+
+    The grouped bit-serial kernel flattens the GShard dispatch
+    EXPERT-MAJOR: group ``e·ng + i`` is (expert e, token-group i), so
+    the leading G axis of the activations ``(G, C, K)`` and of the
+    scalar-prefetch tables ``expert_of``/``b_sel``/``counts`` ``(G,)``
+    IS the expert axis in coarse form — it shards over 'model' exactly
+    like the stacked overlay's E axis (EXPERTS rule), keeping expert
+    parallelism intact when the dense materialization is gone: each
+    model-group runs only its own experts' groups, and the plane axis
+    stays unsplit (a precision is a *prefix* of planes). Replicated
+    when G doesn't divide 'model'. Derived inside the compiled step via
+    SPMD propagation off the expert-sharded overlays — nothing
+    device_puts these explicitly; a future dispatch compiling the
+    kernel with explicit shardings must use this spec.
+    """
+    rules = rules or SERVE_RULES
+    axes = (EXPERTS,) + (None,) * (len(shape) - 1)
+    return resolve_spec(shape, axes, mesh, rules)
+
+
 def decision_carry_spec(mesh: Mesh, shape: Sequence[int],
                         rules: Optional[Rules] = None) -> P:
     """The pipelined decision carry's sharding.

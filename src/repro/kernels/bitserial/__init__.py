@@ -1,16 +1,24 @@
-from repro.kernels.bitserial.kernel import (bitserial_matmul_pallas,
+from repro.kernels.bitserial.kernel import (bitserial_matmul_grouped_pallas,
+                                            bitserial_matmul_pallas,
                                             bitserial_matmul_slots_pallas,
+                                            expert_plane_fetches,
                                             plane_block_fetches)
-from repro.kernels.bitserial.ops import TRACE_COUNTS, bitserial_matmul
-from repro.kernels.bitserial.ref import (bitserial_matmul_ref,
+from repro.kernels.bitserial.ops import (TRACE_COUNTS, bitserial_matmul,
+                                         bitserial_matmul_grouped)
+from repro.kernels.bitserial.ref import (bitserial_matmul_grouped_ref,
+                                         bitserial_matmul_ref,
                                          bitserial_matmul_slots_ref)
 
 __all__ = [
     "bitserial_matmul",
+    "bitserial_matmul_grouped",
+    "bitserial_matmul_grouped_pallas",
+    "bitserial_matmul_grouped_ref",
     "bitserial_matmul_pallas",
     "bitserial_matmul_ref",
     "bitserial_matmul_slots_pallas",
     "bitserial_matmul_slots_ref",
+    "expert_plane_fetches",
     "plane_block_fetches",
     "TRACE_COUNTS",
 ]

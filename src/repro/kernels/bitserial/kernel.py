@@ -255,6 +255,132 @@ def bitserial_matmul_slots_pallas(
     )(b_sel, x, planes, scale, zero)
 
 
+# ---------------------------------------------------------------------------
+# Grouped MoE expert kernel: grid (group, n_tiles, bits), per-expert elision
+# ---------------------------------------------------------------------------
+def _group_plane_block(e, b, c, i, j):
+    """Plane-block index named by expert group ``(e, b, c)`` at (tile i,
+    plane j) — THE grouped elision contract, shared by the kernel's
+    index_map and the host-side traffic model
+    :func:`expert_plane_fetches`.
+
+    A group is one (expert, token-group) cell of the router's dispatch:
+    ``e`` names whose stacked planes it reads, ``b`` its runtime
+    precision, ``c`` how many tokens the router actually assigned. Busy
+    group (``b > 0 and c > 0``): ``(e, min(j, b-1), 0, i)`` — planes ≥ b
+    re-name the previous block (zero HBM traffic), exactly the slot
+    kernel's clamp lifted onto the expert axis. Idle group (no tokens,
+    or gated to 0 bits): pinned to ``(0, 0, 0, 0)`` so an idle run costs
+    at most one plane-block fetch — empty experts are free.
+    """
+    busy = (b > 0) & (c > 0)
+    jc = jnp.maximum(jnp.minimum(j, b - 1), 0)
+    return (jnp.where(busy, e, 0), jnp.where(busy, jc, 0), 0,
+            jnp.where(busy, i, 0))
+
+
+def _grouped_kernel(expert_ref, b_sel_ref, count_ref, x_ref, plane_ref,
+                    scale_ref, zero_ref, out_ref, acc_ref, *, bits: int):
+    g = pl.program_id(0)
+    plane = pl.program_id(2)             # minor grid dim: plane index
+    b_sel = b_sel_ref[g]
+    busy = (b_sel > 0) & (count_ref[g] > 0)
+
+    @pl.when(busy & (plane == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(busy & (plane < b_sel))
+    def _accumulate():
+        w = _unpack(plane_ref[0, 0])     # (K, TILE_N) in {0,1}
+        contrib = jax.lax.dot(
+            x_ref[0], w, preferred_element_type=jnp.float32)
+        acc_ref[...] += contrib * (2.0 ** (bits - 1 - plane))
+
+    @pl.when(busy & (plane == bits - 1))
+    def _finalize():
+        sx = jnp.sum(x_ref[0], axis=-1, keepdims=True)         # (C, 1)
+        mid = (jnp.exp2((bits - b_sel).astype(jnp.float32)) - 1.0) * 0.5
+        corr = (mid - zero_ref[...]) * sx                      # (C, TILE_N)
+        out_ref[0] = (acc_ref[...] + corr) * scale_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "tile_n", "interpret"))
+def bitserial_matmul_grouped_pallas(
+    x: jax.Array,            # (G, C, K) float32 — capacity-padded groups
+    planes: jax.Array,       # (E, bits, K/32, N) int32 — stacked overlay
+    scale: jax.Array,        # (E, N) float32
+    zero: jax.Array,         # (E, N) float32
+    expert_of: jax.Array,    # (G,) int32 — which expert each group reads
+    b_sel: jax.Array,        # (G,) int32 — per-group precision; 0 = idle
+    counts: jax.Array,       # (G,) int32 — assigned tokens; 0 = empty
+    *,
+    bits: int,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[g] = x[g] @ W_{b_sel[g]} of expert ``expert_of[g]``; plane HBM
+    traffic follows ``Σ_g n_tiles · b_sel[g]`` over busy groups.
+
+    The router's token→expert assignment arrives as scalar-prefetched
+    tables (``expert_of`` / ``b_sel`` / ``counts``), so the plane
+    index_map (:func:`_group_plane_block`) clamps per GROUP: group g
+    fetches exactly ``b_sel[g]`` plane blocks per tile of ITS expert's
+    stack, and groups with no assigned tokens (or gated to 0 bits) pin
+    to one block and skip init/MXU/writeback — their output blocks are
+    UNDEFINED; the ops.py dispatch defines them as zeros.
+    """
+    g, c, k = x.shape
+    e, _, kw, n = planes.shape
+    assert kw * PACK == k, (kw, k)
+    assert n % tile_n == 0, (n, tile_n)
+    assert expert_of.shape == b_sel.shape == counts.shape == (g,), \
+        (expert_of.shape, b_sel.shape, counts.shape, g)
+
+    grid = (g, n // tile_n, bits)
+
+    def x_map(gi, i, j, eref, bref, cref):
+        del i, j, eref, bref, cref
+        return (gi, 0, 0)
+
+    def plane_map(gi, i, j, eref, bref, cref):
+        return _group_plane_block(eref[gi], bref[gi], cref[gi], i, j)
+
+    def evec_map(gi, i, j, eref, bref, cref):
+        # scale/zero ride the same busy/idle pinning as the planes so an
+        # idle run re-names one (tiny) block instead of gathering E rows
+        del j
+        busy = (bref[gi] > 0) & (cref[gi] > 0)
+        return (jnp.where(busy, eref[gi], 0), jnp.where(busy, i, 0))
+
+    def out_map(gi, i, j, eref, bref, cref):
+        del j, eref, bref, cref
+        return (gi, 0, i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, k), x_map),
+            pl.BlockSpec((1, 1, kw, tile_n), plane_map),
+            pl.BlockSpec((1, tile_n), evec_map),
+            pl.BlockSpec((1, tile_n), evec_map),
+        ],
+        out_specs=pl.BlockSpec((1, c, tile_n), out_map),
+        scratch_shapes=[pltpu.VMEM((c, tile_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_grouped_kernel, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, c, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(expert_of, b_sel, counts, x, planes, scale, zero)
+
+
 def plane_block_fetches(b_sel, n_tiles: int, bits: int) -> int:
     """Host-side model of the slot kernel's plane HBM traffic.
 
@@ -272,6 +398,42 @@ def plane_block_fetches(b_sel, n_tiles: int, bits: int) -> int:
             for j in range(bits):
                 blk = tuple(int(v) for v in
                             _slot_plane_block(jnp.int32(b), i, j))
+                if blk != prev:
+                    fetches += 1
+                    prev = blk
+    return fetches
+
+
+def expert_plane_fetches(expert_of, b_sel, counts, n_tiles: int,
+                         bits: int) -> int:
+    """Host-side model of the grouped kernel's plane HBM traffic.
+
+    Walks grid (G, n_tiles, bits) in iteration order (plane minor)
+    through the kernel's actual ``index_map``
+    (:func:`_group_plane_block`) and counts the steps whose named block
+    differs from the previous step's — exactly the HBM→VMEM copies
+    Pallas cannot elide. For ``n_tiles >= 2`` this equals the closed
+    form::
+
+        Σ_{busy g} n_tiles · b_sel[g]
+          + (number of idle runs)
+          - #{busy g : expert_of[g] == 0 and group g-1 is idle}
+
+    where busy means ``b_sel[g] > 0 and counts[g] > 0`` (the last term:
+    a busy expert-0 group's first block (0,0,0,0) coincides with the
+    idle pin). tests/test_traffic_properties.py asserts the closed form
+    over randomized assignment tables — blocks fetched ∝ Σ b_sel over
+    busy groups, never G·bits.
+    """
+    fetches, prev = 0, None
+    es = np.asarray(expert_of, dtype=np.int64)
+    bs = np.asarray(b_sel, dtype=np.int64)
+    cs = np.asarray(counts, dtype=np.int64)
+    for e, b, c in zip(es, bs, cs):
+        for i in range(n_tiles):
+            for j in range(bits):
+                blk = tuple(int(v) for v in _group_plane_block(
+                    jnp.int32(e), jnp.int32(b), jnp.int32(c), i, j))
                 if blk != prev:
                     fetches += 1
                     prev = blk

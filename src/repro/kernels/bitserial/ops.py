@@ -30,11 +30,13 @@ import jax
 import jax.numpy as jnp
 
 if TYPE_CHECKING:                    # annotation-only: a module-level import
-    from repro.core.bitplane import QuantizedLinear   # would cycle through
-                                                      # repro.core/__init__
-from repro.kernels.bitserial.kernel import (bitserial_matmul_pallas,
+    from repro.core.bitplane import (QuantizedLinear,  # would cycle through
+                                     QuantizedStacked)  # repro.core/__init__
+from repro.kernels.bitserial.kernel import (bitserial_matmul_grouped_pallas,
+                                            bitserial_matmul_pallas,
                                             bitserial_matmul_slots_pallas)
-from repro.kernels.bitserial.ref import (bitserial_matmul_ref,
+from repro.kernels.bitserial.ref import (bitserial_matmul_grouped_ref,
+                                         bitserial_matmul_ref,
                                          bitserial_matmul_slots_ref)
 from repro.kernels.common import pad_overlay_n
 
@@ -93,6 +95,69 @@ def _dispatch_slots(x, planes, scale, zero, b_sel, *, bits: int,
         interpret=(backend == "interpret"))
     # idle slots skip writeback in the kernel — define their output as 0
     return jnp.where((b_sel > 0)[:, None, None], y, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+def _dispatch_grouped(x, planes, scale, zero, expert_of, b_sel, counts, *,
+                      bits: int, backend: str):
+    """Grouped MoE dispatch: x (G, C, K); idle/empty groups -> zeros."""
+    _count_trace("grouped")
+    if backend == "ref":
+        return bitserial_matmul_grouped_ref(
+            x, planes, scale, zero, expert_of, b_sel, counts, bits=bits)
+    tile_n = _pick_tile_n(planes.shape[-1])
+    assert tile_n, (planes.shape, "caller pads N for explicit backends")
+    y = bitserial_matmul_grouped_pallas(
+        x, planes, scale, zero, expert_of, b_sel, counts, bits=bits,
+        tile_n=tile_n, interpret=(backend == "interpret"))
+    # idle groups skip writeback in the kernel — define their output as 0
+    return jnp.where(((b_sel > 0) & (counts > 0))[:, None, None], y, 0.0)
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_batchable(bits: int, backend: str):
+    """custom_vmap'd GROUPED core: vmapping an already group-batched call
+    flattens the new axis into the existing group axis instead of generic
+    Pallas lifting. This is how MoE prefill collapses: the rows-mode
+    per-row vmap lands every row's E expert groups on the group axis
+    (G = M·E with each row's own b_sel), and the scheduler's slot vmap
+    on top folds again to ONE (S·M·E)-group launch — the expert_of table
+    tiles, per-group b_sel/counts ride the scalar prefetch, and planes
+    stay the shared (never-gathered) stacked overlay."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(x, planes, scale, zero, expert_of, b_sel, counts):
+        return _dispatch_grouped(x, planes, scale, zero, expert_of, b_sel,
+                                 counts, bits=bits, backend=backend)
+
+    @fn.def_vmap
+    def _vmap_rule(axis_size, in_batched, x, planes, scale, zero,
+                   expert_of, b_sel, counts):
+        x_b, planes_b, scale_b, zero_b, e_b, b_b, c_b = in_batched
+        if planes_b or scale_b or zero_b or e_b:
+            # batched overlay/assignment-table: not the serving layout —
+            # generic mapping
+            axes = tuple(0 if b else None for b in in_batched)
+            y = jax.vmap(
+                functools.partial(_dispatch_grouped, bits=bits,
+                                  backend=backend),
+                in_axes=axes)(x, planes, scale, zero, expert_of, b_sel,
+                              counts)
+            return y, True
+        if not x_b:
+            x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        if not b_b:
+            b_sel = jnp.broadcast_to(b_sel[None], (axis_size,) + b_sel.shape)
+        if not c_b:
+            counts = jnp.broadcast_to(counts[None],
+                                      (axis_size,) + counts.shape)
+        r, g, c, k = x.shape
+        y = fn(x.reshape(r * g, c, k), planes, scale, zero,
+               jnp.tile(expert_of, r), b_sel.reshape(r * g),
+               counts.reshape(r * g))
+        return y.reshape(r, g, c, y.shape[-1]), True
+
+    return fn
 
 
 @functools.lru_cache(maxsize=None)
@@ -207,3 +272,49 @@ def bitserial_matmul(
         jnp.asarray(b_sel, jnp.int32).reshape((1,)))
     y = y[..., :n]
     return y.reshape(lead + (y.shape[-1],))
+
+
+def bitserial_matmul_grouped(
+    x: jax.Array,
+    qs: QuantizedStacked,
+    expert_of: jax.Array,
+    b_sel: jax.Array,
+    counts: jax.Array,
+    *,
+    backend: Optional[str] = None,   # None -> auto; "pallas"|"interpret"|"ref"
+) -> jax.Array:
+    """Grouped/ragged ``x[g] @ W_{b_sel[g]}`` over a stacked MoE overlay.
+
+    x: (G, C, K) — G router groups of C capacity rows each (zero-padded;
+    zero rows contribute exactly zero to the closed form, so capacity
+    padding is free); expert_of/b_sel/counts: (G,) — the router's
+    token→expert assignment table, scalar-prefetched by the kernel.
+    Returns (G, C, N) float32. Groups with ``b_sel == 0`` (precision
+    gated off) or ``counts == 0`` (no assigned tokens) fetch no planes
+    and return zeros.
+
+    Under ``jax.vmap`` (prefill rows, scheduler slots) the mapped axis
+    collapses into the group axis — see :func:`_grouped_batchable`.
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "ref"
+    elif backend not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         f"'pallas', 'interpret', or 'ref'")
+    g, c, _ = x.shape
+    xm = x.astype(jnp.float32)
+    kp = qs.planes.shape[2] * 32
+    if kp != xm.shape[-1]:
+        xm = jnp.pad(xm, ((0, 0), (0, 0), (0, kp - xm.shape[-1])))
+    n = qs.planes.shape[-1]
+    planes, scale, zero = qs.planes, qs.scale, qs.zero
+    if backend != "ref" and _pick_tile_n(n) == 0:
+        # explicit kernel backend on untileable N: pad to the smallest tile
+        planes, scale, zero = pad_overlay_n(planes, scale, zero,
+                                            min(TILE_CHOICES))
+    y = _grouped_batchable(qs.bits, backend)(
+        xm, planes, scale, zero,
+        jnp.asarray(expert_of, jnp.int32).reshape((g,)),
+        jnp.asarray(b_sel, jnp.int32).reshape((g,)),
+        jnp.asarray(counts, jnp.int32).reshape((g,)))
+    return y[..., :n]

@@ -50,3 +50,30 @@ def bitserial_matmul_slots_ref(
         lambda xs, bs: bitserial_matmul_ref(xs, planes, scale, zero, bs,
                                             bits=bits))(x, b_sel[:, None])
     return jnp.where((b_sel > 0)[:, None, None], y, 0.0)
+
+
+def bitserial_matmul_grouped_ref(
+    x: jax.Array,          # (G, C, K) float32 — capacity-padded groups
+    planes: jax.Array,     # (E, bits, K/32, N) int32 — stacked overlay
+    scale: jax.Array,      # (E, N) float32
+    zero: jax.Array,       # (E, N) float32
+    expert_of: jax.Array,  # (G,) int32
+    b_sel: jax.Array,      # (G,) int32 — per-group precision; 0 = idle
+    counts: jax.Array,     # (G,) int32 — assigned tokens; 0 = empty
+    *,
+    bits: int,
+) -> jax.Array:
+    """Oracle for the grouped MoE expert kernel: the single-request
+    closed form vmapped over groups, each gathering its OWN expert's
+    plane stack, with idle groups (no assigned tokens, or 0 bits)
+    defined as zeros — the same contract the Pallas dispatch enforces by
+    masking. The vmapped gather materializes (G, bits, K/32, N) packed
+    words — oracle semantics only; the kernel streams one plane block at
+    a time and never gathers.
+    """
+    def one(xg, e, b, c):
+        y = bitserial_matmul_ref(xg, planes[e], scale[e][None],
+                                 zero[e][None], b[None], bits=bits)
+        return jnp.where((b > 0) & (c > 0), y, 0.0)
+
+    return jax.vmap(one)(x, expert_of, b_sel, counts)

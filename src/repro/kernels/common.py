@@ -14,17 +14,19 @@ def pad_overlay_n(planes: jax.Array, scale: jax.Array, zero: jax.Array,
     that lets an explicitly requested kernel backend run on untileable N
     instead of silently falling back to the oracle.
 
-    planes: (bits, K/32, N) int32; scale/zero: (1, N) f32. No-op when N
-    already tiles.
+    planes: (..., K/32, N) int32 — (bits, K/32, N) for plain overlays,
+    (E, bits, K/32, N) for stacked MoE overlays; scale/zero: (..., N)
+    f32. Only the trailing N axis pads. No-op when N already tiles.
     """
     n = planes.shape[-1]
     pad = (-n) % tile
     if pad == 0:
         return planes, scale, zero
-    planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad)))
-    scale = jnp.pad(scale, ((0, 0), (0, pad)))
-    zero = jnp.pad(zero, ((0, 0), (0, pad)))
-    return planes, scale, zero
+
+    def pad_last(a):
+        return jnp.pad(a, ((0, 0),) * (a.ndim - 1) + ((0, pad),))
+
+    return pad_last(planes), pad_last(scale), pad_last(zero)
 
 
 def count_jaxpr_primitives(jaxpr, name: str | None = None) -> int:
@@ -50,3 +52,33 @@ def count_jaxpr_primitives(jaxpr, name: str | None = None) -> int:
                 if inner is not None:
                     total += count_jaxpr_primitives(inner, name)
     return total
+
+
+def max_eqn_aval_elems(jaxpr) -> int:
+    """Largest intermediate array (in elements) a jaxpr ever binds,
+    recursing into sub-jaxprs like :func:`count_jaxpr_primitives`.
+
+    This is the shape-capture half of the repo's memory invariants: the
+    grouped MoE path asserts NO equation output on the prefill/decode
+    trace reaches the dense ``(M, E, K, N)`` per-row weight stack —
+    peak MoE stage bytes stay independent of the row count M
+    (tests/test_moe_grouped.py), while the legacy dense path demonstrably
+    does bind one (proving the capture sees through the trace).
+    """
+    peak = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is not None:
+                size = 1
+                for d in shape:
+                    size *= int(d)
+                peak = max(peak, size)
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for item in vs:
+                inner = getattr(item, "jaxpr", None)
+                if inner is not None:
+                    peak = max(peak, max_eqn_aval_elems(inner))
+    return peak

@@ -25,6 +25,63 @@ def _router_probs(lin, prefix: str, x: jax.Array, num_experts: int):
     return jax.nn.softmax(logits, axis=-1), logits
 
 
+def _bitserial_matmul_grouped(*args, **kw):
+    # deferred like core.dynamic_linear's: keeps model modules importable
+    # without dragging the kernels package in at import time
+    from repro.kernels.bitserial import bitserial_matmul_grouped
+    return bitserial_matmul_grouped(*args, **kw)
+
+
+def _expert_names(cfg_mlp_kind):
+    return (["w_gate", "w_up", "w_down"] if cfg_mlp_kind == SWIGLU
+            else ["w_up", "w_down"])
+
+
+def _probe_grouped(lin, prefix: str, names, x: jax.Array, async_input=None):
+    """``{name: (overlay, bits)}`` when EVERY expert unit can stream
+    through the grouped kernel, else ``None`` (dense fallback for the
+    whole layer — mixing would double-account decisions)."""
+    gw = getattr(lin, "grouped_weights", None)
+    if gw is None:
+        return None
+    probed = {name: gw(f"{prefix}.{name}", x, async_input=async_input)
+              for name in names}
+    if any(h is None for h in probed.values()):
+        return None
+    return probed
+
+
+def _grouped_ffn(cfg_mlp_kind, handles, dx, fill, backend):
+    """Expert FFN over GShard dispatch WITHOUT materializing weights.
+
+    ``dx`` (E, g, C, d) flattens expert-major into (E·g, C, d) groups —
+    one kernel group per (expert, token-group) — with the router's
+    ``fill`` (g, E) as the per-group token count. The grouped bit-serial
+    kernel streams each group's OWN expert plane stack at that unit's
+    selected bits: empty groups (no assigned tokens) and idle slots
+    (bits 0) pin their plane DMAs to one resident block and skip the
+    MXU — traffic follows ``expert_plane_fetches``'s closed form, and
+    no ``(E, K, N)`` dequantized stack ever exists.
+    """
+    e, ng, cap, d = dx.shape
+    gx = hint(dx.reshape(e * ng, cap, d), "model", None, None)
+    expert_of = jnp.repeat(jnp.arange(e, dtype=jnp.int32), ng)
+    counts = fill.T.reshape(e * ng).astype(jnp.int32)
+
+    def mm(name, xin):
+        ov, bits = handles[name]
+        b_vec = jnp.broadcast_to(jnp.asarray(bits, jnp.int32), (e * ng,))
+        return _bitserial_matmul_grouped(xin, ov, expert_of, b_vec, counts,
+                                         backend=backend)
+
+    if cfg_mlp_kind == SWIGLU:
+        h = jax.nn.silu(mm("w_gate", gx)) * mm("w_up", gx)
+    else:
+        h = jnp.square(jax.nn.relu(mm("w_up", gx)))
+    ey = mm("w_down", h.astype(dx.dtype))
+    return ey.reshape(e, ng, cap, -1).astype(dx.dtype)
+
+
 def moe_forward(
     cfg_mlp_kind: str,
     lin,
@@ -80,14 +137,19 @@ def moe_forward(
     combine = hint(combine, None, "dp", None, None)
     dx = jnp.einsum("gtec,gtd->egcd", dispatch.astype(x.dtype), xg)
     dx = hint(dx, "model", "dp", None, None)   # EP: experts on model axis
-    if cfg_mlp_kind == SWIGLU:
+    handles = _probe_grouped(lin, prefix, _expert_names(cfg_mlp_kind), xg)
+    if handles is not None:
+        ey = _grouped_ffn(cfg_mlp_kind, handles, dx, fill,
+                          getattr(lin, "backend", None))
+    elif cfg_mlp_kind == SWIGLU:
         gate = jnp.einsum("egcd,edf->egcf", dx, fetch("w_gate"))
         up = jnp.einsum("egcd,edf->egcf", dx, fetch("w_up"))
         h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+        ey = jnp.einsum("egcf,efd->egcd", h.astype(x.dtype), fetch("w_down"))
     else:
         up = jnp.einsum("egcd,edf->egcf", dx, fetch("w_up"))
         h = jnp.square(jax.nn.relu(up.astype(jnp.float32)))
-    ey = jnp.einsum("egcf,efd->egcd", h.astype(x.dtype), fetch("w_down"))
+        ey = jnp.einsum("egcf,efd->egcd", h.astype(x.dtype), fetch("w_down"))
     ey = hint(ey, "model", "dp", None, None)
     out = jnp.einsum("gtec,egcd->gtd", combine.astype(x.dtype), ey)
     out = hint(out, "dp", None, None)
@@ -118,6 +180,24 @@ class _FixedWeightLin:
         return self._weights[path.rsplit(".", 1)[1]]
 
 
+class _FixedGroupedLin:
+    """lin shim for the grouped per-row prefill MoE: router calls pass
+    through; ``grouped_weights`` returns the row's pre-decided
+    ``(overlay, bits)`` handle instead of re-deciding — the bits were
+    selected (and carry-shifted) ONCE over all M rows outside the vmap,
+    so accounting stays per-chunk while the apply rides the row axis."""
+
+    def __init__(self, lin, handles, backend):
+        self._lin, self._handles = lin, handles
+        self.backend = backend
+
+    def __call__(self, path, x, **kw):
+        return self._lin(path, x, **kw)
+
+    def grouped_weights(self, path, x, **kw):
+        return self._handles[path.rsplit(".", 1)[1]]
+
+
 def moe_decode_rows(cfg_mlp_kind, lin, params, prefix, x, *,
                     num_experts: int, top_k: int, async_input=None):
     """M-row prefill MoE: per-row precision decisions, per-row dispatch.
@@ -131,8 +211,26 @@ def moe_decode_rows(cfg_mlp_kind, lin, params, prefix, x, *,
     bit-compatible with tick-by-tick decoding.
     """
     b, m, d = x.shape
-    names = (["w_gate", "w_up", "w_down"] if _uses_gate(cfg_mlp_kind)
-             else ["w_up", "w_down"])
+    names = _expert_names(cfg_mlp_kind)
+    handles = _probe_grouped(lin, prefix, names, x, async_input=async_input)
+    if handles is not None:
+        # grouped path: (M,) bits per unit decided once (with the async
+        # one-row-late carry) OUTSIDE the vmap; each row's scalar rides
+        # the row axis and the custom_vmap rule folds all M·E·g kernel
+        # groups into ONE grouped launch — never an (M, E, K, N) stack
+        backend = getattr(lin, "backend", None)
+        haxes = {name: (None, 0) for name in names}
+
+        def one_row_g(x_row, h_row):
+            y, _ = moe_forward(
+                cfg_mlp_kind, _FixedGroupedLin(lin, h_row, backend), params,
+                prefix, x_row[:, None, :], num_experts=num_experts,
+                top_k=top_k, capacity_factor=float(num_experts) / top_k,
+                group_size=b)
+            return y[:, 0, :]
+
+        y = jax.vmap(one_row_g, in_axes=(1, haxes), out_axes=1)(x, handles)
+        return y, jnp.float32(0.0)
     wfetch = getattr(lin, "weights_rows", None)
     weights, axes = {}, {}
     for name in names:

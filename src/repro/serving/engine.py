@@ -82,6 +82,7 @@ class ServingEngine:
         *,
         backend: Optional[str] = None,
         use_async: bool = True,
+        use_grouped: bool = True,
         decode_chunk: int = 16,
         prefill_chunk: Optional[int] = 16,
         kv_bucket: int = 128,
@@ -91,6 +92,11 @@ class ServingEngine:
         self.model = model
         self.backend = backend
         self.use_async = use_async
+        # MoE expert units stream through the grouped bit-serial kernel
+        # (per-expert plane-DMA elision) instead of materializing dense
+        # (E, K, N) / per-row (M, E, K, N) stacks. False = legacy dense
+        # materialization (the grouped path's parity oracle).
+        self.use_grouped = use_grouped
         self.decode_chunk = int(decode_chunk)
         # batched prefill stage: a whole prompt (or a prefill_chunk-sized
         # piece of a long one) runs as ONE M-row fused launch instead of
@@ -260,7 +266,8 @@ class ServingEngine:
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend, active=active,
+                backend=self.backend, grouped=self.use_grouped,
+                active=active,
                 bundle=self.artifacts.decision)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin)
@@ -292,7 +299,8 @@ class ServingEngine:
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend, active=active,
+                backend=self.backend, grouped=self.use_grouped,
+                active=active,
                 bundle=self.artifacts.decision,
                 planned_bits=planned_bits, capture=planner.needs_acts)
             logits, new_state = decode_step(self.cfg, self.raw, state,
@@ -340,7 +348,8 @@ class ServingEngine:
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend, bundle=self.artifacts.decision,
+                backend=self.backend, grouped=self.use_grouped,
+                bundle=self.artifacts.decision,
                 rows=rows, carry_bits=carry)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin,
@@ -406,7 +415,8 @@ class ServingEngine:
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend, active=active,
+                backend=self.backend, grouped=self.use_grouped,
+                active=active,
                 bundle=self.artifacts.decision, planned_bits=draft_vec)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin)
@@ -441,7 +451,8 @@ class ServingEngine:
                 self.artifacts.table, serve_params,
                 target_idx=target_idx, mode=base_mode,
                 static_bits=static_bits, use_async=self.use_async,
-                backend=self.backend, active=active,
+                backend=self.backend, grouped=self.use_grouped,
+                active=active,
                 bundle=self.artifacts.decision, rows=k, carry_bits=carry)
             logits, new_state, snaps = decode_step(
                 self.cfg, self.raw, state, tokens, lin=lin,
@@ -569,6 +580,17 @@ class ServingEngine:
             return fn(*args)
 
         return jax.jit(counted, **jit_kw)
+
+    @staticmethod
+    def kernel_traces() -> Dict[str, int]:
+        """Process-wide bit-serial kernel trace counters (per dispatch
+        family: ``"single"``/``"slots"``/``"grouped"``), the
+        kernel-level complement of :attr:`trace_counts`: one grouped
+        MoE trace per (bits, backend) the engine serves, regardless of
+        tick count, expert count, or M — the custom_vmap fold's
+        no-retrace guarantee, asserted in tests/test_moe_grouped.py."""
+        from repro.kernels.bitserial import TRACE_COUNTS
+        return dict(TRACE_COUNTS)
 
     def _get_tick(self, mode: str, kind: str = "sync") -> Callable:
         """Jitted single step, shared by all targets of ``mode``.

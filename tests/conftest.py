@@ -2,6 +2,8 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too: benchmarks/ and tools/ are plain (namespace) packages
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 try:                                    # prefer the real property tester
     import hypothesis                   # noqa: F401
@@ -36,4 +38,28 @@ def tiny_bundle():
     model = build_multiscale_model(
         cfg, params, batches, targets=[3.5, 4.0, 4.5], finetune_epochs=1,
         baselines=("llm_mq", "hawq_v2"))
+    return cfg, params, model, batches
+
+
+@pytest.fixture(scope="session")
+def tiny_moe_bundle():
+    """One shared DP-LLM build on tiny-moe (expensive: ~1.5 min) — the
+    grouped-vs-dense MoE parity matrix's engine fixture. Two targets and
+    one baseline keep the build time bounded; the MoE layer's expert
+    stacks (w_gate/w_up/w_down) become QuantizedStacked units."""
+    from repro.configs import get_config
+    from repro.core import build_multiscale_model
+    from repro.models import init_model_params
+
+    cfg = get_config("tiny-moe")
+    params = init_model_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [
+        (rng.integers(0, cfg.vocab_size, (2, 48)).astype(np.int32),
+         rng.integers(0, cfg.vocab_size, (2, 48)).astype(np.int32))
+        for _ in range(2)
+    ]
+    model = build_multiscale_model(
+        cfg, params, batches, targets=[3.5, 4.5], finetune_epochs=1,
+        baselines=("llm_mq",))
     return cfg, params, model, batches

@@ -1,0 +1,60 @@
+"""Regression: the built_model cache key must cover EVERY build argument.
+
+The key once omitted ``steps`` — two callers asking for differently
+trained checkpoints (same targets/budget/split) silently shared one
+pickle and one in-process memo entry, so whichever ran first poisoned
+the other's results. The builders are stubbed out so this exercises only
+the caching layer.
+"""
+import pytest
+
+import benchmarks.common as common
+
+
+@pytest.fixture
+def patched(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "ART_DIR", str(tmp_path))
+    monkeypatch.setattr(common, "_MEMO", {})
+    monkeypatch.setattr(common, "trained_bench_lm",
+                        lambda steps=300, force=False:
+                        ("cfg", {"steps": steps}, 0.0))
+    monkeypatch.setattr(common, "calibration_batches",
+                        lambda cfg, **kw: [])
+    calls = []
+
+    def fake_build(cfg, params, batches, **kw):
+        calls.append(kw)
+        return {"build_id": len(calls), "params_steps": params["steps"]}
+
+    monkeypatch.setattr(common, "build_multiscale_model", fake_build)
+    return calls
+
+
+def test_built_model_key_covers_steps(patched):
+    _, p300, m300 = common.built_model((3.5,), steps=300)
+    _, p50, m50 = common.built_model((3.5,), steps=50)
+    assert len(patched) == 2                      # distinct builds ran
+    assert m300 is not m50
+    assert (p300["steps"], p50["steps"]) == (300, 50)
+    # models carry the right checkpoint's weights
+    assert m300["params_steps"] == 300 and m50["params_steps"] == 50
+
+
+def test_built_model_memo_and_pickle_reuse(patched, tmp_path):
+    out1 = common.built_model((3.5,), steps=300)
+    out2 = common.built_model((3.5,), steps=300)
+    assert len(patched) == 1                      # in-process memo hit
+    assert out2 is out1
+    common._MEMO.clear()                          # simulate a new process
+    out3 = common.built_model((3.5,), steps=300)
+    assert len(patched) == 1                      # pickle cache hit
+    assert out3[2]["build_id"] == out1[2]["build_id"]
+
+
+def test_built_model_key_still_covers_the_rest(patched):
+    common.built_model((3.5,), steps=300)
+    common.built_model((3.5, 4.5), steps=300)     # targets
+    common.built_model((3.5,), budget=6.0, steps=300)
+    common.built_model((3.5,), calib_split="eval", steps=300)
+    common.built_model((3.5,), tag="x", steps=300)
+    assert len(patched) == 5

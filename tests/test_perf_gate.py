@@ -1,0 +1,73 @@
+"""Unit tests for the CI perf gate (tools/perf_gate.py).
+
+The gate guards step-function serve-path regressions; these pin its
+decision boundary (exactly -20% passes, anything past it fails), the
+missing-key / new-metric pass-through that lets metrics land before
+their baselines, and the direction handling for lower-is-better metrics.
+"""
+import json
+
+import pytest
+
+from tools.perf_gate import METRICS, check, main
+
+
+BASE = {"decode_tokens_per_s": 100.0, "ttft_s": 0.050,
+        "spec_tokens_per_s": 200.0, "moe_tokens_per_s": 1000.0}
+
+
+def test_tracked_metrics_cover_serve_path():
+    assert METRICS == {"decode_tokens_per_s": +1, "ttft_s": -1,
+                       "spec_tokens_per_s": +1, "moe_tokens_per_s": +1}
+
+
+def test_regression_boundary_exact_tolerance_passes():
+    """ratio == 1 - tolerance is OK; one hair past it fails."""
+    new = dict(BASE, decode_tokens_per_s=80.0)        # exactly -20%
+    assert check(new, BASE, 0.20) == []
+    new["decode_tokens_per_s"] = 79.9
+    assert check(new, BASE, 0.20) == ["decode_tokens_per_s"]
+
+
+def test_lower_is_better_direction():
+    """ttft regressions are INCREASES: the ratio inverts."""
+    assert check(dict(BASE, ttft_s=0.0625), BASE, 0.20) == []   # b/n = .8
+    assert check(dict(BASE, ttft_s=0.0630), BASE, 0.20) == ["ttft_s"]
+    # improvements never fail, in either direction
+    assert check(dict(BASE, ttft_s=0.001,
+                      decode_tokens_per_s=500.0), BASE, 0.20) == []
+
+
+def test_missing_key_skipped_both_ways():
+    """A metric absent from EITHER file is skipped — new metrics land
+    before their baselines, old baselines outlive retired metrics."""
+    new = dict(BASE)
+    del new["spec_tokens_per_s"]                     # retired from new
+    assert check(new, BASE, 0.20) == []
+    base = dict(BASE)
+    del base["moe_tokens_per_s"]                     # not yet in baseline
+    assert check(dict(BASE, moe_tokens_per_s=1.0), base, 0.20) == []
+
+
+def test_nonpositive_baseline_skipped_and_zero_new_fails():
+    assert check(dict(BASE, decode_tokens_per_s=1.0),
+                 dict(BASE, decode_tokens_per_s=0.0), 0.20) == []
+    # a lower-is-better metric collapsing to 0 new is a hard fail
+    assert check(dict(BASE, ttft_s=0.0), BASE, 0.20) == ["ttft_s"]
+
+
+def test_multiple_failures_reported_together():
+    new = dict(BASE, decode_tokens_per_s=10.0, moe_tokens_per_s=10.0)
+    assert check(new, BASE, 0.20) == ["decode_tokens_per_s",
+                                      "moe_tokens_per_s"]
+
+
+@pytest.mark.parametrize("wreck,code", [({}, 0),
+                                        ({"ttft_s": 9.0}, 1)])
+def test_main_exit_codes(tmp_path, monkeypatch, wreck, code):
+    newp, basep = tmp_path / "new.json", tmp_path / "base.json"
+    basep.write_text(json.dumps(BASE))
+    newp.write_text(json.dumps(dict(BASE, **wreck)))
+    monkeypatch.setattr("sys.argv",
+                        ["perf_gate", str(newp), "--baseline", str(basep)])
+    assert main() == code

@@ -1,0 +1,101 @@
+"""Property-based coverage of the traffic closed forms and the bit-plane
+round trip (hypothesis, or the seeded deterministic stub in hermetic envs).
+
+The two fetch counters walk the kernels' REAL index_maps in grid order —
+these tests pin the documented closed forms against that walk over
+randomized precision/assignment tables, so the benchmarks' analytic
+traffic models can never drift from what the kernels actually fetch.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitplane import materialize, quantize_linear
+from repro.kernels.bitserial import expert_plane_fetches, plane_block_fetches
+
+
+def _table(seed: int, g: int, n_experts: int, bits: int):
+    rng = np.random.default_rng(seed)
+    expert_of = rng.integers(0, n_experts, size=g)
+    b_sel = rng.integers(0, bits + 1, size=g)
+    counts = rng.integers(0, 4, size=g)
+    return expert_of.tolist(), b_sel.tolist(), counts.tolist()
+
+
+def _idle_runs(busy):
+    runs, prev_idle = 0, False
+    for f in busy:
+        if not f and not prev_idle:
+            runs += 1
+        prev_idle = not f
+    return runs
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 10), st.integers(2, 4),
+       st.integers(1, 8))
+def test_expert_plane_fetches_closed_form(seed, g, n_tiles, bits):
+    """For n_tiles >= 2 the grouped walk equals
+    sum_busy(n_tiles * b_sel) + n_idle_runs
+    - #{busy g: expert 0, preceded by an idle group}
+    (a busy expert-0 group's first block IS the idle pin (0,0,0,0))."""
+    expert_of, b_sel, counts = _table(seed, g, 4, bits)
+    walked = expert_plane_fetches(expert_of, b_sel, counts, n_tiles, bits)
+    busy = [(b > 0) and (c > 0) for b, c in zip(b_sel, counts)]
+    total = sum(n_tiles * b for b, f in zip(b_sel, busy) if f)
+    collide = sum(1 for i in range(1, g)
+                  if busy[i] and expert_of[i] == 0 and not busy[i - 1])
+    assert walked == total + _idle_runs(busy) - collide, \
+        (expert_of, b_sel, counts, n_tiles, bits, walked)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 12), st.integers(2, 4),
+       st.integers(1, 8))
+def test_plane_block_fetches_closed_form(seed, s, n_tiles, bits):
+    """For n_tiles >= 2 the slot walk equals
+    n_tiles * sum(b_sel) + n_idle_runs
+    - #{busy slots preceded by an idle slot}
+    (every busy slot's first block (0,0,0) IS the idle pin)."""
+    rng = np.random.default_rng(seed)
+    b_list = rng.integers(0, bits + 1, size=s).tolist()
+    walked = plane_block_fetches(b_list, n_tiles, bits)
+    busy = [b > 0 for b in b_list]
+    total = n_tiles * sum(b_list)
+    collide = sum(1 for i in range(1, s) if busy[i] and not busy[i - 1])
+    assert walked == total + _idle_runs(busy) - collide, \
+        (b_list, n_tiles, bits, walked)
+
+
+def test_fetch_counters_degenerate_tables():
+    """All-idle tables pin ONE block ever; all-busy tables are the pure
+    product form with no idle terms."""
+    assert plane_block_fetches([0, 0, 0], 3, 6) == 1
+    assert plane_block_fetches([2, 3], 3, 6) == 3 * 5
+    assert expert_plane_fetches([1, 2, 3], [0, 0, 0], [1, 1, 1], 3, 6) == 1
+    assert expert_plane_fetches([1, 2], [2, 3], [1, 1], 3, 6) == 3 * 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 8))
+def test_bitplane_round_trip_bounds_and_monotonicity(seed, bits):
+    """Quantize -> materialize honors the closed-form truncation bounds:
+    the B-bit reconstruction is within scale/2 of the weight, every b-bit
+    truncation is within scale * (2^(B-b) - 1) / 2 of the B-bit one, and
+    mean |error| never grows as b rises (more planes, less error)."""
+    rng = np.random.default_rng(seed)
+    w = np.asarray(rng.normal(size=(32, 16)) * rng.uniform(0.01, 2.0),
+                   np.float32)
+    ql = quantize_linear(w, bits=bits)
+    scale = np.asarray(ql.scale)[None, :]
+    w_full = np.asarray(materialize(ql, bits))[:w.shape[0]]
+    assert np.all(np.abs(w - w_full) <= np.abs(scale) * 0.5 + 1e-5)
+
+    maes = []
+    for b in range(1, bits + 1):
+        w_b = np.asarray(materialize(ql, b))[:w.shape[0]]
+        bound = np.abs(scale) * (2.0 ** (bits - b) - 1.0) * 0.5
+        assert np.all(np.abs(w_b - w_full) <= bound + 1e-4), b
+        maes.append(float(np.mean(np.abs(w_b - w))))
+    for lo, hi in zip(maes, maes[1:]):
+        assert hi <= lo + 1e-6, maes
