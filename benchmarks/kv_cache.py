@@ -1,0 +1,153 @@
+"""Dynamic-precision KV cache: bit-serial plane-read benchmark.
+
+The overlay KV cache stores every token as a full ``bits``-deep bitplane
+stack; each tick the planner assigns a per-layer READ precision, and the
+bit-serial decode-attention kernel fetches exactly ``kv_b[s]`` planes
+per cache tile for slot ``s`` (idle slots fetch none). This benchmark
+reports, per slot-precision mix and context length:
+
+- modeled HBM plane traffic (``kv_plane_fetches`` — the kernel's
+  index_map walked in grid order, property-tested against the closed
+  form ``n_tiles * sum(kv_b) + idle_runs``) vs the generic-batching
+  model where every slot pays the full stack, with bytes saved;
+- storage bytes: dense fp32 rows vs the plane stack + scale/zero rows
+  (the ``ServingEngine.kv_bytes_saved`` closed form at the op level);
+- CPU wall time of the mixed-precision plane read (jnp oracle — the CPU
+  CI backend) vs the same read pinned to the full stack (the cost
+  without dynamic read precision), and — with ``--interpret`` — the
+  actual Pallas kernel body in interpret mode (slow; correctness smoke).
+
+Self-contained (no trained model); run from the repo root:
+    PYTHONPATH=src python benchmarks/kv_cache.py --quick
+    PYTHONPATH=src python benchmarks/kv_cache.py --smoke   # CI variant
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.kv_attention import (kv_decode_attention,
+                                        kv_plane_fetches)
+from repro.models.attention import encode_kv_rows
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _time(fn, *args, reps: int = 20) -> float:
+    jax.block_until_ready(fn(*args))              # warm + compile
+    t0 = time.monotonic()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / reps * 1e6   # us
+
+
+def _caches(s: int, t: int, hkv: int, dh: int, bits: int):
+    kv = jax.random.normal(jax.random.PRNGKey(0), (2, s, t, hkv, dh),
+                           dtype=jnp.float32)
+    kp, ks, kz = encode_kv_rows(kv[0], bits)
+    vp, vs, vz = encode_kv_rows(kv[1], bits)
+    return kp, ks, kz, vp, vs, vz
+
+
+def storage_bytes(t: int, hkv: int, dh: int, bits: int):
+    """Per-slot K+V storage: dense fp32 rows vs plane stack + scale/zero
+    rows — the op-level twin of ``ServingEngine.kv_bytes_saved``."""
+    dense = 2 * t * hkv * dh * 4
+    dw = -(-dh // 32)
+    overlay = 2 * (bits * t * hkv * dw * 4 + 2 * t * hkv * 4)
+    return dense, overlay
+
+
+def measure(quick: bool = False, interpret: bool = False,
+            reps: int = 20) -> dict:
+    bits, hkv, hq, dh, m = 8, 2, 4, 64, 1
+    contexts = (128, 512) if quick else (256, 1024)
+    tile_t = 128
+    mixes = {
+        "hetero": [8, 4, 0, 6, 2, 0, 3, 8],
+        "uniform4": [4] * 8,
+        "half-idle": [8, 0, 8, 0, 8, 0, 8, 0],
+    }
+    if quick:
+        mixes = {k: v[:4] for k, v in mixes.items()}
+
+    results = {}
+    for t in contexts:
+        n_tiles = t // tile_t
+        dense_b, overlay_b = storage_bytes(t, hkv, dh, bits)
+        dw = -(-dh // 32)
+        # one K-or-V plane block, as the kernel tiles it
+        block_bytes = tile_t * hkv * dw * 4
+        for mix, b_list in mixes.items():
+            s = len(b_list)
+            kp, ks, kz, vp, vs, vz = _caches(s, t, hkv, dh, bits)
+            q = jax.random.normal(jax.random.PRNGKey(1), (s, m, hq, dh),
+                                  dtype=jnp.float32)
+            lens = jnp.full((s, m), t, jnp.int32)
+            kv_b = jnp.asarray(b_list, jnp.int32)
+            full_b = jnp.full((s,), bits, jnp.int32)
+
+            plane = jax.jit(lambda qq, bb: kv_decode_attention(
+                qq, kp, ks, kz, vp, vs, vz, lens, bb, bits=bits,
+                backend="ref"))
+            t_plane = _time(plane, q, kv_b, reps=reps)
+            t_full = _time(plane, q, full_b, reps=reps)
+
+            # traffic model: ONE stream (K); V doubles it
+            fetches = 2 * kv_plane_fetches(b_list, n_tiles, bits)
+            generic = 2 * s * n_tiles * bits      # all slots, all planes
+            saved_mb = (generic - fetches) * block_bytes / 1e6
+
+            if interpret:
+                y_int = kv_decode_attention(
+                    q, kp, ks, kz, vp, vs, vz, lens, kv_b, bits=bits,
+                    backend="interpret")
+                y_ref = plane(q, kv_b)
+                np.testing.assert_allclose(y_int, y_ref, rtol=1e-5,
+                                           atol=1e-5)
+
+            emit(f"kv_cache/t{t}/{mix}", t_plane,
+                 f"blocks={fetches};generic={generic};"
+                 f"saved_mb={saved_mb:.3f};full_read_us={t_full:.1f};"
+                 f"store_dense_b={dense_b};store_overlay_b={overlay_b}")
+            results[(t, mix)] = {
+                "fetches": fetches, "generic": generic,
+                "us_plane": t_plane, "us_full_read": t_full,
+                "store_dense_bytes": dense_b,
+                "store_overlay_bytes": overlay_b,
+            }
+            assert fetches <= generic
+    return results
+
+
+def smoke() -> dict:
+    """CI variant: one tiny mix, interpret-mode kernel check included."""
+    out = measure(quick=True, interpret=True, reps=3)
+    print("# kv_cache smoke ok")
+    return out
+
+
+def main(quick: bool = False, interpret: bool = False) -> dict:
+    return measure(quick=quick, interpret=interpret)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes (CI smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + interpret-mode kernel parity — "
+                         "the CI smoke variant")
+    ap.add_argument("--interpret", action="store_true",
+                    help="also run the Pallas kernel body in interpret "
+                         "mode")
+    args = ap.parse_args()
+    smoke() if args.smoke else main(quick=args.quick,
+                                    interpret=args.interpret)

@@ -29,6 +29,7 @@ MODULES = [
     ("sensitivity_dynamics", "Figure 3: per-step sensitivity dynamics"),
     ("slot_kernel", "Batched-slot kernel: per-slot DMA elision"),
     ("moe_kernel", "Grouped MoE kernel: per-expert DMA elision"),
+    ("kv_cache", "Dynamic-precision KV: plane-read traffic + storage"),
     ("prefill", "Prefill/decode disaggregation: TTFT + launch counts"),
     ("speculative", "Self-speculative decode: draft/verify speedup sweep"),
     ("roofline", "§Roofline: 3-term analysis from the dry-run"),
@@ -65,7 +66,16 @@ def collect_serve_json(quick: bool) -> dict:
     spec = spec_measure(engine, prompt, max_new, target, ks=(spec_k,))
     spec_row = spec["rows"][0]
     moe = moe_measure(quick=quick)
+    # dynamic-precision KV cache: planner-assigned per-layer read bits
+    kv_engine = ServingEngine(cfg, params, model, kv_overlay=True)
+    kv_engine.generate(prompt, max_new, target)         # compile
+    t0 = time.monotonic()
+    kv_engine.generate(prompt, max_new, target)
+    kv_wall = time.monotonic() - t0
     return {
+        "kv_tokens_per_s": max_new / kv_wall,
+        "kv_bytes_saved": kv_engine.kv_bytes_saved(
+            1, kv_engine.kv_bucket),
         "moe_tokens_per_s": moe["moe_tokens_per_s"],
         "moe_peak_bytes": moe["moe_peak_bytes"],
         "moe_dense_peak_bytes": moe["moe_dense_peak_bytes"],

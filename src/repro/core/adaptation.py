@@ -70,6 +70,11 @@ from repro.core.estimators import EstimatorFit
 # estimator-kind codes in the exported ``kind`` arrays
 KIND_PINNED, KIND_LINEAR, KIND_JL = 0, 1, 2
 
+# plane depth of the bitplane-overlay KV cache (writes always store the
+# full stack; the planner's KV rows are capped here). Must match the
+# ``kv_plane_bits`` the serving engine builds its decode state with.
+KV_PLANE_BITS = 8
+
 
 def overlay_nbytes(overlays: Dict[str, object]) -> int:
     """Device bytes of a bit-plane overlay dict, from actual itemsizes."""
@@ -186,6 +191,16 @@ class DecisionBundle:
         sizes        : (U,) float32 — parameter counts M_i, the weights
                        of the vectorized effective-bits reduction
         k_actual     : (U,) int32  — true estimator input width per unit
+
+    KV pseudo-rows: after the weight rows, one row per attention layer
+    (path ``layers.{i}.attn.kv``) carries that layer's KV *read*
+    precision. Each copies its source row's (``layers.{i}.attn.wv``)
+    candidates/estimator/G-row verbatim with ``sizes = 0`` (excluded
+    from effective-bits) and ``max_bits = KV_PLANE_BITS``, so the one
+    fused ``plan_bits`` launch prices KV reads by the same activation
+    signal that gates the value projection — no second launch, no extra
+    G DMA. ``kv_rows``/``kv_src`` record the (row, source-row) pairs;
+    ``n_weight_units`` is where the pseudo-rows start.
     """
     paths: Tuple[str, ...]
     row_of: Dict[str, int]
@@ -203,18 +218,38 @@ class DecisionBundle:
     max_bits: np.ndarray
     sizes: np.ndarray
     k_actual: np.ndarray
+    kv_rows: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.int32))
+    kv_src: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.int32))
+    n_weight_units: int = -1
 
     @property
     def n_units(self) -> int:
         return len(self.paths)
 
+    @property
+    def weight_units(self) -> int:
+        """Rows before the KV pseudo-rows (all of them, pre-KV bundles)."""
+        return self.n_weight_units if self.n_weight_units >= 0 \
+            else self.n_units
+
     def stack_static(self, static_arrays: Dict[str, np.ndarray]
                      ) -> np.ndarray:
-        """``path -> (T,)`` static-method bits, stacked to ``(U, T)``."""
+        """``path -> (T,)`` static-method bits, stacked to ``(U, T)``.
+
+        KV pseudo-rows (absent from every static table) inherit their
+        source row's allocation, mirroring the planner's act copy.
+        """
         t = self.l.shape[1]
+        src_of = {int(r): int(s)
+                  for r, s in zip(self.kv_rows, self.kv_src)}
         out = np.zeros((self.n_units, t), np.int32)
         for u, p in enumerate(self.paths):
-            out[u] = np.asarray(static_arrays[p], np.int32)
+            if p not in static_arrays and u in src_of:
+                out[u] = out[src_of[u]]      # kv_src always precedes u
+            else:
+                out[u] = np.asarray(static_arrays[p], np.int32)
         return out
 
 
@@ -385,11 +420,39 @@ def export_decision_bundle(
         k, size = _overlay_dims(model.overlays[p])
         sizes[u] = size
         k_actual[u] = k
+
+    # KV pseudo-rows: one per attention layer, sourced from its value
+    # projection (the weight whose activation signal best prices the KV
+    # read — V rows feed the same matmul the cache replays).
+    row_of = {p: i for i, p in enumerate(paths)}
+    attn_ids = sorted(
+        int(p.split(".")[1]) for p in paths
+        if p.startswith("layers.") and p.endswith(".attn.wv"))
+    kv_src = np.asarray(
+        [row_of[f"layers.{i}.attn.wv"] for i in attn_ids], np.int32)
+    kv_rows = n_u + np.arange(len(kv_src), dtype=np.int32)
+    if len(kv_src):
+        paths = paths + tuple(f"layers.{i}.attn.kv" for i in attn_ids)
+        li = np.concatenate([li, li[kv_src]])
+        hi = np.concatenate([hi, hi[kv_src]])
+        kind = np.concatenate([kind, kind[kv_src]])
+        thr = np.concatenate([thr, thr[kv_src]])
+        a = np.concatenate([a, a[kv_src]])
+        b = np.concatenate([b, b[kv_src]])
+        gamma = np.concatenate([gamma, gamma[kv_src]])
+        g_row = np.concatenate([g_row, g_row[kv_src]])
+        max_bits = np.concatenate(
+            [max_bits,
+             np.minimum(max_bits[kv_src], KV_PLANE_BITS)])
+        sizes = np.concatenate(
+            [sizes, np.zeros((len(kv_src),), np.float32)])
+        k_actual = np.concatenate([k_actual, k_actual[kv_src]])
     return DecisionBundle(
         paths=paths, row_of={p: i for i, p in enumerate(paths)},
         k_pad=k_pad, k_proj=k_proj, l=li, h=hi, kind=kind, threshold=thr,
         a=a, b=b, gamma=gamma, g=np.stack(g_rows), g_row=g_row,
-        max_bits=max_bits, sizes=sizes, k_actual=k_actual)
+        max_bits=max_bits, sizes=sizes, k_actual=k_actual,
+        kv_rows=kv_rows, kv_src=kv_src, n_weight_units=n_u)
 
 
 def serve_array_axes(

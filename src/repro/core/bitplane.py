@@ -211,6 +211,69 @@ def materialize_stacked(qs: QuantizedStacked, b) -> jax.Array:
     return w[:, : qs.k]
 
 
+# -- row-wise encode (KV-cache overlay) --------------------------------------
+# The KV cache stores one quantization group per (batch, position, head) ROW
+# over the head dim — the same codebook as quantize_channelwise, transposed:
+# scale/zero live per row instead of per output channel. quantize_rows is the
+# ONE bitplane encode for cache entries; pack_rows lays the codes out as a
+# plane stack packed along the head dim so a b-bit read is a prefix of the
+# same storage, exactly like the weight overlays above.
+
+
+def quantize_rows(x: jax.Array, bits: int = MAX_BITS):
+    """Row-wise asymmetric uniform quantization over the LAST axis.
+
+    x: (..., d) float -> (q (..., d) uint8, scale (..., 1) f32,
+    zero (..., 1) f32) with ``x ≈ scale * (q - zero)``. All-zero rows
+    encode to exactly-zero (q, scale, zero) so never-written / rewound
+    cache rows stay representation-level zeros (the speculative
+    zero-rows invariant holds on the packed planes themselves).
+    """
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    span = jnp.maximum(hi - lo, 1e-8)
+    levels = (1 << bits) - 1
+    scale = span / levels
+    zero = -lo / scale
+    q = jnp.clip(jnp.round(xf / scale + zero), 0, levels)
+    blank = (lo == 0.0) & (hi == 0.0)
+    q = jnp.where(blank, 0.0, q).astype(jnp.uint8)
+    scale = jnp.where(blank, 0.0, scale)
+    zero = jnp.where(blank, 0.0, zero)
+    return q, scale, zero
+
+
+def pack_rows(q: jax.Array, bits: int) -> jax.Array:
+    """(..., d) uint8 codes -> (bits, ..., d/32) int32 planes (bit 0 = MSB).
+
+    The pack axis is the LAST (head) dim — ``planes[b, ..., w]`` bit ``j``
+    (LSB-first) is plane ``b`` of position ``w*32 + j``.
+    """
+    d = q.shape[-1]
+    pad = (-d) % PACK
+    qi = q.astype(jnp.int32)
+    if pad:
+        qi = jnp.pad(qi, ((0, 0),) * (qi.ndim - 1) + ((0, pad),))
+    dw = qi.shape[-1] // PACK
+    words = qi.reshape(qi.shape[:-1] + (dw, PACK))
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    out = []
+    for b in range(bits):
+        plane = (words >> (bits - 1 - b)) & 1
+        out.append(jnp.sum(plane << shifts, axis=-1).astype(jnp.int32))
+    return jnp.stack(out)                       # (bits, ..., d/32)
+
+
+def unpack_rows(words: jax.Array, d: int) -> jax.Array:
+    """(..., dw) int32 -> (..., d) float32 in {0, 1} (inverse of one
+    pack_rows plane; positions past ``d`` are the zero padding)."""
+    shifts = jnp.arange(PACK, dtype=jnp.int32)
+    bits = (words[..., :, None] >> shifts) & 1
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * PACK,))
+    return flat[..., :d].astype(jnp.float32)
+
+
 def bitserial_matmul_ref(x: jax.Array, ql: QuantizedLinear, b) -> jax.Array:
     """Reference b-bit matmul via the closed form (oracle for the kernel).
 

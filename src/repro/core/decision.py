@@ -94,6 +94,13 @@ class PrecisionPlanner:
                                     "b", "gamma", "g", "g_row")}
         self.max_bits = put(jnp.asarray(bundle.max_bits))
         self.sizes = put(jnp.asarray(bundle.sizes, jnp.float32))
+        # KV pseudo-rows read their source row's captured activations;
+        # the copy happens on the acts buffer BEFORE the fused launch, so
+        # KV read bits ride the same plan_bits call as the weights.
+        self._kv_rows = put(jnp.asarray(bundle.kv_rows, jnp.int32)) \
+            if len(bundle.kv_rows) else None
+        self._kv_src = put(jnp.asarray(bundle.kv_src, jnp.int32)) \
+            if len(bundle.kv_rows) else None
         self.static_stack = None if static_stack is None else \
             put(jnp.asarray(static_stack, jnp.int32))
         self.exact_deltas = exact_deltas or {}
@@ -113,6 +120,8 @@ class PrecisionPlanner:
         ``active=False`` gates every decision to 0 bits.
         """
         t = jnp.asarray(target_idx, jnp.int32)
+        if acts is not None and self._kv_rows is not None:
+            acts = acts.at[self._kv_rows].set(acts[self._kv_src])
         if self.mode == "dynamic":
             return plan_bits(acts, self.tables, t, active,
                              backend=self.backend)
@@ -137,6 +146,8 @@ class PrecisionPlanner:
                          backend=self.backend)
         act = jnp.int32(1) if active is None else \
             jnp.asarray(active).astype(jnp.int32)
+        mirror = {int(s): int(r) for r, s in
+                  zip(self.bundle.kv_rows, self.bundle.kv_src)}
         for path, delta in self.exact_deltas.items():
             u = self.bundle.row_of[path]
             xf = acts[u][:, :delta.shape[-2]].astype(jnp.float32)
@@ -145,6 +156,8 @@ class PrecisionPlanner:
             b_u = jnp.where(dynamic & (est > self.tables["threshold"][u, t]),
                             self.tables["h"][u, t], self.tables["l"][u, t])
             bits = bits.at[u].set(jnp.where(act > 0, b_u, 0))
+            if u in mirror:               # keep the KV row tracking it
+                bits = bits.at[mirror[u]].set(jnp.where(act > 0, b_u, 0))
         return bits
 
     # -- accounting --------------------------------------------------------------
@@ -165,10 +178,14 @@ class PrecisionPlanner:
         lin = DynamicLinearApplier(table, serve_params,
                                    target_idx=target_idx, mode=mode,
                                    static_bits=static_bits)
+        src_of = {int(r): int(s) for r, s in
+                  zip(self.bundle.kv_rows, self.bundle.kv_src)}
         out = []
         for i, p in enumerate(self.bundle.paths):
-            xi = acts[i, :, :int(self.bundle.k_actual[i])]
-            out.append(lin._select_bits_active(table[p], xi, None))
+            j = src_of.get(i, i)          # kv rows replay their source
+            sp = self.bundle.paths[j]
+            xi = acts[j, :, :int(self.bundle.k_actual[j])]
+            out.append(lin._select_bits_active(table[sp], xi, None))
         return jnp.stack(out).astype(jnp.int32)
 
     def effective_bits(self, bits: jax.Array) -> jax.Array:

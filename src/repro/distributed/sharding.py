@@ -212,7 +212,15 @@ def slot_state_spec(mesh: Mesh, key: str, shape: Sequence[int],
     """
     rules = rules or SERVE_RULES
     axes = [SLOTS] + [None] * (len(shape) - 1)
-    if (key.startswith("kv.") or key.startswith("xkv.")) and len(shape) == 5:
+    if key.startswith("kv.") and key.endswith("_planes") and \
+            len(shape) == 6:
+        # (slots, 1, B, seq, kv_heads, dw): the plane axis carries the
+        # PLANES rule — a read precision is a *prefix* of planes, so it
+        # stays unsplit; heads shard like the dense cache's
+        axes[2] = PLANES
+        axes[4] = KV_HEADS
+    elif (key.startswith("kv.") or key.startswith("xkv.")) and \
+            len(shape) == 5:
         axes[3] = KV_HEADS
     return resolve_spec(shape, axes, mesh, rules)
 
@@ -309,6 +317,13 @@ def decode_state_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:
     KV caches go through :func:`kv_cache_spec`; SSM recurrent states shard
     batch → ('pod','data'); the scalar position is replicated.
     """
+    if key.startswith("kv.") and key.endswith("_planes") and \
+            len(shape) == 5:
+        # (batch, B, seq, kv_heads, dw): reuse the dense cache's layout
+        # decisions, keeping the plane axis whole (reads slice a prefix
+        # of planes — splitting it would turn every read into a gather)
+        dense = kv_cache_spec(mesh, shape[0], shape[2], shape[3])
+        return P(dense[0], None, dense[1], dense[2], None)
     if (key.startswith("kv.") or key.startswith("xkv.")) and len(shape) == 4:
         return kv_cache_spec(mesh, shape[0], shape[1], shape[2])
     if key.startswith("ssm.") and len(shape) >= 2:
@@ -335,6 +350,11 @@ def prefill_spec(mesh: Mesh, key: str, shape: Sequence[int]) -> P:
     scratch is small and stays replicated.
     """
     sizes = _mesh_axis_sizes(mesh)
+    if key.startswith("kv.") and key.endswith("_planes") and \
+            len(shape) == 5:
+        head_entry = "model" if ("model" in sizes and
+                                 shape[3] % sizes["model"] == 0) else None
+        return P(None, None, None, head_entry, None)
     if (key.startswith("kv.") or key.startswith("xkv.")) and len(shape) == 4:
         head_entry = "model" if ("model" in sizes and
                                  shape[2] % sizes["model"] == 0) else None

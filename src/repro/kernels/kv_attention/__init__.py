@@ -1,0 +1,24 @@
+"""Bit-serial KV decode-attention kernel (dynamic-precision cache reads).
+
+The KV cache stores full-``B`` bitplane stacks; each tick the planner
+assigns a per-layer READ precision and this kernel fetches exactly that
+many cache planes per slot — the weight kernels' plane-DMA elision,
+applied to the cache. See docs/ARCHITECTURE.md §9.
+"""
+from repro.kernels.kv_attention.kernel import (kv_attention_slots_pallas,
+                                               kv_plane_fetches)
+from repro.kernels.kv_attention.ops import (TRACE_COUNTS,
+                                            kv_decode_attention)
+from repro.kernels.kv_attention.ref import (kv_attention_dense,
+                                            kv_decode_attention_ref,
+                                            materialize_kv_planes)
+
+__all__ = [
+    "kv_attention_slots_pallas",
+    "kv_plane_fetches",
+    "kv_decode_attention",
+    "kv_decode_attention_ref",
+    "kv_attention_dense",
+    "materialize_kv_planes",
+    "TRACE_COUNTS",
+]

@@ -1,0 +1,231 @@
+"""Slot-batched bit-serial decode-attention Pallas kernel.
+
+Grid ``(slots, kv_tiles, bits)``, planes innermost. The KV cache is the
+bitplane overlay (``core/bitplane.pack_rows`` layout: per-(position,
+head) rows packed along the head dim), and the per-slot read precision
+``kv_b_sel`` rides scalar prefetch: the plane index_map CLAMPS the
+plane coordinate at ``kv_b_sel - 1`` and pins idle slots to block 0, so
+Pallas's revisiting-block elision skips the HBM->VMEM copy for every
+plane past the selected precision — slot ``s`` fetches exactly
+``n_tiles * kv_b_sel[s]`` cache plane blocks (per K/V stream), the same
+mechanism ``bitserial_matmul_slots_pallas`` applies to weight planes.
+
+Per tile the kernel accumulates the bit-serial partial sums
+
+    s_acc  += 2^(B-1-j) * (q @ k_plane_j^T)        (scores closed form)
+    vv_acc += 2^(B-1-j) * v_plane_j                (values closed form)
+
+and at the last plane applies the midpoint/zero/scale correction and
+folds the tile into an online-softmax (flash) running state — one pass
+over the cache, no (T,) score buffer.
+
+``kv_plane_fetches`` walks the REAL index_map in grid order and counts
+distinct consecutive blocks — the modeled HBM traffic the benchmarks
+and property tests pin (`tests/test_traffic_properties.py`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bitplane import PACK
+
+NEG_INF = -1e30
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def _kv_plane_block(b, s, i, j):
+    """Block coords for one slot's (bits, T, hkv, dw) plane stack.
+
+    Busy slots clamp the plane coordinate at ``b - 1`` (planes past the
+    selected precision revisit the last fetched block — no new DMA);
+    idle slots pin every coordinate to block 0.
+    """
+    active = b > 0
+    jc = jnp.maximum(jnp.minimum(j, b - 1), 0)
+    return (jnp.where(active, s, 0), jnp.where(active, jc, 0),
+            jnp.where(active, i, 0), 0, 0)
+
+
+def _unpack_block(words: jax.Array) -> jax.Array:
+    """(tile_t, hkv, dw) int32 -> (hkv, tile_t, dw*32) f32 in {0, 1}."""
+    t, hkv, dw = words.shape
+    w = jnp.transpose(words, (1, 0, 2))
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, PACK), 3)
+    bits = (w[..., None] >> shifts) & 1
+    return bits.reshape(hkv, t, dw * PACK).astype(jnp.float32)
+
+
+def _kv_kernel(kv_b_ref, lens_ref, q_ref, kp_ref, ks_ref, kz_ref, vp_ref,
+               vs_ref, vz_ref, out_ref, s_acc, vv_acc, m_run, l_run,
+               o_acc, *, bits, tile_t, m_rows, group, softcap):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    n_tiles = pl.num_programs(1)
+    b_sel = kv_b_ref[s]
+    active = b_sel > 0
+
+    @pl.when(active & (i == 0) & (j == 0))
+    def _init_flash():
+        m_run[...] = jnp.full_like(m_run[...], NEG_INF)
+        l_run[...] = jnp.zeros_like(l_run[...])
+        o_acc[...] = jnp.zeros_like(o_acc[...])
+
+    @pl.when(active & (j == 0))
+    def _init_tile():
+        s_acc[...] = jnp.zeros_like(s_acc[...])
+        vv_acc[...] = jnp.zeros_like(vv_acc[...])
+
+    @pl.when(j < b_sel)
+    def _accumulate():
+        w = 2.0 ** (bits - 1 - j)
+        kb = _unpack_block(kp_ref[0, 0])            # (hkv, tile_t, dh_w)
+        qv = q_ref[0]                               # (hkv, Mg, dh_w)
+        contrib = jax.lax.dot_general(
+            qv, kb, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)     # (hkv, Mg, tile_t)
+        s_acc[...] += contrib * w
+        vv_acc[...] += _unpack_block(vp_ref[0, 0]) * w
+
+    @pl.when(active & (j == bits - 1))
+    def _fold_tile():
+        mid = (jnp.exp2((bits - b_sel).astype(jnp.float32)) - 1.0) * 0.5
+        ks = ks_ref[0].T                            # (hkv, tile_t)
+        kz = kz_ref[0].T
+        vs = vs_ref[0].T
+        vz = vz_ref[0].T
+        qv = q_ref[0]
+        sum_q = jnp.sum(qv, axis=-1)                # (hkv, Mg)
+        scores = (s_acc[...] +
+                  (mid - kz)[:, None, :] * sum_q[:, :, None]) * \
+            ks[:, None, :]                          # (hkv, Mg, tile_t)
+        if softcap and softcap > 0.0:
+            scores = softcap * jnp.tanh(scores / softcap)
+        mg = sum_q.shape[-1]
+        col = i * tile_t + jax.lax.broadcasted_iota(
+            jnp.int32, (mg, tile_t), 1)
+        row_len = jnp.repeat(
+            jnp.stack([lens_ref[s * m_rows + mm]
+                       for mm in range(m_rows)]), group)
+        valid = col < row_len[:, None]              # (Mg, tile_t)
+        scores = jnp.where(valid[None], scores, NEG_INF)
+        vvals = (vv_acc[...] + mid - vz[:, :, None]) * vs[:, :, None]
+        m_new = jnp.maximum(m_run[...],
+                            jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_run[...] - m_new)
+        p = jnp.where(valid[None], jnp.exp(scores - m_new), 0.0)
+        l_run[...] = l_run[...] * alpha + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        o_acc[...] = o_acc[...] * alpha + jax.lax.dot_general(
+            p, vvals, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_run[...] = m_new
+
+        @pl.when(i == n_tiles - 1)
+        def _write():
+            out_ref[0] = o_acc[...] / l_run[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile_t", "m_rows",
+                                             "softcap", "interpret"))
+def kv_attention_slots_pallas(q, k_planes, k_scale, k_zero, v_planes,
+                              v_scale, v_zero, lens, kv_b, *, bits: int,
+                              tile_t: int, m_rows: int,
+                              softcap: float = 0.0,
+                              interpret: bool = False) -> jax.Array:
+    """Slot-batched bit-serial decode attention over plane-stacked KV.
+
+    q: (S, hkv, M*g, dh_w) f32, PRESCALED by dh^-0.5 and zero-padded to
+    the word width dh_w = dw*32 (row r = m*g + gg: query head gg of
+    group h for token row m). k/v_planes: (S, bits, T, hkv, dw) int32;
+    k/v scale/zero: (S, T, hkv) f32; lens: (S*M,) int32 flattened
+    per-row causal lengths; kv_b: (S,) int32 read precisions. Returns
+    (S, hkv, M*g, dh_w) f32 — idle slots' blocks are unwritten (callers
+    mask on ``kv_b > 0``).
+    """
+    slots, hkv, mg, dh_w = q.shape
+    t = k_planes.shape[2]
+    dw = k_planes.shape[-1]
+    group = mg // m_rows
+    grid = (slots, t // tile_t, bits)
+
+    def q_map(s, i, j, b_ref, l_ref):
+        return (s, 0, 0, 0)
+
+    def plane_map(s, i, j, b_ref, l_ref):
+        return _kv_plane_block(b_ref[s], s, i, j)
+
+    def sz_map(s, i, j, b_ref, l_ref):
+        active = b_ref[s] > 0
+        return (jnp.where(active, s, 0), jnp.where(active, i, 0), 0)
+
+    def out_map(s, i, j, b_ref, l_ref):
+        return (s, 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hkv, mg, dh_w), q_map),
+            pl.BlockSpec((1, 1, tile_t, hkv, dw), plane_map),
+            pl.BlockSpec((1, tile_t, hkv), sz_map),
+            pl.BlockSpec((1, tile_t, hkv), sz_map),
+            pl.BlockSpec((1, 1, tile_t, hkv, dw), plane_map),
+            pl.BlockSpec((1, tile_t, hkv), sz_map),
+            pl.BlockSpec((1, tile_t, hkv), sz_map),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, mg, dh_w), out_map),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, mg, tile_t), jnp.float32),
+            pltpu.VMEM((hkv, tile_t, dh_w), jnp.float32),
+            pltpu.VMEM((hkv, mg, 1), jnp.float32),
+            pltpu.VMEM((hkv, mg, 1), jnp.float32),
+            pltpu.VMEM((hkv, mg, dh_w), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kv_kernel, bits=bits, tile_t=tile_t,
+                               m_rows=m_rows, group=group,
+                               softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, hkv, mg, dh_w),
+                                       jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 3),
+        interpret=interpret,
+    )(jnp.asarray(kv_b, jnp.int32), jnp.asarray(lens, jnp.int32), q,
+      k_planes, k_scale, k_zero, v_planes, v_scale, v_zero)
+
+
+def kv_plane_fetches(kv_b, n_tiles: int, bits: int) -> int:
+    """Modeled HBM plane-block traffic of ONE cache stream (K or V).
+
+    Walks the real plane index_map in grid order — (slot, tile, plane),
+    plane innermost — counting consecutive-distinct blocks, exactly the
+    copies Pallas's revisiting-block elision leaves live. For
+    ``n_tiles >= 2`` this equals the closed form
+
+        n_tiles * sum(kv_b) + n_idle_runs
+
+    (idle runs pin ONE block; a busy slot's first block carries its own
+    slot coordinate, so — unlike the weight kernels' shared-operand
+    pins — it never collides with the idle pin).
+    """
+    fetches = 0
+    prev = None
+    for s, b in enumerate(int(x) for x in kv_b):
+        for i in range(n_tiles):
+            for j in range(bits):
+                blk = tuple(int(v) for v in _kv_plane_block(b, s, i, j))
+                if blk != prev:
+                    fetches += 1
+                    prev = blk
+    return fetches

@@ -1,0 +1,158 @@
+"""Dispatch for the bit-serial KV decode-attention kernel.
+
+``kv_decode_attention`` is the ONE entry point the model layer calls:
+it normalizes layouts (query prescale + head-dim word padding, cache
+tile padding), routes to the Pallas kernel / interpret twin / jnp
+oracle, and wraps the whole thing in a ``custom_vmap`` whose batching
+rule FLATTENS the mapped axis into the slot axis — so the scheduler's
+vmapped tick (and any deeper vmap nesting) still dispatches ONE
+slot-batched kernel launch with per-slot plane-DMA elision instead of
+falling apart into per-slot launches.
+
+Backend contract (mirrors ``kernels.bitserial``):
+    "pallas"     compiled TPU kernel
+    "interpret"  same kernel, interpreter mode (CI / CPU parity)
+    "ref"        jnp oracle (`kv_decode_attention_ref`)
+    None         auto: "pallas" on TPU, else "ref"
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kv_attention.kernel import kv_attention_slots_pallas
+from repro.kernels.kv_attention.ref import kv_decode_attention_ref
+
+TILE_CHOICES = (128, 64, 32, 16, 8)
+
+#: kernel-trace counter keyed by (bits, backend) — tests assert the
+#: scheduler's vmapped tick retraces nothing per slot
+TRACE_COUNTS: dict = {}
+
+
+def _count_trace(bits: int, backend: str) -> None:
+    key = (bits, backend)
+    TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
+
+
+def _pick_tile_t(t: int):
+    """Largest tile from TILE_CHOICES dividing t, else pad t up to the
+    smallest choice's multiple."""
+    for c in TILE_CHOICES:
+        if t >= c and t % c == 0:
+            return c, 0
+    c = TILE_CHOICES[-1]
+    return c, (-t) % c
+
+
+def _dispatch_kernel(q, k_planes, k_scale, k_zero, v_planes, v_scale,
+                     v_zero, lens, kv_b, *, bits, softcap, backend):
+    """Layout-normalize and launch the Pallas kernel (compiled or
+    interpret). q: (S, M, hq, dh); cache operands in state layout."""
+    slots, m, hq, dh = q.shape
+    hkv = k_planes.shape[3]
+    dw = k_planes.shape[-1]
+    dh_w = dw * 32
+    g = hq // hkv
+
+    qp = q.astype(jnp.float32) * (dh ** -0.5)
+    qp = qp.reshape(slots, m, hkv, g, dh).transpose(0, 2, 1, 3, 4)
+    qp = qp.reshape(slots, hkv, m * g, dh)
+    if dh_w > dh:
+        qp = jnp.pad(qp, ((0, 0),) * 3 + ((0, dh_w - dh),))
+
+    t = k_planes.shape[2]
+    tile_t, pad_t = _pick_tile_t(t)
+    if pad_t:
+        def pad_seq(x, axis):
+            widths = [(0, 0)] * x.ndim
+            widths[axis] = (0, pad_t)
+            return jnp.pad(x, widths)
+        k_planes = pad_seq(k_planes, 2)
+        v_planes = pad_seq(v_planes, 2)
+        k_scale = pad_seq(k_scale, 1)
+        k_zero = pad_seq(k_zero, 1)
+        v_scale = pad_seq(v_scale, 1)
+        v_zero = pad_seq(v_zero, 1)
+
+    out = kv_attention_slots_pallas(
+        qp, k_planes, k_scale[..., 0], k_zero[..., 0], v_planes,
+        v_scale[..., 0], v_zero[..., 0], lens.reshape(-1), kv_b,
+        bits=bits, tile_t=tile_t, m_rows=m, softcap=softcap,
+        interpret=(backend == "interpret"))
+    out = out[..., :dh].reshape(slots, hkv, m, g, dh)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(slots, m, hq, dh)
+    return jnp.where((kv_b > 0)[:, None, None, None], out, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "softcap", "backend"))
+def _dispatch(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
+              lens, kv_b, *, bits, softcap, backend):
+    _count_trace(bits, backend)
+    if backend == "ref":
+        return kv_decode_attention_ref(
+            q.astype(jnp.float32), k_planes, k_scale, k_zero, v_planes,
+            v_scale, v_zero, lens, kv_b, bits=bits,
+            logit_softcap=softcap)
+    return _dispatch_kernel(q, k_planes, k_scale, k_zero, v_planes,
+                            v_scale, v_zero, lens, kv_b, bits=bits,
+                            softcap=softcap, backend=backend)
+
+
+@functools.lru_cache(maxsize=None)
+def _kv_batchable(bits: int, softcap: float, backend: str):
+    """One custom_vmap per (bits, softcap, backend): any vmap depth
+    flattens onto the slot axis and re-enters the SAME object — one
+    kernel launch regardless of nesting."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
+           lens, kv_b):
+        return _dispatch(q, k_planes, k_scale, k_zero, v_planes,
+                         v_scale, v_zero, lens, kv_b, bits=bits,
+                         softcap=softcap, backend=backend)
+
+    @fn.def_vmap
+    def _vmap_rule(axis_size, in_batched, q, k_planes, k_scale, k_zero,
+                   v_planes, v_scale, v_zero, lens, kv_b):
+        args = [q, k_planes, k_scale, k_zero, v_planes, v_scale,
+                v_zero, lens, kv_b]
+        full = []
+        for a, batched in zip(args, in_batched):
+            if not batched:
+                a = jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+            full.append(a)
+        inner = full[0].shape[1]
+        flat = [a.reshape((axis_size * a.shape[1],) + a.shape[2:])
+                for a in full]
+        y = fn(*flat)
+        return y.reshape((axis_size, inner) + y.shape[1:]), True
+
+    return fn
+
+
+def kv_decode_attention(q, k_planes, k_scale, k_zero, v_planes, v_scale,
+                        v_zero, lens, kv_b, *, bits: int,
+                        logit_softcap: float = 0.0,
+                        backend: Optional[str] = None) -> jax.Array:
+    """Slot-batched plane-read decode attention.
+
+    q: (S, M, hq, dh); k/v_planes: (S, bits, T, hkv, dw) int32 (the
+    ``pack_rows`` cache layout); k/v scale/zero: (S, T, hkv, 1) f32;
+    lens: (S, M) int32 per-row causal lengths; kv_b: (S,) int32 read
+    precisions — slot s reads exactly kv_b[s] planes per cache tile
+    (0 = idle: no fetches, zero output). Returns (S, M, hq, dh) f32.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if k_planes.shape[1] != bits:
+        raise ValueError(
+            f"plane stack carries {k_planes.shape[1]} planes, bits={bits}")
+    fn = _kv_batchable(bits, float(logit_softcap), backend)
+    return fn(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
+              jnp.asarray(lens, jnp.int32), jnp.asarray(kv_b, jnp.int32))

@@ -1,0 +1,98 @@
+"""jnp oracle for the bit-serial KV decode-attention kernel.
+
+Two pieces live here because every parity story routes through them:
+
+``kv_attention_dense``
+    THE dense decode-attention math (per slot: (M, hq, dh) query rows
+    against a (T, hkv, dh) cache with per-row causal lengths). The
+    models' dense parity oracle and this module's plane-read reference
+    both call it, so "plane read at full precision == dense oracle"
+    reduces to "materialization at ``b == B`` is exact" — which it is,
+    bit-for-bit: every kept plane is multiplied by an IEEE-exact 1.0
+    and the midpoint correction at ``b == B`` is exactly 0.0.
+
+``kv_decode_attention_ref``
+    The kernel's oracle twin: per-slot materialize-at-``kv_b`` over the
+    plane stacks (masked closed form, planes past ``kv_b`` multiplied
+    by 0.0) feeding ``kv_attention_dense``. Costs full-``B`` compute
+    regardless of ``kv_b`` — the Pallas kernel instead skips the
+    elided planes' DMA entirely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import midpoint, unpack_rows
+
+NEG_INF = -1e30
+
+
+def _soft_cap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def materialize_kv_planes(planes: jax.Array, scale: jax.Array,
+                          zero: jax.Array, b, *, bits: int,
+                          d: int) -> jax.Array:
+    """Reconstruct ``b``-bit cache rows from one slot's plane stack.
+
+    planes: (bits, T, hkv, dw) int32; scale/zero: (T, hkv, 1) f32;
+    ``b`` may be a python int or a traced scalar. Returns (T, hkv, d)
+    f32 — rows whose scale is 0 (never written / rewound) come back
+    exactly 0 for every ``b``.
+    """
+    B = bits
+    t, hkv = planes.shape[1], planes.shape[2]
+    acc = jnp.zeros((t, hkv, d), jnp.float32)
+    for j in range(planes.shape[0]):
+        w_j = unpack_rows(planes[j], d) * (2.0 ** (B - 1 - j))
+        acc = acc + jnp.where(j < b, 1.0, 0.0) * w_j
+    return (acc + midpoint(B, b) - zero) * scale
+
+
+def kv_attention_dense(q: jax.Array, kf: jax.Array, vf: jax.Array,
+                       lens: jax.Array, *,
+                       logit_softcap: float = 0.0) -> jax.Array:
+    """One slot's decode attention: (M, hq, dh) x (T, hkv, dh) -> (M, hq, dh).
+
+    ``lens`` is (M,) — row m attends to cache positions < lens[m] (the
+    multi-row causal-prefix contract of the decode cells). GQA folds
+    hq = hkv * g query heads onto the hkv cache heads.
+    """
+    m, hq, dh = q.shape
+    hkv = kf.shape[1]
+    g = hq // hkv
+    qf = q.reshape(m, hkv, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    scores = jnp.einsum("mhgd,shd->mhgs", qf, kf)
+    scores = _soft_cap(scores, logit_softcap)
+    mask = jnp.arange(kf.shape[0])[None, None, None, :] < \
+        lens[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("mhgs,shd->mhgd", probs, vf)
+    return out.reshape(m, hq, dh)
+
+
+def kv_decode_attention_ref(q, k_planes, k_scale, k_zero, v_planes,
+                            v_scale, v_zero, lens, kv_b, *, bits: int,
+                            logit_softcap: float = 0.0) -> jax.Array:
+    """Oracle: per-slot plane-read decode attention.
+
+    q: (S, M, hq, dh); k/v_planes: (S, bits, T, hkv, dw) int32;
+    k/v scale/zero: (S, T, hkv, 1) f32; lens: (S, M) int32;
+    kv_b: (S,) int32 read precisions (0 = idle slot -> zeros out).
+    """
+    d = q.shape[-1]
+
+    def one(qs, kp, ks, kz, vp, vs, vz, ls, b):
+        kf = materialize_kv_planes(kp, ks, kz, b, bits=bits, d=d)
+        vf = materialize_kv_planes(vp, vs, vz, b, bits=bits, d=d)
+        return kv_attention_dense(qs, kf, vf, ls,
+                                  logit_softcap=logit_softcap)
+
+    out = jax.vmap(one)(q, k_planes, k_scale, k_zero, v_planes, v_scale,
+                        v_zero, lens, kv_b)
+    return jnp.where((kv_b > 0)[:, None, None, None], out, 0.0)

@@ -391,10 +391,9 @@ def stacked_cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
             cache[f"kv.{r}.v"] = _sds(shape, kv_dtype, mesh, spec)
             if kv_dtype == jnp.int8:
                 sshape = (steps, batch, max_len, cfg.num_kv_heads, 1)
-                cache[f"kv.{r}.k_scale"] = _sds(sshape, jnp.float32, mesh,
-                                                spec)
-                cache[f"kv.{r}.v_scale"] = _sds(sshape, jnp.float32, mesh,
-                                                spec)
+                for leaf in ("k_scale", "v_scale", "k_zero", "v_zero"):
+                    cache[f"kv.{r}.{leaf}"] = _sds(sshape, jnp.float32,
+                                                   mesh, spec)
         else:
             dd = ssm_dims(cfg)
             bspec = P(None, *batch_spec(mesh, batch, 2))

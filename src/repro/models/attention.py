@@ -8,8 +8,6 @@ written in pure ``lax.scan`` so GSPMD can shard heads/batch/sequence freely.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 
@@ -101,6 +99,8 @@ def decode_attention(
     logit_softcap: float = 0.0,
     k_scale: jax.Array = None,   # (b, S, hkv, 1) f32 — int8 cache scales
     v_scale: jax.Array = None,
+    k_zero: jax.Array = None,    # (b, S, hkv, 1) f32 — int8 zero points
+    v_zero: jax.Array = None,
 ) -> jax.Array:
     """Token attention over a (possibly sequence-sharded) KV cache.
 
@@ -111,8 +111,9 @@ def decode_attention(
     softmax sees exactly the prefix the sequential tick-by-tick path saw.
 
     int8 KV (beyond-paper §Perf optimization): cache stored as int8 with
-    per-(batch, position, head) scales — halves the decode memory term at
-    <0.5% score perturbation (tests/test_models.py).
+    per-(batch, position, head) scale/zero rows (the shared
+    ``quantize_rows`` codebook at 8 bits) — halves the decode memory
+    term at <0.5% score perturbation (tests/test_models.py).
     """
     b, m, hq, dh = q.shape
     _, s, hkv, _ = k_cache.shape
@@ -120,9 +121,13 @@ def decode_attention(
     scale = dh ** -0.5
     kf = k_cache.astype(jnp.float32)
     if k_scale is not None:
+        if k_zero is not None:
+            kf = kf - k_zero
         kf = kf * k_scale
     vf = v_cache.astype(jnp.float32)
     if v_scale is not None:
+        if v_zero is not None:
+            vf = vf - v_zero
         vf = vf * v_scale
     if m == 1:
         qf = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
@@ -144,12 +149,13 @@ def decode_attention(
     return out.reshape(b, m, hq, dh).astype(q.dtype)
 
 
-def quantize_kv_entry(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """(b, 1, h, dh) -> (int8 values, (b, 1, h, 1) f32 scale)."""
-    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
-                keepdims=True) / 127.0 + 1e-9
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
-    return q.astype(jnp.int8), s
+def _encode_int8_rows(x: jax.Array):
+    """ONE cache encode (``core.bitplane.quantize_rows``) specialized to
+    the int8 representation: codes recentred to signed int8, zero-point
+    folded into the stored zero so dequant is ``(v - zero) * scale``."""
+    from repro.core.bitplane import quantize_rows  # deferred: pkg cycle
+    q, s, z = quantize_rows(x, bits=8)
+    return (q.astype(jnp.int32) - 128).astype(jnp.int8), s, z - 128.0
 
 
 def update_kv_cache(
@@ -157,22 +163,125 @@ def update_kv_cache(
     k_new: jax.Array, v_new: jax.Array,
     pos: jax.Array,
     k_scale: jax.Array = None, v_scale: jax.Array = None,
+    k_zero: jax.Array = None, v_zero: jax.Array = None,
 ):
     """Write one decode step's K/V at position ``pos`` (dynamic index).
 
-    With int8 caches (k_scale/v_scale given) the new entries are quantized
-    per head; returns updated scale arrays too.
+    With int8 caches (k_scale/v_scale given) the new entries are encoded
+    per (batch, position, head) row via the shared bitplane codebook
+    (:func:`repro.core.bitplane.quantize_rows` at 8 bits — asymmetric,
+    so the cache also carries zero points); returns updated
+    scale/zero arrays too.
     """
     if k_scale is not None:
-        k_q, k_s = quantize_kv_entry(k_new)
-        v_q, v_s = quantize_kv_entry(v_new)
-        k_cache = jax.lax.dynamic_update_slice(k_cache, k_q, (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(v_cache, v_q, (0, pos, 0, 0))
-        k_scale = jax.lax.dynamic_update_slice(k_scale, k_s, (0, pos, 0, 0))
-        v_scale = jax.lax.dynamic_update_slice(v_scale, v_s, (0, pos, 0, 0))
-        return k_cache, v_cache, k_scale, v_scale
+        k_q, k_s, k_z = _encode_int8_rows(k_new)
+        v_q, v_s, v_z = _encode_int8_rows(v_new)
+        at = (0, pos, 0, 0)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_q, at)
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_q, at)
+        k_scale = jax.lax.dynamic_update_slice(k_scale, k_s, at)
+        v_scale = jax.lax.dynamic_update_slice(v_scale, v_s, at)
+        k_zero = jax.lax.dynamic_update_slice(k_zero, k_z, at)
+        v_zero = jax.lax.dynamic_update_slice(v_zero, v_z, at)
+        return k_cache, v_cache, k_scale, v_scale, k_zero, v_zero
     k_cache = jax.lax.dynamic_update_slice(
         k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(
         v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
-    return k_cache, v_cache, None, None
+    return k_cache, v_cache, None, None, None, None
+
+
+def encode_kv_rows(x: jax.Array, bits: int = 8):
+    """Encode new cache rows to the bitplane overlay.
+
+    x: (b, M, h, dh) -> (planes (b, bits, M, h, dw) int32,
+    scale (b, M, h, 1) f32, zero (b, M, h, 1) f32) — the write side of
+    the dynamic-precision KV cache: always the FULL plane stack; the
+    read precision is decided later, per tick, by the planner.
+    """
+    from repro.core.bitplane import pack_rows, quantize_rows  # pkg cycle
+    q, s, z = quantize_rows(x, bits)
+    planes = jnp.moveaxis(pack_rows(q, bits), 0, 1)
+    return planes, s, z
+
+
+def update_kv_planes(
+    k_planes: jax.Array, k_scale: jax.Array, k_zero: jax.Array,
+    v_planes: jax.Array, v_scale: jax.Array, v_zero: jax.Array,
+    k_new: jax.Array, v_new: jax.Array, pos: jax.Array, *, bits: int = 8,
+):
+    """Write one decode step's K/V rows into the plane-stacked cache.
+
+    Cache layout per layer: planes (b, bits, S, hkv, dw) int32 and
+    scale/zero (b, S, hkv, 1) f32. ``k_new``/``v_new`` are (b, M, hkv,
+    dh) rows landing at positions [pos, pos + M).
+    """
+    kp, ks, kz = encode_kv_rows(k_new, bits)
+    vp, vs, vz = encode_kv_rows(v_new, bits)
+    zero = jnp.int32(0)
+    p_at = (zero, zero, pos, zero, zero)
+    s_at = (zero, pos, zero, zero)
+    k_planes = jax.lax.dynamic_update_slice(k_planes, kp, p_at)
+    v_planes = jax.lax.dynamic_update_slice(v_planes, vp, p_at)
+    k_scale = jax.lax.dynamic_update_slice(k_scale, ks, s_at)
+    v_scale = jax.lax.dynamic_update_slice(v_scale, vs, s_at)
+    k_zero = jax.lax.dynamic_update_slice(k_zero, kz, s_at)
+    v_zero = jax.lax.dynamic_update_slice(v_zero, vz, s_at)
+    return k_planes, k_scale, k_zero, v_planes, v_scale, v_zero
+
+
+def decode_attention_planes(
+    q: jax.Array,                # (b, M, hq, dh)
+    k_planes: jax.Array,         # (b, bits, S, hkv, dw) int32
+    k_scale: jax.Array,          # (b, S, hkv, 1) f32
+    k_zero: jax.Array,
+    v_planes: jax.Array,
+    v_scale: jax.Array,
+    v_zero: jax.Array,
+    cache_len: jax.Array,        # scalar or (M,) per-row lengths
+    *,
+    bits: int = 8,
+    kv_bits: jax.Array = None,   # per-slot read precision; None -> full B
+    logit_softcap: float = 0.0,
+    read: str = "plane",         # "plane" | "dense" (parity oracle)
+    backend: str = None,
+) -> jax.Array:
+    """Decode attention over the plane-stacked KV cache.
+
+    ``read="plane"`` dispatches the slot-batched bit-serial kernel
+    (`kernels.kv_attention`): slot b fetches exactly ``kv_bits[b]``
+    cache planes per tile. ``read="dense"`` is the parity oracle — it
+    materializes the FULL plane stack (python-int ``bits``, no masking
+    arithmetic differences) and runs the shared dense attention math;
+    at ``kv_bits == bits`` the plane path is bit-identical to it.
+    """
+    # deferred: kernels.kv_attention imports core.bitplane, and models
+    # must stay importable before the kernels package (mirror of the
+    # dynamic_linear deferral)
+    from repro.kernels.kv_attention import (kv_attention_dense,
+                                            kv_decode_attention,
+                                            materialize_kv_planes)
+    b, m, hq, dh = q.shape
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape((-1,))[None, :], (b, m))
+    if kv_bits is None:
+        kvb = jnp.full((b,), bits, jnp.int32)
+    else:
+        kvb = jnp.broadcast_to(jnp.asarray(kv_bits, jnp.int32), (b,))
+    if read == "dense":
+        def one(qs, kp, ks, kz, vp, vs, vz, ls):
+            kf = materialize_kv_planes(kp, ks, kz, bits, bits=bits, d=dh)
+            vf = materialize_kv_planes(vp, vs, vz, bits, bits=bits, d=dh)
+            return kv_attention_dense(qs, kf, vf, ls,
+                                      logit_softcap=logit_softcap)
+        out = jax.vmap(one)(q.astype(jnp.float32), k_planes, k_scale,
+                            k_zero, v_planes, v_scale, v_zero, lens)
+        out = jnp.where((kvb > 0)[:, None, None, None], out, 0.0)
+    elif read == "plane":
+        out = kv_decode_attention(
+            q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
+            lens, kvb, bits=bits, logit_softcap=logit_softcap,
+            backend=backend)
+    else:
+        raise ValueError(f"unknown KV read mode {read!r}")
+    return out.astype(q.dtype)

@@ -256,16 +256,21 @@ def _period_decode(cfg, g, view, lin, state, h):
             k = apply_rope(k, ppos, cfg.rope_theta)
             ks = state.get(f"kv.{r}.k_scale")
             vs = state.get(f"kv.{r}.v_scale")
-            kc, vc, ks2, vs2 = update_kv_cache(
+            kz = state.get(f"kv.{r}.k_zero")
+            vz = state.get(f"kv.{r}.v_zero")
+            kc, vc, ks2, vs2, kz2, vz2 = update_kv_cache(
                 state[f"kv.{r}.k"], state[f"kv.{r}.v"], k, v, pos,
-                k_scale=ks, v_scale=vs)
+                k_scale=ks, v_scale=vs, k_zero=kz, v_zero=vz)
             new_state[f"kv.{r}.k"], new_state[f"kv.{r}.v"] = kc, vc
             if ks2 is not None:
                 new_state[f"kv.{r}.k_scale"] = ks2
                 new_state[f"kv.{r}.v_scale"] = vs2
+                new_state[f"kv.{r}.k_zero"] = kz2
+                new_state[f"kv.{r}.v_zero"] = vz2
             o = decode_attention(q, kc, vc, pos + 1,
                                  logit_softcap=cfg.attn_logit_softcap,
-                                 k_scale=ks2, v_scale=vs2)
+                                 k_scale=ks2, v_scale=vs2,
+                                 k_zero=kz2, v_zero=vz2)
             h = resid + lin(f"{p}.attn.wo", o.reshape(b, 1, -1))
         else:
             y, conv, st = ssm_mod.ssm_decode_step(

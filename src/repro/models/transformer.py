@@ -16,8 +16,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.context import hint
 from repro.models import ssm as ssm_mod
-from repro.models.attention import (decode_attention, flash_attention,
-                                    update_kv_cache)
+from repro.models.attention import (decode_attention,
+                                    decode_attention_planes,
+                                    flash_attention, update_kv_cache,
+                                    update_kv_planes)
 from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, KV_HEADS,
                                  NOSHARD, SSM_HEADS, SSM_INNER, VOCAB,
                                  LinearUnit, ParamSpec, Params, SpecTable,
@@ -324,22 +326,47 @@ def forward(
 # ---------------------------------------------------------------------------
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       dtype=jnp.bfloat16,
-                      kv_dtype=None) -> Dict[str, jax.Array]:
+                      kv_dtype=None,
+                      kv_format: str = "dense",
+                      kv_plane_bits: int = 8) -> Dict[str, jax.Array]:
+    """Decode-state pytree. ``kv_format="overlay"`` stores attention KV
+    as full-``kv_plane_bits`` bitplane stacks (``kv.{i}.k_planes``
+    (batch, B, max_len, hkv, ceil(hd/32)) int32 + per-row scale/zero)
+    instead of dense ``kv.{i}.k`` rows — the write side of the
+    dynamic-precision cache; read precision is a per-tick decision."""
+    if kv_format not in ("dense", "overlay"):
+        raise ValueError(f"unknown kv_format {kv_format!r}")
     kv_dtype = kv_dtype or dtype
     int8_kv = kv_dtype == jnp.int8
     state: Dict[str, jax.Array] = {"pos": jnp.zeros((), jnp.int32)}
     hd = cfg.resolved_head_dim
+    dw = -(-hd // 32)
     for i in range(cfg.num_layers):
         if cfg.layer_kind(i) == "attn":
-            state[f"kv.{i}.k"] = jnp.zeros(
-                (batch, max_len, cfg.num_kv_heads, hd), kv_dtype)
-            state[f"kv.{i}.v"] = jnp.zeros(
-                (batch, max_len, cfg.num_kv_heads, hd), kv_dtype)
-            if int8_kv:
-                state[f"kv.{i}.k_scale"] = jnp.zeros(
-                    (batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
-                state[f"kv.{i}.v_scale"] = jnp.zeros(
-                    (batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
+            if kv_format == "overlay":
+                for side in ("k", "v"):
+                    state[f"kv.{i}.{side}_planes"] = jnp.zeros(
+                        (batch, kv_plane_bits, max_len,
+                         cfg.num_kv_heads, dw), jnp.int32)
+                    state[f"kv.{i}.{side}_scale"] = jnp.zeros(
+                        (batch, max_len, cfg.num_kv_heads, 1),
+                        jnp.float32)
+                    state[f"kv.{i}.{side}_zero"] = jnp.zeros(
+                        (batch, max_len, cfg.num_kv_heads, 1),
+                        jnp.float32)
+            else:
+                state[f"kv.{i}.k"] = jnp.zeros(
+                    (batch, max_len, cfg.num_kv_heads, hd), kv_dtype)
+                state[f"kv.{i}.v"] = jnp.zeros(
+                    (batch, max_len, cfg.num_kv_heads, hd), kv_dtype)
+                if int8_kv:
+                    for side in ("k", "v"):
+                        state[f"kv.{i}.{side}_scale"] = jnp.zeros(
+                            (batch, max_len, cfg.num_kv_heads, 1),
+                            jnp.float32)
+                        state[f"kv.{i}.{side}_zero"] = jnp.zeros(
+                            (batch, max_len, cfg.num_kv_heads, 1),
+                            jnp.float32)
         else:
             dd = ssm_mod.ssm_dims(cfg)
             state[f"ssm.{i}.conv"] = jnp.zeros(
@@ -367,6 +394,10 @@ def decode_step(
     n_valid: Optional[jax.Array] = None,     # prefill: rows >= n_valid are
                                              # pads (bucketed prompt tail)
     row_states: bool = False,
+    kv_bits: Optional[jax.Array] = None,     # overlay KV: per-attn-layer
+                                             # read precisions; None -> B
+    kv_read: str = "plane",                  # "plane" | "dense" (oracle)
+    kv_backend: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode tick (M=1) or one batched prefill launch (M>1).
 
@@ -395,6 +426,7 @@ def decode_step(
     new_state = dict(state)
     snaps: Dict[str, jax.Array] = {}
     hd = cfg.resolved_head_dim
+    attn_idx = 0
     m = tokens.shape[1]
     rows_cells = row_states or m > 1
     if n_valid is None:
@@ -422,18 +454,47 @@ def decode_step(
                 lens = pos + 1 + jnp.arange(m)       # per-row causal prefix
             q = apply_rope(q, ppos, cfg.rope_theta)
             k = apply_rope(k, ppos, cfg.rope_theta)
-            ks = state.get(f"kv.{i}.k_scale")
-            vs = state.get(f"kv.{i}.v_scale")
-            kc, vc, ks2, vs2 = update_kv_cache(
-                state[f"kv.{i}.k"], state[f"kv.{i}.v"], k, v, pos,
-                k_scale=ks, v_scale=vs)
-            new_state[f"kv.{i}.k"], new_state[f"kv.{i}.v"] = kc, vc
-            if ks2 is not None:
+            kp0 = state.get(f"kv.{i}.k_planes")
+            if kp0 is not None:
+                # overlay cache: write the FULL plane stack, read at
+                # this tick's planner-assigned per-layer precision
+                bits_b = kp0.shape[1]
+                kp, ks2, kz2, vp, vs2, vz2 = update_kv_planes(
+                    kp0, state[f"kv.{i}.k_scale"],
+                    state[f"kv.{i}.k_zero"], state[f"kv.{i}.v_planes"],
+                    state[f"kv.{i}.v_scale"], state[f"kv.{i}.v_zero"],
+                    k, v, pos, bits=bits_b)
+                new_state[f"kv.{i}.k_planes"] = kp
                 new_state[f"kv.{i}.k_scale"] = ks2
+                new_state[f"kv.{i}.k_zero"] = kz2
+                new_state[f"kv.{i}.v_planes"] = vp
                 new_state[f"kv.{i}.v_scale"] = vs2
-            o = decode_attention(q, kc, vc, lens,
-                                 logit_softcap=cfg.attn_logit_softcap,
-                                 k_scale=ks2, v_scale=vs2)
+                new_state[f"kv.{i}.v_zero"] = vz2
+                layer_kv = None if kv_bits is None else kv_bits[attn_idx]
+                o = decode_attention_planes(
+                    q, kp, ks2, kz2, vp, vs2, vz2, lens, bits=bits_b,
+                    kv_bits=layer_kv,
+                    logit_softcap=cfg.attn_logit_softcap, read=kv_read,
+                    backend=kv_backend)
+            else:
+                ks = state.get(f"kv.{i}.k_scale")
+                vs = state.get(f"kv.{i}.v_scale")
+                kz = state.get(f"kv.{i}.k_zero")
+                vz = state.get(f"kv.{i}.v_zero")
+                kc, vc, ks2, vs2, kz2, vz2 = update_kv_cache(
+                    state[f"kv.{i}.k"], state[f"kv.{i}.v"], k, v, pos,
+                    k_scale=ks, v_scale=vs, k_zero=kz, v_zero=vz)
+                new_state[f"kv.{i}.k"], new_state[f"kv.{i}.v"] = kc, vc
+                if ks2 is not None:
+                    new_state[f"kv.{i}.k_scale"] = ks2
+                    new_state[f"kv.{i}.v_scale"] = vs2
+                    new_state[f"kv.{i}.k_zero"] = kz2
+                    new_state[f"kv.{i}.v_zero"] = vz2
+                o = decode_attention(q, kc, vc, lens,
+                                     logit_softcap=cfg.attn_logit_softcap,
+                                     k_scale=ks2, v_scale=vs2,
+                                     k_zero=kz2, v_zero=vz2)
+            attn_idx += 1
             h = resid + lin(f"{p}.attn.wo", o.reshape(b, m, -1))
         else:
             if not rows_cells:

@@ -87,11 +87,27 @@ class ServingEngine:
         prefill_chunk: Optional[int] = 16,
         kv_bucket: int = 128,
         mesh: Optional[Mesh] = None,
+        kv_overlay: bool = False,
+        kv_plane_bits: int = 8,
+        kv_read: str = "plane",
+        kv_dynamic: bool = True,
+        kv_backend: Optional[str] = None,
     ):
         self.cfg = cfg
         self.model = model
         self.backend = backend
         self.use_async = use_async
+        # dynamic-precision KV cache: store the full kv_plane_bits-deep
+        # bitplane stack per token and let the planner pick each layer's
+        # READ precision per tick. kv_read="dense" keeps the plane store
+        # but materializes full-precision rows (the parity oracle);
+        # kv_dynamic=False pins every read to the full stack (kv_bits is
+        # None on every tick) — the bit-identity configuration.
+        self.kv_overlay = bool(kv_overlay)
+        self.kv_plane_bits = int(kv_plane_bits)
+        self.kv_read = kv_read
+        self.kv_dynamic = bool(kv_dynamic)
+        self.kv_backend = kv_backend
         # MoE expert units stream through the grouped bit-serial kernel
         # (per-expert plane-DMA elision) instead of materializing dense
         # (E, K, N) / per-row (M, E, K, N) stacks. False = legacy dense
@@ -140,6 +156,35 @@ class ServingEngine:
         self.host_syncs = 0
         if mesh is not None:
             self._shard_serve_state()
+
+    # -- decode-state construction ----------------------------------------------
+    def _make_state(self, batch: int, max_len: int):
+        """The engine's ONE decode-state factory: every query state (and
+        the scheduler's slot/prefill prototypes, via ``state_factory``)
+        is built here, so the KV representation is decided in exactly
+        one place."""
+        return make_decode_state(
+            self.cfg, batch, max_len, dtype=jnp.float32,
+            kv_format="overlay" if self.kv_overlay else "dense",
+            kv_plane_bits=self.kv_plane_bits)
+
+    def _kv_kw(self, planned_bits=None, active=None) -> Dict:
+        """``decode_step`` KV-read kwargs for one tick.
+
+        With a planned (U,) vector on a dynamic-KV engine, the tail
+        rows past ``n_weight_units`` ARE the per-layer KV read bits —
+        sliced here, gated by ``active`` like every other decision.
+        Every other tick (sync/boot/prefill/draft/verify) reads the
+        full plane stack (``kv_bits=None``)."""
+        if not self.kv_overlay:
+            return {}
+        kw = {"kv_read": self.kv_read, "kv_backend": self.kv_backend}
+        if planned_bits is not None and self.kv_dynamic:
+            kv_bits = planned_bits[self.artifacts.decision.weight_units:]
+            if active is not None:
+                kv_bits = jnp.where(jnp.asarray(active), kv_bits, 0)
+            kw["kv_bits"] = kv_bits
+        return kw
 
     # -- mesh placement ----------------------------------------------------------
     def _put(self, arr, spec) -> jax.Array:
@@ -270,7 +315,8 @@ class ServingEngine:
                 active=active,
                 bundle=self.artifacts.decision)
             logits, new_state = decode_step(self.cfg, self.raw, state,
-                                            tokens, lin=lin)
+                                            tokens, lin=lin,
+                                            **self._kv_kw())
             return logits, new_state, lin.effective_bits()
 
         return tick
@@ -303,8 +349,9 @@ class ServingEngine:
                 active=active,
                 bundle=self.artifacts.decision,
                 planned_bits=planned_bits, capture=planner.needs_acts)
-            logits, new_state = decode_step(self.cfg, self.raw, state,
-                                            tokens, lin=lin)
+            logits, new_state = decode_step(
+                self.cfg, self.raw, state, tokens, lin=lin,
+                **self._kv_kw(planned_bits, active))
             acts = lin.planner_inputs() if planner.needs_acts else None
             next_bits = planner.plan(acts, target_idx, active)
             return logits, new_state, lin.effective_bits(), next_bits
@@ -353,7 +400,8 @@ class ServingEngine:
                 rows=rows, carry_bits=carry)
             logits, new_state = decode_step(self.cfg, self.raw, state,
                                             tokens, lin=lin,
-                                            n_valid=n_valid)
+                                            n_valid=n_valid,
+                                            **self._kv_kw())
             return logits, new_state, lin.effective_bits(), \
                 lin.planned_rows()
 
@@ -404,7 +452,8 @@ class ServingEngine:
 
             def dense_tick(state, tokens, target_idx, active=None):
                 logits, new_state = decode_step(self.cfg, self.raw, state,
-                                                tokens, lin=lin_dense)
+                                                tokens, lin=lin_dense,
+                                                **self._kv_kw())
                 return logits, new_state
 
             return dense_tick
@@ -419,7 +468,8 @@ class ServingEngine:
                 active=active,
                 bundle=self.artifacts.decision, planned_bits=draft_vec)
             logits, new_state = decode_step(self.cfg, self.raw, state,
-                                            tokens, lin=lin)
+                                            tokens, lin=lin,
+                                            **self._kv_kw())
             return logits, new_state
 
         return tick
@@ -456,7 +506,7 @@ class ServingEngine:
                 bundle=self.artifacts.decision, rows=k, carry_bits=carry)
             logits, new_state, snaps = decode_step(
                 self.cfg, self.raw, state, tokens, lin=lin,
-                row_states=True)
+                row_states=True, **self._kv_kw())
             return logits, new_state, lin.effective_bits(), \
                 lin.planned_rows(), snaps
 
@@ -827,7 +877,7 @@ class ServingEngine:
         # compiled chunk (shape reuse), at a bounded memory overshoot
         kv = self.kv_bucket
         max_len = -(-(padded + 1) // kv) * kv
-        state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        state = self._make_state(b, max_len)
         state_sh, state = self._decode_state_shardings(state)
         chunk_fn = self._get_chunk(mode, want_nll, state_sh=state_sh,
                                    cache_key=(b, max_len)) \
@@ -923,7 +973,7 @@ class ServingEngine:
         # the prompt; decode overwrites them) AND the decode ticks
         need = max(pf_padded, n_pf + n_chunks * c + 1)
         max_len = -(-need // kv) * kv
-        state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        state = self._make_state(b, max_len)
         state_sh, state = self._decode_state_shardings(state)
         toks_pf = np.zeros((b, pf_padded), np.int32)
         toks_pf[:, :n_pf] = toks[:, :n_pf]
@@ -1046,7 +1096,7 @@ class ServingEngine:
         as the bit-identity reference. Everything stays on device.
         """
         b, p = prompt.shape
-        state = make_decode_state(self.cfg, b, max_len, dtype=jnp.float32)
+        state = self._make_state(b, max_len)
         state_sh, state = self._decode_state_shardings(state)
         if self.prefill_chunk > 0:
             C = self.prefill_chunk
@@ -1277,3 +1327,22 @@ class ServingEngine:
         """Truncated (serving-resident) vs. full-parent overlay bytes."""
         return {"truncated": overlay_nbytes(self.overlays),
                 "full_parent": overlay_nbytes(self.model.overlays)}
+
+    def kv_bytes_saved(self, batch: int = 1,
+                       max_len: Optional[int] = None) -> int:
+        """Dense-fp32 KV bytes minus this engine's KV bytes for one
+        decode state of the given shape — pure static-shape accounting
+        (``jax.eval_shape``; no device sync, O(1) host work). 0 for a
+        dense-KV engine."""
+        if not self.kv_overlay:
+            return 0
+        ml = int(max_len or self.kv_bucket)
+
+        def kv_nbytes(fmt):
+            st = jax.eval_shape(lambda: make_decode_state(
+                self.cfg, batch, ml, dtype=jnp.float32, kv_format=fmt,
+                kv_plane_bits=self.kv_plane_bits))
+            return sum(int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+                       for k, v in st.items() if k.startswith("kv."))
+
+        return kv_nbytes("dense") - kv_nbytes("overlay")

@@ -40,8 +40,16 @@ from repro.models import init_decode_state
 
 
 def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
-    return init_decode_state(cfg, batch, max_len, dtype=dtype)
+                      dtype=jnp.bfloat16, kv_format: str = "dense",
+                      kv_plane_bits: int = 8) -> Dict[str, jax.Array]:
+    """``kv_format="overlay"`` allocates the dynamic-precision cache:
+    per attention layer a full-``kv_plane_bits`` bitplane stack
+    ``kv.{i}.{k,v}_planes`` (batch, B, max_len, hkv, ceil(hd/32)) int32
+    plus per-(position, head) ``_scale``/``_zero`` rows — writes always
+    store all B planes; reads fetch the planner-assigned prefix."""
+    return init_decode_state(cfg, batch, max_len, dtype=dtype,
+                             kv_format=kv_format,
+                             kv_plane_bits=kv_plane_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -62,14 +70,17 @@ def n_prefill_chunks(prompt_len: int, prefill_chunk: int) -> int:
 
 def make_prefill_state(cfg: ModelConfig, batch: int, max_prompt: int,
                        prefill_chunk: int,
-                       dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+                       dtype=jnp.bfloat16, kv_format: str = "dense",
+                       kv_plane_bits: int = 8) -> Dict[str, jax.Array]:
     """The prefill stage's scratch state, sized for the LONGEST admissible
     prompt (so one allocation serves every admission) with its KV length
     rounded up to whole prefill chunks — pad rows of the final chunk
-    write inside the same buffer."""
+    write inside the same buffer. ``kv_format`` must match the decode
+    stage's (the handoff copies representation-for-representation)."""
     return make_decode_state(cfg, batch,
                              prefill_len(max_prompt, prefill_chunk),
-                             dtype=dtype)
+                             dtype=dtype, kv_format=kv_format,
+                             kv_plane_bits=kv_plane_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -101,24 +112,36 @@ def state_bytes(state: Dict[str, jax.Array]) -> int:
 def stage_bytes(state: Dict[str, jax.Array]) -> Dict[str, int]:
     """Per-component byte accounting of one stage's state.
 
-    Keys: ``kv`` (self-attention caches + int8 scales), ``ssm``
-    (recurrent + conv tails), ``xkv`` (cross-attention caches), ``other``
-    (positions etc.), ``total``. The prefill/decode stages report this
-    separately so the handoff traffic (= the prefill state's ``kv`` +
-    ``ssm`` terms) is a first-class number in the benchmarks.
+    Top-level keys: ``kv`` (self-attention caches, all representations),
+    ``ssm`` (recurrent + conv tails), ``xkv`` (cross-attention caches),
+    ``other`` (positions etc.), ``total`` (= kv + ssm + xkv + other).
+    The ``kv`` term is additionally split BY REPRESENTATION —
+    ``kv_planes`` (bitplane stacks), ``kv_scales`` (scale + zero rows,
+    overlay or int8), ``kv_dense`` (dense fp/int8 value rows) — with
+    ``kv == kv_planes + kv_scales + kv_dense``; the splits are NOT
+    double-counted into ``total``. The prefill/decode stages report
+    this separately so the handoff traffic (= the prefill state's
+    ``kv`` + ``ssm`` terms) is a first-class number in the benchmarks.
     """
-    out = {"kv": 0, "ssm": 0, "xkv": 0, "other": 0}
+    out = {"kv": 0, "kv_planes": 0, "kv_scales": 0, "kv_dense": 0,
+           "ssm": 0, "xkv": 0, "other": 0}
     for k, v in state.items():
         nbytes = int(np.prod(v.shape) * v.dtype.itemsize)
         if k.startswith("kv."):
             out["kv"] += nbytes
+            if k.endswith("_planes"):
+                out["kv_planes"] += nbytes
+            elif k.endswith("_scale") or k.endswith("_zero"):
+                out["kv_scales"] += nbytes
+            else:
+                out["kv_dense"] += nbytes
         elif k.startswith("ssm."):
             out["ssm"] += nbytes
         elif k.startswith("xkv."):
             out["xkv"] += nbytes
         else:
             out["other"] += nbytes
-    out["total"] = sum(out.values())
+    out["total"] = out["kv"] + out["ssm"] + out["xkv"] + out["other"]
     return out
 
 
@@ -168,6 +191,14 @@ def insert_slot_state(dst: Dict[str, jax.Array],
         d = dst[k]
         if k == "pos":
             out[k] = d.at[slot].set(v + offset)
+        elif k.startswith("kv.") and k.endswith("_planes"):
+            # plane stacks carry a leading (batch, B) prefix: the
+            # sequence axis is 2 in src, 3 in the stacked dst
+            keep = min(v.shape[2], d.shape[3])
+            block = v[:, :, :keep][None]         # (1, 1, B, keep, ...)
+            start = (slot, 0, 0, offset) + (jnp.int32(0),) * (v.ndim - 3)
+            out[k] = jax.lax.dynamic_update_slice(d, block.astype(d.dtype),
+                                                  start)
         elif k.startswith("kv.") and v.ndim >= 3:
             keep = min(v.shape[1], d.shape[2])   # leading window that fits
             block = v[:, :keep][None]            # (1, 1, keep, ...)
@@ -218,6 +249,15 @@ def rollback_decode_state(state: Dict[str, jax.Array],
     for key, v in state.items():
         if key == "pos":
             out[key] = new_pos
+        elif key.startswith("kv.") and key.endswith("_planes"):
+            # plane stacks: sequence axis is 2 (behind batch and B);
+            # zeroing the window zeroes ALL planes + leaves the scale
+            # rows to the sibling _scale/_zero branch below
+            zeros = jnp.zeros(v.shape[:2] + (int(window),) + v.shape[3:],
+                              v.dtype)
+            start = (jnp.int32(0), jnp.int32(0), new_pos) + \
+                (jnp.int32(0),) * (v.ndim - 3)
+            out[key] = jax.lax.dynamic_update_slice(v, zeros, start)
         elif key.startswith("kv.") and v.ndim >= 3:
             zeros = jnp.zeros((v.shape[0], int(window)) + v.shape[2:],
                               v.dtype)

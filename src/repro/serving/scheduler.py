@@ -177,6 +177,13 @@ class SlotScheduler:
         # a sync engine keeps the legacy all-inline vmapped tick
         self._use_planner = engine.use_async
         self._n_units = engine.artifacts.decision.n_units
+        # every scheduler-side state allocation (slot prototype, prefill
+        # scratch, re-allocated scratch) matches the engine's KV
+        # representation — the prefill→decode handoff is a same-layout
+        # insert either way
+        self._kv_fmt = {
+            "kv_format": "overlay" if engine.kv_overlay else "dense",
+            "kv_plane_bits": engine.kv_plane_bits}
         # prefill/decode disaggregation: admission runs the whole prompt
         # as batched prefill launches on a reusable batch-1 scratch state
         # (the prefill stage), then ONE insert step hands the KV block +
@@ -188,7 +195,7 @@ class SlotScheduler:
         if self._use_prefill:
             self._pf_state = make_prefill_state(
                 cfg, 1, self.max_prompt, engine.prefill_chunk,
-                dtype=jnp.float32)
+                dtype=jnp.float32, **self._kv_fmt)
             self._pf_key = ("slot_pf", 1,
                             prefill_len(self.max_prompt,
                                         engine.prefill_chunk))
@@ -200,7 +207,8 @@ class SlotScheduler:
                 self._pf_state = {k: jax.device_put(v, self._pf_sh[k])
                                   for k, v in self._pf_state.items()}
         # per-slot state: each slot is an independent batch-1 decode state
-        proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32)
+        proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32,
+                                  **self._kv_fmt)
         self._state = jax.tree.map(
             lambda x: jnp.zeros((s,) + x.shape, x.dtype), proto)
         self._cur = jnp.zeros((s,), jnp.int32)
@@ -655,7 +663,8 @@ class SlotScheduler:
         gold = np.zeros((1, n_ch * C), np.int32)
         if self._pf_state is None:       # lost to a failed admission
             self._pf_state = make_prefill_state(
-                eng.cfg, 1, self.max_prompt, C, dtype=jnp.float32)
+                eng.cfg, 1, self.max_prompt, C, dtype=jnp.float32,
+                **self._kv_fmt)
             if self._pf_sh is not None:
                 self._pf_state = {k: jax.device_put(v, self._pf_sh[k])
                                   for k, v in self._pf_state.items()}

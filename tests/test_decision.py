@@ -48,11 +48,13 @@ def test_decision_bundle_layout(engine):
     from repro.core.adaptation import KIND_JL
 
     bundle = engine.artifacts.decision
-    assert bundle.n_units == len(engine.artifacts.est)
+    n_w = bundle.n_weight_units
+    assert n_w == len(engine.artifacts.est)
+    assert bundle.n_units == n_w + len(bundle.kv_rows)
     for i, p in enumerate(bundle.paths):
         assert bundle.row_of[p] == i
     # sizes reproduce the legacy per-record weights exactly
-    for i, p in enumerate(bundle.paths):
+    for i, p in enumerate(bundle.paths[:n_w]):
         ov = engine.overlays[p]
         if ov.planes.ndim == 4:
             e, _, _, n = ov.planes.shape
@@ -62,11 +64,22 @@ def test_decision_bundle_layout(engine):
         assert bundle.sizes[i] == want, p
     assert bundle.k_pad % 128 == 0
     assert np.all(bundle.k_actual <= bundle.k_pad)
+    # KV pseudo-rows: zero-size clones of their value projection, one
+    # per attention layer, appended after all weight rows
+    for r, s in zip(bundle.kv_rows, bundle.kv_src):
+        assert bundle.paths[r].endswith(".attn.kv") and r >= n_w
+        assert bundle.paths[s].endswith(".attn.wv") and s < n_w
+        assert bundle.sizes[r] == 0.0
+        assert bundle.max_bits[r] == min(int(bundle.max_bits[s]), 8)
+        for name in ("l", "h", "kind", "threshold", "g_row", "k_actual"):
+            np.testing.assert_array_equal(getattr(bundle, name)[r],
+                                          getattr(bundle, name)[s])
     # g_row: JL entries own a distinct packed row; others repeat the
-    # previous unit's row (the kernel's DMA-elision contract)
+    # previous unit's row (the kernel's DMA-elision contract). KV rows
+    # sit outside the chain — they re-name their source's rows.
     prev = np.zeros((bundle.l.shape[1],), np.int64)
     seen = set()
-    for u in range(bundle.n_units):
+    for u in range(n_w):
         for t in range(bundle.l.shape[1]):
             r = int(bundle.g_row[u, t])
             if bundle.kind[u, t] == KIND_JL:

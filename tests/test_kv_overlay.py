@@ -1,0 +1,391 @@
+"""Dynamic-precision KV cache: overlay round trips, kernel parity, and
+the engine-level bit-identity matrix.
+
+The contract under test: writes always store the FULL kv_plane_bits
+bitplane stack; the read precision is a per-tick, per-layer decision.
+At ``kv_bits == B`` the plane-read path must be BIT-identical to the
+dense-read parity oracle (same materialization, same attention math),
+so every mode / pipelining / speculative configuration of the engine is
+checked token-for-token plane vs dense. Below ``B`` the kernel's
+interpret twin is checked against the jnp oracle, and the overlay state
+must survive the scheduler's slot lifecycle (insert / rollback / reset)
+exactly like the dense representation does.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kv_attention import (kv_decode_attention,
+                                        materialize_kv_planes)
+from repro.models.attention import (decode_attention_planes,
+                                    encode_kv_rows, update_kv_planes)
+from repro.serving import ServingEngine
+from repro.serving.kv_cache import (insert_slot_state, make_decode_state,
+                                    make_prefill_state, reset_state,
+                                    rollback_decode_state, stage_bytes)
+
+BITS = 8
+MODES = ("dynamic", "static:llm_mq", "max", "exact")
+
+
+# ---------------------------------------------------------------------------
+# Representation round trips
+# ---------------------------------------------------------------------------
+def test_encode_materialize_round_trip():
+    """Full-stack materialization reconstructs the written rows to
+    within scale/2, and all-zero rows (the speculative-rewind invariant)
+    come back EXACTLY zero at every read precision."""
+    rng = np.random.default_rng(0)
+    x = np.asarray(rng.normal(size=(2, 6, 3, 32)), np.float32)
+    x[0, 2] = 0.0                                  # a rewound/unwritten row
+    planes, scale, zero = encode_kv_rows(jnp.asarray(x), BITS)
+    assert planes.shape == (2, BITS, 6, 3, 1) and planes.dtype == jnp.int32
+    assert scale.shape == zero.shape == (2, 6, 3, 1)
+    for i in range(2):
+        full = materialize_kv_planes(planes[i], scale[i], zero[i], BITS,
+                                     bits=BITS, d=32)
+        np.testing.assert_allclose(np.asarray(full), x[i], atol=0.05)
+    for b in (1, 4, BITS):
+        low = materialize_kv_planes(planes[0], scale[0], zero[0], b,
+                                    bits=BITS, d=32)
+        assert not np.asarray(low[2]).any()        # exact zeros at any b
+
+
+def test_update_kv_planes_writes_only_the_window():
+    """An M-row write lands at [pos, pos+M) and touches nothing else."""
+    rng = np.random.default_rng(1)
+    t, hkv, dh, m, pos = 16, 2, 32, 3, 5
+    kp = jnp.zeros((1, BITS, t, hkv, dh // 32), jnp.int32)
+    ks = kz = jnp.zeros((1, t, hkv, 1), jnp.float32)
+    k_new = jnp.asarray(rng.normal(size=(1, m, hkv, dh)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(1, m, hkv, dh)), jnp.float32)
+    kp, ks, kz, vp, vs, vz = update_kv_planes(
+        kp, ks, kz, kp, ks, kz, k_new, v_new, jnp.int32(pos), bits=BITS)
+    for planes, s, z, want in ((kp, ks, kz, k_new), (vp, vs, vz, v_new)):
+        full = np.asarray(materialize_kv_planes(planes[0], s[0], z[0],
+                                                BITS, bits=BITS, d=dh))
+        np.testing.assert_allclose(full[pos:pos + m], np.asarray(want[0]),
+                                   atol=0.05)
+        assert not full[:pos].any() and not full[pos + m:].any()
+
+
+def test_plane_read_full_bits_is_bit_identical_to_dense_oracle():
+    """read="plane" at kv_bits == B must match read="dense" (full-stack
+    materialize + shared dense math) bit for bit — the identity every
+    engine-level parity claim reduces to."""
+    rng = np.random.default_rng(2)
+    b, t, hkv, hq, dh = 2, 16, 2, 4, 32
+    kv = jnp.asarray(rng.normal(size=(2, b, t, hkv, dh)), jnp.float32)
+    kp, ks, kz = encode_kv_rows(kv[0], BITS)
+    vp, vs, vz = encode_kv_rows(kv[1], BITS)
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, dh)), jnp.float32)
+    kw = dict(bits=BITS, logit_softcap=0.0)
+    out_p = decode_attention_planes(q, kp, ks, kz, vp, vs, vz,
+                                    jnp.int32(11), read="plane",
+                                    backend="ref", **kw)
+    out_d = decode_attention_planes(q, kp, ks, kz, vp, vs, vz,
+                                    jnp.int32(11), read="dense", **kw)
+    assert np.array_equal(np.asarray(out_p), np.asarray(out_d))
+    # explicit full-B kv_bits is the same claim
+    out_b = decode_attention_planes(q, kp, ks, kz, vp, vs, vz,
+                                    jnp.int32(11), read="plane",
+                                    backend="ref",
+                                    kv_bits=jnp.full((b,), BITS), **kw)
+    assert np.array_equal(np.asarray(out_b), np.asarray(out_d))
+
+
+def test_kernel_interpret_matches_oracle_mixed_bits():
+    """The Pallas kernel (interpret twin) vs the jnp oracle over a mixed
+    per-slot read-precision vector, idle slot included."""
+    rng = np.random.default_rng(3)
+    s, t, hkv, hq, dh, m = 3, 16, 2, 4, 32, 2
+    kv = jnp.asarray(rng.normal(size=(2, s, t, hkv, dh)), jnp.float32)
+    kp, ks, kz = encode_kv_rows(kv[0], BITS)
+    vp, vs, vz = encode_kv_rows(kv[1], BITS)
+    q = jnp.asarray(rng.normal(size=(s, m, hq, dh)), jnp.float32)
+    lens = jnp.asarray([[9, 10], [16, 16], [4, 5]], jnp.int32)
+    kv_b = jnp.asarray([BITS, 3, 0], jnp.int32)
+    args = (q, kp, ks, kz, vp, vs, vz, lens, kv_b)
+    out_i = kv_decode_attention(*args, bits=BITS, backend="interpret")
+    out_r = kv_decode_attention(*args, bits=BITS, backend="ref")
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(out_r),
+                               atol=1e-5)
+    assert not np.asarray(out_i[2]).any()          # idle slot: exact zeros
+    assert not np.asarray(out_r[2]).any()
+
+
+def test_kernel_vmap_flattens_onto_slot_axis():
+    """vmapping the dispatch (the scheduler's slot vmap) must equal the
+    flat slot-batched call — the custom_vmap flattening rule."""
+    rng = np.random.default_rng(4)
+    o, s, t, hkv, hq, dh = 2, 2, 16, 2, 4, 32
+    kv = jnp.asarray(rng.normal(size=(2, o * s, t, hkv, dh)), jnp.float32)
+    kp, ks, kz = encode_kv_rows(kv[0], BITS)
+    vp, vs, vz = encode_kv_rows(kv[1], BITS)
+    q = jnp.asarray(rng.normal(size=(o * s, 1, hq, dh)), jnp.float32)
+    lens = jnp.full((o * s, 1), t, jnp.int32)
+    kv_b = jnp.asarray([8, 5, 0, 2], jnp.int32)
+    flat = kv_decode_attention(q, kp, ks, kz, vp, vs, vz, lens, kv_b,
+                               bits=BITS, backend="ref")
+
+    def shaped(a):
+        return a.reshape((o, s) + a.shape[1:])
+
+    nested = jax.vmap(lambda *a: kv_decode_attention(*a, bits=BITS,
+                                                     backend="ref"))(
+        *[shaped(a) for a in (q, kp, ks, kz, vp, vs, vz, lens, kv_b)])
+    assert np.array_equal(np.asarray(nested.reshape(flat.shape)),
+                          np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# Overlay state lifecycle (slot insert / speculative rewind / recycle)
+# ---------------------------------------------------------------------------
+def _filled(state, seed):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, v in state.items():
+        if v.dtype == jnp.int32 and k != "pos":
+            out[k] = jnp.asarray(
+                rng.integers(-2 ** 30, 2 ** 30, v.shape), jnp.int32)
+        elif k == "pos":
+            out[k] = v
+        else:
+            out[k] = jnp.asarray(rng.normal(size=v.shape), v.dtype)
+    return out
+
+
+def test_overlay_state_layout_and_stage_bytes(tiny_bundle):
+    cfg = tiny_bundle[0]
+    ov = make_decode_state(cfg, 1, 16, dtype=jnp.float32,
+                           kv_format="overlay")
+    de = make_decode_state(cfg, 1, 16, dtype=jnp.float32)
+    plane_keys = [k for k in ov if k.endswith("_planes")]
+    assert plane_keys
+    for k in plane_keys:
+        assert ov[k].shape[1] == BITS and ov[k].dtype == jnp.int32
+        pre = k.rsplit(".", 1)[0]
+        for suffix in ("k_scale", "k_zero", "v_scale", "v_zero"):
+            assert f"{pre}.{suffix}" in ov
+    sb_ov, sb_de = stage_bytes(ov), stage_bytes(de)
+    for sb in (sb_ov, sb_de):
+        assert sb["kv"] == sb["kv_planes"] + sb["kv_scales"] + sb["kv_dense"]
+        assert sb["total"] == sb["kv"] + sb["ssm"] + sb["xkv"] + sb["other"]
+    assert sb_ov["kv_dense"] == 0 and sb_ov["kv_planes"] > 0
+    assert sb_de["kv_planes"] == 0 and sb_de["kv_dense"] > 0
+
+
+def test_overlay_insert_slot_state_places_kv_block(tiny_bundle):
+    """The prefill->decode handoff on the overlay representation: plane
+    stacks land at (slot, :, [offset, offset+keep)), scale rows ride
+    along, pos rebases — all other slots untouched."""
+    cfg = tiny_bundle[0]
+    src = _filled(make_prefill_state(cfg, 1, 8, 4, dtype=jnp.float32,
+                                     kv_format="overlay"), seed=7)
+    src["pos"] = jnp.int32(6)
+    proto = make_decode_state(cfg, 1, 16, dtype=jnp.float32,
+                              kv_format="overlay")
+    dst = {k: jnp.zeros((2,) + v.shape, v.dtype) for k, v in proto.items()}
+    out = jax.jit(insert_slot_state)(dst, src, jnp.int32(1), jnp.int32(3))
+    assert int(out["pos"][1]) == 9
+    for k, v in src.items():
+        if k == "pos":
+            continue
+        got = np.asarray(out[k])
+        assert not got[0].any()                    # slot 0 untouched
+        if k.endswith("_planes"):
+            keep = min(v.shape[2], got.shape[3] - 3)
+            np.testing.assert_array_equal(got[1, 0, :, 3:3 + keep],
+                                          np.asarray(v)[0, :, :keep])
+            assert not got[1, 0, :, :3].any()
+        elif k.startswith("kv."):
+            keep = min(v.shape[1], got.shape[2] - 3)
+            np.testing.assert_array_equal(got[1, 0, 3:3 + keep],
+                                          np.asarray(v)[0, :keep])
+            assert not got[1, 0, :3].any()
+        else:
+            np.testing.assert_array_equal(got[1], np.asarray(v))
+
+
+def test_overlay_rollback_zeroes_rejected_rows(tiny_bundle):
+    """Speculative rewind on the overlay state: rows in
+    [new_pos, new_pos + window) are zeroed across ALL planes and the
+    scale/zero rows, earlier rows are untouched, pos rebases."""
+    cfg = tiny_bundle[0]
+    window, n_keep = 4, 2
+    state = _filled(make_decode_state(cfg, 1, 16, dtype=jnp.float32,
+                                      kv_format="overlay"), seed=8)
+    state["pos"] = jnp.int32(10)                   # post-verify position
+    out = jax.jit(rollback_decode_state, static_argnames="window")(
+        state, {}, jnp.int32(n_keep), window)
+    new_pos = 10 - window + n_keep
+    assert int(out["pos"]) == new_pos
+    for k, v in state.items():
+        if not k.startswith("kv."):
+            continue
+        got, before = np.asarray(out[k]), np.asarray(v)
+        axis = 2 if k.endswith("_planes") else 1
+        sl = [slice(None)] * got.ndim
+        sl[axis] = slice(new_pos, new_pos + window)
+        assert not got[tuple(sl)].any(), k
+        sl[axis] = slice(0, new_pos)
+        np.testing.assert_array_equal(got[tuple(sl)],
+                                      before[tuple(sl)], err_msg=k)
+
+
+def test_overlay_reset_state_zero_fills(tiny_bundle):
+    cfg = tiny_bundle[0]
+    state = _filled(make_decode_state(cfg, 1, 8, dtype=jnp.float32,
+                                      kv_format="overlay"), seed=9)
+    out = reset_state(state)
+    assert set(out) == set(state)
+    for k, v in out.items():
+        assert not np.asarray(v).any(), k
+
+
+# ---------------------------------------------------------------------------
+# Engine-level identity matrix: plane read vs dense-read parity oracle
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module", params=[True, False], ids=["async", "sync"])
+def engines(request, tiny_bundle):
+    """(plane-read, dense-read) overlay engines, kv_dynamic=False — the
+    bit-identity configuration (every read at the full plane stack)."""
+    cfg, params, model, _ = tiny_bundle
+    plane = ServingEngine(cfg, params, model, use_async=request.param,
+                          kv_overlay=True, kv_dynamic=False)
+    dense = ServingEngine(cfg, params, model, use_async=request.param,
+                          kv_overlay=True, kv_dynamic=False,
+                          kv_read="dense")
+    return plane, dense
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_engine_plane_vs_dense_identity(engines, tiny_bundle, mode):
+    """Every serving mode, async and sync pipelining: full-stack plane
+    reads produce the SAME tokens as the dense-read oracle."""
+    cfg = tiny_bundle[0]
+    plane, dense = engines
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
+    out_p, eb_p = plane.generate(prompt, 3, 3.5, mode=mode)
+    out_d, eb_d = dense.generate(prompt, 3, 3.5, mode=mode)
+    assert np.array_equal(out_p, out_d), mode
+    np.testing.assert_allclose(eb_p, eb_d, atol=1e-6)
+
+
+def test_engine_identity_across_prefill_handoff(engines, tiny_bundle):
+    """A prompt crossing the prefill chunk boundary (19 > 16): the
+    chunked prefill writes + handoff on the overlay cache keep parity."""
+    cfg = tiny_bundle[0]
+    plane, dense = engines
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 19)).astype(np.int32)
+    out_p, eb_p = plane.generate(prompt, 3, 4.0)
+    out_d, eb_d = dense.generate(prompt, 3, 4.0)
+    assert np.array_equal(out_p, out_d)
+    np.testing.assert_allclose(eb_p, eb_d, atol=1e-6)
+
+
+def test_engine_speculative_identity(engines, tiny_bundle):
+    """spec_k on the overlay cache: the plane engine's speculative run
+    equals its own non-speculative run (greedy verify identity, which
+    exercises the overlay rollback) AND the dense-read speculative run."""
+    cfg = tiny_bundle[0]
+    plane, dense = engines
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
+    out_base, eb_base = plane.generate(prompt, 4, 4.0)
+    out_spec, eb_spec = plane.generate(prompt, 4, 4.0, spec_k=2)
+    assert np.array_equal(out_spec, out_base)
+    np.testing.assert_allclose(eb_spec, eb_base, atol=1e-6)
+    out_dspec, _ = dense.generate(prompt, 4, 4.0, spec_k=2)
+    assert np.array_equal(out_spec, out_dspec)
+
+
+def test_scheduler_overlay_parity(engines, tiny_bundle):
+    """The slot scheduler over overlay engines: continuous batching with
+    plane reads (vmapped kernel dispatch, overlay insert handoff,
+    speculative slot rollback) matches the dense-read oracle."""
+    from repro.serving import LatencyModel, QoSPlanner, Request, \
+        SlotScheduler
+
+    cfg, _, model, _ = tiny_bundle
+    plane, dense = engines
+    rng = np.random.default_rng(14)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (3 + i,)).astype(np.int32),
+                    max_new=3, tpot_budget_s=6e-3)
+            for i in range(2)]
+
+    def run(engine):
+        qos = QoSPlanner(sorted(model.adaptations),
+                         LatencyModel(bytes_per_bit=1e9), chips=1)
+        sched = SlotScheduler(engine, qos, slots=2, max_prompt=8,
+                              max_new=3, chunk=4, spec_k=2)
+        fresh = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                         tpot_budget_s=r.tpot_budget_s) for r in reqs]
+        return {r.rid: r for r in sched.run(fresh)}
+
+    done_p, done_d = run(plane), run(dense)
+    assert len(done_p) == len(reqs)
+    for rid in done_p:
+        assert np.array_equal(done_p[rid].tokens, done_d[rid].tokens)
+        np.testing.assert_allclose(done_p[rid].effective_bits,
+                                   done_d[rid].effective_bits, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic KV bits: planner carry, one launch, byte accounting
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dyn_engine(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    return ServingEngine(cfg, params, model, kv_overlay=True)
+
+
+def test_dynamic_kv_engine_generates(dyn_engine, tiny_bundle):
+    """Planner-assigned per-layer KV read bits end to end: the bundle
+    carries one KV pseudo-row per attention layer, generation runs, and
+    the overlay actually shrinks the KV footprint."""
+    cfg = tiny_bundle[0]
+    bundle = dyn_engine.artifacts.decision
+    assert bundle.weight_units < bundle.n_units
+    assert len(bundle.kv_rows) == sum(
+        1 for p in bundle.paths if p.endswith(".attn.kv"))
+    rng = np.random.default_rng(15)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
+    out, ebits = dyn_engine.generate(prompt, 4, 3.5)
+    assert out.shape == (1, 8)
+    assert np.all(np.isfinite(ebits))
+    assert all(0.0 < e <= 8.0 for e in ebits)
+    assert dyn_engine.kv_bytes_saved(1, 128) > 0
+
+
+def test_kv_bytes_saved_zero_without_overlay(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    assert ServingEngine(cfg, params, model).kv_bytes_saved(1, 128) == 0
+
+
+def test_one_planner_launch_per_planned_tick(dyn_engine, monkeypatch):
+    """KV read bits must ride the SAME fused plan_bits launch as the
+    weight bits — tracing one planned tick hits the planner exactly
+    once."""
+    import repro.core.decision as decision_mod
+
+    calls = []
+    orig = decision_mod.plan_bits
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(decision_mod, "plan_bits", counting)
+    tick = dyn_engine.build_planned_tick("dynamic")
+    state = dyn_engine._make_state(1, 32)
+    tokens = jnp.zeros((1, 1), jnp.int32)
+    planned = jnp.full((dyn_engine.artifacts.decision.n_units,), 4,
+                       jnp.int32)
+    jax.eval_shape(tick, state, tokens, jnp.int32(0), planned)
+    assert len(calls) == 1

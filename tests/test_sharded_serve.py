@@ -174,6 +174,50 @@ out_k, bits_k = sharded.generate(
 assert sharded.host_syncs - n0 == 2, sharded.host_syncs
 assert np.array_equal(out_k, out_b)
 np.testing.assert_allclose(bits_k, bits_b, atol=1e-5)
+
+# --- dynamic-precision KV cache on the mesh (PR 8) -----------------------
+# plane stacks keep the plane axis UNSHARDED everywhere (reads slice a
+# plane prefix; splitting it would turn the prefix read into a gather),
+# heads follow the dense KV_HEADS rule, slots follow 'data'
+from repro.distributed.sharding import (decode_state_spec, prefill_spec,
+                                        slot_state_spec)
+from repro.serving import make_decode_state
+ov_state = make_decode_state(cfg, 2, 32, kv_format="overlay")
+for k, v in ov_state.items():
+    if not k.endswith("_planes"):
+        continue
+    dspec = decode_state_spec(mesh, k, v.shape)
+    assert dspec[1] is None, (k, dspec)            # plane axis whole
+    pspec = prefill_spec(mesh, k, v.shape)
+    assert pspec[1] is None and "data" not in str(pspec), (k, pspec)
+    sspec = slot_state_spec(mesh, k, (4,) + v.shape)
+    assert sspec[2] is None, (k, sspec)            # plane axis whole
+    assert sspec[0] in ("data", None), (k, sspec)
+
+# overlay engine on the mesh == overlay engine on one device: full-stack
+# (kv_dynamic=False) plane reads are bit-identical across placements,
+# including a prompt straddling the prefill chunk (KV handoff on planes)
+ov_single = ServingEngine(cfg, params, model, kv_overlay=True,
+                          kv_dynamic=False)
+ov_sharded = ServingEngine(cfg, params, model, mesh=mesh, kv_overlay=True,
+                           kv_dynamic=False)
+for prompt in [np.asarray([[5, 7, 11]], np.int32),
+               np.arange(1, 20, dtype=np.int32)[None, :]]:
+    out_s, bits_s = ov_single.generate(prompt, 4, 4.0)
+    out_m, bits_m = ov_sharded.generate(prompt, 4, 4.0)
+    assert np.array_equal(out_s, out_m)
+    np.testing.assert_allclose(bits_s, bits_m, atol=1e-5)
+
+# planner-assigned KV read bits on the mesh: the dynamic-KV engine runs
+# with the O(1) host-sync invariant intact and the KV rows riding the
+# one fused planner launch (bundle grew past the weight rows)
+ov_dyn = ServingEngine(cfg, params, model, mesh=mesh, kv_overlay=True)
+assert ov_dyn.artifacts.decision.weight_units < \
+    ov_dyn.artifacts.decision.n_units
+n0 = ov_dyn.host_syncs
+out_d, bits_d = ov_dyn.generate(np.asarray([[5, 7, 11]], np.int32), 5, 4.0)
+assert ov_dyn.host_syncs - n0 == 2, ov_dyn.host_syncs
+assert out_d.shape == (1, 8) and np.all(np.isfinite(bits_d))
 print("sharded-serve-ok")
 """ % (_N_DEV, _N_DEV)
 
@@ -181,7 +225,7 @@ print("sharded-serve-ok")
 def test_sharded_scheduler_parity_and_no_retrace():
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(_BODY)],
                        capture_output=True, text=True, cwd=".",
-                       timeout=600)
+                       timeout=900)
     assert r.returncode == 0, r.stderr[-4000:]
     assert "sharded-serve-ok" in r.stdout
 

@@ -12,6 +12,7 @@ from hypothesis import strategies as st
 
 from repro.core.bitplane import materialize, quantize_linear
 from repro.kernels.bitserial import expert_plane_fetches, plane_block_fetches
+from repro.kernels.kv_attention import kv_plane_fetches
 
 
 def _table(seed: int, g: int, n_experts: int, bits: int):
@@ -74,6 +75,53 @@ def test_fetch_counters_degenerate_tables():
     assert plane_block_fetches([2, 3], 3, 6) == 3 * 5
     assert expert_plane_fetches([1, 2, 3], [0, 0, 0], [1, 1, 1], 3, 6) == 1
     assert expert_plane_fetches([1, 2], [2, 3], [1, 1], 3, 6) == 3 * 5
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 12), st.integers(2, 4),
+       st.integers(1, 8))
+def test_kv_plane_fetches_closed_form(seed, s, n_tiles, bits):
+    """For n_tiles >= 2 the KV-attention walk equals
+    n_tiles * sum(kv_b) + n_idle_runs
+    with NO collide term: the plane block id carries the slot
+    coordinate, so a busy slot's first block never aliases the idle
+    pin (unlike the shared-operand weight kernels)."""
+    rng = np.random.default_rng(seed)
+    b_list = rng.integers(0, bits + 1, size=s).tolist()
+    walked = kv_plane_fetches(b_list, n_tiles, bits)
+    busy = [b > 0 for b in b_list]
+    assert walked == n_tiles * sum(b_list) + _idle_runs(busy), \
+        (b_list, n_tiles, bits, walked)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 10), st.integers(2, 4),
+       st.integers(2, 8))
+def test_kv_plane_fetches_idle_free_and_linear(seed, s, n_tiles, bits):
+    """The two read-precision properties the planner relies on: an idle
+    slot adds no plane traffic beyond its (amortized) pin, and for a
+    FIXED busy pattern traffic is exactly linear in sum(kv_b) with
+    slope n_tiles."""
+    rng = np.random.default_rng(seed)
+    b_list = rng.integers(1, bits + 1, size=s).tolist()   # all busy
+    base = kv_plane_fetches(b_list, n_tiles, bits)
+    # appending idle slots adds exactly ONE pinned fetch, total
+    assert kv_plane_fetches(b_list + [0, 0], n_tiles, bits) == base + 1
+    # raising one slot's read precision by d adds n_tiles * d fetches
+    i = int(rng.integers(0, s))
+    if b_list[i] < bits:
+        bumped = list(b_list)
+        bumped[i] += 1
+        assert kv_plane_fetches(bumped, n_tiles, bits) == base + n_tiles
+    # a full-stack read costs n_tiles * bits per slot — never more
+    assert kv_plane_fetches([bits] * s, n_tiles, bits) == \
+        n_tiles * bits * s
+
+
+def test_kv_plane_fetches_degenerate_tables():
+    assert kv_plane_fetches([0, 0, 0], 3, 8) == 1         # one pin total
+    assert kv_plane_fetches([8, 0, 3], 2, 8) == 2 * 11 + 1
+    assert kv_plane_fetches([1, 1, 0, 2], 4, 8) == 4 * 4 + 1
 
 
 @settings(max_examples=25, deadline=None)

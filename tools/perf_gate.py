@@ -8,6 +8,7 @@ metric regresses by more than ``--tolerance`` (default 20%):
 - ``ttft_s``               higher is worse
 - ``spec_tokens_per_s``    lower is worse (when both files carry it)
 - ``moe_tokens_per_s``     lower is worse (when both files carry it)
+- ``kv_tokens_per_s``      lower is worse (when both files carry it)
 
 Wall-clock metrics vary across machines, so the gate is a guard against
 step-function regressions (a retrace on the decode path, a lost launch
@@ -28,6 +29,7 @@ METRICS = {
     "ttft_s": -1,
     "spec_tokens_per_s": +1,
     "moe_tokens_per_s": +1,
+    "kv_tokens_per_s": +1,
 }
 
 
