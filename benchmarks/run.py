@@ -32,6 +32,7 @@ MODULES = [
     ("kv_cache", "Dynamic-precision KV: plane-read traffic + storage"),
     ("prefill", "Prefill/decode disaggregation: TTFT + launch counts"),
     ("speculative", "Self-speculative decode: draft/verify speedup sweep"),
+    ("traffic_replay", "Paged-KV fleet under replayed traffic: TTFT/goodput"),
     ("roofline", "§Roofline: 3-term analysis from the dry-run"),
 ]
 
@@ -72,7 +73,18 @@ def collect_serve_json(quick: bool) -> dict:
     t0 = time.monotonic()
     kv_engine.generate(prompt, max_new, target)
     kv_wall = time.monotonic() - t0
+    # paged bitplane-KV pool + prefill fleet under replayed traffic
+    from benchmarks.traffic_replay import measure as replay_measure
+    replay = replay_measure(quick=quick)
+    assert replay["paged_tokens_match"] and replay["paged_bits_match"]
     return {
+        "p50_ttft_s": replay["p50_ttft_s"],
+        "p99_ttft_s": replay["p99_ttft_s"],
+        "goodput_tokens_per_s": replay["goodput_tokens_per_s"],
+        "slo_attainment": replay["slo_attainment"],
+        "paged_slot_multiplier": replay["paged_slot_multiplier"],
+        "paged_kv_saved": replay["paged_kv_saved"],
+        "paged_preemptions": replay["paged_preemptions"],
         "kv_tokens_per_s": max_new / kv_wall,
         "kv_bytes_saved": kv_engine.kv_bytes_saved(
             1, kv_engine.kv_bucket),

@@ -225,6 +225,47 @@ def slot_state_spec(mesh: Mesh, key: str, shape: Sequence[int],
     return resolve_spec(shape, axes, mesh, rules)
 
 
+def paged_pool_spec(mesh: Mesh, key: str, shape: Sequence[int],
+                    rules: Optional[Rules] = None) -> P:
+    """Paged bitplane-KV pool sharding — a named, test-asserted contract
+    like :func:`slot_prefetch_spec`.
+
+    Pool leaves have NO slot axis: the pool is one shared page store and
+    every slot's page table may point anywhere in it, so the page axis
+    must stay replicated over 'data' (sharding pages would turn each
+    slot's gather into a cross-group collective and break the
+    slots → 'data' locality every other serve tensor keeps). Within a
+    page the layout mirrors the bucketed overlay cache it replaces:
+    kv_heads → 'model' like the attention weights that fill the rows,
+    and the plane axis stays whole (a read precision is a *prefix* of
+    planes — splitting it would turn every precision switch into a
+    collective).
+
+    Leaf shapes: planes ``(n_pages, B, page_len, kv_heads, dw)``,
+    scale/zero ``(n_pages, page_len, kv_heads, 1)``.
+    """
+    rules = rules or SERVE_RULES
+    if key.endswith("_planes") and len(shape) == 5:
+        axes: Tuple[Optional[str], ...] = (None, PLANES, None, KV_HEADS,
+                                           None)
+    elif len(shape) == 4:
+        axes = (None, None, KV_HEADS, None)
+    else:
+        axes = (None,) * len(shape)
+    return resolve_spec(shape, axes, mesh, rules)
+
+
+def page_table_spec(mesh: Mesh, shape: Sequence[int],
+                    rules: Optional[Rules] = None) -> P:
+    """Per-slot page tables ``(slots, 1, pages_per_slot)``: the slot axis
+    shards over 'data' like every per-slot control vector — each
+    data-parallel group holds only its own slots' indirection rows —
+    and the page-id axis is replicated within a slot (the ids index the
+    replicated page axis of :func:`paged_pool_spec`, so a local lookup
+    never crosses groups)."""
+    return slot_vec_spec(mesh, shape, rules)
+
+
 def slot_vec_spec(mesh: Mesh, shape: Sequence[int],
                   rules: Optional[Rules] = None) -> P:
     """Per-slot host-control vectors (cur, counts, prompt buffer rows):

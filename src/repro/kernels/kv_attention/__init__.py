@@ -9,6 +9,11 @@ from repro.kernels.kv_attention.kernel import (kv_attention_slots_pallas,
                                                kv_plane_fetches)
 from repro.kernels.kv_attention.ops import (TRACE_COUNTS,
                                             kv_decode_attention)
+from repro.kernels.kv_attention.paged import (TRASH_PAGE, gather_paged_kv,
+                                              kv_attention_paged_pallas,
+                                              kv_decode_attention_paged,
+                                              kv_decode_attention_paged_ref,
+                                              kv_plane_fetches_paged)
 from repro.kernels.kv_attention.ref import (kv_attention_dense,
                                             kv_decode_attention_ref,
                                             materialize_kv_planes)
@@ -21,4 +26,10 @@ __all__ = [
     "kv_attention_dense",
     "materialize_kv_planes",
     "TRACE_COUNTS",
+    "TRASH_PAGE",
+    "gather_paged_kv",
+    "kv_attention_paged_pallas",
+    "kv_decode_attention_paged",
+    "kv_decode_attention_paged_ref",
+    "kv_plane_fetches_paged",
 ]

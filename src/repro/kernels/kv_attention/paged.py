@@ -1,0 +1,416 @@
+"""Paged bit-serial KV decode attention: page-table indirection composed
+with per-slot plane-DMA elision.
+
+The cache is ONE shared plane pool per layer per stream —
+``(n_pages, B, page_len, hkv, dw)`` int32 plane words plus
+``(n_pages, page_len, hkv, 1)`` f32 scale/zero rows — and each slot owns
+an ordered page table ``(P,)`` int32 mapping logical tile ``i`` (rows
+``[i*page_len, (i+1)*page_len)``) to a physical page. Page 0 is the
+RESERVED trash/pin page: the allocator never hands it out, idle slots'
+tables point at it, and gated writes land there harmlessly.
+
+The Pallas kernel walks grid ``(slots, P, bits)`` with ``tile_t ==
+page_len``: the plane index_map reads the page id through scalar
+prefetch, clamps the plane coordinate at ``kv_b - 1`` (the bucketed
+kernel's plane-DMA elision), and pins DEAD tiles — tiles at or past the
+slot's live page count — to the previous tile's LAST fetched block, so
+Pallas's revisiting-block elision skips their DMA entirely. Traffic is
+
+    sum_s n_live_tiles(s) * kv_b[s]    (+ one block per idle run)
+
+per K/V stream — proportional to LIVE tokens, not the bucketed
+``max_len``; ``kv_plane_fetches_paged`` walks the real index_map and the
+property tests pin the closed form.
+
+Bit-identity with the bucketed path holds exactly: the oracle gathers a
+slot's pages into the bucketed row layout and reuses
+``kv_decode_attention_ref`` verbatim, and the kernel's dead-tile skip is
+bitwise-identical to the bucketed kernel's masked fold (a fully-masked
+tile contributes ``p = 0.0`` exactly — ``o_acc``/``l_run``/``m_run``
+are unchanged either way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.kv_attention.kernel import (NEG_INF, _CompilerParams,
+                                               _unpack_block)
+from repro.kernels.kv_attention.ref import kv_decode_attention_ref
+
+#: the reserved trash/pin page — never allocated, absorbs gated writes
+TRASH_PAGE = 0
+
+
+# ---------------------------------------------------------------------------
+# Gather oracle (ref backend / dense parity read)
+# ---------------------------------------------------------------------------
+def gather_paged_kv(pool_planes: jax.Array, pool_scale: jax.Array,
+                    pool_zero: jax.Array, page_table: jax.Array):
+    """Assemble per-slot bucketed plane stacks from the pool.
+
+    pool_planes: (NP, B, page_len, hkv, dw); pool scale/zero:
+    (NP, page_len, hkv, 1); page_table: (S, P) int32. Returns
+    (planes (S, B, P*page_len, hkv, dw), scale/zero (S, P*page_len,
+    hkv, 1)) — rows beyond a slot's live length come from the trash
+    page or zeroed free pages; callers mask them by ``lens`` exactly
+    like the bucketed path masks its own tail rows.
+    """
+    pt = jnp.maximum(jnp.asarray(page_table, jnp.int32), 0)
+    s, p = pt.shape
+    bits, page_len = pool_planes.shape[1], pool_planes.shape[2]
+    g = jnp.moveaxis(pool_planes[pt], 2, 1)          # (S, B, P, L, hkv, dw)
+    planes = g.reshape(s, bits, p * page_len, *pool_planes.shape[3:])
+    scale = pool_scale[pt].reshape(s, p * page_len, *pool_scale.shape[2:])
+    zero = pool_zero[pt].reshape(s, p * page_len, *pool_zero.shape[2:])
+    return planes, scale, zero
+
+
+def kv_decode_attention_paged_ref(q, pool_kp, pool_ks, pool_kz, pool_vp,
+                                  pool_vs, pool_vz, page_table, lens, kv_b,
+                                  *, bits: int,
+                                  logit_softcap: float = 0.0) -> jax.Array:
+    """Oracle: gather pages into the bucketed layout, then run the
+    bucketed oracle verbatim — paged-vs-bucketed bit-identity by
+    construction (tail rows are masked identically in both)."""
+    kp, ks, kz = gather_paged_kv(pool_kp, pool_ks, pool_kz, page_table)
+    vp, vs, vz = gather_paged_kv(pool_vp, pool_vs, pool_vz, page_table)
+    return kv_decode_attention_ref(q, kp, ks, kz, vp, vs, vz, lens, kv_b,
+                                   bits=bits, logit_softcap=logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+def _paged_kernel(kv_b_ref, lens_ref, pt_ref, nl_ref, q_ref, kp_ref, ks_ref,
+                  kz_ref, vp_ref, vs_ref, vz_ref, out_ref, s_acc, vv_acc,
+                  m_run, l_run, o_acc, *, bits, page_len, m_rows, group,
+                  softcap):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    n_tiles = pl.num_programs(1)
+    b_sel = kv_b_ref[s]
+    active = b_sel > 0
+    live = active & (i < jnp.maximum(nl_ref[s], 1))
+
+    @pl.when(active & (i == 0) & (j == 0))
+    def _init_flash():
+        m_run[...] = jnp.full_like(m_run[...], NEG_INF)
+        l_run[...] = jnp.zeros_like(l_run[...])
+        o_acc[...] = jnp.zeros_like(o_acc[...])
+
+    @pl.when(live & (j == 0))
+    def _init_tile():
+        s_acc[...] = jnp.zeros_like(s_acc[...])
+        vv_acc[...] = jnp.zeros_like(vv_acc[...])
+
+    @pl.when(live & (j < b_sel))
+    def _accumulate():
+        w = 2.0 ** (bits - 1 - j)
+        kb = _unpack_block(kp_ref[0, 0])            # (hkv, page_len, dh_w)
+        qv = q_ref[0]                               # (hkv, Mg, dh_w)
+        contrib = jax.lax.dot_general(
+            qv, kb, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)     # (hkv, Mg, page_len)
+        s_acc[...] += contrib * w
+        vv_acc[...] += _unpack_block(vp_ref[0, 0]) * w
+
+    @pl.when(live & (j == bits - 1))
+    def _fold_tile():
+        # identical to the bucketed kernel's fold: dead tiles are
+        # SKIPPED here instead of folded masked — bitwise the same
+        # (a fully-masked fold leaves m/l/o unchanged exactly)
+        mid = (jnp.exp2((bits - b_sel).astype(jnp.float32)) - 1.0) * 0.5
+        ks = ks_ref[0].T                            # (hkv, page_len)
+        kz = kz_ref[0].T
+        vs = vs_ref[0].T
+        vz = vz_ref[0].T
+        qv = q_ref[0]
+        sum_q = jnp.sum(qv, axis=-1)                # (hkv, Mg)
+        scores = (s_acc[...] +
+                  (mid - kz)[:, None, :] * sum_q[:, :, None]) * \
+            ks[:, None, :]                          # (hkv, Mg, page_len)
+        if softcap and softcap > 0.0:
+            scores = softcap * jnp.tanh(scores / softcap)
+        mg = sum_q.shape[-1]
+        col = i * page_len + jax.lax.broadcasted_iota(
+            jnp.int32, (mg, page_len), 1)
+        row_len = jnp.repeat(
+            jnp.stack([lens_ref[s * m_rows + mm]
+                       for mm in range(m_rows)]), group)
+        valid = col < row_len[:, None]              # (Mg, page_len)
+        scores = jnp.where(valid[None], scores, NEG_INF)
+        vvals = (vv_acc[...] + mid - vz[:, :, None]) * vs[:, :, None]
+        m_new = jnp.maximum(m_run[...],
+                            jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_run[...] - m_new)
+        p = jnp.where(valid[None], jnp.exp(scores - m_new), 0.0)
+        l_run[...] = l_run[...] * alpha + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        o_acc[...] = o_acc[...] * alpha + jax.lax.dot_general(
+            p, vvals, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_run[...] = m_new
+
+    @pl.when(active & (j == bits - 1) & (i == n_tiles - 1))
+    def _write():
+        out_ref[0] = o_acc[...] / l_run[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "m_rows", "softcap",
+                                             "interpret"))
+def kv_attention_paged_pallas(q, pool_kp, pool_ks, pool_kz, pool_vp,
+                              pool_vs, pool_vz, page_table, lens, n_live,
+                              kv_b, *, bits: int, m_rows: int,
+                              softcap: float = 0.0,
+                              interpret: bool = False) -> jax.Array:
+    """Paged bit-serial decode attention through a prefetched page table.
+
+    q: (S, hkv, M*g, dh_w) f32 (prescaled + word-padded, the bucketed
+    kernel's layout); pool planes: (NP, B, page_len, hkv, dw) int32;
+    pool scale/zero: (NP, page_len, hkv) f32; page_table: (S*P,) int32
+    flattened per-slot page rows; lens: (S*M,) int32; n_live: (S,) int32
+    live tile counts (ceil(max row len / page_len)); kv_b: (S,) int32.
+    Grid (slots, P, bits) with tile_t == page_len: live tiles fetch
+    ``kv_b[s]`` plane blocks through their page id, dead tiles pin to
+    the previous tile's last block (zero DMA), idle slots pin to the
+    trash page. Returns (S, hkv, M*g, dh_w) f32; idle slots' blocks are
+    unwritten (callers mask on ``kv_b > 0``).
+    """
+    slots, hkv, mg, dh_w = q.shape
+    n_pages, _, page_len, _, dw = pool_kp.shape
+    pages_per_slot = page_table.shape[0] // slots
+    group = mg // m_rows
+    grid = (slots, pages_per_slot, bits)
+
+    def q_map(s, i, j, b_ref, l_ref, pt_ref, nl_ref):
+        return (s, 0, 0, 0)
+
+    def plane_map(s, i, j, b_ref, l_ref, pt_ref, nl_ref):
+        b = b_ref[s]
+        active = b > 0
+        nl = jnp.maximum(nl_ref[s], 1)
+        live = active & (i < nl)
+        ic = jnp.minimum(i, nl - 1)
+        page = jnp.where(active, pt_ref[s * pages_per_slot + ic], 0)
+        jc = jnp.maximum(jnp.minimum(j, b - 1), 0)
+        # dead tiles revisit the last live tile's final plane block —
+        # same page, same plane — so the copy is fully elided
+        jc = jnp.where(live, jc, jnp.maximum(b - 1, 0))
+        return (page, jc, 0, 0, 0)
+
+    def sz_map(s, i, j, b_ref, l_ref, pt_ref, nl_ref):
+        b = b_ref[s]
+        active = b > 0
+        nl = jnp.maximum(nl_ref[s], 1)
+        ic = jnp.minimum(i, nl - 1)
+        page = jnp.where(active, pt_ref[s * pages_per_slot + ic], 0)
+        return (page, 0, 0)
+
+    def out_map(s, i, j, b_ref, l_ref, pt_ref, nl_ref):
+        return (s, 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hkv, mg, dh_w), q_map),
+            pl.BlockSpec((1, 1, page_len, hkv, dw), plane_map),
+            pl.BlockSpec((1, page_len, hkv), sz_map),
+            pl.BlockSpec((1, page_len, hkv), sz_map),
+            pl.BlockSpec((1, 1, page_len, hkv, dw), plane_map),
+            pl.BlockSpec((1, page_len, hkv), sz_map),
+            pl.BlockSpec((1, page_len, hkv), sz_map),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, mg, dh_w), out_map),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, mg, page_len), jnp.float32),
+            pltpu.VMEM((hkv, page_len, dh_w), jnp.float32),
+            pltpu.VMEM((hkv, mg, 1), jnp.float32),
+            pltpu.VMEM((hkv, mg, 1), jnp.float32),
+            pltpu.VMEM((hkv, mg, dh_w), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, bits=bits, page_len=page_len,
+                               m_rows=m_rows, group=group, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, hkv, mg, dh_w),
+                                       jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 3),
+        interpret=interpret,
+    )(jnp.asarray(kv_b, jnp.int32), jnp.asarray(lens, jnp.int32),
+      jnp.asarray(page_table, jnp.int32), jnp.asarray(n_live, jnp.int32),
+      q, pool_kp, pool_ks, pool_kz, pool_vp, pool_vs, pool_vz)
+
+
+# ---------------------------------------------------------------------------
+# Modeled traffic (the closed form the property tests pin)
+# ---------------------------------------------------------------------------
+def kv_plane_fetches_paged(page_table, lens, kv_b, *, page_len: int,
+                           bits: int) -> int:
+    """Modeled HBM plane-block traffic of ONE pool stream (K or V).
+
+    Walks the REAL paged index_map in grid order — (slot, tile, plane),
+    plane innermost — counting consecutive-distinct blocks. Equals
+
+        sum_s n_live_tiles(s) * kv_b[s]  +  idle/pin runs
+
+    where ``n_live_tiles(s) = ceil(max(lens[s]) / page_len)``: dead
+    tiles revisit the last live block (zero fetches) and idle slots pin
+    one trash block per run — traffic follows LIVE tokens, not the
+    bucketed ``max_len``.
+    """
+    pt = np.asarray(page_table)
+    slots = pt.shape[0]
+    lens = np.asarray(lens).reshape(slots, -1)
+    fetches = 0
+    prev = None
+    for s, b in enumerate(int(x) for x in kv_b):
+        nl = max(1, -(-max(1, int(lens[s].max())) // int(page_len)))
+        for i in range(pt.shape[1]):
+            for j in range(bits):
+                active = b > 0
+                live = active and i < nl
+                ic = min(i, nl - 1)
+                page = int(pt[s, ic]) if active else 0
+                jc = max(min(j, b - 1), 0)
+                if not live:
+                    jc = max(b - 1, 0)
+                blk = (page, jc, 0, 0, 0)
+                if blk != prev:
+                    fetches += 1
+                    prev = blk
+    return fetches
+
+
+# ---------------------------------------------------------------------------
+# Dispatch (custom_vmap: pool stays UNBATCHED through any vmap nesting)
+# ---------------------------------------------------------------------------
+def _dispatch_paged_kernel(q, pool_kp, pool_ks, pool_kz, pool_vp, pool_vs,
+                           pool_vz, pt, lens, kv_b, *, bits, softcap,
+                           backend):
+    slots, m, hq, dh = q.shape
+    hkv = pool_kp.shape[3]
+    dw = pool_kp.shape[-1]
+    page_len = pool_kp.shape[2]
+    dh_w = dw * 32
+    g = hq // hkv
+
+    qp = q.astype(jnp.float32) * (dh ** -0.5)
+    qp = qp.reshape(slots, m, hkv, g, dh).transpose(0, 2, 1, 3, 4)
+    qp = qp.reshape(slots, hkv, m * g, dh)
+    if dh_w > dh:
+        qp = jnp.pad(qp, ((0, 0),) * 3 + ((0, dh_w - dh),))
+
+    max_len = jnp.maximum(jnp.max(lens, axis=1), 1)
+    n_live = (max_len + page_len - 1) // page_len
+    n_live = jnp.minimum(n_live, pt.shape[1])
+
+    out = kv_attention_paged_pallas(
+        qp, pool_kp, pool_ks[..., 0], pool_kz[..., 0], pool_vp,
+        pool_vs[..., 0], pool_vz[..., 0],
+        jnp.maximum(pt, 0).reshape(-1), lens.reshape(-1), n_live, kv_b,
+        bits=bits, m_rows=m, softcap=softcap,
+        interpret=(backend == "interpret"))
+    out = out[..., :dh].reshape(slots, hkv, m, g, dh)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(slots, m, hq, dh)
+    return jnp.where((kv_b > 0)[:, None, None, None], out, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "softcap", "backend"))
+def _dispatch_paged(q, pool_kp, pool_ks, pool_kz, pool_vp, pool_vs,
+                    pool_vz, pt, lens, kv_b, *, bits, softcap, backend):
+    from repro.kernels.kv_attention.ops import TRACE_COUNTS
+    key = ("paged", bits, backend)
+    TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
+    if backend == "ref":
+        return kv_decode_attention_paged_ref(
+            q.astype(jnp.float32), pool_kp, pool_ks, pool_kz, pool_vp,
+            pool_vs, pool_vz, pt, lens, kv_b, bits=bits,
+            logit_softcap=softcap)
+    return _dispatch_paged_kernel(q, pool_kp, pool_ks, pool_kz, pool_vp,
+                                  pool_vs, pool_vz, pt, lens, kv_b,
+                                  bits=bits, softcap=softcap,
+                                  backend=backend)
+
+
+@functools.lru_cache(maxsize=None)
+def _kv_paged_batchable(bits: int, softcap: float, backend: str):
+    """One custom_vmap per (bits, softcap, backend): the mapped slot axes
+    FLATTEN onto the kernel's slot axis while the pool operands pass
+    through UNBATCHED — the scheduler's vmapped tick shares one physical
+    pool across every slot and still dispatches ONE launch."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(q, pool_kp, pool_ks, pool_kz, pool_vp, pool_vs, pool_vz, pt,
+           lens, kv_b):
+        return _dispatch_paged(q, pool_kp, pool_ks, pool_kz, pool_vp,
+                               pool_vs, pool_vz, pt, lens, kv_b,
+                               bits=bits, softcap=softcap, backend=backend)
+
+    @fn.def_vmap
+    def _vmap_rule(axis_size, in_batched, q, pool_kp, pool_ks, pool_kz,
+                   pool_vp, pool_vs, pool_vz, pt, lens, kv_b):
+        if any(in_batched[1:7]):
+            raise ValueError("paged KV pool operands must stay unbatched "
+                             "under vmap (one shared physical pool)")
+        slot_args = [q, pt, lens, kv_b]
+        slot_batched = [in_batched[0], in_batched[7], in_batched[8],
+                        in_batched[9]]
+        full = []
+        for a, batched in zip(slot_args, slot_batched):
+            if not batched:
+                a = jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+            full.append(a)
+        inner = full[0].shape[1]
+        flat = [a.reshape((axis_size * a.shape[1],) + a.shape[2:])
+                for a in full]
+        y = fn(flat[0], pool_kp, pool_ks, pool_kz, pool_vp, pool_vs,
+               pool_vz, flat[1], flat[2], flat[3])
+        return y.reshape((axis_size, inner) + y.shape[1:]), True
+
+    return fn
+
+
+def kv_decode_attention_paged(q, pool_kp, pool_ks, pool_kz, pool_vp,
+                              pool_vs, pool_vz, page_table, lens, kv_b, *,
+                              bits: int, logit_softcap: float = 0.0,
+                              backend=None) -> jax.Array:
+    """Slot-batched plane-read decode attention through a page table.
+
+    q: (S, M, hq, dh); pool planes: (NP, B, page_len, hkv, dw) int32;
+    pool scale/zero: (NP, page_len, hkv, 1) f32 — ONE shared pool, no
+    slot axis; page_table: (S, P) int32; lens: (S, M) int32; kv_b: (S,)
+    int32 read precisions (0 = idle). Returns (S, M, hq, dh) f32.
+    Backend contract mirrors ``kv_decode_attention``.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if pool_kp.shape[1] != bits:
+        raise ValueError(
+            f"pool carries {pool_kp.shape[1]} planes, bits={bits}")
+    fn = _kv_paged_batchable(bits, float(logit_softcap), backend)
+    return fn(q, pool_kp, pool_ks, pool_kz, pool_vp, pool_vs, pool_vz,
+              jnp.asarray(page_table, jnp.int32),
+              jnp.asarray(lens, jnp.int32), jnp.asarray(kv_b, jnp.int32))
+
+
+__all__ = [
+    "TRASH_PAGE",
+    "gather_paged_kv",
+    "kv_attention_paged_pallas",
+    "kv_decode_attention_paged",
+    "kv_decode_attention_paged_ref",
+    "kv_plane_fetches_paged",
+]

@@ -32,7 +32,8 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
                targets=(3.5, 4.0, 4.5), n_queries: int = 6,
                tokens_per_query: int = 12, slots: int = 4,
                seed: int = 0, mesh=None, prefill_chunk: int = 16,
-               spec_k=None, log=print):
+               spec_k=None, paged: bool = False, page_len: int = 4,
+               n_pages=None, log=print):
     cfg = get_config(arch)
     rng = np.random.default_rng(seed)
     if params is None:
@@ -44,7 +45,8 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
         model = build_multiscale_model(cfg, params, calib, targets=targets,
                                        finetune_epochs=1, baselines=())
     engine = ServingEngine(cfg, params, model, mesh=mesh,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk,
+                           kv_overlay=paged)
     chips = 1
     if mesh is not None:
         from repro.distributed.sharding import slot_vec_spec
@@ -58,9 +60,11 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
             bytes_per_bit=engine.overlay_bytes() / 5), chips=chips,
         spec_k=spec_k)
     tracker = QueryBitTracker()
-    scheduler = SlotScheduler(engine, planner, slots=slots, max_prompt=8,
-                              max_new=tokens_per_query, tracker=tracker,
-                              spec_k=spec_k)
+    sched_kw = dict(slots=slots, max_prompt=8, max_new=tokens_per_query,
+                    tracker=tracker, spec_k=spec_k)
+    if paged:
+        sched_kw.update(paged=True, page_len=page_len, n_pages=n_pages)
+    scheduler = SlotScheduler(engine, planner, **sched_kw)
 
     requests = [
         Request(rid=qi,
@@ -86,6 +90,12 @@ def serve_demo(arch: str = "bench-lm", params=None, model=None,
             f"(acceptance {a / (w * (spec_k - 1)):.2f}, "
             f"{w / (w + a):.2f} launches/token; planner EMA "
             f"{planner.acceptance_ema:.2f})")
+    if paged:
+        sp = scheduler.paged_stats()
+        log(f"paged pool: {scheduler.n_pages} pages x {scheduler.page_len} "
+            f"rows; high watermark {sp['high_watermark_pages']} pages "
+            f"({sp['high_watermark_bytes']} B), "
+            f"{sp['preemptions']} preemption(s)")
     log("per-query QoS summary: "
         f"{ {k: round(v, 4) for k, v in tracker.summary().items()} }")
     return tracker
@@ -110,6 +120,17 @@ def main():
                     help="speculative window size: draft k-1 tokens at "
                          "the 2-bit floor, verify all k in one batched "
                          "launch (needs --prefill-chunk > 0)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged bitplane-KV: one shared plane pool + "
+                         "per-slot page tables instead of worst-case "
+                         "per-slot buckets (implies the overlay KV "
+                         "engine, kv_overlay=True)")
+    ap.add_argument("--page-len", type=int, default=4,
+                    help="KV rows per page (with --paged)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="pool size; smaller than worst-case demand "
+                         "turns on preemption-by-page-reclaim (default: "
+                         "worst case — every slot can fill its window)")
     ap.add_argument("--artifacts", default=None,
                     help="pickle produced by examples/train_lm.py")
     args = ap.parse_args()
@@ -124,7 +145,9 @@ def main():
         mesh = make_serve_mesh(args.slots, args.model_parallel)
     serve_demo(args.arch, params=params, model=model,
                n_queries=args.queries, slots=args.slots, mesh=mesh,
-               prefill_chunk=args.prefill_chunk, spec_k=args.spec_k)
+               prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
+               paged=args.paged, page_len=args.page_len,
+               n_pages=args.n_pages)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 from repro.models.common import LinearUnit, Params, cross_entropy
 from repro.models.transformer import (decode_step, forward,
                                       init_decode_state, init_model_params,
+                                      init_paged_pool, init_paged_state,
                                       linear_units, loss_fn,
                                       model_logical_axes, model_param_specs)
 
 __all__ = [
     "LinearUnit", "Params", "cross_entropy", "decode_step", "forward",
-    "init_decode_state", "init_model_params", "linear_units", "loss_fn",
-    "model_logical_axes", "model_param_specs",
+    "init_decode_state", "init_model_params", "init_paged_pool",
+    "init_paged_state", "linear_units", "loss_fn", "model_logical_axes",
+    "model_param_specs",
 ]

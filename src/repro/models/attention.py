@@ -230,6 +230,169 @@ def update_kv_planes(
     return k_planes, k_scale, k_zero, v_planes, v_scale, v_zero
 
 
+@jax.custom_batching.custom_vmap
+def paged_write_rows(pool_planes, pool_scale, pool_zero, page_table, pos,
+                     planes, scale, zero):
+    """Scatter encoded KV rows into the SHARED plane pool through a
+    per-slot page table.
+
+    pool_planes: (NP, B, page_len, hkv, dw) int32; pool scale/zero:
+    (NP, page_len, hkv, 1) f32 — ONE physical pool, no slot axis.
+    page_table: (b, P) int32; pos: (b,) int32 first row index; planes:
+    (b, B, M, hkv, dw) (the ``encode_kv_rows`` layout); scale/zero:
+    (b, M, hkv, 1). Rows land at logical positions [pos, pos + M)
+    through the table; entries whose table slot is unallocated (0) land
+    on the TRASH page — that is how gated/idle lanes write harmlessly.
+
+    ``custom_vmap``: under the scheduler's vmapped tick the pool
+    operands stay UNBATCHED — every lane's rows fold into ONE scatter
+    (well-defined because the allocator never aliases a live page
+    between slots; collisions exist only on the trash page, whose
+    content is never read unmasked).
+    """
+    nbits, m = planes.shape[1], planes.shape[2]
+    b = page_table.shape[0]
+    page_len = pool_planes.shape[2]
+    rows = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape((-1, 1)), (b, 1)) + \
+        jnp.arange(m, dtype=jnp.int32)
+    page_ix = jnp.clip(rows // page_len, 0, page_table.shape[1] - 1)
+    pages = jnp.take_along_axis(jnp.maximum(page_table, 0), page_ix,
+                                axis=1)
+    fp = pages.reshape(-1)
+    fo = (rows % page_len).reshape(-1)
+    pv = jnp.moveaxis(planes, 1, 2).reshape(
+        (b * m,) + (nbits,) + planes.shape[3:])
+    new_planes = pool_planes.at[fp, :, fo].set(pv.astype(pool_planes.dtype))
+    sv = scale.reshape((b * m,) + scale.shape[2:])
+    zv = zero.reshape((b * m,) + zero.shape[2:])
+    new_scale = pool_scale.at[fp, fo].set(sv.astype(pool_scale.dtype))
+    new_zero = pool_zero.at[fp, fo].set(zv.astype(pool_zero.dtype))
+    return new_planes, new_scale, new_zero
+
+
+@paged_write_rows.def_vmap
+def _paged_write_rows_vmap(axis_size, in_batched, pool_planes, pool_scale,
+                           pool_zero, page_table, pos, planes, scale, zero):
+    if any(in_batched[:3]):
+        raise ValueError("paged KV pool operands must stay unbatched "
+                         "under vmap (one shared physical pool)")
+
+    def flat(a, batched):
+        if not batched:
+            a = jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+        return a.reshape((axis_size * a.shape[1],) + a.shape[2:])
+
+    out = paged_write_rows(
+        pool_planes, pool_scale, pool_zero,
+        flat(page_table, in_batched[3]), flat(pos, in_batched[4]),
+        flat(planes, in_batched[5]), flat(scale, in_batched[6]),
+        flat(zero, in_batched[7]))
+    return out, (False, False, False)
+
+
+def update_kv_pool(
+    pool_kp: jax.Array, pool_ks: jax.Array, pool_kz: jax.Array,
+    pool_vp: jax.Array, pool_vs: jax.Array, pool_vz: jax.Array,
+    page_table: jax.Array, k_new: jax.Array, v_new: jax.Array,
+    pos: jax.Array, *, bits: int = 8,
+):
+    """Paged twin of :func:`update_kv_planes`: encode one step's K/V rows
+    (b, M, hkv, dh) to the full plane stack and scatter them into the
+    shared pool at logical positions [pos, pos + M) via the page table."""
+    b = k_new.shape[0]
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    kp, ks, kz = encode_kv_rows(k_new, bits)
+    vp, vs, vz = encode_kv_rows(v_new, bits)
+    pool_kp, pool_ks, pool_kz = paged_write_rows(
+        pool_kp, pool_ks, pool_kz, page_table, pos_v, kp, ks, kz)
+    pool_vp, pool_vs, pool_vz = paged_write_rows(
+        pool_vp, pool_vs, pool_vz, page_table, pos_v, vp, vs, vz)
+    return pool_kp, pool_ks, pool_kz, pool_vp, pool_vs, pool_vz
+
+
+def paged_zero_window(
+    pool_kp: jax.Array, pool_ks: jax.Array, pool_kz: jax.Array,
+    pool_vp: jax.Array, pool_vs: jax.Array, pool_vz: jax.Array,
+    page_table: jax.Array, start: jax.Array, window: int,
+):
+    """Zero logical rows [start, start + window) of a slot's pages — the
+    paged rollback's KV erase. Exactly a :func:`paged_write_rows` of
+    zero rows, so it re-establishes the zero-rows invariant on the
+    accepted window's pages ONLY (never touches other slots' pages;
+    rows whose table entry is unallocated land on the trash page)."""
+    b, p = page_table.shape[0], page_table.shape[1]
+    del p
+    nbits = pool_kp.shape[1]
+    hkv = pool_kp.shape[3]
+    dw = pool_kp.shape[4]
+    start_v = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1),
+                               (b,))
+    zp = jnp.zeros((b, nbits, int(window), hkv, dw), pool_kp.dtype)
+    zs = jnp.zeros((b, int(window)) + pool_ks.shape[2:], pool_ks.dtype)
+    pool_kp, pool_ks, pool_kz = paged_write_rows(
+        pool_kp, pool_ks, pool_kz, page_table, start_v, zp, zs, zs)
+    pool_vp, pool_vs, pool_vz = paged_write_rows(
+        pool_vp, pool_vs, pool_vz, page_table, start_v, zp, zs, zs)
+    return pool_kp, pool_ks, pool_kz, pool_vp, pool_vs, pool_vz
+
+
+def decode_attention_pool(
+    q: jax.Array,                # (b, M, hq, dh)
+    pool_kp: jax.Array,          # (NP, bits, page_len, hkv, dw) int32
+    pool_ks: jax.Array,          # (NP, page_len, hkv, 1) f32
+    pool_kz: jax.Array,
+    pool_vp: jax.Array,
+    pool_vs: jax.Array,
+    pool_vz: jax.Array,
+    page_table: jax.Array,       # (b, P) int32
+    cache_len: jax.Array,        # scalar or (M,) per-row lengths
+    *,
+    bits: int = 8,
+    kv_bits: jax.Array = None,   # per-slot read precision; None -> full B
+    logit_softcap: float = 0.0,
+    read: str = "plane",         # "plane" | "dense" (parity oracle)
+    backend: str = None,
+) -> jax.Array:
+    """Paged twin of :func:`decode_attention_planes`: the cache rows live
+    in ONE shared plane pool and each lane reads its own pages through
+    ``page_table``. ``read="plane"`` dispatches the paged bit-serial
+    kernel (page indirection composed with plane-DMA elision);
+    ``read="dense"`` gathers the pages into the bucketed row layout and
+    runs the dense parity oracle at full bits."""
+    from repro.kernels.kv_attention import (gather_paged_kv,
+                                            kv_attention_dense,
+                                            kv_decode_attention_paged,
+                                            materialize_kv_planes)
+    b, m, hq, dh = q.shape
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape((-1,))[None, :], (b, m))
+    if kv_bits is None:
+        kvb = jnp.full((b,), bits, jnp.int32)
+    else:
+        kvb = jnp.broadcast_to(jnp.asarray(kv_bits, jnp.int32), (b,))
+    if read == "dense":
+        kp, ks, kz = gather_paged_kv(pool_kp, pool_ks, pool_kz, page_table)
+        vp, vs, vz = gather_paged_kv(pool_vp, pool_vs, pool_vz, page_table)
+
+        def one(qs, kpl, ksc, kzr, vpl, vsc, vzr, ls):
+            kf = materialize_kv_planes(kpl, ksc, kzr, bits, bits=bits, d=dh)
+            vf = materialize_kv_planes(vpl, vsc, vzr, bits, bits=bits, d=dh)
+            return kv_attention_dense(qs, kf, vf, ls,
+                                      logit_softcap=logit_softcap)
+        out = jax.vmap(one)(q.astype(jnp.float32), kp, ks, kz, vp, vs, vz,
+                            lens)
+        out = jnp.where((kvb > 0)[:, None, None, None], out, 0.0)
+    elif read == "plane":
+        out = kv_decode_attention_paged(
+            q, pool_kp, pool_ks, pool_kz, pool_vp, pool_vs, pool_vz,
+            page_table, lens, kvb, bits=bits, logit_softcap=logit_softcap,
+            backend=backend)
+    else:
+        raise ValueError(f"unknown KV read mode {read!r}")
+    return out.astype(q.dtype)
+
+
 def decode_attention_planes(
     q: jax.Array,                # (b, M, hq, dh)
     k_planes: jax.Array,         # (b, bits, S, hkv, dw) int32

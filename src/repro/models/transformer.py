@@ -18,8 +18,9 @@ from repro.distributed.context import hint
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (decode_attention,
                                     decode_attention_planes,
-                                    flash_attention, update_kv_cache,
-                                    update_kv_planes)
+                                    decode_attention_pool, flash_attention,
+                                    update_kv_cache, update_kv_planes,
+                                    update_kv_pool)
 from repro.models.common import (CONV, EMBED, EXPERTS, FFN, HEADS, KV_HEADS,
                                  NOSHARD, SSM_HEADS, SSM_INNER, VOCAB,
                                  LinearUnit, ParamSpec, Params, SpecTable,
@@ -384,6 +385,48 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     return state
 
 
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_len: int,
+                    kv_plane_bits: int = 8) -> Dict[str, jax.Array]:
+    """The SHARED paged KV plane pool: per attention layer
+    ``pool.{i}.{k,v}_planes`` (n_pages, B, page_len, hkv, ceil(hd/32))
+    int32 plus ``_scale``/``_zero`` (n_pages, page_len, hkv, 1) f32.
+    No slot axis — every slot's pages live here, addressed through its
+    ``page_table``. Page 0 is the reserved trash/pin page."""
+    if n_pages < 2:
+        raise ValueError("paged pool needs >= 2 pages (page 0 is trash)")
+    hd = cfg.resolved_head_dim
+    dw = -(-hd // 32)
+    pool: Dict[str, jax.Array] = {}
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) != "attn":
+            continue
+        for side in ("k", "v"):
+            pool[f"pool.{i}.{side}_planes"] = jnp.zeros(
+                (n_pages, kv_plane_bits, page_len, cfg.num_kv_heads, dw),
+                jnp.int32)
+            pool[f"pool.{i}.{side}_scale"] = jnp.zeros(
+                (n_pages, page_len, cfg.num_kv_heads, 1), jnp.float32)
+            pool[f"pool.{i}.{side}_zero"] = jnp.zeros(
+                (n_pages, page_len, cfg.num_kv_heads, 1), jnp.float32)
+    return pool
+
+
+def init_paged_state(cfg: ModelConfig, batch: int, max_len: int,
+                     page_len: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    """Per-slot decode state for the PAGED cache: the bucketed ``kv.*``
+    arrays are replaced by a ``page_table`` (batch, ceil(max_len /
+    page_len)) int32 of physical page ids (0 = unallocated → trash
+    page); SSM/xkv/pos leaves are identical to the bucketed state.
+    Merge with :func:`init_paged_pool`'s leaves to form the state dict
+    ``decode_step`` consumes."""
+    proto = init_decode_state(cfg, batch, 1, dtype=dtype)
+    state = {k: v for k, v in proto.items() if not k.startswith("kv.")}
+    state["page_table"] = jnp.zeros(
+        (batch, -(-int(max_len) // int(page_len))), jnp.int32)
+    return state
+
+
 def decode_step(
     cfg: ModelConfig,
     params: Params,
@@ -454,8 +497,34 @@ def decode_step(
                 lens = pos + 1 + jnp.arange(m)       # per-row causal prefix
             q = apply_rope(q, ppos, cfg.rope_theta)
             k = apply_rope(k, ppos, cfg.rope_theta)
+            pool_kp0 = state.get(f"pool.{i}.k_planes")
             kp0 = state.get(f"kv.{i}.k_planes")
-            if kp0 is not None:
+            if pool_kp0 is not None:
+                # paged overlay cache: the rows live in the SHARED plane
+                # pool; this slot writes/reads its own pages through its
+                # page table (unallocated entries hit the trash page)
+                bits_b = pool_kp0.shape[1]
+                ptab = state["page_table"]
+                pk, pks, pkz, pv, pvs, pvz = update_kv_pool(
+                    pool_kp0, state[f"pool.{i}.k_scale"],
+                    state[f"pool.{i}.k_zero"],
+                    state[f"pool.{i}.v_planes"],
+                    state[f"pool.{i}.v_scale"],
+                    state[f"pool.{i}.v_zero"], ptab, k, v, pos,
+                    bits=bits_b)
+                new_state[f"pool.{i}.k_planes"] = pk
+                new_state[f"pool.{i}.k_scale"] = pks
+                new_state[f"pool.{i}.k_zero"] = pkz
+                new_state[f"pool.{i}.v_planes"] = pv
+                new_state[f"pool.{i}.v_scale"] = pvs
+                new_state[f"pool.{i}.v_zero"] = pvz
+                layer_kv = None if kv_bits is None else kv_bits[attn_idx]
+                o = decode_attention_pool(
+                    q, pk, pks, pkz, pv, pvs, pvz, ptab, lens,
+                    bits=bits_b, kv_bits=layer_kv,
+                    logit_softcap=cfg.attn_logit_softcap, read=kv_read,
+                    backend=kv_backend)
+            elif kp0 is not None:
                 # overlay cache: write the FULL plane stack, read at
                 # this tick's planner-assigned per-layer precision
                 bits_b = kp0.shape[1]

@@ -1,14 +1,25 @@
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import (handoff_state, insert_slot_state,
-                                    make_decode_state, make_prefill_state,
-                                    n_prefill_chunks, prefill_len,
+from repro.serving.kv_cache import (PagePool, handoff_state,
+                                    insert_slot_state,
+                                    insert_slot_state_paged,
+                                    make_decode_state, make_paged_pool,
+                                    make_paged_state, make_prefill_state,
+                                    n_prefill_chunks, pages_for_rows,
+                                    pool_accounting, prefill_len,
                                     reset_state, rollback_decode_state,
-                                    stage_bytes, state_bytes)
-from repro.serving.qos import LatencyModel, QoSPlanner, QueryBitTracker
+                                    rollback_decode_state_paged,
+                                    stage_bytes, state_bytes,
+                                    zero_pool_pages)
+from repro.serving.qos import (AdmissionRouter, LatencyModel, PriorityClass,
+                               QoSPlanner, QueryBitTracker)
 from repro.serving.scheduler import Request, SlotScheduler
 
-__all__ = ["LatencyModel", "QoSPlanner", "QueryBitTracker", "Request",
-           "ServingEngine", "SlotScheduler", "handoff_state",
-           "insert_slot_state", "make_decode_state", "make_prefill_state",
-           "n_prefill_chunks", "prefill_len", "reset_state",
-           "rollback_decode_state", "stage_bytes", "state_bytes"]
+__all__ = ["AdmissionRouter", "LatencyModel", "PagePool", "PriorityClass",
+           "QoSPlanner", "QueryBitTracker", "Request", "ServingEngine",
+           "SlotScheduler", "handoff_state", "insert_slot_state",
+           "insert_slot_state_paged", "make_decode_state",
+           "make_paged_pool", "make_paged_state", "make_prefill_state",
+           "n_prefill_chunks", "pages_for_rows", "pool_accounting",
+           "prefill_len", "reset_state", "rollback_decode_state",
+           "rollback_decode_state_paged", "stage_bytes", "state_bytes",
+           "zero_pool_pages"]

@@ -70,7 +70,8 @@ from repro.distributed.sharding import (SERVE_RULES, decision_carry_spec,
                                         decode_state_spec,
                                         overlay_shardings, resolve_spec)
 from repro.models import decode_step, model_logical_axes
-from repro.serving.kv_cache import make_decode_state, rollback_decode_state
+from repro.serving.kv_cache import (make_decode_state, make_paged_pool,
+                                    pages_for_rows, rollback_decode_state)
 
 
 class ServingEngine:
@@ -1346,3 +1347,41 @@ class ServingEngine:
                        for k, v in st.items() if k.startswith("kv."))
 
         return kv_nbytes("dense") - kv_nbytes("overlay")
+
+    def paged_bytes_report(self, slots: int, max_len: int,
+                           page_len: int = 16,
+                           n_pages: Optional[int] = None
+                           ) -> Dict[str, int]:
+        """Paged-pool vs. bucketed HBM accounting — the paged companion
+        of :meth:`kv_bytes_saved`, reported next to it by the serving
+        benchmark. Pure static-shape accounting (``jax.eval_shape``).
+
+        ``bucketed`` is what ``slots`` per-slot worst-case overlay
+        buckets of ``max_len`` rows cost; ``paged`` is the shared pool
+        (``n_pages`` pages of ``page_len`` rows, default sized to the
+        same worst case) plus the page tables; ``saved`` is their
+        difference — it goes positive exactly when the pool is sized to
+        LIVE tokens instead of worst-case buckets, which is where the
+        "more concurrent slots per HBM budget" multiplier comes from.
+        """
+        if not self.kv_overlay:
+            return {"bucketed": 0, "paged": 0, "saved": 0}
+        pages_per_slot = pages_for_rows(int(max_len), int(page_len))
+        if n_pages is None:
+            n_pages = int(slots) * pages_per_slot + 1
+        pool = jax.eval_shape(lambda: make_paged_pool(
+            self.cfg, int(n_pages), int(page_len),
+            kv_plane_bits=self.kv_plane_bits))
+        nbytes = lambda st: sum(
+            int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+            for v in st.values())
+        st = jax.eval_shape(lambda: make_decode_state(
+            self.cfg, 1, int(max_len), dtype=jnp.float32,
+            kv_format="overlay", kv_plane_bits=self.kv_plane_bits))
+        bucketed = int(slots) * sum(
+            int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+            for k, v in st.items() if k.startswith("kv."))
+        tables = int(slots) * pages_per_slot * 4     # int32 page tables
+        paged = nbytes(pool) + tables
+        return {"bucketed": bucketed, "paged": paged,
+                "saved": bucketed - paged}

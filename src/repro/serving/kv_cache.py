@@ -36,7 +36,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
-from repro.models import init_decode_state
+from repro.models import init_decode_state, init_paged_pool, init_paged_state
 
 
 def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
@@ -50,6 +50,169 @@ def make_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     return init_decode_state(cfg, batch, max_len, dtype=dtype,
                              kv_format=kv_format,
                              kv_plane_bits=kv_plane_bits)
+
+
+# ---------------------------------------------------------------------------
+# Paged plane pool: ONE shared store, per-slot page tables, host allocator
+# ---------------------------------------------------------------------------
+#: reserved trash/pin page id — never allocated; unallocated page-table
+#: entries (0) route gated writes and dead-tile reads here
+TRASH_PAGE = 0
+
+
+def make_paged_pool(cfg: ModelConfig, n_pages: int, page_len: int,
+                    kv_plane_bits: int = 8) -> Dict[str, jax.Array]:
+    """The shared paged KV plane pool (``pool.{i}.*`` leaves) — see
+    :func:`repro.models.init_paged_pool`. Live pages, not worst-case
+    buckets, bound HBM: ``n_pages`` is the budget knob."""
+    return init_paged_pool(cfg, n_pages, page_len,
+                           kv_plane_bits=kv_plane_bits)
+
+
+def make_paged_state(cfg: ModelConfig, batch: int, max_len: int,
+                     page_len: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    """Per-slot decode state for the paged cache: ``page_table`` instead
+    of bucketed ``kv.*`` arrays (see :func:`repro.models.init_paged_state`)."""
+    return init_paged_state(cfg, batch, max_len, page_len, dtype=dtype)
+
+
+def pages_for_rows(n_rows: int, page_len: int) -> int:
+    """Pages needed to cover ``n_rows`` KV rows: ceil(n / page_len)."""
+    if page_len <= 0:
+        raise ValueError(f"page_len must be positive, got {page_len}")
+    return -(-max(0, int(n_rows)) // int(page_len))
+
+
+class PagePool:
+    """Host-side page allocator for the shared plane pool.
+
+    Pages are ids in ``[1, n_pages)`` — page 0 is the reserved trash
+    page and is never handed out. ``alloc`` is all-or-nothing (returns
+    ``None`` when the pool can't cover the request, so the admission
+    router can queue or preempt instead of partially admitting);
+    ``free`` rejects double-frees and foreign ids. Every page tracks an
+    ``owner`` tag so preemption can assert it reclaimed exactly the
+    victim's pages, and ``high_watermark`` records the peak pages in
+    use — the fragmentation bound the property tests pin.
+    """
+
+    def __init__(self, n_pages: int, page_len: int):
+        if n_pages < 2:
+            raise ValueError("paged pool needs >= 2 pages "
+                             "(page 0 is the trash page)")
+        self.n_pages = int(n_pages)
+        self.page_len = int(page_len)
+        self._free = list(range(self.n_pages - 1, 0, -1))
+        self._owner: Dict[int, object] = {}
+        self.high_watermark = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    def pages_for(self, n_rows: int) -> int:
+        return pages_for_rows(n_rows, self.page_len)
+
+    def alloc(self, n: int, owner=None):
+        """Allocate ``n`` pages for ``owner``; all-or-nothing — returns
+        the page-id list, or ``None`` if fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for p in ids:
+            self._owner[p] = owner
+        self.high_watermark = max(self.high_watermark, self.n_used)
+        return ids
+
+    def free(self, ids) -> None:
+        ids = list(ids)
+        for p in ids:
+            if p not in self._owner:
+                raise ValueError(f"free of unallocated page {p} "
+                                 "(double free or trash page)")
+        for p in ids:
+            del self._owner[p]
+            self._free.append(p)
+
+    def owned(self, owner):
+        """Pages currently allocated to ``owner`` (sorted)."""
+        return sorted(p for p, o in self._owner.items() if o == owner)
+
+    def stats(self) -> Dict[str, int]:
+        return {"n_pages": self.n_pages, "page_len": self.page_len,
+                "used_pages": self.n_used, "free_pages": self.n_free,
+                "high_watermark_pages": self.high_watermark}
+
+
+def pool_page_bytes(pool: Dict[str, jax.Array]) -> int:
+    """HBM bytes ONE page costs across every ``pool.*`` leaf (all layers,
+    K and V, planes + scale/zero rows)."""
+    return int(sum(np.prod(v.shape[1:]) * v.dtype.itemsize
+                   for k, v in pool.items() if k.startswith("pool.")))
+
+
+def pool_accounting(pool: Dict[str, jax.Array], allocator: PagePool,
+                    live_rows: int = 0) -> Dict[str, int]:
+    """Pool accounting for the byte reports: live vs. allocated bytes
+    and the fragmentation high-watermark.
+
+    ``live_rows`` is the total KV rows actually written across live
+    slots; ``allocated`` counts whole pages handed out, so
+    ``fragmentation_bytes = allocated - live`` is the internal-
+    fragmentation cost of the page granularity (bounded by one page per
+    live slot). ``capacity_bytes`` is the whole pool — the number a
+    bucketed allocator would multiply by worst-case slots."""
+    page_b = pool_page_bytes(pool)
+    row_b = page_b // max(1, allocator.page_len)
+    allocated = allocator.n_used * page_b
+    live = int(live_rows) * row_b
+    return {
+        "page_bytes": page_b,
+        "capacity_bytes": int(sum(
+            np.prod(v.shape) * v.dtype.itemsize
+            for k, v in pool.items() if k.startswith("pool."))),
+        "allocated_pages": allocator.n_used,
+        "allocated_bytes": allocated,
+        "live_rows": int(live_rows),
+        "live_bytes": live,
+        "fragmentation_bytes": allocated - live,
+        "high_watermark_pages": allocator.high_watermark,
+        "high_watermark_bytes": allocator.high_watermark * page_b,
+    }
+
+
+# donated: recycling freed pages rewrites the pool's own HBM (page ids
+# are bucketed to powers of two by the wrapper to bound recompiles)
+_zero_pages = jax.jit(
+    lambda pool, ids: jax.tree.map(lambda v: v.at[ids].set(0), pool),
+    donate_argnums=0)
+
+
+def zero_pool_pages(pool: Dict[str, jax.Array], ids
+                    ) -> Dict[str, jax.Array]:
+    """Zero the given pages across every pool leaf (buffer-donated).
+
+    Freed pages MUST be zeroed before reuse — the zero-rows invariant
+    (rollback erases exactly the rows it wrote, tail rows read as
+    masked zeros) is stated over page content, and a recycled page must
+    look like a fresh one. The id list is padded with the trash page to
+    the next power of two so one compiled zeroing serves each bucket.
+    """
+    ids = [int(p) for p in ids]
+    if not ids:
+        return pool
+    n = 1
+    while n < len(ids):
+        n *= 2
+    ids = ids + [TRASH_PAGE] * (n - len(ids))
+    return _zero_pages(pool, jnp.asarray(ids, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -113,8 +276,9 @@ def stage_bytes(state: Dict[str, jax.Array]) -> Dict[str, int]:
     """Per-component byte accounting of one stage's state.
 
     Top-level keys: ``kv`` (self-attention caches, all representations),
-    ``ssm`` (recurrent + conv tails), ``xkv`` (cross-attention caches),
-    ``other`` (positions etc.), ``total`` (= kv + ssm + xkv + other).
+    ``pool`` (the shared paged plane pool), ``ssm`` (recurrent + conv
+    tails), ``xkv`` (cross-attention caches), ``other`` (positions,
+    page tables etc.), ``total`` (= kv + pool + ssm + xkv + other).
     The ``kv`` term is additionally split BY REPRESENTATION —
     ``kv_planes`` (bitplane stacks), ``kv_scales`` (scale + zero rows,
     overlay or int8), ``kv_dense`` (dense fp/int8 value rows) — with
@@ -124,7 +288,7 @@ def stage_bytes(state: Dict[str, jax.Array]) -> Dict[str, int]:
     ``kv`` + ``ssm`` terms) is a first-class number in the benchmarks.
     """
     out = {"kv": 0, "kv_planes": 0, "kv_scales": 0, "kv_dense": 0,
-           "ssm": 0, "xkv": 0, "other": 0}
+           "pool": 0, "ssm": 0, "xkv": 0, "other": 0}
     for k, v in state.items():
         nbytes = int(np.prod(v.shape) * v.dtype.itemsize)
         if k.startswith("kv."):
@@ -135,13 +299,19 @@ def stage_bytes(state: Dict[str, jax.Array]) -> Dict[str, int]:
                 out["kv_scales"] += nbytes
             else:
                 out["kv_dense"] += nbytes
+        elif k.startswith("pool."):
+            # the SHARED paged plane pool: sized by live pages across
+            # all slots, not per-slot buckets (see pool_accounting for
+            # the live/allocated/fragmentation split)
+            out["pool"] += nbytes
         elif k.startswith("ssm."):
             out["ssm"] += nbytes
         elif k.startswith("xkv."):
             out["xkv"] += nbytes
         else:
             out["other"] += nbytes
-    out["total"] = out["kv"] + out["ssm"] + out["xkv"] + out["other"]
+    out["total"] = out["kv"] + out["pool"] + out["ssm"] + out["xkv"] + \
+        out["other"]
     return out
 
 
@@ -271,7 +441,126 @@ def rollback_decode_state(state: Dict[str, jax.Array],
     return out
 
 
-__all__ = ["handoff_state", "insert_slot_state", "make_decode_state",
-           "make_prefill_state", "n_prefill_chunks", "prefill_len",
-           "reset_state", "rollback_decode_state", "stage_bytes",
-           "state_bytes"]
+def insert_slot_state_paged(dst: Dict[str, jax.Array],
+                            pool: Dict[str, jax.Array],
+                            src: Dict[str, jax.Array],
+                            slot: jax.Array,
+                            pages_row: jax.Array,
+                            prompt_len: jax.Array):
+    """The paged half of the prefill→decode handoff: scatter a batch-1
+    BUCKETED prefill state's KV into the shared pool's pages and point
+    slot ``slot``'s page table at them.
+
+    ``pages_row`` is the slot's full host-built page-table row (P,)
+    int32 — the leading ``ceil(prompt_len / page_len)`` entries are
+    freshly allocated pages, the rest ``TRASH_PAGE``. Prefill-bucket
+    pad rows (>= ``prompt_len``, traced) are MASKED TO ZERO before the
+    scatter, re-establishing the zero-rows invariant on the new pages;
+    all-zero blocks covering dead tables entries land on the trash page
+    harmlessly. SSM tails / xkv / ``pos`` follow the bucketed
+    :func:`insert_slot_state` semantics (offset 0 — prefill-at-admission
+    fills from row 0). Returns ``(new_dst, new_pool)``; compiled with
+    the prefill shardings in and slot/pool shardings out this remains
+    the ONE step where GSPMD moves the KV block across mesh slices.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    prompt_len = jnp.asarray(prompt_len, jnp.int32)
+    pages_row = jnp.asarray(pages_row, jnp.int32)
+    out = dict(dst)
+    new_pool = dict(pool)
+    p_slot = pages_row.shape[0]
+    # page geometry from any plane leaf
+    page_len = next(v.shape[2] for k, v in pool.items()
+                    if k.endswith("_planes"))
+    for k, v in src.items():
+        if k == "pos":
+            out[k] = dst[k].at[slot].set(v)
+        elif k.startswith("kv."):
+            pkey = "pool." + k[len("kv."):]
+            d = new_pool[pkey]
+            if k.endswith("_planes"):
+                # src (1, B, L_pf, hkv, dw): mask pad rows, split the
+                # sequence axis into pages, scatter to the table row
+                rows = v[0]
+                n_pg = min(-(-rows.shape[1] // page_len), p_slot)
+                keep = n_pg * page_len
+                rows = rows[:, :keep] if keep <= rows.shape[1] else \
+                    jnp.pad(rows, ((0, 0), (0, keep - rows.shape[1])) +
+                            ((0, 0),) * (rows.ndim - 2))
+                valid = (jnp.arange(keep) < prompt_len)
+                rows = jnp.where(
+                    valid[None, :, None, None], rows, 0)
+                blocks = rows.reshape(
+                    (rows.shape[0], n_pg, page_len) + rows.shape[2:])
+                blocks = jnp.moveaxis(blocks, 1, 0)   # (n_pg, B, L, ...)
+            else:
+                rows = v[0]                           # (L_pf, hkv, 1)
+                n_pg = min(-(-rows.shape[0] // page_len), p_slot)
+                keep = n_pg * page_len
+                rows = rows[:keep] if keep <= rows.shape[0] else \
+                    jnp.pad(rows, ((0, keep - rows.shape[0]),) +
+                            ((0, 0),) * (rows.ndim - 1))
+                valid = (jnp.arange(keep) < prompt_len)
+                rows = jnp.where(valid[:, None, None], rows, 0)
+                blocks = rows.reshape((n_pg, page_len) + rows.shape[1:])
+            new_pool[pkey] = d.at[pages_row[:n_pg]].set(
+                blocks.astype(d.dtype))
+        else:
+            out[k] = dst[k].at[slot].set(v.astype(dst[k].dtype))
+    out["page_table"] = dst["page_table"].at[slot].set(pages_row[None])
+    return out, new_pool
+
+
+def rollback_decode_state_paged(state: Dict[str, jax.Array],
+                                pool: Dict[str, jax.Array],
+                                snaps: Dict[str, jax.Array],
+                                n_keep: jax.Array,
+                                window: int):
+    """Paged twin of :func:`rollback_decode_state`: the KV erase runs on
+    the accepted window's PAGES only — a ``window``-row zero scatter
+    through the slot's page table per layer — instead of zero-filling
+    bucket rows. Other slots' pages are untouched by construction (the
+    allocator never aliases live pages), and rows whose table entry is
+    unallocated land on the trash page. SSM snapshot selection and the
+    ``pos`` rebase are identical to the bucketed rollback. Freeing the
+    pages past the accepted prefix back to the allocator is the HOST'S
+    move (the scheduler trims at the post-sync step — page ids are host
+    state); this function only restores device content. Returns
+    ``(new_state, new_pool)``.
+    """
+    from repro.models.attention import paged_zero_window  # deferred
+    n_keep = jnp.asarray(n_keep, jnp.int32)
+    out = dict(state)
+    new_pos = state["pos"] - jnp.int32(window) + n_keep
+    for key, v in state.items():
+        if key == "pos":
+            out[key] = new_pos
+        elif key in snaps:
+            out[key] = jax.lax.dynamic_index_in_dim(
+                snaps[key], n_keep - 1, axis=0,
+                keepdims=False).astype(v.dtype)
+    new_pool = dict(pool)
+    layers = sorted({k.split(".")[1] for k in pool if k.endswith("_planes")},
+                    key=int)
+    for i in layers:
+        kp, ks, kz, vp, vs, vz = paged_zero_window(
+            pool[f"pool.{i}.k_planes"], pool[f"pool.{i}.k_scale"],
+            pool[f"pool.{i}.k_zero"], pool[f"pool.{i}.v_planes"],
+            pool[f"pool.{i}.v_scale"], pool[f"pool.{i}.v_zero"],
+            state["page_table"], new_pos, window)
+        new_pool[f"pool.{i}.k_planes"] = kp
+        new_pool[f"pool.{i}.k_scale"] = ks
+        new_pool[f"pool.{i}.k_zero"] = kz
+        new_pool[f"pool.{i}.v_planes"] = vp
+        new_pool[f"pool.{i}.v_scale"] = vs
+        new_pool[f"pool.{i}.v_zero"] = vz
+    return out, new_pool
+
+
+__all__ = ["PagePool", "TRASH_PAGE", "handoff_state", "insert_slot_state",
+           "insert_slot_state_paged", "make_decode_state",
+           "make_paged_pool", "make_paged_state", "make_prefill_state",
+           "n_prefill_chunks", "pages_for_rows", "pool_accounting",
+           "pool_page_bytes", "prefill_len", "reset_state",
+           "rollback_decode_state", "rollback_decode_state_paged",
+           "stage_bytes", "state_bytes", "zero_pool_pages"]

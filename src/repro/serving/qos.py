@@ -8,6 +8,7 @@ overhead, calibrated against measured step times when available.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -25,7 +26,7 @@ class LatencyModel:
         return self.bytes_per_bit * bits / (HBM_BW * chips) + self.overhead_s
 
     def ttft(self, bits: float, prompt_len: int, prefill_chunk: int,
-             chips: int = 1) -> float:
+             chips: int = 1, queued_launches: int = 0) -> float:
         """Predicted time-to-first-token of the batched prefill stage.
 
         Each of the ``ceil(p / prefill_chunk)`` launches streams the
@@ -35,9 +36,16 @@ class LatencyModel:
         prefill is the ``prefill_chunk=1`` special case: p launches,
         p× the weight traffic — which is exactly why long prompts used
         to blow short TPOT budgets.
+
+        ``queued_launches`` is the prefill-worker QUEUE DEPTH — launches
+        already queued ahead of this request on its assigned worker.
+        A request admitted behind a burst waits for those first, so
+        pricing only the request's own ``ceil(p / prefill_chunk)``
+        underestimates TTFT exactly when the fleet is busiest.
         """
         launches = max(1, -(-int(prompt_len) // max(1, int(prefill_chunk))))
-        return launches * self.tpot(bits, chips)
+        return (launches + max(0, int(queued_launches))) * \
+            self.tpot(bits, chips)
 
     def spec_tpot(self, bits: float, k: int, acceptance: float,
                   draft_bits: float = 2.0, chips: int = 1) -> float:
@@ -95,7 +103,8 @@ class QoSPlanner:
              utilization: float = 0.0,
              prompt_len: Optional[int] = None,
              ttft_budget_s: Optional[float] = None,
-             prefill_chunk: Optional[int] = None) -> float:
+             prefill_chunk: Optional[int] = None,
+             queued_launches: int = 0) -> float:
         """Highest precision fitting the budget at current utilization.
 
         With a ``ttft_budget_s`` (and the prompt length), a TTFT term
@@ -106,6 +115,12 @@ class QoSPlanner:
         slot's deadline. ``prefill_chunk=None`` models the tick-by-tick
         prefill (chunk of 1 — the legacy worst case, p launches).
         Requests without a TTFT budget keep the TPOT-only admission.
+
+        ``queued_launches`` prices the prefill-worker queue depth into
+        the TTFT guard: the request waits behind launches already queued
+        on its assigned worker, not just its own ``ceil(p / chunk)`` —
+        the admission router reports the depth of the least-loaded
+        worker at routing time.
         """
         if ttft_budget_s is not None and not prompt_len:
             raise ValueError("a ttft_budget_s needs prompt_len — without "
@@ -116,9 +131,125 @@ class QoSPlanner:
         if prompt_len and ttft_budget_s is not None:
             chunk = prefill_chunk or 1
             feasible = [t for t in feasible
-                        if self.latency.ttft(t, prompt_len, chunk,
-                                             self.chips) <= ttft_budget_s]
+                        if self.latency.ttft(
+                            t, prompt_len, chunk, self.chips,
+                            queued_launches=queued_launches)
+                        <= ttft_budget_s]
         return feasible[-1] if feasible else min(self.targets)
+
+
+@dataclass
+class PriorityClass:
+    """One admission class of the router: a priority rank and the
+    per-class SLOs goodput is measured against. Lower ``priority`` is
+    more urgent. A request belongs to the most urgent class whose SLOs
+    cover its budgets (``classify``); requests with no budgets fall to
+    the least urgent class."""
+    name: str
+    priority: int
+    ttft_slo_s: float
+    tpot_slo_s: float
+
+
+DEFAULT_CLASSES = (
+    PriorityClass("interactive", 0, ttft_slo_s=0.25, tpot_slo_s=0.03),
+    PriorityClass("standard", 1, ttft_slo_s=1.0, tpot_slo_s=0.10),
+    PriorityClass("batch", 2, ttft_slo_s=10.0, tpot_slo_s=1.00),
+)
+
+
+class AdmissionRouter:
+    """Priority-class admission in front of the decode scheduler, plus
+    the prefill-worker fleet's routing/queue-depth bookkeeping.
+
+    Requests queue per class and drain most-urgent-first (FIFO within a
+    class). Each admission is routed to the least-loaded prefill worker;
+    the launches already queued on that worker are reported so
+    :meth:`QoSPlanner.plan` prices the real TTFT (queue depth included,
+    not just the request's own launches). ``pick_victim`` names the
+    preemption order for page reclaim: least urgent class first, then
+    the youngest admission — an over-budget prompt gives its pages back
+    before anyone more urgent degrades.
+    """
+
+    def __init__(self, classes: Sequence[PriorityClass] = DEFAULT_CLASSES,
+                 prefill_workers: int = 1):
+        if not classes:
+            raise ValueError("router needs at least one priority class")
+        if prefill_workers < 1:
+            raise ValueError("router needs at least one prefill worker")
+        self.classes = sorted(classes, key=lambda c: c.priority)
+        self._queues: Dict[str, deque] = {c.name: deque()
+                                          for c in self.classes}
+        self.n_workers = int(prefill_workers)
+        self._worker_queued = [0] * self.n_workers
+
+    def classify(self, request) -> PriorityClass:
+        tpot = getattr(request, "tpot_budget_s", None)
+        ttft = getattr(request, "ttft_budget_s", None)
+        for c in self.classes:
+            ttft_ok = ttft is not None and ttft <= c.ttft_slo_s
+            tpot_ok = tpot is not None and tpot <= c.tpot_slo_s
+            if ttft_ok or tpot_ok:
+                return c
+        return self.classes[-1]
+
+    def submit(self, request) -> PriorityClass:
+        c = self.classify(request)
+        self._queues[c.name].append(request)
+        return c
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def next_request(self):
+        """Pop the most urgent queued request (None if all queues empty)."""
+        for c in self.classes:
+            q = self._queues[c.name]
+            if q:
+                return q.popleft()
+        return None
+
+    def requeue(self, request) -> PriorityClass:
+        """Put a preempted request BACK at the head of its class queue —
+        it already waited once; preemption must not also demote it."""
+        c = self.classify(request)
+        self._queues[c.name].appendleft(request)
+        return c
+
+    # -- prefill-worker fleet bookkeeping ---------------------------------
+    def route_prefill(self, launches: int):
+        """Assign a prefill job to the least-loaded worker.
+
+        Returns ``(worker_index, queued_ahead)`` — the launches already
+        queued on that worker BEFORE this job (the queue-depth term of
+        the TTFT price) — and enqueues the job's own launches.
+        """
+        wi = min(range(self.n_workers),
+                 key=lambda i: self._worker_queued[i])
+        ahead = self._worker_queued[wi]
+        self._worker_queued[wi] += max(1, int(launches))
+        return wi, ahead
+
+    def finish_prefill(self, worker_index: int, launches: int) -> None:
+        """Drain a completed job's launches from its worker's queue."""
+        self._worker_queued[worker_index] = max(
+            0, self._worker_queued[worker_index] - max(1, int(launches)))
+
+    def queue_depth(self, worker_index: Optional[int] = None) -> int:
+        if worker_index is None:
+            return min(self._worker_queued)
+        return self._worker_queued[worker_index]
+
+    def pick_victim(self, candidates):
+        """Choose the preemption victim from ``(slot_index, request,
+        admit_order)`` triples: least urgent class first, youngest
+        admission within it. Returns the slot index (None if empty)."""
+        if not candidates:
+            return None
+        best = max(candidates,
+                   key=lambda t: (self.classify(t[1]).priority, t[2]))
+        return best[0]
 
 
 @dataclass

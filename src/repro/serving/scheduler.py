@@ -48,7 +48,26 @@ Mechanics:
   slots, record per-request effective bits into the
   :class:`QueryBitTracker`, and admit queued requests into freed slots
   (plus one small pull per admission for the prefill-emitted first
-  token).
+  token);
+- with ``paged=True`` the per-slot KV buckets become ONE shared plane
+  pool plus per-slot page tables (``serving/kv_cache``'s paged state;
+  ``kernels/kv_attention/paged.py``'s kernel) — live pages, not
+  worst-case ``max_len`` buckets, bound HBM, so ``n_pages`` admits far
+  more slots per byte. The host :class:`~repro.serving.kv_cache.PagePool`
+  is the allocator of record: admission reserves the prompt plus one
+  chunk's headroom, each chunk GROWS busy slots by ``chunk_advance``
+  rows up front and TRIMS to the accepted length afterwards, retire and
+  speculative-surplus frees return pages to the pool, and every freed
+  page is zeroed before reuse (the zero-rows invariant is stated over
+  page content). When the pool runs dry the scheduler preempts — victim
+  chosen by the router (least urgent class, youngest admission), never
+  anyone at least as urgent as the requester (no ping-pong), pages
+  reclaimed and the request requeued at the HEAD of its class; the
+  restart replays the plan-once target, so preemption is bit-invisible
+  in the output stream. An optional :class:`AdmissionRouter` fronts the
+  queue with priority classes and routes each admission's prefill to
+  the least-loaded worker, whose queue depth prices the TTFT guard in
+  :meth:`QoSPlanner.plan` (``queued_launches``).
 
 Slot-axis array layout — the contract the mesh sharding relies on
 -----------------------------------------------------------------
@@ -66,6 +85,14 @@ ALWAYS the slot axis)::
     prompt_len   (S,) int32   actual prompt length
     total_len    (S,) int32   prompt_len + max_new; 0 marks an idle slot
     target_ix    (S,) int32   per-slot index into the target-stacked arrays
+
+Paged mode swaps the KV leaves for ``page_table (S, 1, ceil(L/page_len))``
+int32 (slot axis leading, like every per-slot vector) plus the SHARED
+``pool.*`` leaves ``(n_pages, ...)`` — the pool has NO slot axis and rides
+through the vmapped tick unbatched (``custom_vmap``); on the mesh the
+pool's page axis stays replicated over 'data' (any slot's table may point
+at any page — ``distributed/sharding.paged_pool_spec``) while page tables
+follow the slot rule (``page_table_spec``).
 
 On the production mesh (``distributed/sharding.SERVE_RULES``) the slot
 axis maps onto the 'data' mesh axis — each data-parallel group decodes
@@ -88,14 +115,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import (decision_carry_spec, prefill_spec,
-                                        slot_state_spec, slot_vec_spec)
+from repro.distributed.sharding import (decision_carry_spec,
+                                        page_table_spec, paged_pool_spec,
+                                        prefill_spec, slot_state_spec,
+                                        slot_vec_spec)
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import (insert_slot_state, make_decode_state,
-                                    make_prefill_state, n_prefill_chunks,
-                                    prefill_len, reset_state,
-                                    rollback_decode_state)
-from repro.serving.qos import QoSPlanner, QueryBitTracker
+from repro.serving.kv_cache import (PagePool, insert_slot_state,
+                                    insert_slot_state_paged,
+                                    make_decode_state, make_paged_pool,
+                                    make_paged_state, make_prefill_state,
+                                    n_prefill_chunks, pages_for_rows,
+                                    pool_accounting, prefill_len,
+                                    reset_state, rollback_decode_state,
+                                    rollback_decode_state_paged,
+                                    zero_pool_pages)
+from repro.serving.qos import AdmissionRouter, QoSPlanner, QueryBitTracker
 
 
 @dataclass
@@ -119,6 +153,7 @@ class _Slot:
     request: Optional[Request] = None
     gen_tokens: List[int] = field(default_factory=list)
     gen_bits: List[float] = field(default_factory=list)
+    admit_order: int = -1     # admission sequence number (victim ordering)
 
 
 class SlotScheduler:
@@ -136,6 +171,11 @@ class SlotScheduler:
         mode: str = "dynamic",
         tracker: Optional[QueryBitTracker] = None,
         spec_k: Optional[int] = None,
+        paged: bool = False,
+        page_len: int = 16,
+        n_pages: Optional[int] = None,
+        router: Optional[AdmissionRouter] = None,
+        prefill_workers: int = 1,
     ):
         self.engine = engine
         self.planner = planner
@@ -153,6 +193,15 @@ class SlotScheduler:
         self.completed: List[Request] = []
         self._queue: deque = deque()
         self._slots = [_Slot() for _ in range(self.n_slots)]
+        # admission router / prefill-worker fleet: queueing moves into the
+        # router's priority classes when one is supplied (or implied by a
+        # multi-worker fleet); without one the plain FIFO deque stands
+        self.router = router
+        if self.router is None and int(prefill_workers) > 1:
+            self.router = AdmissionRouter(
+                prefill_workers=int(prefill_workers))
+        self._admit_seq = 0
+        self.preemptions = 0
 
         cfg = engine.cfg
         if cfg.vocab_size >= 2 ** 24:   # chunk harvest packs ids via f32
@@ -206,11 +255,67 @@ class SlotScheduler:
                     for k, v in self._pf_state.items()}
                 self._pf_state = {k: jax.device_put(v, self._pf_sh[k])
                                   for k, v in self._pf_state.items()}
+        # paged bitplane-KV pool: per-slot bucketed KV arrays are replaced
+        # by ONE shared page store + per-slot page tables. The pool leaves
+        # ride inside self._state UNSTACKED (no slot axis — every vmap /
+        # scan / insert below uses per-leaf axes so they flow through the
+        # compiled steps unbatched; the kernels' custom_vmap rules fold
+        # all slots' reads/writes into single gathers/scatters over
+        # allocator-disjoint pages). The HOST owns allocation: a numpy
+        # page-table mirror is the source of truth, uploaded before every
+        # chunk, and the PagePool allocator grows/trims/preempts it.
+        self._max_len = max_len
+        self._paged = bool(paged)
+        self.page_len = int(page_len)
+        self.page_alloc: Optional[PagePool] = None
+        if self._paged:
+            if not engine.kv_overlay:
+                raise ValueError("paged KV needs the bitplane overlay "
+                                 "cache (engine kv_format='overlay')")
+            if not self._use_prefill:
+                raise ValueError("paged KV needs a prefill-staged engine "
+                                 "(engine.prefill_chunk > 0) — the pool "
+                                 "is filled through the prefill handoff")
+            if self.page_len < 1:
+                raise ValueError(f"page_len must be >= 1, got "
+                                 f"{self.page_len}")
+            self._pages_per_slot = pages_for_rows(max_len, self.page_len)
+            if n_pages is None:
+                # safe default: every slot can hold its worst case (no
+                # savings, no preemption); callers size the pool DOWN to
+                # realize the paged savings and let preemption-by-page-
+                # reclaim police the budget (+1 for the trash page)
+                n_pages = s * self._pages_per_slot + 1
+            self.n_pages = int(n_pages)
+            self.page_alloc = PagePool(self.n_pages, self.page_len)
+            self._page_rows = np.zeros((s, self._pages_per_slot),
+                                       np.int32)
+            self._slot_pages: List[List[int]] = [[] for _ in range(s)]
+            self._host_counts = np.zeros((s,), np.int64)
+            # rows one chunk can touch past a slot's count: chunk decode
+            # ticks (x k accepts under speculation) plus the verify
+            # window's 2k write/rollback slack, plus one row of cushion
+            self._chunk_advance = self.chunk * (self.spec_k or 1) + \
+                2 * (self.spec_k or 0) + 1
         # per-slot state: each slot is an independent batch-1 decode state
-        proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32,
-                                  **self._kv_fmt)
-        self._state = jax.tree.map(
-            lambda x: jnp.zeros((s,) + x.shape, x.dtype), proto)
+        if self._paged:
+            proto = make_paged_state(cfg, 1, max_len, self.page_len,
+                                     dtype=jnp.float32)
+            pool = make_paged_pool(cfg, self.n_pages, self.page_len,
+                                   kv_plane_bits=engine.kv_plane_bits)
+            stacked = jax.tree.map(
+                lambda x: jnp.zeros((s,) + x.shape, x.dtype), proto)
+            self._state = {**stacked, **pool}
+            # per-leaf vmap axes: slot-stacked leaves batch on axis 0,
+            # pool leaves flow through UNBATCHED (None)
+            self._state_axes = {k: (None if k.startswith("pool.") else 0)
+                                for k in self._state}
+        else:
+            proto = make_decode_state(cfg, 1, max_len, dtype=jnp.float32,
+                                      **self._kv_fmt)
+            self._state = jax.tree.map(
+                lambda x: jnp.zeros((s,) + x.shape, x.dtype), proto)
+            self._state_axes = None
         self._cur = jnp.zeros((s,), jnp.int32)
         self._step_count = jnp.zeros((s,), jnp.int32)
         self._bits = jnp.zeros((s, self._n_units), jnp.int32)
@@ -219,6 +324,7 @@ class SlotScheduler:
         self._total_len = jnp.zeros((s,), jnp.int32)   # 0 => slot idle
         self._target_ix = jnp.zeros((s,), jnp.int32)
         self._shardings = None
+        self._state_sh = None
         if self.mesh is not None:
             self._shard_slot_state()
 
@@ -258,8 +364,16 @@ class SlotScheduler:
         donated slot state never leaves the mesh between chunks.
         """
         mesh = self.mesh
-        state_sh = {k: NamedSharding(mesh, slot_state_spec(mesh, k, v.shape))
-                    for k, v in self._state.items()}
+        state_sh = {}
+        for k, v in self._state.items():
+            if k.startswith("pool."):
+                spec = paged_pool_spec(mesh, k, v.shape)
+            elif k == "page_table":
+                spec = page_table_spec(mesh, v.shape)
+            else:
+                spec = slot_state_spec(mesh, k, v.shape)
+            state_sh[k] = NamedSharding(mesh, spec)
+        self._state_sh = state_sh
         vec_sh = NamedSharding(mesh, slot_vec_spec(
             mesh, (self.n_slots,)))
         buf_sh = NamedSharding(mesh, slot_vec_spec(
@@ -300,6 +414,20 @@ class SlotScheduler:
             tick = self.engine.build_planned_tick(mode)
         else:
             tick = self.engine.build_tick(mode)
+        # paged mode: the pool leaves of the state dict stay UNBATCHED
+        # under the slot vmap (per-leaf axes) — the paged read/write ops'
+        # custom_vmap rules fold every slot's page-indirect access into
+        # one gather/scatter over the shared pool
+        sa = self._state_axes
+        if sa is not None:
+            if self._use_planner:
+                vtick = jax.vmap(tick, in_axes=(sa, 0, 0, 0, 0),
+                                 out_axes=(0, sa, 0, 0))
+            else:
+                vtick = jax.vmap(tick, in_axes=(sa, 0, 0, 0),
+                                 out_axes=(0, sa, 0))
+        else:
+            vtick = jax.vmap(tick)
 
         def chunk(state, cur, step_count, *rest):
             key = ("slot_chunk", mode)
@@ -320,11 +448,11 @@ class SlotScheduler:
                     # lookup-and-apply + ONE fused (S, U) planner launch
                     # deciding the next tick — the (S, U) carry is the
                     # scheduler's half of the async pipeline
-                    logits, state, eb, bits = jax.vmap(tick)(
+                    logits, state, eb, bits = vtick(
                         state, tok[:, None, None], target_ix, bits,
                         running)
                 else:
-                    logits, state, eb = jax.vmap(tick)(
+                    logits, state, eb = vtick(
                         state, tok[:, None, None], target_ix, running)
                 nxt = jnp.argmax(logits[:, 0, 0, :vocab],
                                  axis=-1).astype(jnp.int32)
@@ -386,6 +514,7 @@ class SlotScheduler:
         verify = self.engine.build_verify_rows(mode, k)
         use_planner = self._use_planner
         n_units = self._n_units
+        paged = self._paged
 
         def window_slot(state, cur, bits, count, total_len, tix):
             """One window for ONE slot (batch-1 state under the vmap)."""
@@ -417,7 +546,20 @@ class SlotScheduler:
                 n_acc = jnp.sum(jnp.cumprod(ok))
             else:
                 n_acc = jnp.int32(0)
-            state = rollback_decode_state(state, snaps, n_acc + 1, k)
+            if paged:
+                # paged rollback: the accepted window's pages are already
+                # in the slot's table — zero the rejected rows THROUGH
+                # the page indirection; freeing surplus pages back to
+                # the pool is the HOST's move (post-sync trim)
+                pool = {kk: vv for kk, vv in state.items()
+                        if kk.startswith("pool.")}
+                core = {kk: vv for kk, vv in state.items()
+                        if not kk.startswith("pool.")}
+                core, pool = rollback_decode_state_paged(
+                    core, pool, snaps, n_acc + 1, k)
+                state = {**core, **pool}
+            else:
+                state = rollback_decode_state(state, snaps, n_acc + 1, k)
             # gated slot: its ssm/conv/pos still advanced through the
             # gated launches — restore the pre-window leaves. KV needs
             # no restore: gated projections wrote zero k/v over rows the
@@ -449,11 +591,18 @@ class SlotScheduler:
                 prompt_buf, prompt_len, total_len, target_ix = rest
                 bits = jnp.zeros((cur.shape[0], n_units), jnp.int32)
 
+            sa = self._state_axes
+            if sa is not None:
+                vwindow = jax.vmap(
+                    window_slot, in_axes=(sa, 0, 0, 0, 0, 0),
+                    out_axes=(sa, 0, 0, 0, 0, 0, 0, 0, 0))
+            else:
+                vwindow = jax.vmap(window_slot)
+
             def body(carry, _):
                 state, cur, count, bits = carry
                 state, cur, bits, count, v, ebs, emit, run_i, acc_i = \
-                    jax.vmap(window_slot)(state, cur, bits, count,
-                                          total_len, target_ix)
+                    vwindow(state, cur, bits, count, total_len, target_ix)
                 return (state, cur, count, bits), \
                     (v, ebs, emit, jnp.sum(run_i), jnp.sum(acc_i))
 
@@ -563,11 +712,25 @@ class SlotScheduler:
                 self.engine.trace_counts.get(key, 0) + 1
             if self._use_planner:
                 (bits, prompt_buf, prompt_len, total_len, target_ix,
-                 pf_state, slot, tok, carry, prow, plen, tot, tix) = rest
+                 pf_state, slot, tok, carry, prow, plen, tot, tix,
+                 *pg) = rest
             else:
                 (prompt_buf, prompt_len, total_len, target_ix,
-                 pf_state, slot, tok, prow, plen, tot, tix) = rest
-            state = insert_slot_state(state, pf_state, slot, 0)
+                 pf_state, slot, tok, prow, plen, tot, tix, *pg) = rest
+            if self._paged:
+                # paged handoff: scatter the prefill KV block into the
+                # slot's host-allocated pages (blocks past the allocated
+                # prefix land in the trash page — masked-zero rows the
+                # reads never reference) and stamp the page-table row
+                pool = {kk: vv for kk, vv in state.items()
+                        if kk.startswith("pool.")}
+                core = {kk: vv for kk, vv in state.items()
+                        if not kk.startswith("pool.")}
+                core, pool = insert_slot_state_paged(
+                    core, pool, pf_state, slot, pg[0], plen)
+                state = {**core, **pool}
+            else:
+                state = insert_slot_state(state, pf_state, slot, 0)
             out = (state, cur.at[slot].set(tok),
                    step_count.at[slot].set(plen))
             if self._use_planner:
@@ -584,7 +747,8 @@ class SlotScheduler:
         buf_rep = NamedSharding(self.mesh, P(None))
         extra = (self._pf_sh, rep, rep) + \
             ((rep,) if self._use_planner else ()) + \
-            (buf_rep, rep, rep, rep)
+            (buf_rep, rep, rep, rep) + \
+            ((buf_rep,) if self._paged else ())
         return jax.jit(ins, donate_argnums=tuple(range(n_carry)),
                        in_shardings=self._shardings + extra,
                        out_shardings=self._shardings)
@@ -598,8 +762,31 @@ class SlotScheduler:
         if not 1 <= request.max_new <= self.max_new:
             raise ValueError(f"max_new {request.max_new} not in [1, "
                              f"{self.max_new}]")
+        if self._paged:
+            # a request that cannot fit even with every other slot
+            # preempted would deadlock the admission loop — reject it
+            # at the door instead
+            worst = min(p + request.max_new - 1 + self._chunk_advance,
+                        self._max_len)
+            need = pages_for_rows(worst, self.page_len)
+            if need > self.n_pages - 1:
+                raise ValueError(
+                    f"request needs up to {need} pages but the pool has "
+                    f"{self.n_pages - 1} allocatable — enlarge n_pages")
         request._submit_t = time.monotonic()
-        self._queue.append(request)
+        if self.router is not None:
+            self.router.submit(request)
+        else:
+            self._queue.append(request)
+
+    def _pending(self) -> int:
+        return len(self.router) if self.router is not None \
+            else len(self._queue)
+
+    def _next_request(self) -> Optional[Request]:
+        if self.router is not None:
+            return self.router.next_request()
+        return self._queue.popleft() if self._queue else None
 
     @property
     def utilization(self) -> float:
@@ -608,17 +795,49 @@ class SlotScheduler:
 
     def _admit_ready(self) -> None:
         for si, slot in enumerate(self._slots):
-            if slot.request is not None or not self._queue:
+            if slot.request is not None or not self._pending():
                 continue
-            r: Request = self._queue.popleft()
+            r = self._next_request()
+            if r is None:
+                break
             prompt = np.asarray(r.prompt, np.int32).reshape(-1)
-            r.target = self.planner.plan(
-                r.tpot_budget_s, self.utilization,
-                prompt_len=len(prompt), ttft_budget_s=r.ttft_budget_s,
-                prefill_chunk=self.engine.prefill_chunk or None)
+            # admission reserves the prompt AND the first chunk's
+            # headroom — admitting with less would self-preempt at the
+            # very next grow and burn the prefill
+            if self._paged and not self._ensure_pages(
+                    si, len(prompt) + self._chunk_advance,
+                    self._urgency(r, self._admit_seq), exclude=si):
+                # pool dry with nobody less urgent to preempt: defer the
+                # admission (back at the head of its queue) until pages
+                # free up — a retiring or trimming slot unblocks it
+                if self.router is not None:
+                    self.router.requeue(r)
+                else:
+                    self._queue.appendleft(r)
+                break
+            launches = n_prefill_chunks(
+                len(prompt), self.engine.prefill_chunk) \
+                if self._use_prefill else len(prompt)
+            # route to the least-loaded prefill worker; the launches
+            # already queued ahead enter the TTFT admission price
+            wi, ahead = (self.router.route_prefill(launches)
+                         if self.router is not None else (0, 0))
+            if r.target is None:
+                # planned once, at FIRST admission: a preemption restart
+                # must replay the same precision, or the regenerated
+                # stream would diverge from the unpreempted run
+                r.target = self.planner.plan(
+                    r.tpot_budget_s, self.utilization,
+                    prompt_len=len(prompt), ttft_budget_s=r.ttft_budget_s,
+                    prefill_chunk=self.engine.prefill_chunk or None,
+                    queued_launches=ahead)
             if self._use_prefill:
                 self._admit_prefill(si, r, prompt)
+                if self.router is not None:
+                    self.router.finish_prefill(wi, launches)
                 continue
+            if self.router is not None:
+                self.router.finish_prefill(wi, launches)
             tix = self.engine.artifacts.target_index(r.target)
             prow = np.zeros((self.max_prompt,), np.int32)
             prow[:len(prompt)] = prompt
@@ -628,7 +847,9 @@ class SlotScheduler:
                     jnp.int32(len(prompt)),
                     jnp.int32(len(prompt) + r.max_new), jnp.int32(tix))
             self._set_arrays(out[:-1])
-            self._slots[si] = _Slot(request=r)
+            self._slots[si] = _Slot(request=r,
+                                    admit_order=self._admit_seq)
+            self._admit_seq += 1
             if self._use_planner and len(prompt) == 1:
                 # tick 0 (run at admission) already produced this
                 # request's first generated token + its bits
@@ -637,6 +858,148 @@ class SlotScheduler:
                 self._slots[si].gen_bits.append(float(boot_out[1]))
                 if r._submit_t is not None:
                     r.ttft_s = time.monotonic() - r._submit_t
+
+    # -- host page management (paged mode) --------------------------------------
+    def _urgency(self, request, admit_order: int) -> tuple:
+        """Preemption ordering key: (class priority, admission order) —
+        smaller is more urgent. Without a router every request is class
+        0, so urgency is pure admission order (oldest wins)."""
+        pr = self.router.classify(request).priority \
+            if self.router is not None else 0
+        return (pr, admit_order)
+
+    def _ensure_pages(self, si: int, n_rows: int,
+                      requester: tuple,
+                      exclude: Optional[int] = None) -> bool:
+        """Grow slot ``si``'s page table to cover ``n_rows`` rows.
+
+        When the pool runs dry, preemption-by-page-reclaim kicks in: the
+        victim order (least urgent class, then youngest admission) names
+        a running slot whose pages are reclaimed — exactly its pages,
+        zeroed for reuse — and whose request restarts from prefill
+        later. Only slots STRICTLY less urgent than ``requester`` are
+        eligible: a grow may never evict someone more urgent than the
+        slot asking (two same-class slots would otherwise preempt each
+        other forever — the ping-pong livelock). Returns False when no
+        pages AND no eligible victim remain; the caller defers or
+        self-preempts.
+        """
+        need = pages_for_rows(min(int(n_rows), self._max_len),
+                              self.page_len)
+        while len(self._slot_pages[si]) < need:
+            got = self.page_alloc.alloc(
+                need - len(self._slot_pages[si]), owner=si)
+            if got is None:
+                vi = self._pick_victim(requester, exclude=exclude)
+                if vi is None:
+                    return False
+                self._preempt(vi)
+                continue
+            start = len(self._slot_pages[si])
+            self._slot_pages[si].extend(got)
+            self._page_rows[si, start:start + len(got)] = got
+        return True
+
+    def _trim_slot(self, si: int, n_rows: int) -> List[int]:
+        """Free pages past what ``n_rows`` rows need (returns the freed
+        ids, NOT yet zeroed — callers batch the zeroing). Trimmed pages
+        hold only rows the rollback already zeroed, so the pool's
+        zero-rows invariant survives the round trip."""
+        keep = pages_for_rows(min(int(n_rows), self._max_len),
+                              self.page_len)
+        extra = self._slot_pages[si][keep:]
+        if extra:
+            self._slot_pages[si] = self._slot_pages[si][:keep]
+            self._page_rows[si, keep:] = 0
+            self.page_alloc.free(extra)
+        return extra
+
+    def _release_pages(self, si: int) -> List[int]:
+        """Give ALL of slot ``si``'s pages back to the pool."""
+        ids = self._slot_pages[si]
+        if ids:
+            self.page_alloc.free(ids)
+        self._slot_pages[si] = []
+        self._page_rows[si, :] = 0
+        return ids
+
+    def _zero_freed(self, ids: Sequence[int]) -> None:
+        """Zero freed pages' contents — a page re-entering the pool must
+        read as zero rows (the invariant every gated write and rollback
+        relies on)."""
+        pool = {k: v for k, v in self._state.items()
+                if k.startswith("pool.")}
+        pool = zero_pool_pages(pool, list(ids))
+        self._state.update(pool)
+
+    def _pick_victim(self, requester: tuple,
+                     exclude: Optional[int] = None) -> Optional[int]:
+        cands = [(i, s.request, s.admit_order)
+                 for i, s in enumerate(self._slots)
+                 if s.request is not None and i != exclude
+                 and self._urgency(s.request, s.admit_order) > requester]
+        if not cands:
+            return None
+        if self.router is not None:
+            return self.router.pick_victim(cands)
+        return max(cands, key=lambda t: t[2])[0]   # youngest admission
+
+    def _preempt(self, si: int) -> None:
+        """Evict slot ``si``: reclaim exactly its pages (zeroed), mark
+        the device slot idle, and requeue the request at the HEAD of its
+        class — it restarts from prefill, and the deterministic replay
+        keeps its token stream identical to an unpreempted run."""
+        slot = self._slots[si]
+        r = slot.request
+        freed = self._release_pages(si)
+        if freed:
+            self._zero_freed(freed)
+        self._total_len = self._total_len.at[si].set(0)
+        if self._shardings is not None:
+            self._total_len = jax.device_put(self._total_len,
+                                             self._shardings[1])
+        self._host_counts[si] = 0
+        self._slots[si] = _Slot()
+        self.preemptions += 1
+        r.ttft_s = None        # TTFT re-stamps at re-admission, so the
+        if self.router is not None:     # preemption wait stays in the SLO
+            self.router.requeue(r)
+        else:
+            self._queue.appendleft(r)
+
+    def _grow_and_sync(self) -> None:
+        """Pre-chunk page work: grow every busy slot's table to cover
+        the rows this chunk may write, then upload the host page tables
+        (the numpy mirror is the source of truth)."""
+        for si, slot in enumerate(self._slots):
+            if slot.request is None:
+                continue
+            if not self._ensure_pages(
+                    si, int(self._host_counts[si]) + self._chunk_advance,
+                    self._urgency(slot.request, slot.admit_order),
+                    exclude=si):
+                # pool dry and nobody less urgent to reclaim from: the
+                # over-budget slot itself gives its pages back
+                self._preempt(si)
+        pt = jnp.asarray(self._page_rows[:, None, :])
+        if self._state_sh is not None:
+            pt = jax.device_put(pt, self._state_sh["page_table"])
+        self._state["page_table"] = pt
+
+    def paged_stats(self) -> dict:
+        """Pool accounting (live vs. allocated bytes, fragmentation,
+        high-watermark — ``kv_cache.pool_accounting``) plus scheduler
+        counters. ``{}`` when not paged."""
+        if not self._paged:
+            return {}
+        pool = {k: v for k, v in self._state.items()
+                if k.startswith("pool.")}
+        live = int(sum(int(self._host_counts[i])
+                       for i, s in enumerate(self._slots)
+                       if s.request is not None))
+        out = pool_accounting(pool, self.page_alloc, live_rows=live)
+        out["preemptions"] = self.preemptions
+        return out
 
     def _admit_prefill(self, si: int, r: Request,
                        prompt: np.ndarray) -> None:
@@ -684,6 +1047,8 @@ class SlotScheduler:
             prow[:p] = prompt
             extra = extra + (jnp.asarray(prow), jnp.int32(p),
                              jnp.int32(p + r.max_new), jnp.int32(tix))
+            if self._paged:
+                extra = extra + (jnp.asarray(self._page_rows[si]),)
             eng.call_counts["slot_insert"] = \
                 eng.call_counts.get("slot_insert", 0) + 1
             out = self._insert_fn(*self._arrays(), *extra)
@@ -691,7 +1056,10 @@ class SlotScheduler:
         self._pf_state = state           # recycle scratch next admission
         host = np.asarray(jnp.stack([cur[0].astype(jnp.float32),
                                      first_bits]))
-        self._slots[si] = _Slot(request=r)
+        self._slots[si] = _Slot(request=r, admit_order=self._admit_seq)
+        self._admit_seq += 1
+        if self._paged:
+            self._host_counts[si] = p
         self._slots[si].gen_tokens.append(int(host[0]))
         self._slots[si].gen_bits.append(float(host[1]))
         if r._submit_t is not None:
@@ -699,6 +1067,8 @@ class SlotScheduler:
 
     def _run_chunk(self) -> None:
         n_carry = 4 if self._use_planner else 3
+        if self._paged:
+            self._grow_and_sync()
         with self.engine._mesh_ctx():
             out = self._chunk_fn(*self._arrays())
         self._set_arrays(out[:n_carry] + self._arrays()[n_carry:])
@@ -739,6 +1109,19 @@ class SlotScheduler:
             slot.gen_bits.extend(ebs[emit[:, si], si].tolist())
             if counts[si] >= totals[si]:
                 self._retire(si)
+        if self._paged:
+            # post-chunk trim: speculative rejections can leave a slot's
+            # table ahead of its count — give the surplus back (batched
+            # zeroing, one donated launch for all trimmed pages)
+            freed: List[int] = []
+            for si, slot in enumerate(self._slots):
+                if slot.request is None:
+                    continue
+                self._host_counts[si] = int(counts[si])
+                freed += self._trim_slot(
+                    si, int(counts[si]) + self._chunk_advance)
+            if freed:
+                self._zero_freed(freed)
 
     def _retire(self, si: int) -> None:
         slot = self._slots[si]
@@ -751,6 +1134,11 @@ class SlotScheduler:
             self.tracker.record_query(r.effective_bits)
         self.completed.append(r)
         self._slots[si] = _Slot()
+        if self._paged:
+            freed = self._release_pages(si)
+            if freed:
+                self._zero_freed(freed)
+            self._host_counts[si] = 0
 
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> List[Request]:
@@ -762,8 +1150,8 @@ class SlotScheduler:
         start = len(self.completed)
         for r in (requests or ()):
             self.submit(r)
-        while self._queue or any(s.request is not None
-                                 for s in self._slots):
+        while self._pending() or any(s.request is not None
+                                     for s in self._slots):
             self._admit_ready()
             self._run_chunk()
         return self.completed[start:]

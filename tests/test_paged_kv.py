@@ -1,0 +1,551 @@
+"""Paged bitplane-KV pool: allocator properties, kernel parity, and the
+scheduler-level paged-vs-bucketed bit-identity matrix.
+
+The contract under test: the paged cache is a PURE indirection change.
+One shared plane pool plus per-slot page tables must produce the same
+tokens and per-token effective bits as the bucketed per-slot arrays —
+through vmapped ticks, prefill handoffs straddling page boundaries,
+speculative rollback, and even page-reclaim preemption (the restart
+replays the plan-once target, so the output stream is unchanged). The
+allocator side is property-tested: pages never alias between live
+owners, frees round-trip, the high watermark bounds peak usage, and
+preemption reclaims exactly the victim's pages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kernels.kv_attention import (TRASH_PAGE, gather_paged_kv,
+                                        kv_decode_attention,
+                                        kv_decode_attention_paged,
+                                        kv_plane_fetches_paged)
+from repro.models.attention import (encode_kv_rows, paged_zero_window,
+                                    update_kv_planes, update_kv_pool)
+from repro.serving import (AdmissionRouter, LatencyModel, PagePool,
+                           PriorityClass, QoSPlanner, Request,
+                           ServingEngine, SlotScheduler, pages_for_rows)
+from repro.serving.kv_cache import (make_paged_pool, make_paged_state,
+                                    pool_accounting, stage_bytes,
+                                    zero_pool_pages)
+
+BITS = 8
+
+
+# ---------------------------------------------------------------------------
+# Page allocator properties (pure host code — no JAX)
+# ---------------------------------------------------------------------------
+def test_pages_for_rows_closed_form():
+    assert pages_for_rows(0, 4) == 0
+    assert pages_for_rows(1, 4) == 1
+    assert pages_for_rows(4, 4) == 1
+    assert pages_for_rows(5, 4) == 2
+    with pytest.raises(ValueError):
+        pages_for_rows(3, 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 24), st.integers(1, 40))
+def test_alloc_free_round_trip(seed, n_pages, n_ops):
+    """Random alloc/free interleavings: page 0 never handed out, used +
+    free always partitions [1, n_pages), all-or-nothing alloc leaves the
+    pool untouched on failure, and draining every live page restores the
+    fully-free pool."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(n_pages, page_len=4)
+    live = []
+    for _ in range(n_ops):
+        if live and rng.uniform() < 0.4:
+            i = int(rng.integers(len(live)))
+            pool.free([live.pop(i)])
+        else:
+            before = pool.n_free
+            got = pool.alloc(int(rng.integers(0, n_pages)))
+            if got is None:
+                assert pool.n_free == before     # failure mutated nothing
+            else:
+                live.extend(got)
+        assert TRASH_PAGE not in live
+        assert pool.n_used == len(live)
+        assert pool.n_used + pool.n_free == n_pages - 1
+        assert len(set(live)) == len(live)       # no id handed out twice
+        assert pool.high_watermark >= pool.n_used
+        assert pool.high_watermark <= n_pages - 1
+    pool.free(live)
+    assert pool.n_free == n_pages - 1 and pool.n_used == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 5), st.integers(3, 30))
+def test_no_page_aliasing_between_live_owners(seed, n_owners, n_pages):
+    """Pages allocated to different owners are pairwise disjoint, and
+    ``owned`` reports exactly each owner's live set."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(n_pages, page_len=4)
+    want = {o: [] for o in range(n_owners)}
+    for _ in range(20):
+        o = int(rng.integers(n_owners))
+        if want[o] and rng.uniform() < 0.3:
+            pool.free([want[o].pop()])
+        else:
+            got = pool.alloc(int(rng.integers(0, 3)), owner=o)
+            if got is not None:
+                want[o].extend(got)
+        sets = [set(want[o]) for o in range(n_owners)]
+        for i in range(n_owners):
+            assert pool.owned(i) == sorted(want[i])
+            for j in range(i + 1, n_owners):
+                assert not sets[i] & sets[j]
+
+
+def test_free_rejects_double_free_and_trash_page():
+    pool = PagePool(4, page_len=2)
+    ids = pool.alloc(2, owner="a")
+    pool.free(ids)
+    with pytest.raises(ValueError, match="double free or trash"):
+        pool.free(ids[:1])
+    with pytest.raises(ValueError, match="double free or trash"):
+        pool.free([TRASH_PAGE])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 4), st.integers(6, 24))
+def test_preemption_reclaims_exactly_victims_pages(seed, n_owners, n_pages):
+    """The preemption move — ``free(owned(victim))`` — reclaims every
+    page of the victim and ONLY those pages; survivors' sets and the
+    free count are otherwise untouched."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(n_pages, page_len=4)
+    for o in range(n_owners):
+        pool.alloc(int(rng.integers(1, 3)), owner=o)
+    victim = int(rng.integers(n_owners))
+    survivors = {o: pool.owned(o) for o in range(n_owners) if o != victim}
+    reclaim = pool.owned(victim)
+    free_before = pool.n_free
+    pool.free(reclaim)
+    assert pool.owned(victim) == []
+    assert pool.n_free == free_before + len(reclaim)
+    for o, pages in survivors.items():
+        assert pool.owned(o) == pages
+
+
+def test_high_watermark_records_peak_not_current():
+    pool = PagePool(8, page_len=4)
+    a = pool.alloc(5)
+    pool.free(a)
+    assert pool.n_used == 0
+    assert pool.high_watermark == 5
+    assert pool.stats()["high_watermark_pages"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Pool state layout, byte accounting, page zeroing
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("tiny-dense")
+
+
+def test_paged_pool_and_state_layout(tiny_cfg):
+    pool = make_paged_pool(tiny_cfg, n_pages=5, page_len=4)
+    plane_keys = [k for k in pool if k.endswith("_planes")]
+    assert plane_keys
+    for k in plane_keys:
+        assert pool[k].shape[:3] == (5, BITS, 4)
+        assert pool[k].dtype == jnp.int32
+        pre = k.rsplit(".", 1)[0]
+        for sfx in ("k_scale", "k_zero", "v_scale", "v_zero"):
+            assert pool[f"{pre}.{sfx}"].shape[:2] == (5, 4)
+    state = make_paged_state(tiny_cfg, 1, 16, page_len=4,
+                             dtype=jnp.float32)
+    assert state["page_table"].shape == (1, 4)
+    assert not np.asarray(state["page_table"]).any()   # boots on trash
+    assert not any(k.startswith("kv.") for k in state)  # no buckets left
+    sb = stage_bytes({**state, **pool})
+    assert sb["pool"] > 0 and sb["kv"] == 0
+    assert sb["total"] == sb["pool"] + sb["ssm"] + sb["xkv"] + sb["other"]
+
+
+def test_pool_accounting_live_vs_allocated(tiny_cfg):
+    pool = make_paged_pool(tiny_cfg, n_pages=9, page_len=4)
+    alloc = PagePool(9, page_len=4)
+    alloc.alloc(3, owner=0)
+    acc = pool_accounting(pool, alloc, live_rows=9)
+    assert acc["allocated_pages"] == 3
+    assert acc["allocated_bytes"] == 3 * acc["page_bytes"]
+    assert acc["live_bytes"] == 9 * (acc["page_bytes"] // 4)
+    # internal fragmentation: 3 pages cover 12 rows, 9 are live
+    assert acc["fragmentation_bytes"] == \
+        acc["allocated_bytes"] - acc["live_bytes"]
+    assert acc["high_watermark_pages"] == 3
+    assert acc["capacity_bytes"] == 9 * acc["page_bytes"]
+
+
+def test_zero_pool_pages_zeroes_only_the_freed_pages(tiny_cfg):
+    rng = np.random.default_rng(5)
+    pool = make_paged_pool(tiny_cfg, n_pages=6, page_len=4)
+    pool = {k: jnp.asarray(rng.integers(1, 100, v.shape).astype(
+        np.int32 if v.dtype == jnp.int32 else np.float32))
+        for k, v in pool.items()}
+    before = {k: np.asarray(v) for k, v in pool.items()}
+    out = zero_pool_pages(pool, [2, 4])
+    for k, v in out.items():
+        got = np.asarray(v)
+        assert not got[2].any() and not got[4].any(), k
+        # the power-of-two padding pads with the trash page — page 0 is
+        # sacrificial by contract; every OTHER page is untouched
+        for p in (1, 3, 5):
+            np.testing.assert_array_equal(got[p], before[k][p], err_msg=k)
+    assert zero_pool_pages(pool, []) is pool           # no-op on empty
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level parity: pool + page table vs the bucketed per-slot arrays
+# ---------------------------------------------------------------------------
+def _paged_twin(bucketed, tables, n_pages, page_len):
+    """Scatter bucketed per-slot rows (S, ..., T, ...) into a pool
+    (NP, ..., page_len, ...) through each slot's page table."""
+    arr = np.asarray(bucketed)
+    t_axis = 2 if arr.ndim == 5 else 1                 # planes vs scale
+    pool = np.zeros((n_pages,) + arr.shape[1:t_axis]
+                    + (page_len,) + arr.shape[t_axis + 1:], arr.dtype)
+    for s, row in enumerate(tables):
+        for i, page in enumerate(row):
+            sl_src = [s] + [slice(None)] * (arr.ndim - 1)
+            sl_src[t_axis] = slice(i * page_len, (i + 1) * page_len)
+            sl_dst = [page] + [slice(None)] * (arr.ndim - 1)
+            pool[tuple(sl_dst)] = arr[tuple(sl_src)]
+    return jnp.asarray(pool)
+
+
+def _kv_case(seed, s=3, p=4, page_len=4, hkv=2, hq=4, dh=32, m=2):
+    rng = np.random.default_rng(seed)
+    t = p * page_len
+    kv = jnp.asarray(rng.normal(size=(2, s, t, hkv, dh)), jnp.float32)
+    kp, ks, kz = encode_kv_rows(kv[0], BITS)
+    vp, vs, vz = encode_kv_rows(kv[1], BITS)
+    # a random page assignment: pages [1, n_pages) permuted, no aliasing
+    n_pages = s * p + 1
+    perm = rng.permutation(np.arange(1, n_pages))
+    tables = perm.reshape(s, p)
+    args = dict(n_pages=n_pages, page_len=page_len)
+    pools = [_paged_twin(a, tables, **args)
+             for a in (kp, ks, kz, vp, vs, vz)]
+    q = jnp.asarray(rng.normal(size=(s, m, hq, dh)), jnp.float32)
+    lens = jnp.asarray(rng.integers(1, t + 1, (s, m)), jnp.int32)
+    kv_b = jnp.asarray([BITS, 3, 0, 5][:s], jnp.int32)
+    return (q, kp, ks, kz, vp, vs, vz, lens, kv_b,
+            pools, jnp.asarray(tables, jnp.int32))
+
+
+def test_gather_paged_kv_reassembles_bucketed_rows():
+    (q, kp, ks, kz, *_rest, pools, pt) = _kv_case(20)
+    g_kp, g_ks, g_kz = gather_paged_kv(pools[0], pools[1], pools[2], pt)
+    np.testing.assert_array_equal(np.asarray(g_kp), np.asarray(kp))
+    np.testing.assert_array_equal(np.asarray(g_ks), np.asarray(ks))
+    np.testing.assert_array_equal(np.asarray(g_kz), np.asarray(kz))
+
+
+def test_paged_ref_bit_identical_to_bucketed_ref():
+    """Same rows, page-scattered vs bucketed: the ref backends must be
+    BITWISE equal (the gather reproduces the exact bucketed layout, so
+    the attention math is the same computation)."""
+    (q, kp, ks, kz, vp, vs, vz, lens, kv_b, pools, pt) = _kv_case(21)
+    out_b = kv_decode_attention(q, kp, ks, kz, vp, vs, vz, lens, kv_b,
+                                bits=BITS, backend="ref")
+    out_p = kv_decode_attention_paged(q, *pools, pt, lens, kv_b,
+                                      bits=BITS, backend="ref")
+    assert np.array_equal(np.asarray(out_p), np.asarray(out_b))
+    assert not np.asarray(out_p[2]).any()              # idle slot zeros
+
+
+def test_paged_kernel_interpret_matches_ref():
+    """The Pallas paged kernel (interpret twin): page indirection +
+    dead-tile pinning vs the gather oracle, mixed read precisions."""
+    (q, *_b, lens, kv_b, pools, pt) = _kv_case(22)
+    out_r = kv_decode_attention_paged(q, *pools, pt, lens, kv_b,
+                                      bits=BITS, backend="ref")
+    out_i = kv_decode_attention_paged(q, *pools, pt, lens, kv_b,
+                                      bits=BITS, backend="interpret")
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(out_r),
+                               atol=1e-5)
+    assert not np.asarray(out_i[2]).any()
+
+
+def test_paged_vmap_flattens_and_shares_one_pool():
+    """vmapping the paged dispatch (the scheduler's slot vmap) flattens
+    the slot axes onto one launch while the pool rides through
+    UNBATCHED; batching a pool operand is a contract violation."""
+    (q, *_b, lens, kv_b, pools, pt) = _kv_case(23, s=4, m=1)
+    flat = kv_decode_attention_paged(q, *pools, pt, lens, kv_b,
+                                     bits=BITS, backend="ref")
+
+    def shaped(a):
+        return a.reshape((2, 2) + a.shape[1:])
+
+    nested = jax.vmap(
+        lambda qq, tt, ll, bb: kv_decode_attention_paged(
+            qq, *pools, tt, ll, bb, bits=BITS, backend="ref"))(
+        shaped(q), shaped(pt), shaped(lens), shaped(kv_b))
+    assert np.array_equal(np.asarray(nested.reshape(flat.shape)),
+                          np.asarray(flat))
+
+    with pytest.raises(ValueError, match="unbatched"):
+        jax.vmap(lambda kp: kv_decode_attention_paged(
+            q, kp, *pools[1:], pt, lens, kv_b,
+            bits=BITS, backend="ref"))(
+            jnp.stack([pools[0], pools[0]]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 6), st.integers(2, 4),
+       st.integers(1, 4), st.integers(1, 8))
+def test_paged_fetch_walk_closed_form(seed, s, p, page_len, bits):
+    """The paged traffic walk equals  sum_busy n_live_tiles * kv_b
+    + n_idle_runs  when live pages never alias (the allocator
+    invariant): dead tiles pin to the last live block (zero DMA) and
+    each idle run costs one trash-page block."""
+    rng = np.random.default_rng(seed)
+    kv_b = rng.integers(0, bits + 1, size=s)
+    lens = rng.integers(0, p * page_len + 1, size=(s, 1))
+    # distinct non-trash pages across every slot — no aliasing
+    pages = rng.permutation(np.arange(1, s * p + 1)).reshape(s, p)
+    walked = kv_plane_fetches_paged(pages, lens, kv_b,
+                                    page_len=page_len, bits=bits)
+    busy = kv_b > 0
+    nl = np.maximum(1, -(-np.maximum(1, lens[:, 0]) // page_len))
+    total = int(np.sum(nl[busy] * kv_b[busy]))
+    idle_runs, prev_idle = 0, False
+    for f in busy:
+        if not f and not prev_idle:
+            idle_runs += 1
+        prev_idle = not f
+    assert walked == total + idle_runs, (kv_b, lens[:, 0], pages)
+
+
+def test_paged_write_and_zero_window_round_trip():
+    """``update_kv_pool`` lands rows [pos, pos+M) on the owner's pages
+    only (bit-identical to the bucketed ``update_kv_planes`` twin),
+    rows whose table entry is UNALLOCATED (0) land on the trash page,
+    and ``paged_zero_window`` erases exactly the window."""
+    rng = np.random.default_rng(24)
+    s, p, page_len, hkv, dh, m = 2, 4, 4, 2, 32, 3
+    t = p * page_len
+    # slot 1's last logical page is unallocated (entry 0 = trash)
+    tables = np.asarray([[1, 2, 3, 7], [4, 5, 6, 0]], np.int32)
+    shapes = dict(n_pages=8, page_len=page_len)
+    zero_b = jnp.zeros((s, BITS, t, hkv, 1), jnp.int32)
+    zero_s = jnp.zeros((s, t, hkv, 1), jnp.float32)
+    pools = [_paged_twin(a, tables, **shapes)
+             for a in (zero_b, zero_s, zero_s, zero_b, zero_s, zero_s)]
+    k_new = jnp.asarray(rng.normal(size=(s, m, hkv, dh)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(s, m, hkv, dh)), jnp.float32)
+    pos = jnp.asarray([3, 11], jnp.int32)              # both straddle
+    pools = update_kv_pool(*pools, jnp.asarray(tables), k_new, v_new,
+                           pos, bits=BITS)
+    # bucketed twin of slot 0's write
+    buck = update_kv_planes(zero_b[:1], zero_s[:1], zero_s[:1],
+                            zero_b[:1], zero_s[:1], zero_s[:1],
+                            k_new[:1], v_new[:1], jnp.int32(3), bits=BITS)
+    g = gather_paged_kv(pools[0], pools[1], pools[2],
+                        jnp.asarray(tables))
+    np.testing.assert_array_equal(np.asarray(g[0][0]),
+                                  np.asarray(buck[0][0]))
+    np.testing.assert_array_equal(np.asarray(g[1][0]),
+                                  np.asarray(buck[1][0]))
+    # slot 1's rows 11 (page 6) land; rows 12-13 hit the unallocated
+    # table entry and are absorbed by the trash page — slot 0's pages
+    # (checked bit-exact above) are never touched by the collision
+    g1 = np.asarray(g[0][1])
+    assert g1[:, 11:12].any() and not g1[:, :11].any()
+    assert np.asarray(pools[0][TRASH_PAGE]).any()
+    # rollback erase: zero rows [3, 3+2) of slot 0 only; row 5 survives
+    pools = paged_zero_window(*pools, jnp.asarray(tables[:1]),
+                              jnp.asarray([3], jnp.int32), 2)
+    g2 = gather_paged_kv(pools[0], pools[1], pools[2],
+                         jnp.asarray(tables))
+    g0 = np.asarray(g2[0][0])
+    assert not g0[:, 3:5].any()
+    assert g0[:, 5].any()
+    np.testing.assert_array_equal(
+        np.asarray(g2[0][1])[:, :12], g1[:, :12])      # slot 1 untouched
+
+
+# ---------------------------------------------------------------------------
+# Admission router + queue-depth TTFT pricing (satellite: the fleet seam)
+# ---------------------------------------------------------------------------
+def _req(rid, plen=4, tpot=None, ttft=None):
+    return Request(rid=rid, prompt=np.ones((plen,), np.int32), max_new=2,
+                   tpot_budget_s=tpot, ttft_budget_s=ttft)
+
+
+def test_latency_model_prices_prefill_queue_depth():
+    lm = LatencyModel(bytes_per_bit=1e6)
+    own = lm.ttft(4.0, prompt_len=32, prefill_chunk=8)
+    queued = lm.ttft(4.0, prompt_len=32, prefill_chunk=8,
+                     queued_launches=6)
+    assert own == pytest.approx(4 * lm.tpot(4.0))
+    assert queued == pytest.approx(10 * lm.tpot(4.0))
+    assert queued > own
+
+
+def test_planner_ttft_guard_includes_queue_depth():
+    """A precision that fits an idle worker must be rejected when the
+    assigned worker's queue pushes the predicted TTFT past budget."""
+    lm = LatencyModel(bytes_per_bit=1e6, overhead_s=1e-3)
+    qos = QoSPlanner([3.5, 4.0, 4.5], lm)
+    budget = lm.ttft(4.5, 16, 8) * 1.5
+    idle = qos.plan(1.0, prompt_len=16, ttft_budget_s=budget,
+                    prefill_chunk=8, queued_launches=0)
+    busy = qos.plan(1.0, prompt_len=16, ttft_budget_s=budget,
+                    prefill_chunk=8, queued_launches=50)
+    assert idle == 4.5
+    assert busy == 3.5                                 # guard forced min
+
+
+def test_router_classify_and_drain_order():
+    router = AdmissionRouter(prefill_workers=2)
+    fast = _req(0, ttft=0.2)
+    mid = _req(1, tpot=0.08)
+    slow = _req(2)                                     # no budgets: batch
+    assert router.submit(slow).name == "batch"
+    assert router.submit(mid).name == "standard"
+    assert router.submit(fast).name == "interactive"
+    assert len(router) == 3
+    assert [router.next_request().rid for _ in range(3)] == [0, 1, 2]
+    # requeue puts a preempted request back at the HEAD of its class
+    router.submit(_req(3, tpot=0.08))
+    router.requeue(mid)
+    assert router.next_request().rid == 1
+
+
+def test_router_routes_least_loaded_worker_and_reports_depth():
+    router = AdmissionRouter(prefill_workers=2)
+    w0, ahead0 = router.route_prefill(4)
+    assert ahead0 == 0
+    w1, ahead1 = router.route_prefill(2)
+    assert w1 != w0 and ahead1 == 0                    # fresh worker
+    w2, ahead2 = router.route_prefill(1)
+    assert w2 == w1 and ahead2 == 2                    # behind the 2
+    router.finish_prefill(w1, 2)
+    assert router.queue_depth(w1) == 1
+    assert router.queue_depth() == 1                   # least-loaded view
+
+
+def test_router_pick_victim_least_urgent_youngest():
+    router = AdmissionRouter(prefill_workers=1)
+    cands = [(0, _req(0, ttft=0.2), 5),                # interactive
+             (1, _req(1), 3),                          # batch, older
+             (2, _req(2), 7)]                          # batch, youngest
+    assert router.pick_victim(cands) == 2
+    assert router.pick_victim([]) is None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level parity matrix: paged == bucketed, token for token
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def overlay_engines(tiny_bundle):
+    cfg, params, model, _ = tiny_bundle
+    return {
+        True: ServingEngine(cfg, params, model, kv_overlay=True,
+                            use_async=True),
+        False: ServingEngine(cfg, params, model, kv_overlay=True,
+                             use_async=False),
+    }
+
+
+def _requests(cfg, n=5, seed=1):
+    rng = np.random.default_rng(seed)
+    budgets = [6e-3, 5.2e-3, 4.6e-3, 1e-3, 6e-3]
+    # prompt lengths 3..6 with page_len=4: prompts that fit one page,
+    # end exactly on a boundary, and straddle into a second page
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        (3 + i % 4,)).astype(np.int32),
+                    max_new=4 + i % 3, tpot_budget_s=budgets[i % 5])
+            for i in range(n)]
+
+
+_RUNS = {}                                             # (variant, paged, n_pages)
+
+
+def _sched_run(tiny_bundle, engines, variant, *, paged, use_async=True,
+               spec_k=None, n_pages=None):
+    key = (variant, paged, n_pages)
+    if key in _RUNS:
+        return _RUNS[key]
+    cfg, _, model, _ = tiny_bundle
+    planner = QoSPlanner(sorted(model.adaptations),
+                         LatencyModel(bytes_per_bit=1e6), spec_k=spec_k)
+    kw = dict(slots=2, max_prompt=8, max_new=6, chunk=3, spec_k=spec_k)
+    if paged:
+        kw.update(paged=True, page_len=4, n_pages=n_pages)
+    sched = SlotScheduler(engines[use_async], planner, **kw)
+    done = sorted(sched.run(_requests(cfg)), key=lambda r: r.rid)
+    _RUNS[key] = (done, sched)
+    return done, sched
+
+
+VARIANTS = [("async", dict(use_async=True)),
+            ("sync", dict(use_async=False)),
+            ("spec2", dict(use_async=True, spec_k=2))]
+
+
+@pytest.mark.parametrize("variant,kw", VARIANTS,
+                         ids=[v for v, _ in VARIANTS])
+def test_scheduler_paged_vs_bucketed_bit_identity(tiny_bundle,
+                                                  overlay_engines,
+                                                  variant, kw):
+    """Async/sync pipelining and speculative windows, prompts straddling
+    page boundaries: the paged scheduler's tokens, per-token effective
+    bits, and admitted targets are BITWISE those of the bucketed one."""
+    base, _ = _sched_run(tiny_bundle, overlay_engines, variant,
+                         paged=False, **kw)
+    paged, sp = _sched_run(tiny_bundle, overlay_engines, variant,
+                           paged=True, **kw)
+    assert len(base) == len(paged) == 5
+    for b, p in zip(base, paged):
+        assert b.target == p.target, b.rid
+        assert np.array_equal(b.tokens, p.tokens), b.rid
+        assert np.array_equal(b.effective_bits, p.effective_bits), b.rid
+    stats = sp.paged_stats()
+    assert stats["preemptions"] == 0                   # ample pool
+    assert stats["allocated_pages"] == 0               # all retired
+    assert stats["live_rows"] == 0
+    assert 0 < stats["high_watermark_pages"] <= sp.page_alloc.n_pages - 1
+
+
+def test_scheduler_tight_pool_preempts_and_stays_bit_identical(
+        tiny_bundle, overlay_engines):
+    """A pool too small for both slots' worst case forces page-reclaim
+    preemption — and the plan-once restart keeps the output stream
+    BITWISE unchanged (preemption is a scheduling event, not a model
+    event)."""
+    base, _ = _sched_run(tiny_bundle, overlay_engines, "async",
+                         paged=False, use_async=True)
+    paged, sp = _sched_run(tiny_bundle, overlay_engines, "tight",
+                           paged=True, use_async=True, n_pages=6)
+    assert sp.preemptions > 0
+    for b, p in zip(base, paged):
+        assert b.target == p.target, b.rid
+        assert np.array_equal(b.tokens, p.tokens), b.rid
+        assert np.array_equal(b.effective_bits, p.effective_bits), b.rid
+    stats = sp.paged_stats()
+    assert stats["high_watermark_pages"] <= 5          # never over budget
+    assert stats["allocated_pages"] == 0
+
+
+def test_scheduler_rejects_request_that_can_never_fit(tiny_bundle,
+                                                      overlay_engines):
+    cfg, _, model, _ = tiny_bundle
+    planner = QoSPlanner(sorted(model.adaptations),
+                         LatencyModel(bytes_per_bit=1e6))
+    sched = SlotScheduler(overlay_engines[True], planner, slots=2,
+                          max_prompt=8, max_new=6, chunk=3, paged=True,
+                          page_len=4, n_pages=3)
+    with pytest.raises(ValueError, match="enlarge n_pages"):
+        sched.submit(_requests(cfg, n=1)[0])

@@ -19,7 +19,8 @@ BASE = {"decode_tokens_per_s": 100.0, "ttft_s": 0.050,
 def test_tracked_metrics_cover_serve_path():
     assert METRICS == {"decode_tokens_per_s": +1, "ttft_s": -1,
                        "spec_tokens_per_s": +1, "moe_tokens_per_s": +1,
-                       "kv_tokens_per_s": +1}
+                       "kv_tokens_per_s": +1, "p50_ttft_s": -1,
+                       "p99_ttft_s": -1, "goodput_tokens_per_s": +1}
 
 
 def test_regression_boundary_exact_tolerance_passes():

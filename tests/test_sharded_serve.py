@@ -218,6 +218,41 @@ n0 = ov_dyn.host_syncs
 out_d, bits_d = ov_dyn.generate(np.asarray([[5, 7, 11]], np.int32), 5, 4.0)
 assert ov_dyn.host_syncs - n0 == 2, ov_dyn.host_syncs
 assert out_d.shape == (1, 8) and np.all(np.isfinite(bits_d))
+
+# --- paged bitplane-KV pool on the mesh (PR 9) ---------------------------
+# the shared plane pool REPLICATES its page axis over 'data' (any slot's
+# table may point at any page) while heads keep the KV_HEADS rule and
+# the plane axis stays whole; page tables ride the slot axis like any
+# per-slot vector
+from repro.distributed.sharding import page_table_spec, paged_pool_spec
+pspec = paged_pool_spec(mesh, "pool.0.k_planes", (9, 8, 4, 2, 1))
+assert pspec[0] is None and pspec[1] is None, pspec    # pages + planes
+sspec = paged_pool_spec(mesh, "pool.0.k_scale", (9, 4, 2, 1))
+assert sspec[0] is None, sspec
+assert "data" in str(page_table_spec(mesh, (4, 4))), \
+    page_table_spec(mesh, (4, 4))
+assert str(page_table_spec(mesh, (3, 4))) == \
+    "PartitionSpec(None, None)", page_table_spec(mesh, (3, 4))
+
+# paged scheduler on the mesh == bucketed scheduler on the mesh: the
+# page indirection is a pure placement/layout change even under GSPMD —
+# bit-identical tokens, per-step bits, and admitted targets
+def serve_kv(paged):
+    kw = dict(slots=4, max_prompt=8, max_new=6, chunk=4)
+    if paged:
+        kw.update(paged=True, page_len=4)
+    sched = SlotScheduler(ov_dyn, planner(ov_dyn), **kw)
+    return {r.rid: r for r in sched.run(requests(0))}
+
+done_b = serve_kv(False)
+done_p = serve_kv(True)
+assert set(done_b) == set(done_p)
+for rid, rb in done_b.items():
+    rp = done_p[rid]
+    assert rb.target == rp.target, (rid, rb.target, rp.target)
+    assert np.array_equal(rb.tokens, rp.tokens), rid
+    np.testing.assert_allclose(rb.effective_bits, rp.effective_bits,
+                               atol=1e-5)
 print("sharded-serve-ok")
 """ % (_N_DEV, _N_DEV)
 
@@ -225,7 +260,7 @@ print("sharded-serve-ok")
 def test_sharded_scheduler_parity_and_no_retrace():
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(_BODY)],
                        capture_output=True, text=True, cwd=".",
-                       timeout=900)
+                       timeout=1500)
     assert r.returncode == 0, r.stderr[-4000:]
     assert "sharded-serve-ok" in r.stdout
 

@@ -4,11 +4,14 @@ Compares a freshly collected ``BENCH_serve.json`` (``benchmarks.run
 --json --quick``) against the committed one and fails when a tracked
 metric regresses by more than ``--tolerance`` (default 20%):
 
-- ``decode_tokens_per_s``  lower is worse
-- ``ttft_s``               higher is worse
-- ``spec_tokens_per_s``    lower is worse (when both files carry it)
-- ``moe_tokens_per_s``     lower is worse (when both files carry it)
-- ``kv_tokens_per_s``      lower is worse (when both files carry it)
+- ``decode_tokens_per_s``       lower is worse
+- ``ttft_s``                    higher is worse
+- ``spec_tokens_per_s``         lower is worse (when both files carry it)
+- ``moe_tokens_per_s``          lower is worse (when both files carry it)
+- ``kv_tokens_per_s``           lower is worse (when both files carry it)
+- ``p50_ttft_s``                higher is worse (replayed traffic)
+- ``p99_ttft_s``                higher is worse (replayed traffic)
+- ``goodput_tokens_per_s``      lower is worse (replayed traffic)
 
 Wall-clock metrics vary across machines, so the gate is a guard against
 step-function regressions (a retrace on the decode path, a lost launch
@@ -30,6 +33,9 @@ METRICS = {
     "spec_tokens_per_s": +1,
     "moe_tokens_per_s": +1,
     "kv_tokens_per_s": +1,
+    "p50_ttft_s": -1,
+    "p99_ttft_s": -1,
+    "goodput_tokens_per_s": +1,
 }
 
 
