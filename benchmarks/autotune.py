@@ -1,0 +1,355 @@
+"""Roofline-seeded tile autotuner: measure the kernel families' tile
+knobs and persist winners to a versioned ``tuning_cache.json``.
+
+Four families, one knob each, all measured through the PUBLIC dispatch
+entry points with a candidate cache installed — the tuner times exactly
+the resolve/pad/thread path serving pays, not a bare kernel launch:
+
+    bitserial      tile_n   (plain/slots/grouped share the knob)
+    jl_plan        u_tile   (planner units per x DMA)
+    kv_attention   tile_t   (bucketed cache seq tile)
+    kv_paged       page_len (pool page granularity == kernel tile_t)
+
+Candidate enumeration is seeded and PRUNED by the roofline model
+(``benchmarks/hw.py``): each candidate's modeled memory term is its
+plane-block traffic — the host-side index_map walks the kernels already
+export (``plane_block_fetches`` etc.) — over ``HBM_BW`` plus a fixed
+``DMA_ISSUE_S`` per block fetch. The DEFAULT candidate is measured first
+unconditionally (pruning can never discard it — the fallback the ops
+layer dispatches on a cache miss must always have a measurement), then
+non-default candidates run in modeled order and are skipped when their
+modeled floor already exceeds the best measured time.
+
+The timer is injectable (``--help``-level determinism for tests: a fake
+timer yields a reproducible winner); the real one is the shared harness
+in ``repro.kernels.tuning`` (warmup + block_until_ready + median).
+
+Self-contained (no trained model); run from the repo root:
+    PYTHONPATH=src python benchmarks/autotune.py --smoke --out tuning_cache.json
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import hw
+from repro.kernels import tuning
+from repro.kernels.bitserial.kernel import plane_block_fetches
+from repro.kernels.bitserial.ops import bitserial_matmul
+from repro.kernels.jl_estimator.kernel import g_block_fetches
+from repro.kernels.jl_estimator.ops import plan_bits
+from repro.kernels.kv_attention.kernel import kv_plane_fetches
+from repro.kernels.kv_attention.ops import kv_decode_attention
+from repro.kernels.kv_attention.paged import (kv_decode_attention_paged,
+                                              kv_plane_fetches_paged)
+from repro.core.bitplane import quantize_linear
+from repro.kernels.tuning import TuningCache, measure
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def default_timer(fn: Callable[[], object]) -> float:
+    return measure(fn, warmup=1, reps=3).seconds
+
+
+def _mem_seconds(block_fetches: int, block_bytes: int) -> float:
+    """Roofline memory term of a candidate: streamed bytes over HBM_BW
+    plus the per-DMA issue cost — the two levers tile size moves."""
+    return (block_fetches * block_bytes / hw.HBM_BW +
+            block_fetches * hw.DMA_ISSUE_S)
+
+
+# ---------------------------------------------------------------------------
+# Winner selection (deterministic, default-first, roofline-pruned)
+# ---------------------------------------------------------------------------
+def pick_winner(candidates: List[int], modeled_s: Callable[[int], float],
+                make_runner: Callable[[int], Callable[[], object]],
+                timer: Callable[[Callable[[], object]], float]):
+    """``candidates[0]`` is the DEFAULT: measured first, never pruned.
+    Remaining candidates run in ascending modeled order and are skipped
+    when their modeled memory floor exceeds the best measured time.
+    Winner is the strict minimum (ties keep the earlier — i.e. the
+    default, then the better-modeled — candidate): deterministic for a
+    deterministic timer. Returns (winner, measured{c: s}, pruned[c])."""
+    measured: Dict[int, float] = {}
+    pruned: List[int] = []
+    best_c, best_s = None, math.inf
+    rest = sorted(candidates[1:], key=lambda c: (modeled_s(c), c))
+    for i, c in enumerate([candidates[0]] + rest):
+        if i > 0 and modeled_s(c) > best_s:
+            pruned.append(c)
+            continue
+        s = timer(make_runner(c))
+        measured[c] = s
+        if s < best_s:
+            best_c, best_s = c, s
+    return best_c, measured, pruned
+
+
+def _cand_cache(kernel: str, n: int, bits: int, tile: int) -> TuningCache:
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), kernel, n, bits, tile)
+    return cache
+
+
+def tune_family(out_cache: TuningCache, *, kernel: str, n: int, bits: int,
+                candidates: List[int], modeled_s, make_runner, timer,
+                force: bool = False) -> Optional[int]:
+    """Tune one (kernel, shape-bucket, bits) entry into ``out_cache``.
+    Already-keyed entries are kept (CI cache reuse) unless ``force``."""
+    plat = tuning.platform_name()
+    if not force and out_cache.lookup(plat, kernel, n, bits):
+        emit(f"autotune/{kernel}", 0.0,
+             f"cached={out_cache.lookup(plat, kernel, n, bits)};skipped=1")
+        return out_cache.lookup(plat, kernel, n, bits)
+    prev = tuning.active_cache()
+    try:
+        winner, measured, pruned = pick_winner(candidates, modeled_s,
+                                               make_runner, timer)
+    finally:
+        tuning.use_cache(prev)
+    key = out_cache.put(plat, kernel, n, bits, winner)
+    default = candidates[0]
+    emit(f"autotune/{kernel}",
+         measured[winner] * 1e6,
+         f"winner={winner};default={default};"
+         f"default_us={measured[default] * 1e6:.1f};"
+         f"measured={len(measured)};pruned={len(pruned)};key={key}")
+    return winner
+
+
+# ---------------------------------------------------------------------------
+# Family builders: inputs + candidate runners + roofline models
+# ---------------------------------------------------------------------------
+def build_bitserial(smoke: bool, backend: str):
+    k, n, bits, s = (128, 256, 4, 4) if smoke else (512, 1024, 8, 8)
+    b_list = ([3, 1, 0, 2] if smoke else [4, 2, 0, 6, 1, 0, 3, 2])
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.2
+    ql = quantize_linear(w, bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(1), (s, 1, k), jnp.float32)
+    b_sel = jnp.asarray(b_list, jnp.int32)
+    kw = ql.planes.shape[1]
+    candidates = [c for c in (256, 512, 128, 64) if n % c == 0]
+
+    def modeled_s(tile):
+        fetches = plane_block_fetches(b_list, n // tile, bits)
+        return _mem_seconds(fetches, kw * tile * 4)
+
+    def make_runner(tile):
+        def run():
+            tuning.use_cache(_cand_cache("bitserial", n, bits, tile))
+            # the scheduler's slot vmap: collapses via custom_vmap into
+            # ONE slot-kernel launch at the candidate tile
+            return jax.vmap(
+                lambda xs, bs: bitserial_matmul(xs, ql, bs,
+                                                backend=backend))(x, b_sel)
+        return run
+
+    return dict(kernel="bitserial", n=n, bits=bits, candidates=candidates,
+                modeled_s=modeled_s, make_runner=make_runner)
+
+
+def build_jl_plan(smoke: bool, backend: str):
+    u, m, k, kproj, t = (8, 1, 128, 16, 2) if smoke else (24, 2, 256, 16, 3)
+    rng = np.random.default_rng(0)
+    tables = {
+        "l": jnp.asarray(rng.integers(2, 4, (u, t)), jnp.int32),
+        "h": jnp.asarray(rng.integers(5, 7, (u, t)), jnp.int32),
+        "kind": jnp.asarray(rng.integers(0, 3, (u, t)), jnp.int32),
+        "threshold": jnp.asarray(
+            rng.uniform(0.1, 3.0, (u, t)).astype(np.float32)),
+        "a": jnp.asarray(rng.uniform(0, 0.2, (u, t)).astype(np.float32)),
+        "b": jnp.asarray(rng.uniform(0, 0.2, (u, t)).astype(np.float32)),
+        "gamma": jnp.asarray(
+            rng.uniform(0.5, 1.5, (u, t)).astype(np.float32)),
+    }
+    kinds = np.asarray(tables["kind"])
+    g_rows = [np.zeros((kproj, k), np.float32)]
+    g_row = np.zeros((u, t), np.int32)
+    prev = np.zeros((t,), np.int32)
+    for ui in range(u):
+        for ti in range(t):
+            if kinds[ui, ti] == 2:                        # KIND_JL
+                g_row[ui, ti] = len(g_rows)
+                g_rows.append(rng.normal(size=(kproj, k))
+                              .astype(np.float32) / np.sqrt(kproj))
+            else:
+                g_row[ui, ti] = prev[ti]
+        prev = g_row[ui]
+    tables["g"] = jnp.asarray(np.stack(g_rows))
+    tables["g_row"] = jnp.asarray(g_row)
+    x = jnp.asarray(rng.normal(size=(u, m, k)).astype(np.float32))
+    g_fetches = g_block_fetches(g_row[:, 0])
+    candidates = [c for c in (1, 2, 4, 8) if u % c == 0]
+
+    def modeled_s(u_tile):
+        g_s = _mem_seconds(g_fetches, kproj * k * 4)
+        x_s = _mem_seconds(u // u_tile, u_tile * m * k * 4)
+        return g_s + x_s
+
+    def make_runner(u_tile):
+        def run():
+            tuning.use_cache(_cand_cache("jl_plan", u, 0, u_tile))
+            return plan_bits(x, tables, 0, backend=backend)
+        return run
+
+    return dict(kernel="jl_plan", n=u, bits=0, candidates=candidates,
+                modeled_s=modeled_s, make_runner=make_runner)
+
+
+def _rand_kv_stream(key, s, bits, t_rows, hkv, dw):
+    kp = jax.random.randint(key, (s, bits, t_rows, hkv, dw), 0,
+                            jnp.iinfo(jnp.int32).max, jnp.int32)
+    sc = jax.random.uniform(key, (s, t_rows, hkv, 1), jnp.float32,
+                            0.01, 0.1)
+    zr = jax.random.uniform(key, (s, t_rows, hkv, 1), jnp.float32,
+                            0.0, 1.0)
+    return kp, sc, zr
+
+
+def build_kv_attention(smoke: bool, backend: str):
+    s, bits, t_rows, hkv, dh = (2, 4, 64, 1, 128) if smoke else \
+        (4, 6, 256, 2, 128)
+    dw = dh // 32
+    kv_b = jnp.asarray([2, bits] + [3] * (s - 2), jnp.int32)[:s]
+    lens = jnp.asarray(
+        np.random.default_rng(0).integers(1, t_rows, (s, 1)), jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (s, 1, hkv, dh),
+                          jnp.float32)
+    kp, ks, kz = _rand_kv_stream(jax.random.PRNGKey(3), s, bits, t_rows,
+                                 hkv, dw)
+    vp, vs, vz = _rand_kv_stream(jax.random.PRNGKey(4), s, bits, t_rows,
+                                 hkv, dw)
+    from repro.kernels.kv_attention.ops import _pick_tile_t
+    default = _pick_tile_t(t_rows)[0]
+    rest = [c for c in (128, 64, 32, 16, 8)
+            if c != default and t_rows % c == 0]
+    candidates = [default] + rest
+
+    def modeled_s(tile):
+        fetches = 2 * kv_plane_fetches(
+            [int(v) for v in kv_b], t_rows // tile, bits)
+        return _mem_seconds(fetches, tile * hkv * dw * 4)
+
+    def make_runner(tile):
+        def run():
+            tuning.use_cache(_cand_cache("kv_attention", t_rows, bits,
+                                         tile))
+            return kv_decode_attention(q, kp, ks, kz, vp, vs, vz, lens,
+                                       kv_b, bits=bits, backend=backend)
+        return run
+
+    return dict(kernel="kv_attention", n=t_rows, bits=bits,
+                candidates=candidates, modeled_s=modeled_s,
+                make_runner=make_runner)
+
+
+def build_kv_paged(smoke: bool, backend: str):
+    s, bits, t_rows, hkv, dh = (2, 4, 64, 1, 128) if smoke else \
+        (4, 6, 256, 2, 128)
+    dw = dh // 32
+    kv_b = jnp.asarray([2, bits] + [3] * (s - 2), jnp.int32)[:s]
+    lens = jnp.asarray(
+        np.random.default_rng(1).integers(1, t_rows, (s, 1)), jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(5), (s, 1, hkv, dh),
+                          jnp.float32)
+    candidates = [c for c in (16, 32, 64) if t_rows % c == 0]
+
+    def _pool(page_len):
+        pages_per_slot = t_rows // page_len
+        n_pages = s * pages_per_slot + 1          # +1: trash page 0
+        kk = jax.random.PRNGKey(6)
+        kp = jax.random.randint(kk, (n_pages, bits, page_len, hkv, dw), 0,
+                                jnp.iinfo(jnp.int32).max, jnp.int32)
+        sc = jax.random.uniform(kk, (n_pages, page_len, hkv, 1),
+                                jnp.float32, 0.01, 0.1)
+        zr = jax.random.uniform(kk, (n_pages, page_len, hkv, 1),
+                                jnp.float32, 0.0, 1.0)
+        pt = jnp.asarray(
+            1 + np.arange(s * pages_per_slot).reshape(s, pages_per_slot),
+            jnp.int32)
+        return kp, sc, zr, pt
+
+    def modeled_s(page_len):
+        pages_per_slot = t_rows // page_len
+        pt = 1 + np.arange(s * pages_per_slot).reshape(s, pages_per_slot)
+        fetches = 2 * kv_plane_fetches_paged(
+            pt, np.asarray(lens), [int(v) for v in kv_b],
+            page_len=page_len, bits=bits)
+        return _mem_seconds(fetches, page_len * hkv * dw * 4)
+
+    def make_runner(page_len):
+        kp, sc, zr, pt = _pool(page_len)
+
+        def run():
+            return kv_decode_attention_paged(
+                q, kp, sc, zr, kp, sc, zr, pt, lens, kv_b, bits=bits,
+                backend=backend)
+        return run
+
+    return dict(kernel="kv_paged", n=t_rows, bits=0,
+                candidates=candidates, modeled_s=modeled_s,
+                make_runner=make_runner)
+
+
+BUILDERS = {
+    "bitserial": build_bitserial,
+    "jl_plan": build_jl_plan,
+    "kv_attention": build_kv_attention,
+    "kv_paged": build_kv_paged,
+}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def run_autotune(out: str = "tuning_cache.json", smoke: bool = False,
+                 backend: Optional[str] = None,
+                 families: Optional[List[str]] = None,
+                 timer: Callable = default_timer,
+                 force: bool = False) -> TuningCache:
+    backend = tuning.kernel_backend(backend)
+    cache = TuningCache.load(out) if os.path.exists(out) else TuningCache()
+    cache.meta.update(backend=backend, smoke=bool(smoke),
+                      platform=tuning.platform_name())
+    for name in families or list(BUILDERS):
+        fam = BUILDERS[name](smoke, backend)
+        tune_family(cache, timer=timer, force=force, **fam)
+    cache.save(out)
+    emit("autotune/saved", 0.0,
+         f"path={out};entries={len(cache.entries)};backend={backend}")
+    return cache
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="tuning_cache.json",
+                    help="cache file to create/extend")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI shard)")
+    ap.add_argument("--backend", default=None,
+                    choices=("pallas", "interpret"),
+                    help="kernel backend (default: pallas on TPU, "
+                         "interpret elsewhere)")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated subset of "
+                         f"{','.join(BUILDERS)}")
+    ap.add_argument("--force", action="store_true",
+                    help="re-tune entries already in the cache")
+    args = ap.parse_args()
+    run_autotune(out=args.out, smoke=args.smoke, backend=args.backend,
+                 families=args.families.split(",") if args.families
+                 else None, force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,12 +12,11 @@ Three views (no TPU in-container):
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from benchmarks import hw
 from benchmarks.common import built_model, emit, eval_ppl, eval_sequences
+from repro.kernels.tuning import time_us
 from repro.models import linear_units
 from repro.serving import ServingEngine
 
@@ -62,12 +61,8 @@ def fused_vs_inline(engine: ServingEngine, quick: bool = False) -> dict:
                                np.asarray(fused_fn(acts, t0))))
 
     def wall(fn, reps):
-        fn(acts, t0)                     # compile
-        t = time.monotonic()
-        for _ in range(reps):
-            r = fn(acts, t0)
-        jax.block_until_ready(r)
-        return (time.monotonic() - t) / reps * 1e6
+        # shared harness: warmup + per-rep fence + median
+        return time_us(fn, acts, t0, warmup=1, reps=reps)
 
     reps = 20 if quick else 200
     res = {

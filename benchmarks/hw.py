@@ -3,3 +3,7 @@ PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
 HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link
 CHIP_HBM_BYTES = 16e9         # v5e HBM capacity
+DMA_ISSUE_S = 1e-6            # fixed cost per HBM->VMEM block DMA issue
+                              # (the tile-size lever the autotuner prunes on:
+                              # small tiles -> more issues, large tiles ->
+                              # VMEM pressure; order-of-magnitude figure)

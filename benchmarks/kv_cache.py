@@ -24,7 +24,6 @@ Self-contained (no trained model); run from the repo root:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +32,7 @@ import numpy as np
 from repro.kernels.kv_attention import (kv_decode_attention,
                                         kv_plane_fetches)
 from repro.models.attention import encode_kv_rows
+from repro.kernels.tuning import time_us
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
@@ -40,12 +40,9 @@ def emit(name: str, us_per_call: float, derived) -> None:
 
 
 def _time(fn, *args, reps: int = 20) -> float:
-    jax.block_until_ready(fn(*args))              # warm + compile
-    t0 = time.monotonic()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.monotonic() - t0) / reps * 1e6   # us
+    """Median microseconds per call via the shared harness
+    (``repro.kernels.tuning``): warmup + per-rep block_until_ready."""
+    return time_us(fn, *args, warmup=1, reps=reps)
 
 
 def _caches(s: int, t: int, hkv: int, dh: int, bits: int):

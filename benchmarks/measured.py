@@ -1,0 +1,225 @@
+"""Measured (not modeled) DMA-elision contracts + per-platform artifact.
+
+Every other stage in ``benchmarks/`` reports *modeled* plane traffic
+(host-side index_map walks). This stage measures the contract with a
+wall clock: uniform ``b_sel`` / ``kv_b`` sweeps through the slot and KV
+kernels — fewer planes must cost less *time*, not just fewer modeled
+blocks — and tuned-vs-default tokens/s through the public dispatch with
+the tuning cache installed and removed.
+
+Platform rules (the artifact is per-platform by construction):
+
+* the artifact is named ``BENCH_serve.<platform>.json`` and carries a
+  ``platform`` key; ``tools/perf_gate.py`` only gates artifacts whose
+  platforms match, so a TPU trajectory never gates a CPU run;
+* sweeps run the kernel body (compiled on TPU/GPU, interpret on CPU);
+  the monotone-in-bits assertion is enforced on real backends ONLY —
+  interpret-mode wall time doesn't model DMA, so on CPU the sweep is
+  recorded for trajectory, not asserted;
+* tokens/s metrics on CPU use the jnp oracle (interpret wall time is
+  noise); on TPU/GPU they use the compiled kernel.
+
+Self-contained (no trained model); run from the repo root:
+    PYTHONPATH=src python benchmarks/measured.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import quantize_linear
+from repro.kernels import tuning
+from repro.kernels.bitserial.kernel import bitserial_matmul_slots_pallas
+from repro.kernels.bitserial.ops import bitserial_matmul
+from repro.kernels.bitserial.ref import bitserial_matmul_slots_ref
+from repro.kernels.kv_attention.ops import kv_decode_attention
+from repro.kernels.tuning import measure
+
+#: monotonicity slack per sweep step on real backends — clock jitter,
+#: not a license for a lower-bits step to cost more
+MONOTONE_SLACK = 0.05
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _real_backend(platform: str) -> bool:
+    return platform in ("tpu", "gpu")
+
+
+def _monotone(sweep: Dict[int, float]) -> bool:
+    ts = [sweep[b] for b in sorted(sweep)]
+    return all(ts[i + 1] >= ts[i] * (1.0 - MONOTONE_SLACK)
+               for i in range(len(ts) - 1))
+
+
+# ---------------------------------------------------------------------------
+# b_sel sweep: slot kernel wall time vs uniform precision
+# ---------------------------------------------------------------------------
+def slot_sweep(smoke: bool, platform: str, reps: int) -> Dict[int, float]:
+    k, n, bits, s = (128, 256, 4, 4) if smoke else (512, 1024, 8, 8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.2
+    ql = quantize_linear(w, bits=bits)
+    scale, zero = ql.scale[None, :], ql.zero[None, :]
+    x = jax.random.normal(jax.random.PRNGKey(1), (s, 1, k), jnp.float32)
+    interpret = not _real_backend(platform)
+    tile_n = 128 if smoke else 256
+    sweep = {}
+    for b in range(1, bits + 1):
+        b_sel = jnp.full((s,), b, jnp.int32)
+        r = measure(
+            lambda: bitserial_matmul_slots_pallas(
+                x, ql.planes, scale, zero, b_sel, bits=bits,
+                tile_n=tile_n, interpret=interpret),
+            warmup=1, reps=reps)
+        sweep[b] = r.seconds
+        emit(f"measured/slot_sweep/b{b}", r.seconds * 1e6,
+             f"bits={bits};tile_n={tile_n};interpret={int(interpret)}")
+    return sweep
+
+
+def kv_sweep(smoke: bool, platform: str, reps: int) -> Dict[int, float]:
+    s, bits, t_rows, hkv, dh = (2, 4, 64, 1, 128) if smoke else \
+        (4, 6, 256, 2, 128)
+    dw = dh // 32
+    backend = "pallas" if _real_backend(platform) else "interpret"
+    lens = jnp.full((s, 1), t_rows, jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (s, 1, hkv, dh),
+                          jnp.float32)
+
+    def stream(seed):
+        kk = jax.random.PRNGKey(seed)
+        kp = jax.random.randint(kk, (s, bits, t_rows, hkv, dw), 0,
+                                jnp.iinfo(jnp.int32).max, jnp.int32)
+        sc = jax.random.uniform(kk, (s, t_rows, hkv, 1), jnp.float32,
+                                0.01, 0.1)
+        zr = jax.random.uniform(kk, (s, t_rows, hkv, 1), jnp.float32,
+                                0.0, 1.0)
+        return kp, sc, zr
+
+    kp, ks, kz = stream(3)
+    vp, vs, vz = stream(4)
+    sweep = {}
+    for b in range(1, bits + 1):
+        kv_b = jnp.full((s,), b, jnp.int32)
+        r = measure(
+            lambda: kv_decode_attention(q, kp, ks, kz, vp, vs, vz, lens,
+                                        kv_b, bits=bits, backend=backend),
+            warmup=1, reps=reps)
+        sweep[b] = r.seconds
+        emit(f"measured/kv_sweep/b{b}", r.seconds * 1e6,
+             f"bits={bits};backend={backend}")
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Tuned-vs-default tokens/s through the public dispatch
+# ---------------------------------------------------------------------------
+def decode_rates(smoke: bool, platform: str, reps: int,
+                 cache: Optional[tuning.TuningCache]) -> Dict[str, float]:
+    k, n, bits, s = (128, 256, 4, 4) if smoke else (512, 1024, 8, 8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.2
+    ql = quantize_linear(w, bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(1), (s, 1, k), jnp.float32)
+    b_sel = jnp.asarray([bits - 1] * s, jnp.int32)
+    if _real_backend(platform):
+        backend = "pallas"
+        call = lambda: jax.vmap(
+            lambda xs, bs: bitserial_matmul(xs, ql, bs,
+                                            backend=backend))(x, b_sel)
+    else:
+        # CPU tokens/s must be gate-stable: the oracle, not interpret
+        scale, zero = ql.scale[None, :], ql.zero[None, :]
+        call = lambda: bitserial_matmul_slots_ref(
+            x, ql.planes, scale, zero, b_sel, bits=bits)
+
+    prev = tuning.active_cache()
+    try:
+        tuning.use_cache(None)
+        t_default = measure(call, warmup=1, reps=reps).seconds
+        tuning.use_cache(cache)
+        t_tuned = measure(call, warmup=1, reps=reps).seconds
+    finally:
+        tuning.use_cache(prev)
+    tuned_rate = s / max(t_tuned, 1e-12)
+    default_rate = s / max(t_default, 1e-12)
+    emit("measured/decode_tokens_per_s", t_tuned * 1e6,
+         f"tuned={tuned_rate:.1f};default={default_rate:.1f}")
+    return {"decode_tokens_per_s": tuned_rate,
+            "decode_tokens_per_s_default": default_rate}
+
+
+def kv_rate(smoke: bool, platform: str, reps: int,
+            sweep: Dict[int, float]) -> float:
+    # tokens/s of the mid-precision KV read from the sweep already run
+    s = 2 if smoke else 4
+    b = max(1, max(sweep) // 2)
+    return s / max(sweep[b], 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def collect(smoke: bool = False,
+            cache_path: Optional[str] = None) -> dict:
+    platform = tuning.platform_name()
+    reps = 3 if smoke else 5
+    cache = tuning.TuningCache.load(cache_path) if cache_path else \
+        tuning.active_cache()
+    real = _real_backend(platform)
+
+    sweep_s = slot_sweep(smoke, platform, reps)
+    sweep_k = kv_sweep(smoke, platform, reps)
+    mono_s, mono_k = _monotone(sweep_s), _monotone(sweep_k)
+    if real and not (mono_s and mono_k):
+        raise SystemExit(
+            f"measured-time slope not monotone in bits on {platform}: "
+            f"slot={sweep_s} kv={sweep_k}")
+
+    blob = {
+        "platform": platform,
+        "suite": "measured",
+        "backend": "pallas" if real else "interpret",
+        "quick": bool(smoke),
+        "slot_sweep_s": {str(b): t for b, t in sweep_s.items()},
+        "kv_sweep_s": {str(b): t for b, t in sweep_k.items()},
+        "monotone_slot": mono_s,
+        "monotone_kv": mono_k,
+        "monotone_enforced": real,
+        "tuning_entries": len(cache.entries) if cache else 0,
+        "kv_tokens_per_s": kv_rate(smoke, platform, reps, sweep_k),
+    }
+    blob.update(decode_rates(smoke, platform, reps, cache))
+    emit("measured/summary", 0.0,
+         f"platform={platform};monotone_slot={int(mono_s)};"
+         f"monotone_kv={int(mono_k)};enforced={int(real)}")
+    return blob
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI shard)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default "
+                         "BENCH_serve.<platform>.json)")
+    ap.add_argument("--cache", default=None,
+                    help="tuning cache to install (default: the active "
+                         "cache / $REPRO_TUNING_CACHE)")
+    args = ap.parse_args()
+    blob = collect(smoke=args.smoke, cache_path=args.cache)
+    out = args.out or f"BENCH_serve.{blob['platform']}.json"
+    with open(out, "w") as fh:
+        json.dump(blob, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,7 +24,6 @@ Self-contained (no trained model); run from the repo root:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +33,7 @@ from repro.core.bitplane import materialize_stacked, quantize_stacked
 from repro.kernels.bitserial import expert_plane_fetches
 from repro.kernels.common import max_eqn_aval_elems
 from repro.models.moe import moe_decode_forward, moe_decode_rows
+from repro.kernels.tuning import time_us
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
@@ -41,12 +41,9 @@ def emit(name: str, us_per_call: float, derived) -> None:
 
 
 def _time(fn, *args, reps: int = 10) -> float:
-    jax.block_until_ready(fn(*args))              # warm + compile
-    t0 = time.monotonic()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.monotonic() - t0) / reps * 1e6   # us
+    """Median microseconds per call via the shared harness
+    (``repro.kernels.tuning``): warmup + per-rep block_until_ready."""
+    return time_us(fn, *args, warmup=1, reps=reps)
 
 
 def _layer(e: int, d: int, f: int, bits: int):

@@ -26,11 +26,11 @@ bench-lm / artifact cache needed), same asserts.
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from benchmarks.common import emit
+from repro.kernels.tuning import median_time_s
 
 
 def _first_token_wall(engine, prompt, target: float) -> float:
@@ -41,17 +41,17 @@ def _first_token_wall(engine, prompt, target: float) -> float:
     so this measures the prefill stage alone for a staged engine and the
     boot-tick + teacher-forced chunks for a legacy one.
     """
-    import jax
     import jax.numpy as jnp
 
     p = prompt.shape[1]
     t_idx = jnp.int32(engine.artifacts.target_index(target))
-    t0 = time.monotonic()
-    toks_out, _, _ = engine._run_chunks(
-        "dynamic", np.asarray(prompt, np.int32), np.ones((p,), bool),
-        np.zeros(prompt.shape, np.int32), t_idx, want_nll=False)
-    jax.block_until_ready(toks_out)
-    return time.monotonic() - t0
+    # single fenced call through the shared harness (TTFT is a one-shot
+    # latency, not a throughput median; the caller warms separately)
+    return median_time_s(
+        lambda: engine._run_chunks(
+            "dynamic", np.asarray(prompt, np.int32), np.ones((p,), bool),
+            np.zeros(prompt.shape, np.int32), t_idx, want_nll=False)[0],
+        warmup=0, reps=1)
 
 
 def measure(engine_staged, engine_legacy, prompt, target: float) -> dict:

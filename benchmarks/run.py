@@ -41,8 +41,11 @@ def collect_serve_json(quick: bool) -> dict:
     """The tracked serve-path numbers: decode throughput, effective bits,
     TTFT / prefill throughput of the disaggregated prefill stage, and the
     fused-planner-vs-inline decision overhead."""
+    import jax
+
     from benchmarks.common import built_model, eval_ppl, eval_sequences
     from benchmarks.estimator_overhead import fused_vs_inline
+    from repro.kernels.tuning import measure
     from benchmarks.moe_kernel import measure as moe_measure
     from benchmarks.prefill import measure as prefill_measure
     from benchmarks.speculative import measure as spec_measure
@@ -53,10 +56,9 @@ def collect_serve_json(quick: bool) -> dict:
     toks = eval_sequences(cfg, n=1, seq=64 if quick else 128)
     target = 4.0
     prompt, max_new = toks[:, :8], (24 if quick else 64)
-    engine.generate(prompt, max_new, target)            # compile
-    t0 = time.monotonic()
-    _, gen_bits = engine.generate(prompt, max_new, target)
-    gen_wall = time.monotonic() - t0
+    r = measure(lambda: engine.generate(prompt, max_new, target),
+                warmup=1, reps=1)
+    gen_wall, gen_bits = r.seconds, r.out[1]
     engine.teacher_forced_nll(toks[:1], target)         # compile
     ppl, eff_bits, us_step = eval_ppl(engine, toks, target)
     planner = fused_vs_inline(engine, quick=quick)
@@ -69,10 +71,8 @@ def collect_serve_json(quick: bool) -> dict:
     moe = moe_measure(quick=quick)
     # dynamic-precision KV cache: planner-assigned per-layer read bits
     kv_engine = ServingEngine(cfg, params, model, kv_overlay=True)
-    kv_engine.generate(prompt, max_new, target)         # compile
-    t0 = time.monotonic()
-    kv_engine.generate(prompt, max_new, target)
-    kv_wall = time.monotonic() - t0
+    kv_wall = measure(lambda: kv_engine.generate(prompt, max_new, target),
+                      warmup=1, reps=1).seconds
     # paged bitplane-KV pool + prefill fleet under replayed traffic
     from benchmarks.traffic_replay import measure as replay_measure
     replay = replay_measure(quick=quick)
@@ -107,6 +107,8 @@ def collect_serve_json(quick: bool) -> dict:
         "prefill_tokens_per_s": prefill["staged_prefill_tokens_per_s"],
         "prefill_launches": prefill["staged_launches"],
         "prefill_prompt_len": p_len,
+        "platform": jax.default_backend(),
+        "suite": "serve",
         "quick": quick,
     }
 
@@ -121,9 +123,10 @@ def main() -> int:
     args = ap.parse_args()
 
     if args.json:
-        t0 = time.monotonic()
+        # wall_s (total collection time) is deliberately NOT recorded:
+        # it tracked machine load, not the serve path, and the perf gate
+        # never compared it
         blob = collect_serve_json(args.quick)
-        blob["wall_s"] = time.monotonic() - t0
         with open(args.json, "w") as fh:
             json.dump(blob, fh, indent=2, sort_keys=True)
             fh.write("\n")

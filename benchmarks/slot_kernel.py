@@ -21,7 +21,6 @@ Self-contained (no trained model); run from the repo root:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +31,7 @@ from repro.kernels.bitserial import (bitserial_matmul,
                                      bitserial_matmul_slots_pallas,
                                      bitserial_matmul_slots_ref,
                                      plane_block_fetches)
+from repro.kernels.tuning import time_us
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
@@ -39,12 +39,9 @@ def emit(name: str, us_per_call: float, derived) -> None:
 
 
 def _time(fn, *args, reps: int = 20) -> float:
-    jax.block_until_ready(fn(*args))              # warm + compile
-    t0 = time.monotonic()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.monotonic() - t0) / reps * 1e6   # us
+    """Median microseconds per call via the shared harness
+    (``repro.kernels.tuning``): warmup + per-rep block_until_ready."""
+    return time_us(fn, *args, warmup=1, reps=reps)
 
 
 def main(quick: bool = False, interpret: bool = False) -> dict:

@@ -25,20 +25,24 @@ bench-lm / artifact cache needed), same asserts.
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from benchmarks.common import emit
+from repro.kernels.tuning import measure as harness_measure
 
 
 def _decode_wall(engine, prompt, max_new: int, target: float,
                  spec_k=None) -> tuple:
-    """(wall seconds, tokens, effective bits) for one generate call."""
+    """(wall seconds, tokens, effective bits) for one generate call —
+    a single fenced shot through the shared harness, whose ``out``
+    carries the (tokens, bits) pair back for the parity asserts."""
     kw = {} if spec_k is None else {"spec_k": spec_k}
-    t0 = time.monotonic()
-    out, ebits = engine.generate(prompt, max_new, target, **kw)
-    return time.monotonic() - t0, out, ebits
+    r = harness_measure(
+        lambda: engine.generate(prompt, max_new, target, **kw),
+        warmup=0, reps=1)
+    out, ebits = r.out
+    return r.seconds, out, ebits
 
 
 def measure(engine, prompt, max_new: int, target: float,

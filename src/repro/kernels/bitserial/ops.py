@@ -39,8 +39,13 @@ from repro.kernels.bitserial.ref import (bitserial_matmul_grouped_ref,
                                          bitserial_matmul_ref,
                                          bitserial_matmul_slots_ref)
 from repro.kernels.common import pad_overlay_n
+from repro.kernels.tuning import tuned_tile
 
 TILE_CHOICES = (256, 128)
+
+#: tuning-cache kernel family for all three dispatch shapes
+#: (plain / slots / grouped share the same tile_n semantics)
+TUNE_KERNEL = "bitserial"
 
 # Python-trace counters per dispatch entry point ("single" / "slots"):
 # increments happen at trace time only, so a counter that stays flat across
@@ -63,13 +68,35 @@ def _pick_tile_n(n: int) -> int:
     return 0
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "backend"))
-def _dispatch(x, planes, scale, zero, b_sel, *, bits: int, backend: str):
+def resolve_tile_n(n: int, bits: int) -> int:
+    """Tile for an N-dim of ``n``: the tuning cache's winner when it
+    divides ``n``, else the first default choice that does, else 0
+    (caller must pad — see :func:`pad_tile_n`). Cache miss reproduces
+    today's ``_pick_tile_n`` exactly, so dispatch without a cache is
+    unchanged."""
+    tuned = tuned_tile(TUNE_KERNEL, n=n, bits=bits)
+    if tuned and n % tuned == 0:
+        return tuned
+    return _pick_tile_n(n)
+
+
+def pad_tile_n(n: int, bits: int) -> int:
+    """Padding granularity for untileable N under an explicit kernel
+    backend: the tuned tile when one is cached (the satellite fix — a
+    tuned non-default tile must never trip the default-tile pad
+    assumption), else the smallest default choice."""
+    tuned = tuned_tile(TUNE_KERNEL, n=n, bits=bits)
+    return tuned if tuned else min(TILE_CHOICES)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "backend", "tile_n"))
+def _dispatch(x, planes, scale, zero, b_sel, *, bits: int, backend: str,
+              tile_n: int = 0):
     _count_trace("single")
     if backend == "ref":
         y = bitserial_matmul_ref(x, planes, scale, zero, b_sel, bits=bits)
     else:
-        tile_n = _pick_tile_n(planes.shape[-1])
+        tile_n = tile_n or _pick_tile_n(planes.shape[-1])
         assert tile_n, (planes.shape, "caller pads N for explicit backends")
         y = bitserial_matmul_pallas(
             x, planes, scale, zero, b_sel, bits=bits, tile_n=tile_n,
@@ -80,15 +107,15 @@ def _dispatch(x, planes, scale, zero, b_sel, *, bits: int, backend: str):
     return jnp.where(b_sel[0] > 0, y, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+@functools.partial(jax.jit, static_argnames=("bits", "backend", "tile_n"))
 def _dispatch_slots(x, planes, scale, zero, b_sel, *, bits: int,
-                    backend: str):
+                    backend: str, tile_n: int = 0):
     """Slot-batched dispatch: x (S, M, K), b_sel (S,); idle slots -> 0."""
     _count_trace("slots")
     if backend == "ref":
         return bitserial_matmul_slots_ref(x, planes, scale, zero, b_sel,
                                           bits=bits)
-    tile_n = _pick_tile_n(planes.shape[-1])
+    tile_n = tile_n or _pick_tile_n(planes.shape[-1])
     assert tile_n, (planes.shape, "caller pads N for explicit backends")
     y = bitserial_matmul_slots_pallas(
         x, planes, scale, zero, b_sel, bits=bits, tile_n=tile_n,
@@ -97,15 +124,15 @@ def _dispatch_slots(x, planes, scale, zero, b_sel, *, bits: int,
     return jnp.where((b_sel > 0)[:, None, None], y, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+@functools.partial(jax.jit, static_argnames=("bits", "backend", "tile_n"))
 def _dispatch_grouped(x, planes, scale, zero, expert_of, b_sel, counts, *,
-                      bits: int, backend: str):
+                      bits: int, backend: str, tile_n: int = 0):
     """Grouped MoE dispatch: x (G, C, K); idle/empty groups -> zeros."""
     _count_trace("grouped")
     if backend == "ref":
         return bitserial_matmul_grouped_ref(
             x, planes, scale, zero, expert_of, b_sel, counts, bits=bits)
-    tile_n = _pick_tile_n(planes.shape[-1])
+    tile_n = tile_n or _pick_tile_n(planes.shape[-1])
     assert tile_n, (planes.shape, "caller pads N for explicit backends")
     y = bitserial_matmul_grouped_pallas(
         x, planes, scale, zero, expert_of, b_sel, counts, bits=bits,
@@ -115,7 +142,7 @@ def _dispatch_grouped(x, planes, scale, zero, expert_of, b_sel, counts, *,
 
 
 @functools.lru_cache(maxsize=None)
-def _grouped_batchable(bits: int, backend: str):
+def _grouped_batchable(bits: int, backend: str, tile_n: int = 0):
     """custom_vmap'd GROUPED core: vmapping an already group-batched call
     flattens the new axis into the existing group axis instead of generic
     Pallas lifting. This is how MoE prefill collapses: the rows-mode
@@ -128,7 +155,8 @@ def _grouped_batchable(bits: int, backend: str):
     @jax.custom_batching.custom_vmap
     def fn(x, planes, scale, zero, expert_of, b_sel, counts):
         return _dispatch_grouped(x, planes, scale, zero, expert_of, b_sel,
-                                 counts, bits=bits, backend=backend)
+                                 counts, bits=bits, backend=backend,
+                                 tile_n=tile_n)
 
     @fn.def_vmap
     def _vmap_rule(axis_size, in_batched, x, planes, scale, zero,
@@ -140,7 +168,7 @@ def _grouped_batchable(bits: int, backend: str):
             axes = tuple(0 if b else None for b in in_batched)
             y = jax.vmap(
                 functools.partial(_dispatch_grouped, bits=bits,
-                                  backend=backend),
+                                  backend=backend, tile_n=tile_n),
                 in_axes=axes)(x, planes, scale, zero, expert_of, b_sel,
                               counts)
             return y, True
@@ -161,7 +189,7 @@ def _grouped_batchable(bits: int, backend: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _slots_batchable(bits: int, backend: str):
+def _slots_batchable(bits: int, backend: str, tile_n: int = 0):
     """custom_vmap'd SLOT-batched core: vmapping an already slot-batched
     call flattens the new axis into the existing slot axis instead of
     generic Pallas lifting. This is how the speculative VERIFY launch
@@ -174,7 +202,7 @@ def _slots_batchable(bits: int, backend: str):
     @jax.custom_batching.custom_vmap
     def fn(x, planes, scale, zero, b_sel):
         return _dispatch_slots(x, planes, scale, zero, b_sel, bits=bits,
-                               backend=backend)
+                               backend=backend, tile_n=tile_n)
 
     @fn.def_vmap
     def _vmap_rule(axis_size, in_batched, x, planes, scale, zero, b_sel):
@@ -184,7 +212,7 @@ def _slots_batchable(bits: int, backend: str):
             axes = tuple(0 if b else None for b in in_batched)
             y = jax.vmap(
                 functools.partial(_dispatch_slots, bits=bits,
-                                  backend=backend),
+                                  backend=backend, tile_n=tile_n),
                 in_axes=axes)(x, planes, scale, zero, b_sel)
             return y, True
         if not x_b:
@@ -200,7 +228,7 @@ def _slots_batchable(bits: int, backend: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _batchable(bits: int, backend: str):
+def _batchable(bits: int, backend: str, tile_n: int = 0):
     """custom_vmap'd core: unmapped calls run the single-request path;
     a mapped call (the scheduler's slot axis) collapses into the batched
     kernel with per-slot DMA elision instead of generic Pallas batching.
@@ -211,7 +239,7 @@ def _batchable(bits: int, backend: str):
     @jax.custom_batching.custom_vmap
     def fn(x, planes, scale, zero, b_sel):
         return _dispatch(x, planes, scale, zero, b_sel, bits=bits,
-                         backend=backend)
+                         backend=backend, tile_n=tile_n)
 
     @fn.def_vmap
     def _vmap_rule(axis_size, in_batched, x, planes, scale, zero, b_sel):
@@ -221,7 +249,8 @@ def _batchable(bits: int, backend: str):
             # generic per-element mapping, exactly what plain vmap did
             axes = tuple(0 if b else None for b in in_batched)
             y = jax.vmap(
-                functools.partial(_dispatch, bits=bits, backend=backend),
+                functools.partial(_dispatch, bits=bits, backend=backend,
+                                  tile_n=tile_n),
                 in_axes=axes)(x, planes, scale, zero, b_sel)
             return y, True
         if not x_b:
@@ -231,8 +260,8 @@ def _batchable(bits: int, backend: str):
         # route through the slot-batched custom_vmap wrapper so a FURTHER
         # vmap (scheduler slots over speculative verify rows) flattens
         # into the slot axis instead of generically batching the kernel
-        y = _slots_batchable(bits, backend)(x, planes, scale, zero,
-                                            b_sel[:, 0])
+        y = _slots_batchable(bits, backend, tile_n)(x, planes, scale, zero,
+                                                    b_sel[:, 0])
         return y, True
 
     return fn
@@ -263,11 +292,19 @@ def bitserial_matmul(
         xm = jnp.pad(xm, ((0, 0), (0, kp - xm.shape[-1])))
     n = ql.planes.shape[-1]
     planes, scale, zero = ql.planes, ql.scale[None, :], ql.zero[None, :]
-    if backend != "ref" and _pick_tile_n(n) == 0:
-        # explicit kernel backend on untileable N: pad to the smallest tile
-        planes, scale, zero = pad_overlay_n(planes, scale, zero,
-                                            min(TILE_CHOICES))
-    y = _batchable(ql.bits, backend)(
+    tile_n = 0
+    if backend != "ref":
+        # resolved ONCE here (host code, outside jit) and threaded as a
+        # static key — a tuning-cache change lands on the next call
+        tile_n = resolve_tile_n(n, ql.bits)
+        if tile_n == 0:
+            # explicit kernel backend on untileable N: pad to the tile
+            # actually dispatched (tuned when cached, smallest default
+            # otherwise) — never a stale hardcoded granularity
+            tile_n = pad_tile_n(n, ql.bits)
+            planes, scale, zero = pad_overlay_n(planes, scale, zero,
+                                                tile_n)
+    y = _batchable(ql.bits, backend, tile_n)(
         xm, planes, scale, zero,
         jnp.asarray(b_sel, jnp.int32).reshape((1,)))
     y = y[..., :n]
@@ -308,11 +345,16 @@ def bitserial_matmul_grouped(
         xm = jnp.pad(xm, ((0, 0), (0, 0), (0, kp - xm.shape[-1])))
     n = qs.planes.shape[-1]
     planes, scale, zero = qs.planes, qs.scale, qs.zero
-    if backend != "ref" and _pick_tile_n(n) == 0:
-        # explicit kernel backend on untileable N: pad to the smallest tile
-        planes, scale, zero = pad_overlay_n(planes, scale, zero,
-                                            min(TILE_CHOICES))
-    y = _grouped_batchable(qs.bits, backend)(
+    tile_n = 0
+    if backend != "ref":
+        tile_n = resolve_tile_n(n, qs.bits)
+        if tile_n == 0:
+            # explicit kernel backend on untileable N: pad to the tile
+            # actually dispatched (tuned when cached, else smallest default)
+            tile_n = pad_tile_n(n, qs.bits)
+            planes, scale, zero = pad_overlay_n(planes, scale, zero,
+                                                tile_n)
+    y = _grouped_batchable(qs.bits, backend, tile_n)(
         xm, planes, scale, zero,
         jnp.asarray(expert_of, jnp.int32).reshape((g,)),
         jnp.asarray(b_sel, jnp.int32).reshape((g,)),

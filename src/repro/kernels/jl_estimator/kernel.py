@@ -138,7 +138,20 @@ def _plan_kernel(t_act_ref, grow_ref, l_ref, h_ref, kind_ref, a_ref, b_ref,
         b_ref[u], gam_ref[u], thr_ref[u], t_act_ref[1])
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _plan_tiled_kernel(t_act_ref, grow_ref, l_ref, h_ref, kind_ref, a_ref,
+                       b_ref, gam_ref, thr_ref, x_ref, g_ref, bits_ref):
+    # grid (U/u_tile, u_tile): the x block carries u_tile units' rows and
+    # is revisited across the inner axis (one DMA per outer step instead
+    # of one per unit — the granularity knob the autotuner measures)
+    i, j = pl.program_id(0), pl.program_id(1)
+    u = i * pl.num_programs(1) + j
+    x = x_ref[pl.ds(j, 1)][0]
+    bits_ref[0, 0] = _plan_unit_bits(
+        x, g_ref[0], l_ref[u], h_ref[u], kind_ref[u], a_ref[u],
+        b_ref[u], gam_ref[u], thr_ref[u], t_act_ref[1])
+
+
+@functools.partial(jax.jit, static_argnames=("u_tile", "interpret"))
 def plan_bits_pallas(
     x: jax.Array,          # (U, M, K) float32 — per-unit estimator inputs
     g: jax.Array,          # (R, kproj, K) float32 — packed JL G stack
@@ -152,12 +165,56 @@ def plan_bits_pallas(
     thr_t: jax.Array,      # (U,) float32
     t_act: jax.Array,      # (2,) int32 [target_idx, active]
     *,
+    u_tile: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns bits (U, 1) int32 — the whole tick's decisions, one launch."""
+    """Returns bits (U, 1) int32 — the whole tick's decisions, one launch.
+
+    ``u_tile > 1`` (autotuned knob, must divide U) regroups the grid as
+    ``(U/u_tile, u_tile)`` with the x buffer blocked ``u_tile`` units at
+    a time: the block is DMA'd once per outer step and revisited across
+    the inner axis, trading VMEM footprint for fewer DMA issues. The
+    G-stack walk visits units in the same flat order, so the g_row
+    elision contract (:func:`g_block_fetches`) is unchanged, and the
+    per-unit math is identical — ``u_tile`` is bit-invariant.
+    """
     u, m, k = x.shape
     r, kproj, k2 = g.shape
     assert k == k2, (k, k2)
+
+    if u_tile > 1:
+        assert u % u_tile == 0, (u, u_tile)
+
+        def x_map_t(i, j, *refs):
+            del j, refs
+            return (i, 0, 0)
+
+        def g_map_t(i, j, t_act_ref, grow_ref, *refs):
+            del t_act_ref, refs
+            return (grow_ref[i * u_tile + j], 0, 0)
+
+        def out_map_t(i, j, *refs):
+            del refs
+            return (i * u_tile + j, 0)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=9,
+            grid=(u // u_tile, u_tile),
+            in_specs=[
+                pl.BlockSpec((u_tile, m, k), x_map_t),
+                pl.BlockSpec((1, kproj, k), g_map_t),
+            ],
+            out_specs=pl.BlockSpec((1, 1), out_map_t),
+        )
+        return pl.pallas_call(
+            _plan_tiled_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((u, 1), jnp.int32),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("arbitrary", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(t_act, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t, x, g)
 
     def x_map(i, *refs):
         del refs

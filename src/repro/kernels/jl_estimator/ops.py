@@ -26,6 +26,10 @@ from repro.kernels.jl_estimator.kernel import (jl_estimate_pallas,
                                                plan_bits_pallas,
                                                plan_bits_slots_pallas)
 from repro.kernels.jl_estimator.ref import jl_estimate_ref, plan_bits_ref
+from repro.kernels.tuning import tuned_tile
+
+#: tuning-cache kernel family for the planner's unit-tile knob
+TUNE_KERNEL = "jl_plan"
 
 # Python-trace counters per dispatch entry point ("estimate" / "plan" /
 # "plan_slots"): increments happen at trace time only, so a counter that
@@ -75,16 +79,26 @@ def jl_estimate(
 # ---------------------------------------------------------------------------
 # Fused decision planner
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("backend",))
+def resolve_u_tile(u: int) -> int:
+    """The planner's tuned unit-tile for a ``u``-unit model, or 1 (the
+    original one-unit-per-grid-step layout) on cache miss or when the
+    tuned tile doesn't divide ``u``."""
+    tuned = tuned_tile(TUNE_KERNEL, n=u)
+    if tuned and tuned > 1 and u % tuned == 0:
+        return tuned
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "u_tile"))
 def _plan_dispatch(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t,
-                   thr_t, t_act, *, backend: str):
+                   thr_t, t_act, *, backend: str, u_tile: int = 1):
     _count_trace("plan")
     if backend == "ref":
         return plan_bits_ref(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t,
                              gamma_t, thr_t, t_act)
     bits = plan_bits_pallas(
         x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t, t_act,
-        interpret=(backend == "interpret"))
+        u_tile=u_tile, interpret=(backend == "interpret"))
     return bits[:, 0]
 
 
@@ -104,18 +118,21 @@ def _plan_dispatch_slots(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t,
 
 
 @functools.lru_cache(maxsize=None)
-def _plan_batchable(backend: str):
+def _plan_batchable(backend: str, u_tile: int = 1):
     """custom_vmap'd core: unmapped calls run the single-tick planner;
     a mapped call (the scheduler's slot axis) collapses into the (S, U)
     slot kernel instead of generic Pallas batching.
 
-    Cached per backend so repeated traces reuse ONE custom_vmap object."""
+    Cached per (backend, u_tile) so repeated traces reuse ONE
+    custom_vmap object. ``u_tile`` only shapes the single-tick launch;
+    the slot kernel's grid is already (S, U)."""
 
     @jax.custom_batching.custom_vmap
     def fn(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t, gamma_t, thr_t,
            t_act):
         return _plan_dispatch(x, g, g_row_t, l_t, h_t, kind_t, a_t, b_t,
-                              gamma_t, thr_t, t_act, backend=backend)
+                              gamma_t, thr_t, t_act, backend=backend,
+                              u_tile=u_tile)
 
     @fn.def_vmap
     def _vmap_rule(axis_size, in_batched, x, g, g_row_t, l_t, h_t, kind_t,
@@ -123,7 +140,8 @@ def _plan_batchable(backend: str):
         if in_batched[1]:
             # a batched G stack is not the serving layout: generic mapping
             axes = tuple(0 if b else None for b in in_batched)
-            y = jax.vmap(functools.partial(_plan_dispatch, backend=backend),
+            y = jax.vmap(functools.partial(_plan_dispatch, backend=backend,
+                                           u_tile=u_tile),
                          in_axes=axes)(x, g, g_row_t, l_t, h_t, kind_t,
                                        a_t, b_t, gamma_t, thr_t, t_act)
             return y, True
@@ -169,7 +187,10 @@ def plan_bits(
         jnp.asarray(active).astype(jnp.int32)
     t_act = jnp.stack([t, act])
     gather = lambda name: tables[name][:, t]
-    return _plan_batchable(backend)(
+    # tuned unit-tile resolved ONCE here (host code, outside jit); only
+    # the kernel backends take the knob — ref math has no DMA to batch
+    u_tile = resolve_u_tile(int(x.shape[0])) if backend != "ref" else 1
+    return _plan_batchable(backend, u_tile)(
         x.astype(jnp.float32), tables["g"],
         gather("g_row"), gather("l"), gather("h"), gather("kind"),
         gather("a").astype(jnp.float32), gather("b").astype(jnp.float32),

@@ -25,8 +25,12 @@ import jax.numpy as jnp
 
 from repro.kernels.kv_attention.kernel import kv_attention_slots_pallas
 from repro.kernels.kv_attention.ref import kv_decode_attention_ref
+from repro.kernels.tuning import tuned_tile
 
 TILE_CHOICES = (128, 64, 32, 16, 8)
+
+#: tuning-cache kernel family for the bucketed seq-tile knob
+TUNE_KERNEL = "kv_attention"
 
 #: kernel-trace counter keyed by (bits, backend) — tests assert the
 #: scheduler's vmapped tick retraces nothing per slot
@@ -48,8 +52,21 @@ def _pick_tile_t(t: int):
     return c, (-t) % c
 
 
+def resolve_tile_t(t: int, bits: int):
+    """``(tile_t, pad_t)`` for a cache seq-dim of ``t`` rows: the tuning
+    cache's winner when one is present (padding up to it when it doesn't
+    divide ``t`` — the tuned tile is also the pad granularity), else the
+    default ``_pick_tile_t`` walk. Cache miss reproduces today's choice
+    exactly."""
+    tuned = tuned_tile(TUNE_KERNEL, n=t, bits=bits)
+    if tuned:
+        return tuned, (-t) % tuned
+    return _pick_tile_t(t)
+
+
 def _dispatch_kernel(q, k_planes, k_scale, k_zero, v_planes, v_scale,
-                     v_zero, lens, kv_b, *, bits, softcap, backend):
+                     v_zero, lens, kv_b, *, bits, softcap, backend,
+                     tile_t=0):
     """Layout-normalize and launch the Pallas kernel (compiled or
     interpret). q: (S, M, hq, dh); cache operands in state layout."""
     slots, m, hq, dh = q.shape
@@ -65,7 +82,10 @@ def _dispatch_kernel(q, k_planes, k_scale, k_zero, v_planes, v_scale,
         qp = jnp.pad(qp, ((0, 0),) * 3 + ((0, dh_w - dh),))
 
     t = k_planes.shape[2]
-    tile_t, pad_t = _pick_tile_t(t)
+    if tile_t:
+        pad_t = (-t) % tile_t
+    else:
+        tile_t, pad_t = _pick_tile_t(t)
     if pad_t:
         def pad_seq(x, axis):
             widths = [(0, 0)] * x.ndim
@@ -88,9 +108,10 @@ def _dispatch_kernel(q, k_planes, k_scale, k_zero, v_planes, v_scale,
     return jnp.where((kv_b > 0)[:, None, None, None], out, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "softcap", "backend"))
+@functools.partial(jax.jit, static_argnames=("bits", "softcap", "backend",
+                                             "tile_t"))
 def _dispatch(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
-              lens, kv_b, *, bits, softcap, backend):
+              lens, kv_b, *, bits, softcap, backend, tile_t=0):
     _count_trace(bits, backend)
     if backend == "ref":
         return kv_decode_attention_ref(
@@ -99,21 +120,22 @@ def _dispatch(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
             logit_softcap=softcap)
     return _dispatch_kernel(q, k_planes, k_scale, k_zero, v_planes,
                             v_scale, v_zero, lens, kv_b, bits=bits,
-                            softcap=softcap, backend=backend)
+                            softcap=softcap, backend=backend,
+                            tile_t=tile_t)
 
 
 @functools.lru_cache(maxsize=None)
-def _kv_batchable(bits: int, softcap: float, backend: str):
-    """One custom_vmap per (bits, softcap, backend): any vmap depth
-    flattens onto the slot axis and re-enters the SAME object — one
-    kernel launch regardless of nesting."""
+def _kv_batchable(bits: int, softcap: float, backend: str, tile_t: int = 0):
+    """One custom_vmap per (bits, softcap, backend, tile_t): any vmap
+    depth flattens onto the slot axis and re-enters the SAME object —
+    one kernel launch regardless of nesting."""
 
     @jax.custom_batching.custom_vmap
     def fn(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
            lens, kv_b):
         return _dispatch(q, k_planes, k_scale, k_zero, v_planes,
                          v_scale, v_zero, lens, kv_b, bits=bits,
-                         softcap=softcap, backend=backend)
+                         softcap=softcap, backend=backend, tile_t=tile_t)
 
     @fn.def_vmap
     def _vmap_rule(axis_size, in_batched, q, k_planes, k_scale, k_zero,
@@ -153,6 +175,11 @@ def kv_decode_attention(q, k_planes, k_scale, k_zero, v_planes, v_scale,
     if k_planes.shape[1] != bits:
         raise ValueError(
             f"plane stack carries {k_planes.shape[1]} planes, bits={bits}")
-    fn = _kv_batchable(bits, float(logit_softcap), backend)
+    tile_t = 0
+    if backend != "ref":
+        # resolved ONCE here (host code), threaded static; shape[-3] is
+        # the seq dim whether or not a vmap has eaten the slot axis
+        tile_t, _ = resolve_tile_t(int(k_planes.shape[-3]), bits)
+    fn = _kv_batchable(bits, float(logit_softcap), backend, tile_t)
     return fn(q, k_planes, k_scale, k_zero, v_planes, v_scale, v_zero,
               jnp.asarray(lens, jnp.int32), jnp.asarray(kv_b, jnp.int32))

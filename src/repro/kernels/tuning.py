@@ -1,0 +1,265 @@
+"""Measured-performance layer: timing harness + versioned tile-tuning cache.
+
+Everything the kernel layer previously *modeled* (tile sizes hardcoded to
+``DEFAULT_TILE_N``, DMA-elision savings as closed-form walks) becomes
+*measurable* through three small pieces that live here so both the
+``kernels/*/ops.py`` dispatch layer and the ``benchmarks/`` drivers can
+share them without a circular import:
+
+* a portable wall-timing harness — warmup + ``block_until_ready`` +
+  median-of-repeats, with an injectable clock so tuning logic is
+  unit-testable without real time passing;
+* a ``set_platform``-style platform/XLA-flag configurator (the bayespec
+  idiom) so the same harness runs on the CPU oracle, CPU interpret, GPU
+  (Triton lowering where available), and TPU Mosaic;
+* the versioned ``tuning_cache.json`` contract: winners persisted by the
+  autotuner (``benchmarks/autotune.py``) keyed on
+  ``(platform, kernel, shape-bucket, bits)`` and consumed by the ops
+  dispatch via :func:`tuned_tile` — a cache miss (or version mismatch,
+  or corrupt file) falls back to the hardcoded defaults, so behavior is
+  bit-identical to the pre-tuning layer unless a cache is installed.
+
+The cache is installed explicitly (:func:`use_cache`) or through the
+``REPRO_TUNING_CACHE`` environment variable; nothing is auto-loaded from
+the working directory, so a stray file can never silently change kernel
+dispatch. Because the ops layer resolves the tile in the *public*
+wrapper (outside jit) and threads it through the dispatch caches as a
+static key, installing or clearing a cache takes effect on the next
+call — no stale-trace invalidation dance.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+#: bump when the key schema or entry layout changes: a mismatched file
+#: loads as EMPTY (every lookup misses -> default tiles), never as garbage
+CACHE_VERSION = 1
+
+ENV_CACHE_VAR = "REPRO_TUNING_CACHE"
+
+
+# ---------------------------------------------------------------------------
+# Platform configuration (the bayespec ``set_platform`` idiom)
+# ---------------------------------------------------------------------------
+#: XLA flags worth setting before the first GPU computation — Triton
+#: fusion + async scheduling (see jax.dev gpu_performance_tips)
+GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true "
+    "--xla_gpu_triton_gemm_any=True "
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+)
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin jax to ``'cpu' | 'gpu' | 'tpu'`` — only effective before the
+    first computation. On GPU also sets the Triton/async XLA flags so a
+    Pallas-Triton lowering (where available) sees the tuned pipeline."""
+    if platform not in ("cpu", "gpu", "tpu"):
+        raise ValueError(f"unknown platform {platform!r}")
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        prev = os.environ.get("XLA_FLAGS", "")
+        for flag in GPU_XLA_FLAGS.split():
+            if flag.split("=")[0] not in prev:
+                prev = f"{prev} {flag}".strip()
+        os.environ["XLA_FLAGS"] = prev
+
+
+def platform_name() -> str:
+    """The cache-key platform of the running process: jax's default
+    backend (``cpu`` covers both the jnp oracle and interpret mode —
+    tiles tuned on this host apply to either)."""
+    return jax.default_backend()
+
+
+def kernel_backend(explicit: Optional[str] = None) -> str:
+    """The measurement backend for this platform: the compiled Pallas
+    kernel on TPU, the interpret twin elsewhere (same kernel body, so
+    block/tile behavior is exercised even where Mosaic can't lower)."""
+    if explicit is not None:
+        return explicit
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+# ---------------------------------------------------------------------------
+# Timing harness
+# ---------------------------------------------------------------------------
+@dataclass
+class MeasureResult:
+    seconds: float           # median over reps
+    out: Any = None          # last rep's output (parity checks ride along)
+    samples: tuple = ()
+
+
+def measure(fn: Callable, *args, warmup: int = 1, reps: int = 5,
+            clock: Optional[Callable[[], float]] = None) -> MeasureResult:
+    """Median-of-repeats wall timing: ``warmup`` untimed calls (compile +
+    cache priming), then ``reps`` timed calls each fenced by
+    ``jax.block_until_ready`` so async dispatch can't hide the work.
+
+    ``clock`` is injectable (default ``time.perf_counter``) — a fake
+    clock makes winner selection deterministic in unit tests.
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    clk = time.perf_counter if clock is None else clock
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(reps):
+        t0 = clk()
+        out = jax.block_until_ready(fn(*args))
+        samples.append(clk() - t0)
+    ordered = sorted(samples)
+    mid = len(ordered) // 2
+    if len(ordered) % 2:
+        med = ordered[mid]
+    else:
+        med = 0.5 * (ordered[mid - 1] + ordered[mid])
+    return MeasureResult(seconds=med, out=out, samples=tuple(samples))
+
+
+def median_time_s(fn: Callable, *args, warmup: int = 1, reps: int = 5,
+                  clock: Optional[Callable[[], float]] = None) -> float:
+    return measure(fn, *args, warmup=warmup, reps=reps,
+                   clock=clock).seconds
+
+
+def time_us(fn: Callable, *args, warmup: int = 1, reps: int = 5,
+            clock: Optional[Callable[[], float]] = None) -> float:
+    """Benchmark convenience: median microseconds per call."""
+    return median_time_s(fn, *args, warmup=warmup, reps=reps,
+                         clock=clock) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Tuning cache
+# ---------------------------------------------------------------------------
+def shape_bucket(n: int) -> int:
+    """Power-of-two bucket for a shape dim: the smallest pow2 >= n.
+
+    Keys bucket so one tuned entry serves a family of nearby shapes; the
+    dispatch layer still validates divisibility against the ACTUAL dim
+    and falls back to defaults when the tuned tile doesn't divide it.
+    """
+    n = max(1, int(n))
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class TuningCache:
+    """Versioned (platform, kernel, shape-bucket, bits) -> tile map."""
+
+    entries: Dict[str, int] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @staticmethod
+    def key(platform: str, kernel: str, n: int, bits: int) -> str:
+        return f"{platform}/{kernel}/n{shape_bucket(n)}/b{int(bits)}"
+
+    def lookup(self, platform: str, kernel: str, n: int,
+               bits: int) -> Optional[int]:
+        v = self.entries.get(self.key(platform, kernel, n, bits))
+        return int(v) if v else None
+
+    def put(self, platform: str, kernel: str, n: int, bits: int,
+            tile: int) -> str:
+        k = self.key(platform, kernel, n, bits)
+        self.entries[k] = int(tile)
+        return k
+
+    def save(self, path: str) -> None:
+        blob = {"version": CACHE_VERSION, "entries": self.entries,
+                "meta": self.meta}
+        with open(path, "w") as fh:
+            json.dump(blob, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        """Load a cache file; ANY problem (missing file, corrupt JSON,
+        version mismatch, wrong types) yields an EMPTY cache — the
+        fallback-to-defaults contract the dispatch layer relies on."""
+        try:
+            with open(path) as fh:
+                blob = json.load(fh)
+            if blob.get("version") != CACHE_VERSION:
+                return cls()
+            entries = {str(k): int(v)
+                       for k, v in blob.get("entries", {}).items()}
+            meta = blob.get("meta", {})
+            return cls(entries=entries,
+                       meta=meta if isinstance(meta, dict) else {})
+        except (OSError, ValueError, TypeError, AttributeError):
+            return cls()
+
+
+# process-global active cache: None = nothing installed (pure defaults);
+# the env var is consulted lazily so `REPRO_TUNING_CACHE=... python ...`
+# just works without an explicit use_cache() call
+_ACTIVE: Optional[TuningCache] = None
+_ENV_LOADED_FROM: Optional[str] = None
+
+
+def use_cache(cache: "TuningCache | str | None") -> Optional[TuningCache]:
+    """Install (or clear, with ``None``) the process-wide tuning cache.
+
+    Accepts a :class:`TuningCache` or a path. Takes effect on the next
+    kernel dispatch — tiles are resolved per call in the public ops
+    wrappers and threaded through the jit caches as static keys.
+
+    An explicit call PINS the choice: ``use_cache(None)`` means "pure
+    defaults" even when ``REPRO_TUNING_CACHE`` is set (the tuned-vs-
+    default comparison in ``benchmarks.measured`` depends on this — its
+    default leg must not silently reload the env cache).
+    """
+    global _ACTIVE, _ENV_LOADED_FROM
+    _ENV_LOADED_FROM = "<explicit>"
+    if cache is None:
+        _ACTIVE = None
+    elif isinstance(cache, str):
+        _ACTIVE = TuningCache.load(cache)
+    else:
+        _ACTIVE = cache
+    return _ACTIVE
+
+
+def active_cache() -> Optional[TuningCache]:
+    global _ACTIVE, _ENV_LOADED_FROM
+    env = os.environ.get(ENV_CACHE_VAR)
+    if _ENV_LOADED_FROM == "<explicit>":
+        return _ACTIVE
+    if env:
+        if env != _ENV_LOADED_FROM:      # (re)load on first sight / change
+            _ACTIVE = TuningCache.load(env)
+            _ENV_LOADED_FROM = env
+        return _ACTIVE
+    if _ENV_LOADED_FROM is not None:     # env var removed -> defaults
+        _ACTIVE, _ENV_LOADED_FROM = None, None
+    return _ACTIVE
+
+
+def tuned_tile(kernel: str, *, n: int, bits: int = 0,
+               platform: Optional[str] = None) -> Optional[int]:
+    """The tuned tile for ``(platform, kernel, bucket(n), bits)`` or
+    ``None`` on cache miss — the dispatch layer's single entry point.
+
+    Callers own divisibility: a tuned tile that doesn't divide the
+    actual dim is either ignored (auto paths) or used as the padding
+    granularity (explicit kernel backends pad up to it).
+    """
+    cache = active_cache()
+    if cache is None:
+        return None
+    plat = platform_name() if platform is None else platform
+    return cache.lookup(plat, kernel, n, bits)

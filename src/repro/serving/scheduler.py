@@ -172,7 +172,7 @@ class SlotScheduler:
         tracker: Optional[QueryBitTracker] = None,
         spec_k: Optional[int] = None,
         paged: bool = False,
-        page_len: int = 16,
+        page_len: Optional[int] = None,
         n_pages: Optional[int] = None,
         router: Optional[AdmissionRouter] = None,
         prefill_workers: int = 1,
@@ -266,6 +266,12 @@ class SlotScheduler:
         # chunk, and the PagePool allocator grows/trims/preempts it.
         self._max_len = max_len
         self._paged = bool(paged)
+        if page_len is None:
+            # page granularity is the paged kernel's tile_t — consult the
+            # tuning cache (kv_paged winners are page lengths) and fall
+            # back to the historical default when nothing is tuned
+            from repro.kernels.tuning import tuned_tile
+            page_len = tuned_tile("kv_paged", n=max_len) or 16
         self.page_len = int(page_len)
         self.page_alloc: Optional[PagePool] = None
         if self._paged:

@@ -3,13 +3,15 @@
 The gate guards step-function serve-path regressions; these pin its
 decision boundary (exactly -20% passes, anything past it fails), the
 missing-key / new-metric pass-through that lets metrics land before
-their baselines, and the direction handling for lower-is-better metrics.
+their baselines, the direction handling for lower-is-better metrics,
+and the per-platform artifact rules (auto-selection of
+``BENCH_serve.<platform>.json`` and skip-with-notice on mismatch).
 """
 import json
 
 import pytest
 
-from tools.perf_gate import METRICS, check, main
+from tools.perf_gate import METRICS, check, main, resolve_baseline
 
 
 BASE = {"decode_tokens_per_s": 100.0, "ttft_s": 0.050,
@@ -23,21 +25,27 @@ def test_tracked_metrics_cover_serve_path():
                        "p99_ttft_s": -1, "goodput_tokens_per_s": +1}
 
 
+def test_wall_s_never_tracked():
+    """wall_s (total run wall clock) is machine noise, not a serve
+    metric — it must stay out of the gate."""
+    assert "wall_s" not in METRICS
+
+
 def test_regression_boundary_exact_tolerance_passes():
     """ratio == 1 - tolerance is OK; one hair past it fails."""
     new = dict(BASE, decode_tokens_per_s=80.0)        # exactly -20%
-    assert check(new, BASE, 0.20) == []
+    assert check(new, BASE, 0.20)[0] == []
     new["decode_tokens_per_s"] = 79.9
-    assert check(new, BASE, 0.20) == ["decode_tokens_per_s"]
+    assert check(new, BASE, 0.20)[0] == ["decode_tokens_per_s"]
 
 
 def test_lower_is_better_direction():
     """ttft regressions are INCREASES: the ratio inverts."""
-    assert check(dict(BASE, ttft_s=0.0625), BASE, 0.20) == []   # b/n = .8
-    assert check(dict(BASE, ttft_s=0.0630), BASE, 0.20) == ["ttft_s"]
+    assert check(dict(BASE, ttft_s=0.0625), BASE, 0.20)[0] == []  # b/n=.8
+    assert check(dict(BASE, ttft_s=0.0630), BASE, 0.20)[0] == ["ttft_s"]
     # improvements never fail, in either direction
     assert check(dict(BASE, ttft_s=0.001,
-                      decode_tokens_per_s=500.0), BASE, 0.20) == []
+                      decode_tokens_per_s=500.0), BASE, 0.20)[0] == []
 
 
 def test_missing_key_skipped_both_ways():
@@ -45,23 +53,35 @@ def test_missing_key_skipped_both_ways():
     before their baselines, old baselines outlive retired metrics."""
     new = dict(BASE)
     del new["spec_tokens_per_s"]                     # retired from new
-    assert check(new, BASE, 0.20) == []
+    assert check(new, BASE, 0.20)[0] == []
     base = dict(BASE)
     del base["moe_tokens_per_s"]                     # not yet in baseline
-    assert check(dict(BASE, moe_tokens_per_s=1.0), base, 0.20) == []
+    assert check(dict(BASE, moe_tokens_per_s=1.0), base, 0.20)[0] == []
+
+
+def test_compared_keys_reported():
+    """check() reports exactly the metrics present (and positive) in
+    BOTH blobs — the gate's comparison surface is auditable."""
+    _, compared = check(dict(BASE), BASE, 0.20)
+    assert compared == ["decode_tokens_per_s", "ttft_s",
+                        "spec_tokens_per_s", "moe_tokens_per_s"]
+    new = dict(BASE)
+    del new["ttft_s"]
+    _, compared = check(new, BASE, 0.20)
+    assert "ttft_s" not in compared
 
 
 def test_nonpositive_baseline_skipped_and_zero_new_fails():
     assert check(dict(BASE, decode_tokens_per_s=1.0),
-                 dict(BASE, decode_tokens_per_s=0.0), 0.20) == []
+                 dict(BASE, decode_tokens_per_s=0.0), 0.20)[0] == []
     # a lower-is-better metric collapsing to 0 new is a hard fail
-    assert check(dict(BASE, ttft_s=0.0), BASE, 0.20) == ["ttft_s"]
+    assert check(dict(BASE, ttft_s=0.0), BASE, 0.20)[0] == ["ttft_s"]
 
 
 def test_multiple_failures_reported_together():
     new = dict(BASE, decode_tokens_per_s=10.0, moe_tokens_per_s=10.0)
-    assert check(new, BASE, 0.20) == ["decode_tokens_per_s",
-                                      "moe_tokens_per_s"]
+    assert check(new, BASE, 0.20)[0] == ["decode_tokens_per_s",
+                                         "moe_tokens_per_s"]
 
 
 @pytest.mark.parametrize("wreck,code", [({}, 0),
@@ -73,3 +93,97 @@ def test_main_exit_codes(tmp_path, monkeypatch, wreck, code):
     monkeypatch.setattr("sys.argv",
                         ["perf_gate", str(newp), "--baseline", str(basep)])
     assert main() == code
+
+
+# ---------------------------------------------------------------------------
+# Per-platform artifact selection + mismatch skip
+# ---------------------------------------------------------------------------
+def test_resolve_baseline_prefers_platform_sibling(tmp_path):
+    base = tmp_path / "BENCH_serve.json"
+    sib = tmp_path / "BENCH_serve.tpu.json"
+    base.write_text("{}")
+    sib.write_text("{}")
+    meas = {"platform": "tpu", "suite": "measured"}
+    assert resolve_baseline(meas, str(base), None) == str(sib)
+    # no sibling on disk -> falls back to the plain baseline
+    got = resolve_baseline({"platform": "gpu", "suite": "measured"},
+                           str(base), None)
+    assert got == str(base)
+    # explicit --artifact always wins
+    assert resolve_baseline(meas, str(base), "X.json") == "X.json"
+    # platform-less blob keeps the legacy baseline path
+    assert resolve_baseline({"suite": "measured"}, str(base), None) == \
+        str(base)
+    # a run.py ("serve") blob must NEVER auto-upgrade onto a measured
+    # sibling: same metric names, different fixtures and magnitudes
+    assert resolve_baseline({"platform": "tpu", "suite": "serve"},
+                            str(base), None) == str(base)
+    assert resolve_baseline({"platform": "tpu"}, str(base), None) == \
+        str(base)
+
+
+def test_platform_mismatch_skips_with_notice(tmp_path, monkeypatch,
+                                             capsys):
+    """A committed artifact from another platform must SKIP (exit 0),
+    never fail — even when every metric would regress."""
+    newp = tmp_path / "new.json"
+    artp = tmp_path / "BENCH_serve.tpu.json"
+    newp.write_text(json.dumps(dict(BASE, platform="cpu",
+                                    decode_tokens_per_s=1.0)))
+    artp.write_text(json.dumps(dict(BASE, platform="tpu")))
+    monkeypatch.setattr("sys.argv",
+                        ["perf_gate", str(newp),
+                         "--artifact", str(artp)])
+    assert main() == 0
+    assert "SKIPPED" in capsys.readouterr().out
+
+
+def test_matching_platform_gates_normally(tmp_path, monkeypatch):
+    newp = tmp_path / "new.json"
+    artp = tmp_path / "BENCH_serve.cpu.json"
+    artp.write_text(json.dumps(dict(BASE, platform="cpu")))
+    newp.write_text(json.dumps(dict(BASE, platform="cpu",
+                                    decode_tokens_per_s=1.0)))
+    monkeypatch.setattr("sys.argv",
+                        ["perf_gate", str(newp),
+                         "--artifact", str(artp)])
+    assert main() == 1
+    newp.write_text(json.dumps(dict(BASE, platform="cpu")))
+    assert main() == 0
+
+
+def test_auto_selection_end_to_end(tmp_path, monkeypatch, capsys):
+    """--baseline pointing at the legacy artifact auto-upgrades to the
+    platform sibling when the new blob is a measured-suite blob that
+    names its platform."""
+    base = tmp_path / "BENCH_serve.json"
+    sib = tmp_path / "BENCH_serve.cpu.json"
+    newp = tmp_path / "new.json"
+    base.write_text(json.dumps(dict(BASE, decode_tokens_per_s=1e9)))
+    sib.write_text(json.dumps(dict(BASE, platform="cpu",
+                                   suite="measured")))
+    newp.write_text(json.dumps(dict(BASE, platform="cpu",
+                                    suite="measured")))
+    monkeypatch.setattr("sys.argv",
+                        ["perf_gate", str(newp),
+                         "--baseline", str(base)])
+    # gating against the plain baseline would fail (1e9 baseline);
+    # the cpu sibling passes — proof the sibling was selected
+    assert main() == 0
+    assert "BENCH_serve.cpu.json" in capsys.readouterr().out
+
+
+def test_suite_mismatch_skips_with_notice(tmp_path, monkeypatch, capsys):
+    """Explicitly pointing a serve blob at a measured artifact (or vice
+    versa) skips — the metric names collide but the fixtures differ."""
+    newp = tmp_path / "new.json"
+    artp = tmp_path / "BENCH_serve.cpu.json"
+    newp.write_text(json.dumps(dict(BASE, platform="cpu", suite="serve",
+                                    decode_tokens_per_s=1.0)))
+    artp.write_text(json.dumps(dict(BASE, platform="cpu",
+                                    suite="measured")))
+    monkeypatch.setattr("sys.argv",
+                        ["perf_gate", str(newp),
+                         "--artifact", str(artp)])
+    assert main() == 0
+    assert "SKIPPED" in capsys.readouterr().out

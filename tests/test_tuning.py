@@ -1,0 +1,316 @@
+"""Measured-performance layer: harness, tuning cache, and the one
+invariant everything rests on — a tuned tile changes TIME, never BITS.
+
+Covers the ISSUE-10 acceptance surface: cache hit / miss /
+version-mismatch fallback to defaults, deterministic winner selection
+under an injected fake timer, roofline pruning that can never discard
+the default candidate, and tuned-vs-default bit-identity through the
+public dispatch of all four kernel families in interpret mode
+(bitserial plain / grouped, kv_attention, jl_plan), including the
+pad-path fix for untileable N under a tuned non-default tile.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitplane import quantize_linear, quantize_stacked
+from repro.kernels import tuning
+from repro.kernels.bitserial.ops import (bitserial_matmul,
+                                         bitserial_matmul_grouped,
+                                         pad_tile_n, resolve_tile_n)
+from repro.kernels.jl_estimator.ops import plan_bits, resolve_u_tile
+from repro.kernels.kv_attention.ops import resolve_tile_t
+from repro.kernels.kv_attention.ops import kv_decode_attention
+from repro.kernels.tuning import TuningCache, measure, shape_bucket
+
+
+@pytest.fixture(autouse=True)
+def _pristine_cache(monkeypatch):
+    """Every test starts and ends with NO active cache and no env var —
+    the module's process-global state must never leak across tests."""
+    monkeypatch.delenv(tuning.ENV_CACHE_VAR, raising=False)
+    tuning._ACTIVE, tuning._ENV_LOADED_FROM = None, None
+    yield
+    tuning._ACTIVE, tuning._ENV_LOADED_FROM = None, None
+
+
+def _install(kernel, n, bits, tile):
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), kernel, n, bits, tile)
+    tuning.use_cache(cache)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Timing harness
+# ---------------------------------------------------------------------------
+def test_measure_median_with_injected_clock():
+    """warmup calls are untimed; the median is over reps only."""
+    ticks = iter([0.0, 5.0,            # rep 1 -> 5s
+                  10.0, 11.0,          # rep 2 -> 1s
+                  20.0, 23.0])         # rep 3 -> 3s
+    calls = []
+    r = measure(lambda: calls.append(1), warmup=2, reps=3,
+                clock=lambda: next(ticks))
+    assert len(calls) == 5             # 2 warmup + 3 timed
+    assert r.samples == (5.0, 1.0, 3.0)
+    assert r.seconds == 3.0            # median, not mean (= 3.0 either way)
+
+
+def test_measure_even_reps_and_out():
+    ticks = iter([0.0, 4.0, 0.0, 2.0])
+    r = measure(lambda: jnp.ones((2,)), warmup=0, reps=2,
+                clock=lambda: next(ticks))
+    assert r.seconds == 3.0            # mean of the middle pair
+    np.testing.assert_array_equal(np.asarray(r.out), [1.0, 1.0])
+    with pytest.raises(ValueError):
+        measure(lambda: None, reps=0)
+
+
+# ---------------------------------------------------------------------------
+# Cache contract
+# ---------------------------------------------------------------------------
+def test_shape_bucket_pow2():
+    assert [shape_bucket(n) for n in (1, 2, 3, 128, 200, 256)] == \
+        [1, 2, 4, 128, 256, 256]
+
+
+def test_cache_roundtrip_and_miss(tmp_path):
+    cache = TuningCache()
+    key = cache.put("cpu", "bitserial", 200, 4, 64)
+    assert key == "cpu/bitserial/n256/b4"
+    p = tmp_path / "tc.json"
+    cache.save(str(p))
+    loaded = TuningCache.load(str(p))
+    # n=256 buckets with n=200: one entry serves the family
+    assert loaded.lookup("cpu", "bitserial", 256, 4) == 64
+    assert loaded.lookup("cpu", "bitserial", 512, 4) is None   # miss
+    assert loaded.lookup("tpu", "bitserial", 256, 4) is None   # platform
+    assert loaded.lookup("cpu", "kv_attention", 256, 4) is None
+
+
+def test_version_mismatch_and_corrupt_load_empty(tmp_path):
+    """ANY load problem yields an empty cache -> every lookup misses ->
+    dispatch uses the hardcoded defaults. Never garbage, never a raise."""
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": tuning.CACHE_VERSION + 1,
+                                 "entries": {"cpu/bitserial/n256/b4": 64}}))
+    assert TuningCache.load(str(stale)).entries == {}
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json")
+    assert TuningCache.load(str(corrupt)).entries == {}
+    assert TuningCache.load(str(tmp_path / "absent.json")).entries == {}
+    badtype = tmp_path / "badtype.json"
+    badtype.write_text(json.dumps({"version": tuning.CACHE_VERSION,
+                                   "entries": {"k": "not-an-int"}}))
+    assert TuningCache.load(str(badtype)).entries == {}
+
+
+def test_env_var_install_and_explicit_override(tmp_path, monkeypatch):
+    p = tmp_path / "tc.json"
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), "bitserial", 256, 4, 64)
+    cache.save(str(p))
+    assert tuning.tuned_tile("bitserial", n=256, bits=4) is None
+    monkeypatch.setenv(tuning.ENV_CACHE_VAR, str(p))
+    assert tuning.tuned_tile("bitserial", n=256, bits=4) == 64
+    # explicit install wins over the env var...
+    tuning.use_cache(None)
+    assert tuning.tuned_tile("bitserial", n=256, bits=4) is None
+    # ...and env removal clears a previously env-loaded cache
+    tuning._ACTIVE, tuning._ENV_LOADED_FROM = None, None
+    assert tuning.tuned_tile("bitserial", n=256, bits=4) == 64
+    monkeypatch.delenv(tuning.ENV_CACHE_VAR)
+    assert tuning.tuned_tile("bitserial", n=256, bits=4) is None
+
+
+def test_resolvers_fall_back_to_defaults_on_miss():
+    """With no cache installed, every resolver reproduces the historical
+    defaults — the no-cache == pre-tuning-layer contract."""
+    assert resolve_tile_n(256, 4) == 256
+    assert resolve_tile_n(384, 4) == 128
+    assert resolve_tile_n(200, 4) == 0          # caller pads
+    assert pad_tile_n(200, 4) == 128
+    assert resolve_tile_t(128, 4) == (128, 0)
+    assert resolve_u_tile(8) == 1
+
+
+def test_resolvers_consume_and_validate_tuned_tiles():
+    _install("bitserial", 256, 4, 64)
+    assert resolve_tile_n(256, 4) == 64
+    assert resolve_tile_n(256, 6) == 256        # different bits: miss
+    assert pad_tile_n(200, 4) == 64             # same n256 bucket
+    _install("bitserial", 256, 4, 48)           # does NOT divide 256
+    assert resolve_tile_n(256, 4) == 256        # ignored -> default
+    _install("kv_attention", 128, 4, 32)
+    assert resolve_tile_t(128, 4) == (32, 0)
+    assert resolve_tile_t(100, 4) == (32, 28)   # n128 bucket; pad_t up
+    _install("jl_plan", 6, 0, 2)
+    assert resolve_u_tile(6) == 2
+    assert resolve_u_tile(5) == 1               # tuned 2 doesn't divide
+
+
+# ---------------------------------------------------------------------------
+# Winner selection (benchmarks/autotune.py)
+# ---------------------------------------------------------------------------
+def _fake_timer(times):
+    """Deterministic timer: seconds per candidate, keyed by the tile the
+    runner was built for (runners here are `lambda: tile`)."""
+    return lambda runner: times[runner()]
+
+
+def test_pick_winner_deterministic_with_fake_timer():
+    from benchmarks.autotune import pick_winner
+    times = {256: 3.0, 128: 1.0, 64: 2.0}
+    args = ([256, 128, 64], lambda c: 0.0, lambda c: (lambda: c),
+            _fake_timer(times))
+    w1, measured1, pruned1 = pick_winner(*args)
+    w2, measured2, pruned2 = pick_winner(*args)
+    assert (w1, measured1, pruned1) == (w2, measured2, pruned2) == \
+        (128, times, [])
+    # strict minimum: a tie keeps the default
+    tie = _fake_timer({256: 1.0, 128: 1.0, 64: 1.0})
+    assert pick_winner([256, 128, 64], lambda c: 0.0,
+                       lambda c: (lambda: c), tie)[0] == 256
+
+
+def test_pruning_never_discards_default():
+    """The default candidate is measured first UNCONDITIONALLY, even
+    when its modeled floor is the worst — the cache-miss fallback must
+    always have a measurement. Non-defaults whose modeled floor exceeds
+    the best measured time are skipped without running."""
+    from benchmarks.autotune import pick_winner
+    ran = []
+
+    def make_runner(c):
+        def run():
+            ran.append(c)
+            return c
+        return run
+
+    modeled = {256: 100.0, 128: 0.0, 64: 50.0}.__getitem__
+    timer = _fake_timer({256: 2.0, 128: 1.0, 64: 99.0})
+    winner, measured, pruned = pick_winner([256, 128, 64], modeled,
+                                           make_runner, timer)
+    assert ran == [256, 128]       # default first despite modeled=100
+    assert winner == 128
+    assert pruned == [64]          # modeled 50 > best measured 1.0
+    assert 256 in measured and 64 not in measured
+
+
+def test_tune_family_keeps_existing_entries_unless_forced():
+    from benchmarks.autotune import tune_family
+    plat = tuning.platform_name()
+    cache = TuningCache()
+    cache.put(plat, "bitserial", 256, 4, 128)
+    calls = []
+    timer = lambda runner: calls.append(runner()) or 1.0
+    kw = dict(kernel="bitserial", n=256, bits=4, candidates=[256, 64],
+              modeled_s=lambda c: 0.0, make_runner=lambda c: (lambda: c),
+              timer=timer)
+    assert tune_family(cache, **kw) == 128       # kept, nothing measured
+    assert calls == []
+    assert tune_family(cache, force=True, **kw) == 256
+    assert calls == [256, 64]
+    assert cache.lookup(plat, "bitserial", 256, 4) == 256
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: tuned tiles change time, never results (interpret mode)
+# ---------------------------------------------------------------------------
+def _with_cache(cache, fn):
+    tuning.use_cache(cache)
+    try:
+        return fn()
+    finally:
+        tuning.use_cache(None)
+
+
+def test_bitserial_tuned_tile_bit_identical():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 256)) * 0.2
+    ql = quantize_linear(w, bits=6)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+    run = lambda: bitserial_matmul(x, ql, 3, backend="interpret")
+    y_default = run()
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), "bitserial", 256, 6, 64)
+    y_tuned = _with_cache(cache, run)
+    assert np.array_equal(np.asarray(y_default), np.asarray(y_tuned))
+
+
+def test_bitserial_grouped_tuned_tile_bit_identical():
+    rng = np.random.default_rng(2)
+    qs = quantize_stacked(
+        jnp.asarray(rng.normal(size=(4, 32, 128)) * 0.2, jnp.float32),
+        bits=6)
+    expert_of = jnp.asarray([1, 3, 0], jnp.int32)
+    b_sel = jnp.asarray([2, 6, 0], jnp.int32)
+    counts = jnp.asarray([2, 1, 4], jnp.int32)
+    x = jnp.asarray(rng.normal(size=(3, 2, 32)), jnp.float32)
+    run = lambda: bitserial_matmul_grouped(x, qs, expert_of, b_sel,
+                                           counts, backend="interpret")
+    y_default = run()
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), "bitserial", 128, 6, 64)
+    y_tuned = _with_cache(cache, run)
+    assert np.array_equal(np.asarray(y_default), np.asarray(y_tuned))
+
+
+def test_bitserial_pad_path_with_tuned_tile():
+    """Untileable N=200 under an explicit backend pads up to the TUNED
+    granularity when one is cached (the satellite fix) and still matches
+    the oracle exactly — the stale default-tile pad assumption is gone."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 200)) * 0.2
+    ql = quantize_linear(w, bits=4)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 64))
+    y_ref = bitserial_matmul(x, ql, 3, backend="ref")
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), "bitserial", 200, 4, 128)
+    y_tuned = _with_cache(
+        cache, lambda: bitserial_matmul(x, ql, 3, backend="interpret"))
+    assert y_tuned.shape == y_ref.shape == (2, 200)
+    np.testing.assert_allclose(np.asarray(y_tuned), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kv_attention_tuned_tile_matches_default():
+    """tile_t reorders the online-softmax accumulation across seq tiles,
+    so the contract is float-reassociation equivalence (tight allclose),
+    not bit identity — and exact agreement with the jnp oracle's
+    tolerance class."""
+    rng = np.random.default_rng(5)
+    s, bits, t, hkv, dh = 2, 4, 128, 1, 32
+    kp = jnp.asarray(rng.integers(0, 2**31 - 1,
+                                  (s, bits, t, hkv, dh // 32)), jnp.int32)
+    sc = jnp.asarray(rng.uniform(0.01, 0.1, (s, t, hkv, 1)), jnp.float32)
+    zr = jnp.asarray(rng.uniform(0.0, 1.0, (s, t, hkv, 1)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(s, 1, hkv, dh)), jnp.float32)
+    lens = jnp.asarray([[100], [37]], jnp.int32)
+    kv_b = jnp.asarray([2, bits], jnp.int32)
+    run = lambda: kv_decode_attention(q, kp, sc, zr, kp, sc, zr, lens,
+                                      kv_b, bits=bits, backend="interpret")
+    y_default = run()
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), "kv_attention", t, bits, 32)
+    y_tuned = _with_cache(cache, run)
+    np.testing.assert_allclose(np.asarray(y_default), np.asarray(y_tuned),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_jl_plan_tuned_u_tile_bit_identical():
+    from test_kernels import _plan_setup
+    tables, x, _, _ = _plan_setup()                # u=6
+    run = lambda: plan_bits(x, tables, 1, backend="interpret")
+    b_default = run()
+    cache = TuningCache()
+    cache.put(tuning.platform_name(), "jl_plan", 6, 0, 2)
+    b_tuned = _with_cache(cache, run)
+    np.testing.assert_array_equal(np.asarray(b_default),
+                                  np.asarray(b_tuned))
+    # and both match the oracle
+    np.testing.assert_array_equal(
+        np.asarray(b_default),
+        np.asarray(plan_bits(x, tables, 1, backend="ref")))

@@ -1,8 +1,9 @@
 """CI perf gate: fail on serve-path regressions vs the committed baseline.
 
-Compares a freshly collected ``BENCH_serve.json`` (``benchmarks.run
---json --quick``) against the committed one and fails when a tracked
-metric regresses by more than ``--tolerance`` (default 20%):
+Compares a freshly collected serve artifact (``benchmarks.run --json
+--quick`` or ``benchmarks.measured``) against the committed one and
+fails when a tracked metric regresses by more than ``--tolerance``
+(default 20%):
 
 - ``decode_tokens_per_s``       lower is worse
 - ``ttft_s``                    higher is worse
@@ -13,18 +14,30 @@ metric regresses by more than ``--tolerance`` (default 20%):
 - ``p99_ttft_s``                higher is worse (replayed traffic)
 - ``goodput_tokens_per_s``      lower is worse (replayed traffic)
 
+Artifacts are per-platform: a blob carrying a ``platform`` key is only
+gated against a committed artifact of the SAME platform. The committed
+side resolves in order: ``--artifact`` (explicit), then
+``BENCH_serve.<platform>.json`` next to ``--baseline`` when the new blob
+names its platform and that file exists, then ``--baseline`` itself.
+When both sides carry a platform and they differ, the gate prints a
+notice and exits 0 — a TPU trajectory must never fail a CPU runner.
+
 Wall-clock metrics vary across machines, so the gate is a guard against
 step-function regressions (a retrace on the decode path, a lost launch
 fusion), not a micro-benchmark. Usage::
 
     python -m benchmarks.run --json /tmp/bench_new.json --quick
     python tools/perf_gate.py /tmp/bench_new.json [--baseline BENCH_serve.json]
+    python tools/perf_gate.py /tmp/bench_measured.json \
+        --artifact BENCH_serve.cpu.json --tolerance 0.5
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+from typing import List, Optional, Tuple
 
 # metric -> direction; +1 means higher-is-better, -1 means lower-is-better
 METRICS = {
@@ -39,37 +52,84 @@ METRICS = {
 }
 
 
-def check(new: dict, base: dict, tolerance: float) -> list:
-    failures = []
+def check(new: dict, base: dict,
+          tolerance: float) -> Tuple[List[str], List[str]]:
+    """Gate ``new`` against ``base``; returns ``(failures, compared)`` —
+    the regressed metric names and every metric present in BOTH blobs
+    (the caller reports the comparison surface so a silently shrunk
+    artifact is visible in the log)."""
+    failures, compared = [], []
     for name, sign in METRICS.items():
         if name not in base or name not in new:
             continue            # metric added after the baseline landed
         b, n = float(base[name]), float(new[name])
         if b <= 0:
             continue
+        compared.append(name)
         ratio = n / b if sign > 0 else b / n if n > 0 else 0.0
         verdict = "ok" if ratio >= 1.0 - tolerance else "FAIL"
         print(f"{name}: baseline={b:.4g} new={n:.4g} "
               f"ratio={ratio:.3f} {verdict}")
         if verdict == "FAIL":
             failures.append(name)
-    return failures
+    return failures, compared
+
+
+def resolve_baseline(new: dict, baseline: str,
+                     artifact: Optional[str]) -> str:
+    """The committed artifact to gate against: explicit ``--artifact``
+    wins; else the per-platform ``BENCH_serve.<platform>.json`` sibling
+    of ``--baseline`` when the new blob is from the MEASURED suite,
+    names its platform, and the file exists; else ``--baseline``.
+
+    The suite guard keeps the two artifact families apart: per-platform
+    siblings are written by ``benchmarks.measured`` (tiny fixed kernels),
+    while ``BENCH_serve.json`` is written by ``benchmarks.run`` (engine
+    fixtures) — their metrics share names but not magnitudes, so a
+    ``run`` blob must never auto-upgrade onto a ``measured`` sibling."""
+    if artifact:
+        return artifact
+    plat = new.get("platform")
+    if plat and new.get("suite") == "measured":
+        sibling = os.path.join(os.path.dirname(baseline) or ".",
+                               f"BENCH_serve.{plat}.json")
+        if os.path.exists(sibling):
+            return sibling
+    return baseline
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("new", help="freshly collected BENCH_serve.json")
+    ap.add_argument("new", help="freshly collected serve artifact")
     ap.add_argument("--baseline", default="BENCH_serve.json")
+    ap.add_argument("--artifact", default=None,
+                    help="explicit committed per-platform artifact "
+                         "(overrides --baseline and auto-selection)")
     ap.add_argument("--tolerance", type=float, default=0.20)
     args = ap.parse_args()
     with open(args.new) as fh:
         new = json.load(fh)
-    with open(args.baseline) as fh:
+    base_path = resolve_baseline(new, args.baseline, args.artifact)
+    with open(base_path) as fh:
         base = json.load(fh)
-    failures = check(new, base, args.tolerance)
+    new_plat, base_plat = new.get("platform"), base.get("platform")
+    if new_plat and base_plat and new_plat != base_plat:
+        print(f"perf gate SKIPPED: committed artifact {base_path} is for "
+              f"platform {base_plat!r}, this run is {new_plat!r} — "
+              f"no matching trajectory to gate against")
+        return 0
+    new_suite, base_suite = new.get("suite"), base.get("suite")
+    if new_suite and base_suite and new_suite != base_suite:
+        print(f"perf gate SKIPPED: committed artifact {base_path} is the "
+              f"{base_suite!r} suite, this run is {new_suite!r} — "
+              f"same-named metrics are not comparable across suites")
+        return 0
+    failures, compared = check(new, base, args.tolerance)
+    print(f"compared {len(compared)} metric(s) vs {base_path}: "
+          f"{', '.join(compared) if compared else '(none)'}")
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed "
-              f">{args.tolerance:.0%} vs {args.baseline}")
+              f">{args.tolerance:.0%} vs {base_path}")
         return 1
     print("perf gate ok")
     return 0
